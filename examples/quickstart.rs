@@ -1,0 +1,46 @@
+//! Quickstart: tune a cloud ML training job with TrimTuner in ~20 lines.
+//!
+//! Run with: `cargo run --release --offline --example quickstart`
+
+use trimtuner::engine::{self, EngineConfig, OptimizerKind};
+use trimtuner::models::ModelKind;
+use trimtuner::sim::{Dataset, NetKind};
+use trimtuner::space::Constraint;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The workload: the simulated measurement campaign for the MLP
+    //    network (or load a CSV you measured yourself via Dataset::load_csv).
+    let dataset = Dataset::generate(NetKind::Mlp, 42);
+
+    // 2. The QoS constraint: training must cost at most $0.06 per run.
+    let constraints = vec![Constraint::cost_max(0.06)];
+
+    // 3. TrimTuner with decision-tree surrogates, paper defaults
+    //    (CEA filter at beta = 10%, 4 snapshot init samples, 44 iterations).
+    let cfg = EngineConfig::paper_default(
+        OptimizerKind::TrimTuner(ModelKind::Trees),
+        /* seed = */ 7,
+    );
+
+    // 4. Optimize.
+    let run = engine::run(&dataset, &constraints, &cfg);
+
+    // 5. Inspect the recommendation.
+    let last = run.records.last().expect("no iterations recorded");
+    println!("recommended configuration: {}", last.incumbent.config.describe());
+    println!(
+        "its measured accuracy: {:.4} (true optimum: {:.4})",
+        last.inc_acc, run.optimum_acc
+    );
+    println!(
+        "constrained accuracy (Eq. 7): {:.4}  feasible: {}",
+        last.accuracy_c, last.inc_feasible
+    );
+    println!(
+        "total exploration spend: ${:.4} over {} tests",
+        run.total_cost(),
+        run.records.len()
+    );
+    assert!(last.accuracy_c > 0.8 * run.optimum_acc, "tuning went wrong");
+    Ok(())
+}

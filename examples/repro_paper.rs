@@ -1,0 +1,17 @@
+//! Full paper reproduction driver: regenerates every table and figure of
+//! the evaluation (§IV) into `results/` and prints the same rows the paper
+//! reports. Equivalent to `trimtuner repro all`, packaged as an example so
+//! `cargo run --example repro_paper` works out of the box.
+//!
+//! Flags (forwarded to the harness): `--seeds N`, `--iters N`, `--full`,
+//! `--out DIR`.
+
+use trimtuner::cli::Args;
+use trimtuner::experiments;
+
+fn main() -> anyhow::Result<()> {
+    let mut argv: Vec<String> = vec!["repro".into(), "all".into()];
+    argv.extend(std::env::args().skip(1));
+    let args = Args::parse(&argv);
+    experiments::cmd_repro(&args)
+}

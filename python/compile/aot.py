@@ -1,0 +1,116 @@
+"""AOT-lower the Layer-2 graphs to HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly. Lowering goes through stablehlo ->
+XlaComputation with return_tuple=True; the Rust side unwraps the tuple.
+See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.matern_fabolas import D_IN, N_HYP
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_specs():
+    """name -> (fn, example_args). Shapes must match rust/src/runtime."""
+    n, q = model.N_TRAIN, model.N_QUERY
+    specs = {}
+    for basis in ("acc", "cost"):
+        specs[f"gp_predict_{basis}"] = (
+            model.make_gp_posterior(basis),
+            (f32(n, D_IN), f32(n), f32(n), f32(q, D_IN), f32(N_HYP)),
+        )
+        specs[f"gp_mll_{basis}"] = (
+            model.make_gp_mll(basis),
+            (f32(n, D_IN), f32(n), f32(n), f32(N_HYP)),
+        )
+        specs[f"cov_{basis}"] = (
+            model.make_cov(basis),
+            (f32(n, D_IN), f32(q, D_IN), f32(N_HYP)),
+        )
+    b, e = model.MLP_BATCH, model.MLP_EVAL
+    i, h, o = model.MLP_IN, model.MLP_HIDDEN, model.MLP_OUT
+    specs["mlp_train_step"] = (
+        model.mlp_train_step,
+        (f32(i, h), f32(h), f32(h, o), f32(o), f32(b, i), f32(b, o), f32()),
+    )
+    specs["mlp_eval"] = (
+        model.mlp_eval,
+        (f32(i, h), f32(h), f32(h, o), f32(o), f32(e, i), f32(e, o)),
+    )
+    return specs
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--only", default=None, help="comma-separated artifact names"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {}
+    for name, (fn, example_args) in artifact_specs().items():
+        if only is not None and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "inputs": [list(a.shape) for a in example_args],
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(
+            {
+                "n_train": model.N_TRAIN,
+                "n_query": model.N_QUERY,
+                "d_in": D_IN,
+                "n_hyp": N_HYP,
+                "mlp": {
+                    "batch": model.MLP_BATCH,
+                    "eval": model.MLP_EVAL,
+                    "in": model.MLP_IN,
+                    "hidden": model.MLP_HIDDEN,
+                    "out": model.MLP_OUT,
+                },
+                "artifacts": manifest,
+            },
+            f,
+            indent=2,
+        )
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

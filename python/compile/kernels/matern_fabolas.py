@@ -1,0 +1,134 @@
+"""Layer-1 Pallas kernel: fused Matérn-5/2 × FABOLAS sub-sampling covariance.
+
+Computes the GP covariance matrix used by TrimTuner's surrogate models:
+
+    K[i, j] = sigma2 * Matern52(r_ij) * (phi(s_i)^T Theta phi(s_j))
+
+where ``r_ij`` is the lengthscale-scaled Euclidean distance between the
+*config* features of rows i and j (columns ``0..D_FEAT``), ``s`` is the
+sub-sampling rate stored in column ``D_FEAT``, and the basis vector is
+
+    phi(s) = (1, 1-s)   for the accuracy model  (basis="acc")
+    phi(s) = (1, s)     for the cost model      (basis="cost")
+
+``Theta = L L^T`` is a 2x2 PSD matrix parameterized by its Cholesky factor
+``L = [[l00, 0], [l10, l11]]`` so the basis kernel is PSD by construction
+(this mirrors FABOLAS's "accuracy/cost grow predictably with data-set size"
+kernels, Klein et al., AISTATS'17).
+
+Hardware adaptation (see DESIGN.md §2): the M×N covariance matrix is tiled
+into VMEM-sized blocks via BlockSpec; the pairwise squared distance is
+computed as ``|a|^2 + |b|^2 - 2 a b^T`` so the inner contraction is an
+MXU-shaped matmul over the feature dimension, and the Matérn + basis factors
+are applied element-wise in the VPU. ``interpret=True`` everywhere: the CPU
+PJRT plugin cannot execute Mosaic custom-calls (see /opt/xla-example/README).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Feature layout shared with the Rust side (rust/src/space/encode.rs):
+# columns 0..D_FEAT are normalized config features, column D_FEAT is s.
+D_FEAT = 6
+D_IN = D_FEAT + 1
+# Hyper-parameter vector layout (rust/src/models/kernel.rs must match):
+# [ls_0 .. ls_5, sigma2, l00, l10, l11]
+N_HYP = D_FEAT + 4
+
+_SQRT5 = np.sqrt(5.0).astype(np.float32)
+
+
+def _cov_kernel(x1_ref, x2_ref, hyp_ref, out_ref, *, basis: str):
+    """One (bm, bn) tile of the covariance matrix."""
+    x1 = x1_ref[...]  # (bm, D_IN) in VMEM
+    x2 = x2_ref[...]  # (bn, D_IN)
+    hyp = hyp_ref[...]  # (N_HYP,)
+    inv_ls = 1.0 / hyp[:D_FEAT]
+    sigma2 = hyp[D_FEAT]
+    l00, l10, l11 = hyp[D_FEAT + 1], hyp[D_FEAT + 2], hyp[D_FEAT + 3]
+
+    a = x1[:, :D_FEAT] * inv_ls[None, :]
+    b = x2[:, :D_FEAT] * inv_ls[None, :]
+    # Pairwise squared distances via an MXU-shaped contraction over D_FEAT.
+    ab = jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    r2 = (
+        jnp.sum(a * a, axis=1)[:, None]
+        + jnp.sum(b * b, axis=1)[None, :]
+        - 2.0 * ab
+    )
+    r2 = jnp.maximum(r2, 0.0)
+    r = jnp.sqrt(r2)
+    matern = (1.0 + _SQRT5 * r + (5.0 / 3.0) * r2) * jnp.exp(-_SQRT5 * r)
+
+    s1 = x1[:, D_FEAT]
+    s2 = x2[:, D_FEAT]
+    if basis == "acc":
+        g1, g2 = 1.0 - s1, 1.0 - s2
+    elif basis == "cost":
+        g1, g2 = s1, s2
+    else:
+        raise ValueError(f"unknown basis {basis!r}")
+    # phi(s) = (1, g);  phi1^T Theta phi2 expanded with Theta = L L^T:
+    t00 = l00 * l00
+    t01 = l00 * l10
+    t11 = l10 * l10 + l11 * l11
+    bas = (
+        t00
+        + t01 * (g1[:, None] + g2[None, :])
+        + t11 * (g1[:, None] * g2[None, :])
+    )
+    out_ref[...] = sigma2 * matern * bas
+
+
+def _block(dim: int, want: int) -> int:
+    """Largest tile <= want that divides dim (falls back to the full dim)."""
+    for cand in range(min(want, dim), 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+@functools.partial(jax.jit, static_argnames=("basis", "bm", "bn"))
+def cov(x1, x2, hyp, *, basis: str = "acc", bm: int = 64, bn: int = 64):
+    """Covariance matrix K(x1, x2) of shape (M, N).
+
+    x1: (M, D_IN) float32 — config features + s in the last column.
+    x2: (N, D_IN) float32.
+    hyp: (N_HYP,) float32 — see N_HYP layout above.
+    """
+    m, n = x1.shape[0], x2.shape[0]
+    assert x1.shape[1] == D_IN and x2.shape[1] == D_IN, (x1.shape, x2.shape)
+    assert hyp.shape == (N_HYP,), hyp.shape
+    bm = _block(m, bm)
+    bn = _block(n, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_cov_kernel, basis=basis),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, D_IN), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, D_IN), lambda i, j: (j, 0)),
+            pl.BlockSpec((N_HYP,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x1, x2, hyp)
+
+
+def cov_diag(x, hyp, *, basis: str = "acc"):
+    """Diagonal of K(x, x) — Matern52(0) == 1, so only sigma2 * basis(s, s)."""
+    sigma2 = hyp[D_FEAT]
+    l00, l10, l11 = hyp[D_FEAT + 1], hyp[D_FEAT + 2], hyp[D_FEAT + 3]
+    s = x[:, D_FEAT]
+    g = (1.0 - s) if basis == "acc" else s
+    t00 = l00 * l00
+    t01 = l00 * l10
+    t11 = l10 * l10 + l11 * l11
+    return sigma2 * (t00 + 2.0 * t01 * g + t11 * g * g)

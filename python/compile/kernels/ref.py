@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the Matérn-5/2 × FABOLAS covariance kernel.
+
+This is the correctness reference for the Pallas kernel in
+``matern_fabolas.py``; pytest/hypothesis compare them with
+``assert_allclose`` (python/tests/test_kernel.py) and the Rust native GP
+(rust/src/models/kernel.rs) implements the same formulas, cross-checked via
+the AOT artifacts in rust/tests.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from .matern_fabolas import D_FEAT, D_IN, N_HYP, cov_diag  # noqa: F401
+
+_SQRT5 = np.sqrt(5.0).astype(np.float32)
+
+
+def _basis_g(s, basis):
+    return (1.0 - s) if basis == "acc" else s
+
+
+def cov_ref(x1, x2, hyp, *, basis: str = "acc"):
+    """Reference covariance matrix, no tiling, no fusion."""
+    ls = hyp[:D_FEAT]
+    sigma2 = hyp[D_FEAT]
+    l00, l10, l11 = hyp[D_FEAT + 1], hyp[D_FEAT + 2], hyp[D_FEAT + 3]
+
+    a = x1[:, :D_FEAT] / ls[None, :]
+    b = x2[:, :D_FEAT] / ls[None, :]
+    diff = a[:, None, :] - b[None, :, :]
+    r2 = jnp.sum(diff * diff, axis=-1)
+    r = jnp.sqrt(jnp.maximum(r2, 0.0))
+    matern = (1.0 + _SQRT5 * r + (5.0 / 3.0) * r2) * jnp.exp(-_SQRT5 * r)
+
+    g1 = _basis_g(x1[:, D_FEAT], basis)
+    g2 = _basis_g(x2[:, D_FEAT], basis)
+    theta = jnp.array([[l00, 0.0], [l10, l11]], dtype=jnp.float32)
+    theta = theta @ theta.T
+    phi1 = jnp.stack([jnp.ones_like(g1), g1], axis=1)
+    phi2 = jnp.stack([jnp.ones_like(g2), g2], axis=1)
+    bas = phi1 @ theta @ phi2.T
+    return sigma2 * matern * bas
+
+
+def gp_posterior_ref(x_tr, y, noise, x_q, hyp, *, basis: str = "acc"):
+    """Reference GP posterior (mean, variance) — mirrors model.gp_posterior."""
+    n = x_tr.shape[0]
+    k = cov_ref(x_tr, x_tr, hyp, basis=basis) + jnp.diag(noise) + 1e-6 * jnp.eye(n)
+    l = jnp.linalg.cholesky(k)
+    alpha = jnp.linalg.solve(k, y)
+    ks = cov_ref(x_tr, x_q, hyp, basis=basis)
+    mu = ks.T @ alpha
+    v = jnp.linalg.solve(l, ks)  # lower-triangular solve L^-1 Ks
+    var = cov_diag(x_q, hyp, basis=basis) - jnp.sum(v * v, axis=0)
+    return mu, jnp.maximum(var, 1e-12)

@@ -1,0 +1,205 @@
+"""Layer-2 JAX compute graphs, lowered AOT by aot.py and executed from Rust.
+
+Two families of graphs:
+
+1. GP posterior / marginal likelihood over the TrimTuner feature space.
+   These call the Layer-1 Pallas covariance kernel (kernels.matern_fabolas)
+   so the hot covariance computation lowers into the same HLO module. Shapes
+   are fixed at lowering time (PJRT AOT requires static shapes): the Rust
+   side pads the training set to ``N_TRAIN`` rows using the
+   "padding-as-noise" trick — padded rows carry y=0 and observation noise
+   1e6, which removes their influence from the posterior *exactly* (a GP
+   observation with infinite noise contributes nothing).
+
+2. A small MLP (784 -> 256 -> 10) train/eval step used by the end-to-end
+   example: the Rust coordinator *actually trains* models at different
+   sub-sampling rates through these artifacts, proving all three layers
+   compose on a real workload.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matern_fabolas as mk
+from .kernels.matern_fabolas import D_IN, N_HYP
+
+# Fixed AOT shapes — keep in sync with rust/src/runtime/shapes.rs.
+N_TRAIN = 64  # padded training-set size for GP artifacts
+N_QUERY = 288  # query tile (one full cloud x hyper-param grid slice)
+JITTER = 1e-6
+
+MLP_IN = 784
+MLP_HIDDEN = 256
+MLP_OUT = 10
+MLP_BATCH = 128
+MLP_EVAL = 512
+
+
+# --------------------------------------------------------------------------
+# Pure-jnp linear algebra
+#
+# jax's lax.linalg.{cholesky, triangular_solve} lower to LAPACK custom-calls
+# with API_VERSION_TYPED_FFI, which xla_extension 0.5.1 (the runtime the
+# `xla` 0.1.6 crate links) rejects at compile time. These loop-based
+# versions lower to plain HLO (fori_loop + dynamic slicing) and run anywhere.
+# N_TRAIN is 64, so the O(n) sequential loop is cheap.
+# --------------------------------------------------------------------------
+
+def cholesky_jnp(a):
+    """Right-looking (outer-product) Cholesky; returns lower-triangular L."""
+    a = jnp.asarray(a)
+    n = a.shape[0]
+    rows = jnp.arange(n)
+
+    def body(k, state):
+        a_k, l = state
+        pivot = jnp.sqrt(jnp.maximum(a_k[k, k], 1e-30))
+        col = jnp.where(rows >= k, a_k[:, k] / pivot, 0.0)
+        l = l.at[:, k].set(col)
+        a_k = a_k - jnp.outer(col, col)
+        return (a_k, l)
+
+    _, l = jax.lax.fori_loop(0, n, body, (a, jnp.zeros_like(a)))
+    return l
+
+
+def solve_lower_jnp(l, b):
+    """Forward substitution: solve L Y = B for lower-triangular L.
+
+    b may be (n,) or (n, m).
+    """
+    l, b = jnp.asarray(l), jnp.asarray(b)
+    squeeze = b.ndim == 1
+    if squeeze:
+        b = b[:, None]
+    n = l.shape[0]
+
+    def body(i, y):
+        yi = (b[i, :] - l[i, :] @ y) / l[i, i]
+        return y.at[i, :].set(yi)
+
+    y = jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+    return y[:, 0] if squeeze else y
+
+
+def solve_lower_t_jnp(l, b):
+    """Back substitution: solve Lᵀ X = B."""
+    l, b = jnp.asarray(l), jnp.asarray(b)
+    squeeze = b.ndim == 1
+    if squeeze:
+        b = b[:, None]
+    n = l.shape[0]
+
+    def body(j, x):
+        i = n - 1 - j
+        xi = (b[i, :] - l[:, i] @ x) / l[i, i]
+        return x.at[i, :].set(xi)
+
+    x = jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+    return x[:, 0] if squeeze else x
+
+
+# --------------------------------------------------------------------------
+# GP graphs
+# --------------------------------------------------------------------------
+
+def gp_posterior(x_tr, y, noise, x_q, hyp, *, basis: str):
+    """Predictive mean and variance at x_q.
+
+    x_tr: (N_TRAIN, D_IN), y: (N_TRAIN,), noise: (N_TRAIN,) per-point
+    observation noise (big value == padding), x_q: (N_QUERY, D_IN),
+    hyp: (N_HYP,). Returns (mu, var), each (N_QUERY,).
+    """
+    n = x_tr.shape[0]
+    k = mk.cov(x_tr, x_tr, hyp, basis=basis)
+    k = k + jnp.diag(noise) + JITTER * jnp.eye(n, dtype=jnp.float32)
+    l = cholesky_jnp(k)
+    alpha = solve_lower_t_jnp(l, solve_lower_jnp(l, y))
+    ks = mk.cov(x_tr, x_q, hyp, basis=basis)  # (N, Q)
+    mu = ks.T @ alpha
+    v = solve_lower_jnp(l, ks)
+    var = mk.cov_diag(x_q, hyp, basis=basis) - jnp.sum(v * v, axis=0)
+    return mu, jnp.maximum(var, 1e-12)
+
+
+def gp_mll(x_tr, y, noise, hyp, *, basis: str):
+    """Log marginal likelihood of the (padded) training set.
+
+    With padding-as-noise the padded rows contribute a constant (independent
+    of hyp up to the tiny k/1e6 term), so argmax over hyp is preserved.
+    """
+    n = x_tr.shape[0]
+    k = mk.cov(x_tr, x_tr, hyp, basis=basis)
+    k = k + jnp.diag(noise) + JITTER * jnp.eye(n, dtype=jnp.float32)
+    l = cholesky_jnp(k)
+    alpha = solve_lower_jnp(l, y)
+    quad = jnp.sum(alpha * alpha)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(l)))
+    return -0.5 * quad - 0.5 * logdet - 0.5 * n * jnp.log(2.0 * jnp.pi)
+
+
+def make_gp_posterior(basis: str):
+    def fn(x_tr, y, noise, x_q, hyp):
+        mu, var = gp_posterior(x_tr, y, noise, x_q, hyp, basis=basis)
+        return (mu, var)
+
+    return fn
+
+
+def make_gp_mll(basis: str):
+    def fn(x_tr, y, noise, hyp):
+        return (gp_mll(x_tr, y, noise, hyp, basis=basis),)
+
+    return fn
+
+
+def make_cov(basis: str):
+    def fn(x1, x2, hyp):
+        return (mk.cov(x1, x2, hyp, basis=basis),)
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# MLP graphs (end-to-end real workload)
+# --------------------------------------------------------------------------
+
+def _mlp_logits(w1, b1, w2, b2, x):
+    h = jnp.tanh(x @ w1 + b1)
+    return h @ w2 + b2
+
+
+def mlp_train_step(w1, b1, w2, b2, xb, yb, lr):
+    """One SGD step on softmax cross-entropy. yb is one-hot (B, 10).
+
+    Returns (w1', b1', w2', b2', loss).
+    """
+
+    def loss_fn(params):
+        w1, b1, w2, b2 = params
+        logits = _mlp_logits(w1, b1, w2, b2, xb)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.sum(yb * logp, axis=1))
+
+    loss, grads = jax.value_and_grad(loss_fn)((w1, b1, w2, b2))
+    g1, gb1, g2, gb2 = grads
+    return (
+        w1 - lr * g1,
+        b1 - lr * gb1,
+        w2 - lr * g2,
+        b2 - lr * gb2,
+        loss,
+    )
+
+
+def mlp_eval(w1, b1, w2, b2, x, y):
+    """Classification accuracy and mean CE loss on an eval batch."""
+    logits = _mlp_logits(w1, b1, w2, b2, x)
+    acc = jnp.mean(
+        (jnp.argmax(logits, axis=1) == jnp.argmax(y, axis=1)).astype(
+            jnp.float32
+        )
+    )
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.sum(y * logp, axis=1))
+    return (acc, loss)

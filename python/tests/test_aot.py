@@ -1,0 +1,69 @@
+"""AOT pipeline: artifacts lower to valid HLO text with the expected shapes."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+from compile.kernels.matern_fabolas import D_IN, N_HYP
+
+
+def test_artifact_specs_shapes():
+    specs = aot.artifact_specs()
+    n, q = model.N_TRAIN, model.N_QUERY
+    assert set(specs) == {
+        "gp_predict_acc",
+        "gp_predict_cost",
+        "gp_mll_acc",
+        "gp_mll_cost",
+        "cov_acc",
+        "cov_cost",
+        "mlp_train_step",
+        "mlp_eval",
+    }
+    _, args = specs["gp_predict_acc"]
+    assert [tuple(a.shape) for a in args] == [
+        (n, D_IN),
+        (n,),
+        (n,),
+        (q, D_IN),
+        (N_HYP,),
+    ]
+
+
+def test_lower_one_artifact_to_hlo_text(tmp_path):
+    """Lower the cheapest artifact end-to-end and check it is HLO text."""
+    specs = aot.artifact_specs()
+    fn, args = specs["mlp_eval"]
+    import jax
+
+    text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert text.startswith("HloModule")
+    assert "ROOT" in text
+
+
+@pytest.mark.slow
+def test_aot_main_writes_manifest(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.dirname(os.path.dirname(__file__))
+    subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(tmp_path),
+            "--only",
+            "mlp_eval",
+        ],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(__file__)),
+        env=env,
+    )
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["d_in"] == D_IN
+    assert "mlp_eval" in manifest["artifacts"]
+    assert (tmp_path / "mlp_eval.hlo.txt").exists()

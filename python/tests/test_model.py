@@ -1,0 +1,140 @@
+"""Layer-2 correctness: GP posterior graph vs jnp reference, padding trick,
+MLP train/eval behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import matern_fabolas as mk
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def toy_gp_problem(rng, n, q):
+    x_tr = rng.uniform(0, 1, size=(n, mk.D_IN)).astype(np.float32)
+    y = np.sin(3 * x_tr[:, 0]) * 0.5 + 0.1 * rng.normal(size=n)
+    y = y.astype(np.float32)
+    noise = np.full(n, 1e-3, dtype=np.float32)
+    x_q = rng.uniform(0, 1, size=(q, mk.D_IN)).astype(np.float32)
+    hyp = np.array(
+        [0.5] * mk.D_FEAT + [1.0, 0.8, 0.3, 0.4], dtype=np.float32
+    )
+    return x_tr, y, noise, x_q, hyp
+
+
+@pytest.mark.parametrize("basis", ["acc", "cost"])
+def test_gp_posterior_matches_ref(basis):
+    rng = np.random.default_rng(0)
+    x_tr, y, noise, x_q, hyp = toy_gp_problem(rng, 32, 50)
+    mu, var = model.gp_posterior(x_tr, y, noise, x_q, hyp, basis=basis)
+    mu_r, var_r = ref.gp_posterior_ref(x_tr, y, noise, x_q, hyp, basis=basis)
+    assert_allclose(np.asarray(mu), np.asarray(mu_r), rtol=1e-4, atol=1e-5)
+    assert_allclose(np.asarray(var), np.asarray(var_r), rtol=1e-3, atol=1e-5)
+
+
+def test_gp_posterior_interpolates_training_points():
+    rng = np.random.default_rng(1)
+    x_tr, y, _, _, hyp = toy_gp_problem(rng, 24, 1)
+    noise = np.full(24, 1e-6, dtype=np.float32)
+    mu, var = model.gp_posterior(x_tr, y, noise, x_tr, hyp, basis="acc")
+    assert_allclose(np.asarray(mu), y, atol=5e-3)
+    assert float(jnp.max(var)) < 1e-2
+
+
+def test_padding_as_noise_is_exact():
+    """Posterior with N real + P huge-noise points == posterior with N only."""
+    rng = np.random.default_rng(2)
+    x_tr, y, noise, x_q, hyp = toy_gp_problem(rng, 20, 30)
+    mu0, var0 = ref.gp_posterior_ref(x_tr, y, noise, x_q, hyp, basis="acc")
+
+    pad = 12
+    x_pad = np.concatenate(
+        [x_tr, rng.uniform(0, 1, size=(pad, mk.D_IN)).astype(np.float32)]
+    )
+    y_pad = np.concatenate([y, np.zeros(pad, dtype=np.float32)])
+    noise_pad = np.concatenate(
+        [noise, np.full(pad, 1e6, dtype=np.float32)]
+    )
+    mu1, var1 = model.gp_posterior(
+        x_pad, y_pad, noise_pad, x_q, hyp, basis="acc"
+    )
+    assert_allclose(np.asarray(mu1), np.asarray(mu0), rtol=1e-3, atol=1e-4)
+    assert_allclose(np.asarray(var1), np.asarray(var0), rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_gp_posterior_variance_nonnegative(seed):
+    rng = np.random.default_rng(seed)
+    x_tr, y, noise, x_q, hyp = toy_gp_problem(rng, 16, 40)
+    _, var = model.gp_posterior(x_tr, y, noise, x_q, hyp, basis="acc")
+    assert float(jnp.min(var)) >= 0.0
+
+
+def test_gp_mll_prefers_true_noise_scale():
+    """MLL at sane hyper-params beats MLL at absurd ones (sanity of fit)."""
+    rng = np.random.default_rng(3)
+    x_tr, y, noise, _, hyp = toy_gp_problem(rng, 32, 1)
+    good = float(model.gp_mll(x_tr, y, noise, hyp, basis="acc"))
+    bad_hyp = hyp.copy()
+    bad_hyp[: mk.D_FEAT] = 1e-3  # absurdly short lengthscales
+    bad = float(model.gp_mll(x_tr, y, noise, bad_hyp, basis="acc"))
+    assert good > bad
+
+
+def _mlp_toy(rng, n):
+    i, h, o = model.MLP_IN, model.MLP_HIDDEN, model.MLP_OUT
+    w1 = (rng.normal(size=(i, h)) * 0.05).astype(np.float32)
+    b1 = np.zeros(h, dtype=np.float32)
+    w2 = (rng.normal(size=(h, o)) * 0.05).astype(np.float32)
+    b2 = np.zeros(o, dtype=np.float32)
+    x = rng.normal(size=(n, i)).astype(np.float32)
+    labels = rng.integers(0, o, size=n)
+    y = np.eye(o, dtype=np.float32)[labels]
+    return (w1, b1, w2, b2), x, y
+
+
+def test_mlp_train_step_reduces_loss():
+    rng = np.random.default_rng(4)
+    params, x, y = _mlp_toy(rng, model.MLP_BATCH)
+    lr = np.float32(0.5)
+    w1, b1, w2, b2 = params
+    losses = []
+    for _ in range(20):
+        w1, b1, w2, b2, loss = model.mlp_train_step(w1, b1, w2, b2, x, y, lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses[:3] + losses[-3:]
+
+
+def test_mlp_eval_bounds_and_consistency():
+    rng = np.random.default_rng(5)
+    params, x, y = _mlp_toy(rng, model.MLP_EVAL)
+    acc, loss = model.mlp_eval(*params, x, y)
+    assert 0.0 <= float(acc) <= 1.0
+    assert float(loss) > 0.0
+
+
+def test_pure_jnp_cholesky_and_solves_match_numpy():
+    rng = np.random.default_rng(9)
+    n, m = 24, 7
+    a = rng.normal(size=(n, n)).astype(np.float32)
+    k = a @ a.T + n * np.eye(n, dtype=np.float32)
+    l = np.asarray(model.cholesky_jnp(jnp.asarray(k)))
+    assert_allclose(l @ l.T, k, rtol=2e-4, atol=2e-3)
+    assert_allclose(np.triu(l, 1), 0.0, atol=1e-7)
+
+    b = rng.normal(size=(n, m)).astype(np.float32)
+    y = np.asarray(model.solve_lower_jnp(jnp.asarray(l), jnp.asarray(b)))
+    assert_allclose(l @ y, b, rtol=2e-4, atol=2e-3)
+    x = np.asarray(model.solve_lower_t_jnp(jnp.asarray(l), jnp.asarray(b)))
+    assert_allclose(l.T @ x, b, rtol=2e-4, atol=2e-3)
+
+    v = rng.normal(size=n).astype(np.float32)
+    yv = np.asarray(model.solve_lower_jnp(jnp.asarray(l), jnp.asarray(v)))
+    assert yv.shape == (n,)
+    assert_allclose(l @ yv, v, rtol=2e-4, atol=2e-3)

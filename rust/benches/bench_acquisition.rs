@@ -1,0 +1,71 @@
+//! Acquisition-function micro-benchmarks: the cost of one α_T evaluation
+//! (the unit Table IV counts), its EI/EIc baselines, and p_opt estimation.
+mod common;
+
+use trimtuner::acq::{
+    eic, eic_usd, fabolas_alpha, trimtuner_alpha, EntropyEstimator,
+    TrimTunerAcq,
+};
+use trimtuner::models::{Feat, ModelKind};
+use trimtuner::space::{encode, Config, Point};
+use trimtuner::util::timer::bench;
+use trimtuner::util::Rng;
+
+fn main() {
+    common::print_header("acquisition");
+    let caps = common::caps();
+    let full_feats: Vec<Feat> = (0..288)
+        .map(|id| encode(&Point { config: Config::from_id(id), s_idx: 4 }))
+        .collect();
+    let probe = encode(&Point { config: Config::from_id(33), s_idx: 1 });
+
+    for (label, kind, k) in [
+        ("dt", ModelKind::Trees, 1usize),
+        ("gp-ml2", ModelKind::Gp, 1),
+        ("gp-mcmc8", ModelKind::Gp, 8),
+    ] {
+        let models = common::fitted(kind, 48, k);
+        let mut rng = Rng::new(5);
+        let rep: Vec<Feat> = (0..40).map(|i| full_feats[i * 7]).collect();
+        let est = EntropyEstimator::new(rep, 160, &mut rng);
+        let baseline =
+            EntropyEstimator::kl_from_uniform(&est.p_opt(models.acc.as_ref()));
+
+        let stats = bench(&format!("{label} p_opt(40 reps,160 mc)"), 1, 10, || {
+            est.p_opt(models.acc.as_ref())
+        });
+        println!("{}", stats.report());
+
+        let shortlist: Vec<usize> = (0..32).collect();
+        let ctx = TrimTunerAcq {
+            models: &models,
+            est: &est,
+            constraints: &caps,
+            full_feats: &full_feats,
+            inc_shortlist: &shortlist,
+            baseline,
+        };
+        let stats = bench(&format!("{label} alpha_T(1 candidate)"), 1, 10, || {
+            trimtuner_alpha(&ctx, &probe)
+        });
+        println!("{}", stats.report());
+        let stats = bench(&format!("{label} fabolas(1 candidate)"), 1, 10, || {
+            fabolas_alpha(&models, &est, baseline, &probe)
+        });
+        println!("{}", stats.report());
+        let stats = bench(&format!("{label} eic x288"), 2, 10, || {
+            full_feats
+                .iter()
+                .map(|x| eic(&models, &caps, x, 0.9))
+                .sum::<f64>()
+        });
+        println!("{}", stats.report());
+        let stats = bench(&format!("{label} eic_usd x288"), 2, 10, || {
+            full_feats
+                .iter()
+                .map(|x| eic_usd(&models, &caps, x, 0.9))
+                .sum::<f64>()
+        });
+        println!("{}", stats.report());
+    }
+}

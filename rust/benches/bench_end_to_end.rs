@@ -1,0 +1,28 @@
+//! End-to-end optimizer benchmark (paper Fig. 1 per-run cost): full short
+//! Algorithm-1 runs for each optimizer on the RNN campaign.
+mod common;
+
+use trimtuner::engine::{self, EngineConfig, OptimizerKind};
+use trimtuner::models::ModelKind;
+use trimtuner::sim::{Dataset, NetKind};
+use trimtuner::space::Constraint;
+use trimtuner::util::timer::bench;
+
+fn main() {
+    common::print_header("end-to-end runs (Fig 1 unit)");
+    let dataset = Dataset::generate(NetKind::Rnn, 42);
+    let caps = [Constraint::cost_max(NetKind::Rnn.paper_cost_cap())];
+    for optimizer in [
+        OptimizerKind::TrimTuner(ModelKind::Trees),
+        OptimizerKind::Eic,
+        OptimizerKind::RandomSearch,
+    ] {
+        let stats =
+            bench(&format!("{} 20-iter run", optimizer.name()), 0, 3, || {
+                let mut cfg = EngineConfig::paper_default(optimizer, 5);
+                cfg.max_iters = 20;
+                engine::run(&dataset, &caps, &cfg).final_accuracy_c()
+            });
+        println!("{}", stats.report());
+    }
+}

@@ -1,0 +1,41 @@
+//! Filtering-heuristic benchmarks (paper Table IV): the cost of choosing
+//! the next candidate under each heuristic and filtering level, with a
+//! fixed-price stand-in acquisition so heuristic overhead is isolated.
+mod common;
+
+use trimtuner::heuristics::{cea_scores, select_next, AlphaCache, FilterKind};
+use trimtuner::models::ModelKind;
+use trimtuner::space::{all_points, encode, Point};
+use trimtuner::util::timer::bench;
+use trimtuner::util::Rng;
+
+fn main() {
+    common::print_header("heuristics (Table IV)");
+    let models = common::fitted(ModelKind::Trees, 48, 1);
+    let caps = common::caps();
+    let untested: Vec<Point> = all_points().collect();
+
+    let stats = bench("cea_scores x1440", 2, 20, || {
+        cea_scores(&models, &caps, &untested)
+    });
+    println!("{}", stats.report());
+
+    for (label, kind, beta) in [
+        ("nofilter", FilterKind::NoFilter, 1.0f64),
+        ("cea 1%", FilterKind::Cea, 0.01),
+        ("cea 10%", FilterKind::Cea, 0.10),
+        ("cea 20%", FilterKind::Cea, 0.20),
+        ("direct 10%", FilterKind::Direct, 0.10),
+        ("cmaes 10%", FilterKind::Cmaes, 0.10),
+        ("random 10%", FilterKind::RandomFilter, 0.10),
+    ] {
+        let budget = ((beta * untested.len() as f64).ceil() as usize).max(1);
+        let stats = bench(&format!("select_next {label}"), 1, 5, || {
+            let mut rng = Rng::new(3);
+            // cheap alpha stand-in: isolates the heuristic's own overhead
+            let mut alpha = AlphaCache::new(|p: &Point| encode(p)[0]);
+            select_next(kind, &models, &caps, &untested, budget, &mut alpha, &mut rng)
+        });
+        println!("{}", stats.report());
+    }
+}

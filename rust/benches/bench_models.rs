@@ -1,0 +1,52 @@
+//! Surrogate-model micro-benchmarks: GP (ML-II and marginalized) vs
+//! Extra-Trees fit / predict / condition — the primitives whose cost ratio
+//! drives paper Table III.
+mod common;
+
+use trimtuner::models::{
+    Basis, ExtraTrees, FitOptions, Gp, Surrogate, TreesOptions,
+};
+use trimtuner::space::encode;
+use trimtuner::util::timer::bench;
+
+fn main() {
+    common::print_header("models");
+    let (pts, outs) = common::observations(48, 7);
+    let xs: Vec<_> = pts.iter().map(encode).collect();
+    let ys: Vec<f64> = outs.iter().map(|o| o.acc).collect();
+    let probe = encode(&pts[0]);
+
+    for (label, k) in [("gp-ml2", 1usize), ("gp-mcmc8", 8)] {
+        let mut gp = Gp::with_hyper_samples(Basis::Acc, 3, k);
+        let stats = bench(&format!("{label} fit(48) w/ hyperopt"), 1, 5, || {
+            gp.fit(&xs, &ys, FitOptions { hyperopt: true, restarts: 1 });
+        });
+        println!("{}", stats.report());
+        let stats = bench(&format!("{label} predict x288"), 2, 20, || {
+            (0..288)
+                .map(|i| gp.predict(&xs[i % xs.len()]).0)
+                .sum::<f64>()
+        });
+        println!("{}", stats.report());
+        let stats = bench(&format!("{label} condition+predict"), 2, 20, || {
+            let g = gp.condition(&probe, 0.9);
+            g.predict(&probe).0
+        });
+        println!("{}", stats.report());
+    }
+
+    let mut et = ExtraTrees::new(TreesOptions::default());
+    let stats = bench("extra-trees fit(48, 30 trees)", 1, 20, || {
+        et.fit(&xs, &ys, FitOptions::default());
+    });
+    println!("{}", stats.report());
+    let stats = bench("extra-trees predict x288", 2, 50, || {
+        (0..288).map(|i| et.predict(&xs[i % xs.len()]).0).sum::<f64>()
+    });
+    println!("{}", stats.report());
+    let stats = bench("extra-trees condition+predict", 2, 20, || {
+        let t = et.condition(&probe, 0.9);
+        t.predict(&probe).0
+    });
+    println!("{}", stats.report());
+}

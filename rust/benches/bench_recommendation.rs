@@ -1,0 +1,40 @@
+//! Recommendation-latency benchmark (paper Table III): wall-clock time of
+//! one full choose-next + refit + recommend iteration per optimizer.
+mod common;
+
+use trimtuner::engine::{self, EngineConfig, OptimizerKind};
+use trimtuner::models::ModelKind;
+use trimtuner::sim::{Dataset, NetKind};
+use trimtuner::space::Constraint;
+use trimtuner::util::timer::bench;
+
+fn main() {
+    common::print_header("recommendation latency (Table III)");
+    let dataset = Dataset::generate(NetKind::Rnn, 42);
+    let caps = [Constraint::cost_max(NetKind::Rnn.paper_cost_cap())];
+
+    for optimizer in [
+        OptimizerKind::TrimTuner(ModelKind::Gp),
+        OptimizerKind::TrimTuner(ModelKind::Trees),
+        OptimizerKind::Fabolas,
+        OptimizerKind::Eic,
+        OptimizerKind::EicUsd,
+    ] {
+        // benches a short run and reports the measured per-iteration mean
+        // (engine already timers each iteration)
+        let stats = bench(&format!("{} 8-iter run", optimizer.name()), 0, 3, || {
+            let mut cfg = EngineConfig::paper_default(optimizer, 1);
+            cfg.max_iters = 8;
+            engine::run(&dataset, &caps, &cfg)
+        });
+        println!("{}", stats.report());
+        let mut cfg = EngineConfig::paper_default(optimizer, 1);
+        cfg.max_iters = 8;
+        let run = engine::run(&dataset, &caps, &cfg);
+        println!(
+            "{:<44} mean rec latency {:8.1} ms",
+            format!("{} per-iteration", optimizer.name()),
+            run.mean_rec_wall_s() * 1e3
+        );
+    }
+}

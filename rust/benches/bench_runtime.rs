@@ -1,0 +1,52 @@
+//! PJRT runtime benchmarks: artifact execution latency for the covariance
+//! kernel (Layer-1), batched GP posterior (Layer-2) and MLP training step.
+//! Skips gracefully when `make artifacts` has not been run.
+mod common;
+
+use trimtuner::models::{Basis, Feat, KernelParams};
+use trimtuner::runtime::{MlpParams, MlpTrainer, Runtime, SyntheticMnist, XlaGp};
+use trimtuner::util::timer::bench;
+use trimtuner::util::Rng;
+
+fn main() {
+    common::print_header("runtime (PJRT artifacts)");
+    let rt = match Runtime::load("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let mut rng = Rng::new(2);
+    let rand_feat = |rng: &mut Rng| {
+        let mut f: Feat = [0.0; trimtuner::space::D_IN];
+        for v in f.iter_mut() {
+            *v = rng.f64();
+        }
+        f
+    };
+
+    let params = KernelParams::default();
+    let xs: Vec<Feat> = (0..48).map(|_| rand_feat(&mut rng)).collect();
+    let ys: Vec<f64> = xs.iter().map(|x| x[0]).collect();
+    let queries: Vec<Feat> = (0..288).map(|_| rand_feat(&mut rng)).collect();
+    let gp = XlaGp::new(&rt, Basis::Acc, &params, &xs, &ys).unwrap();
+
+    let stats = bench("xla gp_predict (48 tr, 288 q)", 1, 10, || {
+        gp.predict_batch(&queries).unwrap().0[0]
+    });
+    println!("{}", stats.report());
+    let stats = bench("xla gp_mll (64 padded)", 1, 10, || gp.mll().unwrap());
+    println!("{}", stats.report());
+
+    let m = &rt.manifest;
+    let data = SyntheticMnist::generate(m.mlp_batch * 4, m.mlp_in, m.mlp_out, 3);
+    let idx: Vec<usize> = (0..m.mlp_batch).collect();
+    let (bx, by) = data.batch(&idx);
+    let mut trainer =
+        MlpTrainer::new(&rt, MlpParams::init(&rt, &mut rng), 0.3);
+    let stats = bench("xla mlp_train_step (B=128)", 1, 10, || {
+        trainer.step(&bx, &by).unwrap()
+    });
+    println!("{}", stats.report());
+}

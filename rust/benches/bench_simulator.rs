@@ -1,0 +1,30 @@
+//! Simulator benchmarks: oracle evaluation and full measurement-campaign
+//! generation (the substrate behind every experiment).
+mod common;
+
+use trimtuner::sim::{CloudSim, Dataset, NetKind};
+use trimtuner::space::{all_points, Point};
+use trimtuner::util::timer::bench;
+use trimtuner::util::Rng;
+
+fn main() {
+    common::print_header("simulator");
+    let sim = CloudSim::new(NetKind::Cnn);
+    let pts: Vec<Point> = all_points().collect();
+
+    let stats = bench("ground_truth x1440", 3, 50, || {
+        pts.iter().map(|p| sim.ground_truth(p).acc).sum::<f64>()
+    });
+    println!("{}", stats.report());
+
+    let stats = bench("observe (noisy) x1440", 3, 50, || {
+        let mut rng = Rng::new(1);
+        pts.iter().map(|p| sim.observe(p, &mut rng).acc).sum::<f64>()
+    });
+    println!("{}", stats.report());
+
+    let stats = bench("Dataset::generate (3 reps x 1440)", 1, 10, || {
+        Dataset::generate(NetKind::Cnn, 42).len()
+    });
+    println!("{}", stats.report());
+}

@@ -1,0 +1,39 @@
+//! Shared fixtures for the custom bench harness (no criterion offline).
+#![allow(dead_code)]
+
+use trimtuner::acq::Models;
+use trimtuner::models::{FitOptions, ModelKind};
+use trimtuner::sim::{CloudSim, NetKind, Outcome};
+use trimtuner::space::{Config, Constraint, Point};
+use trimtuner::util::Rng;
+
+pub fn observations(n: usize, seed: u64) -> (Vec<Point>, Vec<Outcome>) {
+    let sim = CloudSim::new(NetKind::Rnn);
+    let mut rng = Rng::new(seed);
+    let mut pts = Vec::with_capacity(n);
+    let mut outs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let p = Point {
+            config: Config::from_id(rng.below(288)),
+            s_idx: rng.below(5),
+        };
+        pts.push(p);
+        outs.push(sim.observe(&p, &mut rng));
+    }
+    (pts, outs)
+}
+
+pub fn fitted(kind: ModelKind, n: usize, gp_k: usize) -> Models {
+    let (pts, outs) = observations(n, 42);
+    let mut m = Models::with_gp_hyper_samples(kind, 1, gp_k);
+    m.fit(&pts, &outs, FitOptions { hyperopt: true, restarts: 1 });
+    m
+}
+
+pub fn caps() -> Vec<Constraint> {
+    vec![Constraint::cost_max(0.02)]
+}
+
+pub fn print_header(name: &str) {
+    println!("\n### bench: {name} ###");
+}

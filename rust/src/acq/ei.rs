@@ -1,0 +1,99 @@
+//! Expected Improvement and its constrained variants (paper §II Eq. 1 and
+//! the EIc / EIc/USD baselines of §IV used by CherryPick and Lynceus).
+
+use super::models::{joint_feasibility, Models};
+use crate::models::Feat;
+use crate::space::Constraint;
+use crate::util::stats::{normal_cdf, normal_pdf};
+
+/// Analytic EI of maximizing over incumbent `eta`:
+/// EI = sigma * (gamma Phi(gamma) + phi(gamma)), gamma = (mu - eta)/sigma.
+pub fn ei(mu: f64, sigma: f64, eta: f64) -> f64 {
+    if sigma < 1e-12 {
+        return (mu - eta).max(0.0);
+    }
+    let gamma = (mu - eta) / sigma;
+    (sigma * (gamma * normal_cdf(gamma) + normal_pdf(gamma))).max(0.0)
+}
+
+/// Constrained EI (CherryPick): EI on accuracy × joint feasibility
+/// probability at the same point.
+pub fn eic(
+    models: &Models,
+    constraints: &[Constraint],
+    x: &Feat,
+    eta: f64,
+) -> f64 {
+    let (mu, sigma) = models.acc.predict(x);
+    ei(mu, sigma, eta) * joint_feasibility(models, constraints, x)
+}
+
+/// EIc per dollar (Lynceus): EIc divided by the predicted cost of running
+/// the exploration itself.
+pub fn eic_usd(
+    models: &Models,
+    constraints: &[Constraint],
+    x: &Feat,
+    eta: f64,
+) -> f64 {
+    eic(models, constraints, x, eta) / models.predicted_cost(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn ei_zero_when_far_below_incumbent() {
+        assert!(ei(0.0, 0.01, 10.0) < 1e-12);
+    }
+
+    #[test]
+    fn ei_equals_gap_when_certain() {
+        assert!((ei(2.0, 0.0, 1.5) - 0.5).abs() < 1e-12);
+        assert_eq!(ei(1.0, 0.0, 1.5), 0.0);
+    }
+
+    #[test]
+    fn ei_increases_with_mean_and_sigma() {
+        check("EI monotonicity", 64, |rng| {
+            let eta = rng.uniform(-1.0, 1.0);
+            let mu = rng.uniform(-2.0, 2.0);
+            let s = rng.uniform(0.01, 2.0);
+            let e = ei(mu, s, eta);
+            if e < 0.0 {
+                return Err(format!("negative EI {e}"));
+            }
+            if ei(mu + 0.1, s, eta) < e - 1e-12 {
+                return Err("EI decreased with mean".into());
+            }
+            if ei(mu, s + 0.1, eta) < e - 1e-12 {
+                return Err("EI decreased with sigma".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ei_matches_numerical_integral() {
+        check("EI vs quadrature", 16, |rng| {
+            let (mu, s, eta) =
+                (rng.uniform(-1.0, 1.0), rng.uniform(0.2, 1.5), 0.3);
+            let analytic = ei(mu, s, eta);
+            // trapezoid over mu ± 8s
+            let mut num = 0.0;
+            let steps = 4000;
+            for i in 0..steps {
+                let z = -8.0 + 16.0 * (i as f64 + 0.5) / steps as f64;
+                let y = mu + s * z;
+                num += (y - eta).max(0.0) * normal_pdf(z) * (16.0 / steps as f64);
+            }
+            if (analytic - num).abs() < 2e-3 {
+                Ok(())
+            } else {
+                Err(format!("analytic {analytic} vs num {num}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,199 @@
+//! Entropy-Search machinery (paper §II Eq. 2): Monte-Carlo estimation of
+//! p_opt — the probability that each candidate is the accuracy-optimal
+//! full-data-set configuration — and the information gain (KL divergence
+//! from uniform) that a hypothetical observation induces on it.
+//!
+//! Following FABOLAS's practical recipe, p_opt is estimated over a small
+//! *representative set* R of full-data-set configurations, by sampling the
+//! accuracy surrogate's joint posterior on R and counting arg-maxes.
+//! Common random numbers (one fixed z-matrix per optimizer iteration) keep
+//! the candidate ranking free of MC jitter — see DESIGN.md §6.
+
+use crate::models::{Feat, Surrogate};
+use crate::util::Rng;
+
+pub struct EntropyEstimator {
+    /// representative full-data-set feature vectors
+    pub rep_feats: Vec<Feat>,
+    /// common random numbers: n_samples × |rep| standard normals
+    z: Vec<Vec<f64>>,
+    /// scratch buffer for one posterior draw
+    laplace: f64,
+}
+
+impl EntropyEstimator {
+    pub fn new(rep_feats: Vec<Feat>, n_samples: usize, rng: &mut Rng) -> Self {
+        let m = rep_feats.len();
+        assert!(m >= 2, "representative set too small");
+        let z = (0..n_samples)
+            .map(|_| (0..m).map(|_| rng.normal()).collect())
+            .collect();
+        EntropyEstimator { rep_feats, z, laplace: 1e-4 }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.z.len()
+    }
+
+    /// p_opt over the representative set under `acc_model`'s posterior.
+    pub fn p_opt(&self, acc_model: &dyn Surrogate) -> Vec<f64> {
+        let post = acc_model.posterior(&self.rep_feats);
+        let m = self.rep_feats.len();
+        let mut counts = vec![self.laplace; m];
+        let mut draw = Vec::with_capacity(m);
+        for z in &self.z {
+            post.sample_with(z, &mut draw);
+            let mut arg = 0;
+            let mut best = f64::NEG_INFINITY;
+            for (i, &v) in draw.iter().enumerate() {
+                if v > best {
+                    best = v;
+                    arg = i;
+                }
+            }
+            counts[arg] += 1.0;
+        }
+        let total: f64 = counts.iter().sum();
+        counts.iter_mut().for_each(|c| *c /= total);
+        counts
+    }
+
+    /// KL(p_opt ‖ uniform) = log m − H(p_opt)  (≥ 0, 0 iff uniform).
+    pub fn kl_from_uniform(p: &[f64]) -> f64 {
+        let m = p.len() as f64;
+        p.iter()
+            .filter(|&&pi| pi > 0.0)
+            .map(|&pi| pi * (pi * m).ln())
+            .sum::<f64>()
+            .max(0.0)
+    }
+
+    /// Information gain of `model_after` relative to the baseline KL of the
+    /// current model (pass `baseline = kl_from_uniform(p_opt(current))`).
+    pub fn info_gain(&self, model_after: &dyn Surrogate, baseline: f64) -> f64 {
+        let p = self.p_opt(model_after);
+        (Self::kl_from_uniform(&p) - baseline).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{
+        Basis, FitOptions, Gp, Posterior, Surrogate,
+    };
+    use crate::space::D_IN;
+
+    /// Surrogate stub with a fixed diagonal posterior (for exact tests).
+    struct Stub {
+        mean: Vec<f64>,
+        std: Vec<f64>,
+    }
+
+    impl Surrogate for Stub {
+        fn fit(&mut self, _: &[Feat], _: &[f64], _: FitOptions) {}
+        fn predict(&self, _: &Feat) -> (f64, f64) {
+            (0.0, 1.0)
+        }
+        fn posterior(&self, xs: &[Feat]) -> Posterior {
+            assert_eq!(xs.len(), self.mean.len());
+            Posterior::diagonal(self.mean.clone(), self.std.clone())
+        }
+        fn condition(&self, _: &Feat, _: f64) -> Box<dyn Surrogate> {
+            unimplemented!()
+        }
+        fn n_obs(&self) -> usize {
+            0
+        }
+        fn clone_box(&self) -> Box<dyn Surrogate> {
+            unimplemented!()
+        }
+    }
+
+    fn feats(m: usize) -> Vec<Feat> {
+        (0..m)
+            .map(|i| {
+                let mut f = [0.0; D_IN];
+                f[0] = i as f64 / m as f64;
+                f[6] = 1.0;
+                f
+            })
+            .collect()
+    }
+
+    #[test]
+    fn p_opt_sums_to_one_and_tracks_dominance() {
+        let mut rng = Rng::new(1);
+        let est = EntropyEstimator::new(feats(5), 400, &mut rng);
+        // candidate 2 dominates by 10 sigma
+        let stub = Stub {
+            mean: vec![0.0, 0.0, 10.0, 0.0, 0.0],
+            std: vec![1.0; 5],
+        };
+        let p = est.p_opt(&stub);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(p[2] > 0.99, "{p:?}");
+    }
+
+    #[test]
+    fn kl_zero_for_uniform_max_for_point_mass() {
+        let m = 8;
+        let uniform = vec![1.0 / m as f64; m];
+        assert!(EntropyEstimator::kl_from_uniform(&uniform).abs() < 1e-12);
+        let mut point = vec![0.0; m];
+        point[3] = 1.0;
+        let kl = EntropyEstimator::kl_from_uniform(&point);
+        assert!((kl - (m as f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identical_candidates_give_flat_p_opt() {
+        let mut rng = Rng::new(2);
+        let est = EntropyEstimator::new(feats(4), 2000, &mut rng);
+        let stub = Stub { mean: vec![1.0; 4], std: vec![0.5; 4] };
+        let p = est.p_opt(&stub);
+        for pi in &p {
+            assert!((pi - 0.25).abs() < 0.05, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn crn_makes_p_opt_deterministic() {
+        let mut rng = Rng::new(3);
+        let est = EntropyEstimator::new(feats(6), 200, &mut rng);
+        let stub = Stub {
+            mean: vec![0.1, 0.5, 0.3, 0.7, 0.2, 0.4],
+            std: vec![0.3; 6],
+        };
+        assert_eq!(est.p_opt(&stub), est.p_opt(&stub));
+    }
+
+    #[test]
+    fn observing_reduces_uncertainty_and_gains_information() {
+        // Real GP: info gain of conditioning on a point near the optimum
+        // should be positive.
+        let mut rng = Rng::new(4);
+        let rep = feats(6);
+        let est = EntropyEstimator::new(rep.clone(), 300, &mut rng);
+        // Flat training signal -> near-uniform p_opt (baseline ~ 0), so a
+        // strong simulated observation at one representative must
+        // concentrate p_opt and yield positive information gain.
+        let train: Vec<Feat> = (0..10)
+            .map(|i| {
+                let mut f = [0.0; D_IN];
+                f[0] = i as f64 / 10.0;
+                f[6] = 0.25;
+                f
+            })
+            .collect();
+        let ys: Vec<f64> = train.iter().map(|_| 0.5).collect();
+        let mut gp = Gp::new(Basis::Acc);
+        gp.fit(&train, &ys, FitOptions { hyperopt: false, restarts: 0 });
+        let baseline =
+            EntropyEstimator::kl_from_uniform(&est.p_opt(&gp));
+        // condition on a strong observation at the top representative
+        let after = gp.condition(&rep[5], 2.0);
+        let gain = est.info_gain(after.as_ref(), baseline);
+        assert!(gain > 0.0, "gain {gain}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Acquisition functions (paper §II–III): EI, constrained EI (CherryPick),
+//! EIc/USD (Lynceus), Entropy-Search machinery (p_opt / information gain),
+//! FABOLAS, and TrimTuner's constrained sub-sampling-aware α_T.
+
+mod ei;
+mod entropy;
+mod fabolas;
+mod models;
+mod trimtuner;
+
+pub use ei::{ei, eic, eic_usd};
+pub use entropy::EntropyEstimator;
+pub use fabolas::fabolas_alpha;
+pub use models::{feasibility_prob, joint_feasibility, select_incumbent, select_incumbent_from, Incumbent, Models, FEAS_THRESHOLD, FEAS_THRESHOLD_HYST};
+pub use trimtuner::{trimtuner_alpha, TrimTunerAcq};

@@ -1,0 +1,298 @@
+//! The surrogate bundle every optimizer maintains (paper Alg. 1 line 10):
+//! accuracy model A(x,s), cost model C(x,s) and one model per QoS metric —
+//! here cost and time, which cover all constraints the paper evaluates.
+
+use crate::models::{
+    Basis, ExtraTrees, Feat, FitOptions, Gp, ModelKind, Surrogate,
+    TreesOptions,
+};
+use crate::sim::Outcome;
+use crate::space::{encode, Constraint, Metric, Point};
+use crate::util::stats::normal_cdf;
+
+/// Accuracy + log-cost + log-time surrogates over (config, s) features.
+pub struct Models {
+    pub acc: Box<dyn Surrogate>,
+    /// models ln(cost_usd)
+    pub cost: Box<dyn Surrogate>,
+    /// models ln(time_s)
+    pub time: Box<dyn Surrogate>,
+    pub kind: ModelKind,
+}
+
+impl Models {
+    pub fn new(kind: ModelKind, seed: u64) -> Models {
+        Models::with_gp_hyper_samples(kind, seed, 1)
+    }
+
+    /// `gp_k > 1` enables FABOLAS-style hyper-parameter marginalization for
+    /// GP surrogates (K MCMC samples; K x prediction cost).
+    pub fn with_gp_hyper_samples(
+        kind: ModelKind,
+        seed: u64,
+        gp_k: usize,
+    ) -> Models {
+        match kind {
+            ModelKind::Gp => Models {
+                acc: Box::new(Gp::with_hyper_samples(Basis::Acc, seed, gp_k)),
+                cost: Box::new(Gp::with_hyper_samples(
+                    Basis::Cost,
+                    seed ^ 1,
+                    gp_k,
+                )),
+                time: Box::new(Gp::with_hyper_samples(
+                    Basis::Cost,
+                    seed ^ 2,
+                    gp_k,
+                )),
+                kind,
+            },
+            ModelKind::Trees => Models {
+                acc: Box::new(ExtraTrees::with_seed(
+                    TreesOptions::default(),
+                    seed,
+                )),
+                cost: Box::new(ExtraTrees::with_seed(
+                    TreesOptions::default(),
+                    seed ^ 1,
+                )),
+                time: Box::new(ExtraTrees::with_seed(
+                    TreesOptions::default(),
+                    seed ^ 2,
+                )),
+                kind,
+            },
+        }
+    }
+
+    /// Fit all three surrogates from the observation log.
+    pub fn fit(
+        &mut self,
+        points: &[Point],
+        outcomes: &[Outcome],
+        opts: FitOptions,
+    ) {
+        let xs: Vec<Feat> = points.iter().map(encode).collect();
+        let acc: Vec<f64> = outcomes.iter().map(|o| o.acc).collect();
+        let lc: Vec<f64> =
+            outcomes.iter().map(|o| o.cost_usd.max(1e-9).ln()).collect();
+        let lt: Vec<f64> =
+            outcomes.iter().map(|o| o.time_s.max(1e-9).ln()).collect();
+        self.acc.fit(&xs, &acc, opts);
+        self.cost.fit(&xs, &lc, opts);
+        self.time.fit(&xs, &lt, opts);
+    }
+
+    /// The surrogate that models a constraint's metric.
+    pub fn metric_model(&self, metric: Metric) -> &dyn Surrogate {
+        match metric {
+            Metric::Cost => self.cost.as_ref(),
+            Metric::Time => self.time.as_ref(),
+        }
+    }
+
+    /// Predicted cost (USD) of testing a point — the α denominator.
+    pub fn predicted_cost(&self, x: &Feat) -> f64 {
+        let (mu, _) = self.cost.predict(x);
+        mu.exp().max(1e-9)
+    }
+
+    /// Clone of the bundle with one simulated observation added to every
+    /// surrogate (hyper-parameters frozen) — TrimTuner's 1-root
+    /// Gauss–Hermite "simulate the refit" step (§III, simulation approach).
+    /// Perf (EXPERIMENTS.md §Perf): for tree ensembles, conditioning the
+    /// *constraint* models on their own predictive mean is statistically a
+    /// no-op (bagged trees refit with one self-predicted point barely move)
+    /// but costs a full 30-tree rebuild each — so the DT variant shares the
+    /// unconditioned cost/time models. The accuracy model, which drives the
+    /// information gain, is always conditioned. GPs condition everything
+    /// (rank-1 Cholesky extension is O(n²)).
+    pub fn condition(&self, x: &Feat) -> Models {
+        let (a_hat, _) = self.acc.predict(x);
+        let (cost, time) = match self.kind {
+            ModelKind::Gp => {
+                let (c_hat, _) = self.cost.predict(x);
+                let (t_hat, _) = self.time.predict(x);
+                (
+                    self.cost.condition(x, c_hat),
+                    self.time.condition(x, t_hat),
+                )
+            }
+            ModelKind::Trees => {
+                (self.cost.clone_box(), self.time.clone_box())
+            }
+        };
+        Models {
+            acc: self.acc.condition(x, a_hat),
+            cost,
+            time,
+            kind: self.kind,
+        }
+    }
+}
+
+/// P(q >= 0) = P(metric <= max) under the log-metric surrogate at `x`.
+pub fn feasibility_prob(models: &Models, c: &Constraint, x: &Feat) -> f64 {
+    let (mu, std) = models.metric_model(c.metric).predict(x);
+    let z = (c.max.max(1e-12).ln() - mu) / std.max(1e-9);
+    normal_cdf(z)
+}
+
+/// Joint feasibility (constraints independent, paper Eq. 5 product).
+pub fn joint_feasibility(
+    models: &Models,
+    constraints: &[Constraint],
+    x: &Feat,
+) -> f64 {
+    constraints
+        .iter()
+        .map(|c| feasibility_prob(models, c, x))
+        .product()
+}
+
+/// Recommended incumbent (paper footnote 2: feasible with probability
+/// >= 0.9, maximum predicted accuracy, always at s = 1).
+#[derive(Debug, Clone, Copy)]
+pub struct Incumbent {
+    /// dense config id (0..288)
+    pub config_id: usize,
+    pub pred_acc: f64,
+    pub feas_prob: f64,
+}
+
+pub const FEAS_THRESHOLD: f64 = 0.9;
+/// Laxer bar for *retaining* an already-recommended incumbent (hysteresis
+/// band prevents flapping right at the 0.9 boundary).
+pub const FEAS_THRESHOLD_HYST: f64 = 0.8;
+
+/// Scan all full-data-set configs; pick the most accurate among those that
+/// are feasible with >= 90% probability. Falls back to the configuration
+/// with the highest feasibility probability when none clears the bar
+/// (early iterations).
+///
+/// `full_feats[i]` must be `encode(config_i at s=1)` — precomputed once by
+/// the engine since it never changes.
+pub fn select_incumbent(
+    models: &Models,
+    constraints: &[Constraint],
+    full_feats: &[Feat],
+) -> Incumbent {
+    let all: Vec<usize> = (0..full_feats.len()).collect();
+    select_incumbent_from(models, constraints, full_feats, &all)
+}
+
+/// Incumbent selection restricted to a subset of config ids — the
+/// acquisition hot path uses a CEA-ranked shortlist so the per-candidate
+/// simulated-refit scan costs O(|shortlist|) instead of O(288) predictions
+/// per surrogate (EXPERIMENTS.md §Perf).
+pub fn select_incumbent_from(
+    models: &Models,
+    constraints: &[Constraint],
+    full_feats: &[Feat],
+    subset: &[usize],
+) -> Incumbent {
+    let mut best: Option<Incumbent> = None;
+    let mut fallback: Option<Incumbent> = None;
+    for &id in subset {
+        let x = &full_feats[id];
+        let p = joint_feasibility(models, constraints, x);
+        let (acc, _) = models.acc.predict(x);
+        let cand = Incumbent { config_id: id, pred_acc: acc, feas_prob: p };
+        if p >= FEAS_THRESHOLD
+            && best.as_ref().map_or(true, |b| acc > b.pred_acc)
+        {
+            best = Some(cand);
+        }
+        if fallback.as_ref().map_or(true, |f| {
+            (p, acc) > (f.feas_prob, f.pred_acc)
+        }) {
+            fallback = Some(cand);
+        }
+    }
+    best.or(fallback).expect("non-empty subset")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{CloudSim, NetKind};
+    use crate::space::{Config, S_VALUES};
+    use crate::util::Rng;
+
+    pub(crate) fn fitted_models(kind: ModelKind, n: usize) -> (Models, Vec<Point>, Vec<Outcome>) {
+        let sim = CloudSim::new(NetKind::Mlp);
+        let mut rng = Rng::new(7);
+        let mut pts = Vec::new();
+        let mut outs = Vec::new();
+        for _ in 0..n {
+            let p = Point {
+                config: Config::from_id(rng.below(288)),
+                s_idx: rng.below(S_VALUES.len()),
+            };
+            pts.push(p);
+            outs.push(sim.observe(&p, &mut rng));
+        }
+        let mut m = Models::new(kind, 3);
+        m.fit(&pts, &outs, FitOptions { hyperopt: true, restarts: 1 });
+        (m, pts, outs)
+    }
+
+    #[test]
+    fn feasibility_prob_monotone_in_cap() {
+        for kind in [ModelKind::Gp, ModelKind::Trees] {
+            let (m, pts, _) = fitted_models(kind, 20);
+            let x = encode(&pts[0]);
+            let p_tight = feasibility_prob(&m, &Constraint::cost_max(1e-6), &x);
+            let p_loose = feasibility_prob(&m, &Constraint::cost_max(100.0), &x);
+            assert!(p_tight < 0.05, "{kind:?} tight {p_tight}");
+            assert!(p_loose > 0.95, "{kind:?} loose {p_loose}");
+        }
+    }
+
+    #[test]
+    fn predicted_cost_positive_and_sane() {
+        let (m, pts, outs) = fitted_models(ModelKind::Gp, 24);
+        for (p, o) in pts.iter().zip(&outs) {
+            let c = m.predicted_cost(&encode(p));
+            assert!(c > 0.0);
+            // within an order of magnitude of the observation at obs points
+            assert!(
+                c / o.cost_usd < 10.0 && o.cost_usd / c < 10.0,
+                "pred {c} vs obs {}",
+                o.cost_usd
+            );
+        }
+    }
+
+    #[test]
+    fn incumbent_prefers_feasible_high_accuracy() {
+        let (m, _, _) = fitted_models(ModelKind::Trees, 30);
+        let full_feats: Vec<Feat> = (0..288)
+            .map(|id| {
+                encode(&Point { config: Config::from_id(id), s_idx: 4 })
+            })
+            .collect();
+        let caps = [Constraint::cost_max(0.06)];
+        let inc = select_incumbent(&m, &caps, &full_feats);
+        assert!(inc.config_id < 288);
+        assert!(inc.pred_acc > 0.0 && inc.pred_acc <= 1.2);
+        // with a loose cap, the incumbent must clear the 0.9 bar
+        let loose = [Constraint::cost_max(1e9)];
+        let inc2 = select_incumbent(&m, &loose, &full_feats);
+        assert!(inc2.feas_prob >= 0.89, "{inc2:?}");
+    }
+
+    #[test]
+    fn condition_shifts_local_prediction() {
+        let (m, pts, _) = fitted_models(ModelKind::Gp, 16);
+        let x = encode(&pts[0]);
+        let m2 = m.condition(&x);
+        // conditioning on the model's own prediction must not move the mean
+        let (a1, s1) = m.acc.predict(&x);
+        let (a2, s2) = m2.acc.predict(&x);
+        assert!((a1 - a2).abs() < 0.05, "{a1} vs {a2}");
+        // but must reduce uncertainty there
+        assert!(s2 <= s1 + 1e-9, "{s2} > {s1}");
+        assert_eq!(m2.acc.n_obs(), m.acc.n_obs() + 1);
+    }
+}

@@ -1,0 +1,162 @@
+//! TrimTuner's acquisition function α_T (paper Eq. 5): FABOLAS's
+//! information-gain-per-dollar, additionally weighted by the probability
+//! that the incumbent recommended *after* the simulated observation
+//! satisfies every QoS constraint.
+
+use super::entropy::EntropyEstimator;
+use super::models::{joint_feasibility, select_incumbent_from, Models};
+use crate::models::Feat;
+use crate::space::Constraint;
+
+/// Precomputed per-iteration context for evaluating α_T on many candidates.
+pub struct TrimTunerAcq<'a> {
+    pub models: &'a Models,
+    pub est: &'a EntropyEstimator,
+    pub constraints: &'a [Constraint],
+    /// encode(config_i, s=1) for all 288 configs (incumbent scan)
+    pub full_feats: &'a [Feat],
+    /// CEA-ranked shortlist of config ids scanned for the simulated
+    /// incumbent (perf: O(shortlist) instead of O(288) per candidate)
+    pub inc_shortlist: &'a [usize],
+    /// KL(p_opt ‖ u) of the current accuracy model
+    pub baseline: f64,
+}
+
+/// α_T(x, s) following the paper's simulation recipe (§III, steps 1–4):
+///
+/// 1. extend every surrogate with the predicted outcome at (x, s)
+///    (single-root Gauss–Hermite collapse of the outer expectation);
+/// 2. re-select the incumbent x* under the updated models;
+/// 3. weight by Π_i P(q_i(x*, s=1) ≥ 0 | updated models);
+/// 4. multiply by the information gain on p_opt and divide by the
+///    predicted cost C(x, s) of the probe.
+pub fn trimtuner_alpha(ctx: &TrimTunerAcq<'_>, x: &Feat) -> f64 {
+    // 1. simulate testing (x, s)
+    let updated = ctx.models.condition(x);
+    // 2. incumbent under updated models (shortlist scan)
+    let inc = select_incumbent_from(
+        &updated,
+        ctx.constraints,
+        ctx.full_feats,
+        ctx.inc_shortlist,
+    );
+    // 3. probability the new incumbent is actually feasible
+    let p_feas = joint_feasibility(
+        &updated,
+        ctx.constraints,
+        &ctx.full_feats[inc.config_id],
+    );
+    // 4. information gain per dollar
+    let gain = ctx.est.info_gain(updated.acc.as_ref(), ctx.baseline);
+    p_feas * gain / ctx.models.predicted_cost(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{FitOptions, ModelKind};
+    use crate::sim::{CloudSim, NetKind};
+    use crate::space::{encode, Config, Point};
+    use crate::util::Rng;
+
+    struct Fixture {
+        models: Models,
+        est: EntropyEstimator,
+        full_feats: Vec<Feat>,
+        shortlist: Vec<usize>,
+        constraints: Vec<Constraint>,
+        baseline: f64,
+    }
+
+    fn setup(kind: ModelKind, cap: f64) -> Fixture {
+        let sim = CloudSim::new(NetKind::Rnn);
+        let mut rng = Rng::new(21);
+        let mut pts = Vec::new();
+        let mut outs = Vec::new();
+        for _ in 0..20 {
+            let p = Point {
+                config: Config::from_id(rng.below(288)),
+                s_idx: rng.below(5),
+            };
+            pts.push(p);
+            outs.push(sim.observe(&p, &mut rng));
+        }
+        let mut models = Models::new(kind, 9);
+        models.fit(&pts, &outs, FitOptions { hyperopt: true, restarts: 1 });
+        let full_feats: Vec<Feat> = (0..288)
+            .map(|id| encode(&Point { config: Config::from_id(id), s_idx: 4 }))
+            .collect();
+        let rep: Vec<Feat> =
+            (0..20).map(|i| full_feats[i * 14]).collect();
+        let est = EntropyEstimator::new(rep, 150, &mut rng);
+        let baseline =
+            EntropyEstimator::kl_from_uniform(&est.p_opt(models.acc.as_ref()));
+        let constraints = vec![Constraint::cost_max(cap)];
+        let shortlist: Vec<usize> = (0..288).step_by(4).collect();
+        Fixture { models, est, full_feats, shortlist, constraints, baseline }
+    }
+
+    fn ctx(f: &Fixture) -> TrimTunerAcq<'_> {
+        TrimTunerAcq {
+            models: &f.models,
+            est: &f.est,
+            constraints: &f.constraints,
+            full_feats: &f.full_feats,
+            inc_shortlist: &f.shortlist,
+            baseline: f.baseline,
+        }
+    }
+
+    #[test]
+    fn alpha_nonnegative_finite_both_model_kinds() {
+        for kind in [ModelKind::Gp, ModelKind::Trees] {
+            let f = setup(kind, 0.02);
+            let c = ctx(&f);
+            let mut rng = Rng::new(31);
+            for _ in 0..8 {
+                let p = Point {
+                    config: Config::from_id(rng.below(288)),
+                    s_idx: rng.below(5),
+                };
+                let a = trimtuner_alpha(&c, &encode(&p));
+                assert!(a.is_finite() && a >= 0.0, "{kind:?}: {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn impossible_constraints_crush_alpha() {
+        // With an impossible cap the feasibility factor should push α_T
+        // towards zero relative to a loose cap, point-by-point.
+        let f_loose = setup(ModelKind::Gp, 1e9);
+        let f_tight = Fixture {
+            constraints: vec![Constraint::cost_max(1e-9)],
+            ..setup(ModelKind::Gp, 1e9)
+        };
+        let (cl, ct) = (ctx(&f_loose), ctx(&f_tight));
+        let mut rng = Rng::new(41);
+        let mut sum_loose = 0.0;
+        let mut sum_tight = 0.0;
+        for _ in 0..10 {
+            let p = Point {
+                config: Config::from_id(rng.below(288)),
+                s_idx: rng.below(5),
+            };
+            let x = encode(&p);
+            sum_loose += trimtuner_alpha(&cl, &x);
+            sum_tight += trimtuner_alpha(&ct, &x);
+        }
+        assert!(
+            sum_tight < 0.05 * sum_loose + 1e-12,
+            "tight {sum_tight} vs loose {sum_loose}"
+        );
+    }
+
+    #[test]
+    fn alpha_is_deterministic() {
+        let f = setup(ModelKind::Gp, 0.02);
+        let c = ctx(&f);
+        let x = encode(&Point { config: Config::from_id(33), s_idx: 1 });
+        assert_eq!(trimtuner_alpha(&c, &x), trimtuner_alpha(&c, &x));
+    }
+}

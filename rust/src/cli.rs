@@ -1,0 +1,93 @@
+//! Hand-rolled CLI argument parsing (offline registry has no `clap`).
+
+use std::collections::HashMap;
+
+/// Parsed command line: positional arguments + `--key value` flags
+/// (`--flag` with no value is stored as "true").
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(key) = tok.strip_prefix("--") {
+                let next_is_value =
+                    argv.get(i + 1).map_or(false, |n| !n.starts_with("--"));
+                if next_is_value {
+                    a.flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    a.flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                a.positional.push(tok.clone());
+                i += 1;
+            }
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_positional_and_flags() {
+        let a = Args::parse(&argv(
+            "repro fig1 --out results --seeds 5 --full",
+        ));
+        assert_eq!(a.positional, vec!["repro", "fig1"]);
+        assert_eq!(a.get("out"), Some("results"));
+        assert_eq!(a.get_usize("seeds", 0), 5);
+        assert!(a.has("full"));
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv("optimize"));
+        assert_eq!(a.get_f64("beta", 0.1), 0.1);
+        assert_eq!(a.get_or("net", "mlp"), "mlp");
+    }
+}

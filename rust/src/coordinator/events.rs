@@ -1,0 +1,97 @@
+//! Append-only event log + counters for the coordinator (observability).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    JobSubmitted { job: u64 },
+    JobCompleted { job: u64, cost: f64 },
+    JobFailed { job: u64, reason: String },
+    IncumbentUpdated { config_id: usize, pred_acc: f64 },
+    IterationDone { iter: usize, cum_cost: f64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// seconds since the log was created
+    pub t: f64,
+    pub kind: EventKind,
+}
+
+/// Thread-safe append-only event log.
+pub struct EventLog {
+    start: Instant,
+    events: Mutex<Vec<Event>>,
+}
+
+impl EventLog {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> EventLog {
+        EventLog { start: Instant::now(), events: Mutex::new(Vec::new()) }
+    }
+
+    pub fn record(&self, kind: EventKind) {
+        let t = self.start.elapsed().as_secs_f64();
+        self.events.lock().unwrap().push(Event { t, kind });
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn snapshot(&self) -> Vec<Event> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Count events matching a predicate.
+    pub fn count(&self, pred: impl Fn(&EventKind) -> bool) -> usize {
+        self.events
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|e| pred(&e.kind))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_in_order_with_monotone_timestamps() {
+        let log = EventLog::new();
+        log.record(EventKind::JobSubmitted { job: 1 });
+        log.record(EventKind::JobCompleted { job: 1, cost: 0.5 });
+        let evs = log.snapshot();
+        assert_eq!(evs.len(), 2);
+        assert!(evs[0].t <= evs[1].t);
+        assert_eq!(
+            log.count(|k| matches!(k, EventKind::JobCompleted { .. })),
+            1
+        );
+    }
+
+    #[test]
+    fn concurrent_recording_is_safe() {
+        let log = std::sync::Arc::new(EventLog::new());
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let log = log.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    log.record(EventKind::JobSubmitted { job: t * 100 + i });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(log.len(), 200);
+    }
+}

@@ -1,0 +1,102 @@
+//! Job abstraction: one cloud deployment of the training job, observed at a
+//! set of sub-sampling snapshots (paper §III: "we can test all the
+//! configurations ⟨x, s_i⟩ via a single training instance by taking a
+//! snapshot ... whenever the sub-sampling rate s_i is achieved").
+
+use crate::sim::{CloudSim, NetKind, Outcome};
+use crate::space::{Config, Point};
+use crate::util::Rng;
+use anyhow::Result;
+
+/// A deployment request: train `config` once, snapshotting at each of
+/// `s_levels` (indices into S_VALUES, ascending).
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: u64,
+    pub config: Config,
+    pub s_levels: Vec<usize>,
+}
+
+/// Outcomes per snapshot + the cost actually charged (one training run at
+/// the largest snapshot level, not the sum).
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub job_id: u64,
+    pub outcomes: Vec<(usize, Outcome)>,
+    pub charged_cost: f64,
+    /// wall-clock duration of the (simulated or real) training run
+    pub duration_s: f64,
+}
+
+/// Anything that can execute a training deployment. Implementations:
+/// [`SimLauncher`] (parametric cloud simulator) and the PJRT-backed MLP
+/// trainer in `examples/end_to_end.rs`.
+pub trait JobLauncher: Send + Sync {
+    fn launch(&self, job: &Job) -> Result<JobResult>;
+}
+
+/// Simulated cloud: noisy observations from [`CloudSim`], deterministic per
+/// (seed, job id).
+pub struct SimLauncher {
+    sim: CloudSim,
+    seed: u64,
+}
+
+impl SimLauncher {
+    pub fn new(net: NetKind, seed: u64) -> SimLauncher {
+        SimLauncher { sim: CloudSim::new(net), seed }
+    }
+
+    pub fn net(&self) -> NetKind {
+        self.sim.kind
+    }
+}
+
+impl JobLauncher for SimLauncher {
+    fn launch(&self, job: &Job) -> Result<JobResult> {
+        anyhow::ensure!(!job.s_levels.is_empty(), "job without snapshots");
+        let mut rng = Rng::new(self.seed ^ job.id.wrapping_mul(0x9E3779B9));
+        let mut outcomes = Vec::with_capacity(job.s_levels.len());
+        let mut charged = 0.0f64;
+        let mut duration = 0.0f64;
+        for &s_idx in &job.s_levels {
+            let p = Point { config: job.config, s_idx };
+            let o = self.sim.observe(&p, &mut rng);
+            // Snapshot semantics: one run that keeps training past each
+            // snapshot — the cost/time of the run is the *largest* level's.
+            charged = charged.max(o.cost_usd);
+            duration = duration.max(o.time_s);
+            outcomes.push((s_idx, o));
+        }
+        Ok(JobResult { job_id: job.id, outcomes, charged_cost: charged, duration_s: duration })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::S_INIT;
+
+    #[test]
+    fn snapshot_cost_is_max_not_sum() {
+        let l = SimLauncher::new(NetKind::Cnn, 1);
+        let job =
+            Job { id: 1, config: Config::from_id(40), s_levels: S_INIT.to_vec() };
+        let r = l.launch(&job).unwrap();
+        let sum: f64 = r.outcomes.iter().map(|(_, o)| o.cost_usd).sum();
+        let max = r
+            .outcomes
+            .iter()
+            .map(|(_, o)| o.cost_usd)
+            .fold(0.0, f64::max);
+        assert!(r.charged_cost < sum);
+        assert!((r.charged_cost - max).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_snapshot_list_rejected() {
+        let l = SimLauncher::new(NetKind::Cnn, 1);
+        let job = Job { id: 1, config: Config::from_id(0), s_levels: vec![] };
+        assert!(l.launch(&job).is_err());
+    }
+}

@@ -1,0 +1,179 @@
+//! Worker pool over std threads + channels (the offline registry has no
+//! tokio; the coordinator's work units are coarse training jobs, for which
+//! OS threads are the right granularity anyway).
+
+use super::launcher::{Job, JobLauncher, JobResult};
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Fixed-size worker pool executing [`Job`]s through a shared launcher.
+/// The bounded submit queue (2× workers) provides natural backpressure.
+pub struct WorkerPool {
+    submit_tx: Option<SyncSender<Job>>,
+    result_rx: Receiver<Result<JobResult>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(launcher: Box<dyn JobLauncher>, workers: usize) -> WorkerPool {
+        assert!(workers > 0);
+        let launcher: Arc<dyn JobLauncher> = Arc::from(launcher);
+        let (submit_tx, submit_rx) = sync_channel::<Job>(workers * 2);
+        let submit_rx = Arc::new(Mutex::new(submit_rx));
+        let (result_tx, result_rx) = sync_channel::<Result<JobResult>>(1024);
+
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = submit_rx.clone();
+                let tx = result_tx.clone();
+                let launcher = launcher.clone();
+                std::thread::spawn(move || loop {
+                    // take one job while holding the lock, then release
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(j) => j,
+                        Err(_) => break, // queue closed -> shut down
+                    };
+                    let result = launcher.launch(&job);
+                    if tx.send(result).is_err() {
+                        break; // receiver dropped
+                    }
+                })
+            })
+            .collect();
+
+        WorkerPool { submit_tx: Some(submit_tx), result_rx, handles }
+    }
+
+    /// Submit a job (blocks when the queue is full — backpressure).
+    pub fn submit(&self, job: Job) -> Result<()> {
+        self.submit_tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("pool already shut down"))?
+            .send(job)
+            .map_err(|e| anyhow!("submit failed: {e}"))
+    }
+
+    /// Receive the next completed job (blocking, completion order).
+    pub fn recv(&self) -> Result<JobResult> {
+        self.result_rx
+            .recv()
+            .map_err(|e| anyhow!("pool hung up: {e}"))?
+    }
+
+    /// Close the queue and join all workers.
+    pub fn shutdown(mut self) {
+        self.submit_tx.take(); // closes the channel
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.submit_tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Outcome;
+    use crate::space::Config;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Launcher that counts concurrent executions and can fail on demand.
+    struct TestLauncher {
+        active: std::sync::Arc<AtomicUsize>,
+        max_seen: std::sync::Arc<AtomicUsize>,
+        fail_ids: Vec<u64>,
+    }
+
+    impl TestLauncher {
+        fn new(fail_ids: Vec<u64>) -> TestLauncher {
+            TestLauncher {
+                active: std::sync::Arc::new(AtomicUsize::new(0)),
+                max_seen: std::sync::Arc::new(AtomicUsize::new(0)),
+                fail_ids,
+            }
+        }
+    }
+
+    impl JobLauncher for TestLauncher {
+        fn launch(&self, job: &Job) -> Result<JobResult> {
+            let now = self.active.fetch_add(1, Ordering::SeqCst) + 1;
+            self.max_seen.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            self.active.fetch_sub(1, Ordering::SeqCst);
+            if self.fail_ids.contains(&job.id) {
+                anyhow::bail!("injected failure for job {}", job.id);
+            }
+            Ok(JobResult {
+                job_id: job.id,
+                outcomes: vec![(
+                    0,
+                    Outcome { acc: 0.5, time_s: 1.0, cost_usd: 0.01 },
+                )],
+                charged_cost: 0.01,
+                duration_s: 1.0,
+            })
+        }
+    }
+
+    #[test]
+    fn executes_concurrently_up_to_worker_count() {
+        let launcher = TestLauncher::new(vec![]);
+        let max_seen = launcher.max_seen.clone();
+        let pool = WorkerPool::new(Box::new(launcher), 4);
+        for i in 0..16 {
+            pool.submit(Job {
+                id: i,
+                config: Config::from_id(0),
+                s_levels: vec![0],
+            })
+            .unwrap();
+        }
+        for _ in 0..16 {
+            pool.recv().unwrap();
+        }
+        let max_seen = max_seen.load(Ordering::SeqCst);
+        assert!(max_seen >= 2, "no concurrency observed ({max_seen})");
+        assert!(max_seen <= 4, "exceeded worker count ({max_seen})");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn failure_injection_propagates_as_error_not_panic() {
+        let launcher = TestLauncher::new(vec![3]);
+        let pool = WorkerPool::new(Box::new(launcher), 2);
+        for i in 0..6 {
+            pool.submit(Job {
+                id: i,
+                config: Config::from_id(0),
+                s_levels: vec![0],
+            })
+            .unwrap();
+        }
+        let mut ok = 0;
+        let mut err = 0;
+        for _ in 0..6 {
+            match pool.recv() {
+                Ok(_) => ok += 1,
+                Err(_) => err += 1,
+            }
+        }
+        assert_eq!((ok, err), (5, 1));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly_with_pending_nothing() {
+        let pool = WorkerPool::new(Box::new(TestLauncher::new(vec![])), 3);
+        pool.shutdown(); // no jobs at all
+    }
+}

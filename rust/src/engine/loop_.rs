@@ -1,0 +1,585 @@
+//! Paper Algorithm 1 and the baseline optimizers, trace-driven over a
+//! [`Dataset`] (exactly the paper's simulation methodology: every "Train M
+//! in configuration ⟨x,s⟩" is a lookup of the measured outcome).
+
+use super::metrics::{accuracy_c, IterRecord, RunResult};
+use crate::acq::{
+    eic, eic_usd, fabolas_alpha, select_incumbent, trimtuner_alpha,
+    EntropyEstimator, Models, TrimTunerAcq,
+};
+use crate::heuristics::{cea_scores, select_next, AlphaCache, FilterKind};
+use crate::models::{Feat, FitOptions, ModelKind};
+use crate::opt::latin_hypercube;
+use crate::sim::{Dataset, Outcome};
+use crate::space::{
+    encode, nearest_point, Config, Constraint, Point, N_CONFIGS, S_INIT,
+    S_VALUES,
+};
+use crate::util::timer::Timer;
+use crate::util::Rng;
+use std::collections::HashSet;
+
+/// Which optimizer to run (paper §IV "Baselines").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerKind {
+    /// TrimTuner with GP or decision-tree surrogates (the contribution).
+    TrimTuner(ModelKind),
+    /// Constrained EI over full-data-set configs (CherryPick).
+    Eic,
+    /// Constrained EI per dollar (Lynceus).
+    EicUsd,
+    /// FABOLAS: sub-sampling-aware, constraint-oblivious.
+    Fabolas,
+    /// Uniform random over full-data-set configs.
+    RandomSearch,
+}
+
+impl OptimizerKind {
+    pub fn name(&self) -> String {
+        match self {
+            OptimizerKind::TrimTuner(k) => format!("trimtuner-{}", k.name()),
+            OptimizerKind::Eic => "eic".into(),
+            OptimizerKind::EicUsd => "eic-usd".into(),
+            OptimizerKind::Fabolas => "fabolas".into(),
+            OptimizerKind::RandomSearch => "random".into(),
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<OptimizerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "trimtuner-gp" => Some(OptimizerKind::TrimTuner(ModelKind::Gp)),
+            "trimtuner-dt" => {
+                Some(OptimizerKind::TrimTuner(ModelKind::Trees))
+            }
+            "eic" => Some(OptimizerKind::Eic),
+            "eic-usd" | "eicusd" => Some(OptimizerKind::EicUsd),
+            "fabolas" => Some(OptimizerKind::Fabolas),
+            "random" => Some(OptimizerKind::RandomSearch),
+            _ => None,
+        }
+    }
+
+    /// Does the optimizer probe sub-sampled configurations?
+    pub fn uses_subsampling(&self) -> bool {
+        matches!(
+            self,
+            OptimizerKind::TrimTuner(_) | OptimizerKind::Fabolas
+        )
+    }
+
+    fn model_kind(&self) -> ModelKind {
+        match self {
+            OptimizerKind::TrimTuner(k) => *k,
+            // baselines use GPs (paper: "We use GPs as base models for both
+            // EIc and EIc/USD ... implemented using the George library")
+            _ => ModelKind::Gp,
+        }
+    }
+}
+
+/// Engine configuration (paper §IV defaults).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub optimizer: OptimizerKind,
+    pub filter: FilterKind,
+    /// filtering level β ∈ (0, 1]
+    pub beta: f64,
+    /// initial samples (4): 1 config × 4 s-levels for sub-sampling
+    /// optimizers, 4 LHS full-data-set configs otherwise
+    pub init_samples: usize,
+    pub max_iters: usize,
+    pub seed: u64,
+    /// representative-set size for p_opt
+    pub n_rep: usize,
+    /// Monte-Carlo samples for p_opt
+    pub n_popt_samples: usize,
+    /// re-optimize GP hyper-parameters every k iterations
+    pub hyperopt_every: usize,
+    /// GP hyper-parameter posterior samples (FABOLAS-style marginalization;
+    /// 1 = plain ML-II as used by the EIc baselines)
+    pub gp_hyper_samples: usize,
+    /// adaptive stop condition evaluated after every iteration, in
+    /// addition to `max_iters` (paper §III extension)
+    pub stop: super::stop::StopCondition,
+}
+
+impl EngineConfig {
+    pub fn paper_default(optimizer: OptimizerKind, seed: u64) -> Self {
+        EngineConfig {
+            optimizer,
+            filter: match optimizer {
+                OptimizerKind::Fabolas => FilterKind::Direct,
+                OptimizerKind::TrimTuner(_) => FilterKind::Cea,
+                _ => FilterKind::NoFilter,
+            },
+            beta: 0.10,
+            init_samples: 4,
+            max_iters: 44,
+            seed,
+            n_rep: 40,
+            n_popt_samples: 160,
+            hyperopt_every: 1,
+            gp_hyper_samples: match optimizer {
+                // the sub-sampling ES optimizers marginalize GP hypers
+                // (FABOLAS uses emcee); EIc/EIc-USD use plain ML-II GPs.
+                OptimizerKind::TrimTuner(_) | OptimizerKind::Fabolas => 8,
+                _ => 1,
+            },
+            stop: super::stop::StopCondition::Never,
+        }
+    }
+}
+
+struct State {
+    tested: Vec<Point>,
+    outcomes: Vec<Outcome>,
+    tested_ids: HashSet<usize>,
+    models: Models,
+    cum_cost: f64,
+    cum_time: f64,
+    records: Vec<IterRecord>,
+    /// sticky incumbent (recommendation hysteresis): config id at s=1
+    incumbent_id: Option<usize>,
+}
+
+impl State {
+    fn observe(&mut self, dataset: &Dataset, p: Point) -> Outcome {
+        let o = dataset.outcome(&p);
+        self.tested.push(p);
+        self.outcomes.push(o);
+        self.tested_ids.insert(p.id());
+        o
+    }
+}
+
+/// Run one optimizer on one dataset. Deterministic per (config, seed).
+pub fn run(
+    dataset: &Dataset,
+    constraints: &[Constraint],
+    cfg: &EngineConfig,
+) -> RunResult {
+    let mut rng = Rng::new(cfg.seed);
+    let full_feats: Vec<Feat> = (0..N_CONFIGS)
+        .map(|id| encode(&Point { config: Config::from_id(id), s_idx: 4 }))
+        .collect();
+    let (optimum, optimum_acc) = dataset
+        .best_feasible_full(constraints)
+        .map(|(p, a)| (Some(p), a))
+        .unwrap_or((None, f64::NAN));
+
+    let mut st = State {
+        tested: Vec::new(),
+        outcomes: Vec::new(),
+        tested_ids: HashSet::new(),
+        models: Models::with_gp_hyper_samples(
+            cfg.optimizer.model_kind(),
+            cfg.seed ^ 0x30D,
+            cfg.gp_hyper_samples,
+        ),
+        cum_cost: 0.0,
+        cum_time: 0.0,
+        records: Vec::new(),
+        incumbent_id: None,
+    };
+
+    initialize(dataset, constraints, cfg, &mut st, &mut rng, &full_feats);
+
+    // ---------------- main optimization loop (Alg. 1 lines 11-20) --------
+    for iter in 0..cfg.max_iters {
+        let timer = Timer::start();
+        let untested = untested_points(cfg.optimizer, &st.tested_ids);
+        if untested.is_empty() {
+            break;
+        }
+        let budget =
+            ((cfg.beta * untested.len() as f64).ceil() as usize).max(1);
+
+        let (chosen, n_evals) = choose_next(
+            cfg, constraints, &st, &untested, &full_feats, budget, &mut rng,
+        );
+
+        let o = st.observe(dataset, chosen);
+        st.cum_cost += o.cost_usd;
+        st.cum_time += o.time_s;
+
+        refit(cfg, &mut st, iter);
+        let incumbent =
+            recommend(cfg.optimizer, &mut st, constraints, &full_feats);
+        let rec_wall_s = timer.elapsed_s();
+
+        push_record(
+            &mut st, dataset, constraints, iter, false, chosen, o,
+            o.cost_usd, rec_wall_s, incumbent, n_evals,
+        );
+        if cfg.stop.should_stop(&st.records) {
+            break;
+        }
+    }
+
+    RunResult { records: st.records, optimum_acc, optimum }
+}
+
+/// Initialization phase (Alg. 1 lines 2-10).
+fn initialize(
+    dataset: &Dataset,
+    constraints: &[Constraint],
+    cfg: &EngineConfig,
+    st: &mut State,
+    rng: &mut Rng,
+    full_feats: &[Feat],
+) {
+    let mut init: Vec<(Point, f64)> = Vec::new(); // (point, cost charged)
+    if cfg.optimizer.uses_subsampling() {
+        // one random config tested at the k init sub-sampling levels; the
+        // snapshot trick (paper §III) charges only the largest level.
+        let config = Config::from_id(rng.below(N_CONFIGS));
+        let levels = &S_INIT[..S_INIT.len().min(cfg.init_samples)];
+        for (j, &s_idx) in levels.iter().enumerate() {
+            let p = Point { config, s_idx };
+            let charge = if j + 1 == levels.len() {
+                dataset.outcome(&p).cost_usd
+            } else {
+                0.0
+            };
+            init.push((p, charge));
+        }
+    } else {
+        // LHS over the feature space, snapped to distinct full configs.
+        let samples = latin_hypercube(rng, cfg.init_samples, 7);
+        let mut seen = HashSet::new();
+        for mut f in samples {
+            f[6] = 1.0;
+            let mut p = nearest_point(&f);
+            p = Point { config: p.config, s_idx: S_VALUES.len() - 1 };
+            while !seen.insert(p.config.id()) {
+                p = Point {
+                    config: Config::from_id(rng.below(N_CONFIGS)),
+                    s_idx: S_VALUES.len() - 1,
+                };
+            }
+            let charge = dataset.outcome(&p).cost_usd;
+            init.push((p, charge));
+        }
+    }
+
+    for (i, (p, charge)) in init.iter().enumerate() {
+        let o = st.observe(dataset, *p);
+        st.cum_cost += charge;
+        if *charge > 0.0 || !cfg.optimizer.uses_subsampling() {
+            st.cum_time += o.time_s;
+        }
+        let is_last = i + 1 == init.len();
+        if is_last {
+            let t = Timer::start();
+            st.models.fit(
+                &st.tested,
+                &st.outcomes,
+                FitOptions { hyperopt: true, restarts: 1 },
+            );
+            let incumbent =
+                recommend(cfg.optimizer, st, constraints, full_feats);
+            let wall = t.elapsed_s();
+            push_record(
+                st, dataset, constraints, i, true, *p, o, *charge, wall,
+                incumbent, 0,
+            );
+        } else {
+            // record without a model-based incumbent yet: report the best
+            // observed feasible point's config
+            let incumbent = best_observed(st, constraints);
+            push_record(
+                st, dataset, constraints, i, true, *p, o, *charge, 0.0,
+                incumbent, 0,
+            );
+        }
+    }
+}
+
+fn untested_points(
+    optimizer: OptimizerKind,
+    tested_ids: &HashSet<usize>,
+) -> Vec<Point> {
+    if optimizer.uses_subsampling() {
+        crate::space::all_points()
+            .filter(|p| !tested_ids.contains(&p.id()))
+            .collect()
+    } else {
+        crate::space::all_points()
+            .filter(|p| p.is_full() && !tested_ids.contains(&p.id()))
+            .collect()
+    }
+}
+
+/// Pick the next point to test (one iteration's acquisition maximization).
+fn choose_next(
+    cfg: &EngineConfig,
+    constraints: &[Constraint],
+    st: &State,
+    untested: &[Point],
+    full_feats: &[Feat],
+    budget: usize,
+    rng: &mut Rng,
+) -> (Point, usize) {
+    match cfg.optimizer {
+        OptimizerKind::RandomSearch => {
+            (untested[rng.below(untested.len())], 0)
+        }
+        OptimizerKind::Eic | OptimizerKind::EicUsd => {
+            let eta = incumbent_eta(st, constraints);
+            let models = &st.models;
+            let use_usd = cfg.optimizer == OptimizerKind::EicUsd;
+            let mut alpha = AlphaCache::new(move |p: &Point| {
+                let x = encode(p);
+                if use_usd {
+                    eic_usd(models, constraints, &x, eta)
+                } else {
+                    eic(models, constraints, &x, eta)
+                }
+            });
+            select_next(
+                FilterKind::NoFilter,
+                &st.models,
+                constraints,
+                untested,
+                untested.len(),
+                &mut alpha,
+                rng,
+            )
+        }
+        OptimizerKind::Fabolas => {
+            let (est, _) = build_estimator(cfg, st, &[], full_feats, rng);
+            let baseline = EntropyEstimator::kl_from_uniform(
+                &est.p_opt(st.models.acc.as_ref()),
+            );
+            let models = &st.models;
+            let est_ref = &est;
+            let mut alpha = AlphaCache::new(move |p: &Point| {
+                fabolas_alpha(models, est_ref, baseline, &encode(p))
+            });
+            select_next(
+                cfg.filter,
+                &st.models,
+                &[], // FABOLAS ignores constraints
+                untested,
+                budget,
+                &mut alpha,
+                rng,
+            )
+        }
+        OptimizerKind::TrimTuner(_) => {
+            let (est, cea_order) =
+                build_estimator(cfg, st, constraints, full_feats, rng);
+            let baseline = EntropyEstimator::kl_from_uniform(
+                &est.p_opt(st.models.acc.as_ref()),
+            );
+            // incumbent shortlist: top configs by CEA under current models
+            let shortlist: Vec<usize> =
+                cea_order.iter().take(INC_SHORTLIST).copied().collect();
+            let ctx = TrimTunerAcq {
+                models: &st.models,
+                est: &est,
+                constraints,
+                full_feats,
+                inc_shortlist: &shortlist,
+                baseline,
+            };
+            let ctx_ref = &ctx;
+            let mut alpha = AlphaCache::new(move |p: &Point| {
+                trimtuner_alpha(ctx_ref, &encode(p))
+            });
+            select_next(
+                cfg.filter,
+                &st.models,
+                constraints,
+                untested,
+                budget,
+                &mut alpha,
+                rng,
+            )
+        }
+    }
+}
+
+/// Size of the CEA-ranked incumbent shortlist scanned inside α_T
+/// (EXPERIMENTS.md §Perf: 288 -> 32 with no measurable quality change).
+const INC_SHORTLIST: usize = 32;
+
+/// Representative set for p_opt: the top-n_rep full-data-set configs by CEA
+/// under the current models (constraint-free CEA == predicted accuracy).
+/// Also returns the full CEA-descending config ordering for shortlist reuse.
+fn build_estimator(
+    cfg: &EngineConfig,
+    st: &State,
+    constraints: &[Constraint],
+    full_feats: &[Feat],
+    rng: &mut Rng,
+) -> (EntropyEstimator, Vec<usize>) {
+    let full_points: Vec<Point> = (0..N_CONFIGS)
+        .map(|id| Point { config: Config::from_id(id), s_idx: 4 })
+        .collect();
+    let scores = cea_scores(&st.models, constraints, &full_points);
+    let mut order: Vec<usize> = (0..full_points.len()).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let rep: Vec<Feat> = order
+        .iter()
+        .take(cfg.n_rep.max(2))
+        .map(|&i| full_feats[i])
+        .collect();
+    (EntropyEstimator::new(rep, cfg.n_popt_samples, rng), order)
+}
+
+/// Incumbent accuracy target for EI variants: best observed accuracy among
+/// configurations whose *measured* metrics satisfy the constraints.
+fn incumbent_eta(st: &State, constraints: &[Constraint]) -> f64 {
+    let mut best_feasible = f64::NEG_INFINITY;
+    let mut best_any = f64::NEG_INFINITY;
+    for (p, o) in st.tested.iter().zip(&st.outcomes) {
+        if !p.is_full() {
+            continue;
+        }
+        best_any = best_any.max(o.acc);
+        let feas = constraints.iter().all(|c| {
+            let v = match c.metric {
+                crate::space::Metric::Cost => o.cost_usd,
+                crate::space::Metric::Time => o.time_s,
+            };
+            c.is_satisfied(v)
+        });
+        if feas {
+            best_feasible = best_feasible.max(o.acc);
+        }
+    }
+    if best_feasible.is_finite() {
+        best_feasible
+    } else if best_any.is_finite() {
+        best_any
+    } else {
+        0.0
+    }
+}
+
+fn refit(cfg: &EngineConfig, st: &mut State, iter: usize) {
+    let hyperopt = cfg.hyperopt_every > 0 && iter % cfg.hyperopt_every == 0;
+    st.models.fit(
+        &st.tested,
+        &st.outcomes,
+        FitOptions { hyperopt, restarts: 1 },
+    );
+}
+
+/// Best *observed* full config satisfying the measured constraints.
+fn best_observed(st: &State, constraints: &[Constraint]) -> Point {
+    let mut best: Option<(Point, f64)> = None;
+    let mut best_any: Option<(Point, f64)> = None;
+    for (p, o) in st.tested.iter().zip(&st.outcomes) {
+        let q = Point { config: p.config, s_idx: S_VALUES.len() - 1 };
+        if best_any.as_ref().map_or(true, |(_, a)| o.acc > *a) {
+            best_any = Some((q, o.acc));
+        }
+        if !p.is_full() {
+            continue;
+        }
+        let feas = constraints.iter().all(|c| {
+            let v = match c.metric {
+                crate::space::Metric::Cost => o.cost_usd,
+                crate::space::Metric::Time => o.time_s,
+            };
+            c.is_satisfied(v)
+        });
+        if feas && best.as_ref().map_or(true, |(_, a)| o.acc > *a) {
+            best = Some((q, o.acc));
+        }
+    }
+    best.or(best_any).map(|(p, _)| p).expect("no observations")
+}
+
+/// Post-iteration incumbent recommendation, per optimizer semantics.
+/// Model-based recommenders use hysteresis: the reported incumbent only
+/// switches when the challenger's predicted accuracy beats the current
+/// incumbent's *current* prediction by a margin (and the current one is
+/// retained as long as it still clears the feasibility bar). This keeps the
+/// recommendation stable under per-refit prediction jitter.
+const SWITCH_MARGIN: f64 = 0.005;
+
+fn recommend(
+    optimizer: OptimizerKind,
+    st: &mut State,
+    constraints: &[Constraint],
+    full_feats: &[Feat],
+) -> Point {
+    match optimizer {
+        // Model-based recommendation: TrimTuner (paper footnote 2) and the
+        // CherryPick/Lynceus baselines (their GPs drive the final pick).
+        OptimizerKind::TrimTuner(_)
+        | OptimizerKind::Eic
+        | OptimizerKind::EicUsd => {
+            let inc = select_incumbent(&st.models, constraints, full_feats);
+            let chosen = match st.incumbent_id {
+                Some(prev) if prev != inc.config_id => {
+                    let x_prev = &full_feats[prev];
+                    let prev_feas = crate::acq::joint_feasibility(
+                        &st.models,
+                        constraints,
+                        x_prev,
+                    );
+                    let (prev_acc, _) = st.models.acc.predict(x_prev);
+                    if prev_feas >= crate::acq::FEAS_THRESHOLD_HYST
+                        && inc.pred_acc < prev_acc + SWITCH_MARGIN
+                    {
+                        prev
+                    } else {
+                        inc.config_id
+                    }
+                }
+                _ => inc.config_id,
+            };
+            st.incumbent_id = Some(chosen);
+            Point { config: Config::from_id(chosen), s_idx: 4 }
+        }
+        OptimizerKind::Fabolas => {
+            // constraint-oblivious: predicted-accuracy argmax at s=1
+            let mut best = (0usize, f64::NEG_INFINITY);
+            for (id, x) in full_feats.iter().enumerate() {
+                let (mu, _) = st.models.acc.predict(x);
+                if mu > best.1 {
+                    best = (id, mu);
+                }
+            }
+            Point { config: Config::from_id(best.0), s_idx: 4 }
+        }
+        // Random search recommends the best tested feasible config
+        OptimizerKind::RandomSearch => best_observed(st, constraints),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push_record(
+    st: &mut State,
+    dataset: &Dataset,
+    constraints: &[Constraint],
+    iter: usize,
+    is_init: bool,
+    tested: Point,
+    outcome: Outcome,
+    explore_cost: f64,
+    rec_wall_s: f64,
+    incumbent: Point,
+    n_alpha_evals: usize,
+) {
+    let inc_out = dataset.outcome(&incumbent);
+    st.records.push(IterRecord {
+        iter,
+        is_init,
+        tested,
+        outcome,
+        explore_cost,
+        cum_cost: st.cum_cost,
+        cum_time: st.cum_time,
+        rec_wall_s,
+        incumbent,
+        inc_acc: inc_out.acc,
+        inc_feasible: dataset.is_feasible(&incumbent, constraints),
+        accuracy_c: accuracy_c(dataset, &incumbent, constraints),
+        n_alpha_evals,
+    });
+}

@@ -1,0 +1,156 @@
+//! Evaluation metrics: Constrained Accuracy (paper Eq. 7) and derived
+//! savings measures (Fig. 2).
+
+use crate::sim::{Dataset, Outcome};
+use crate::space::{Constraint, Point};
+
+/// Constrained Accuracy (Eq. 7): the incumbent's accuracy, multiplicatively
+/// penalized by how much it violates each constraint.
+pub fn accuracy_c(
+    dataset: &Dataset,
+    p: &Point,
+    constraints: &[Constraint],
+) -> f64 {
+    let acc = dataset.outcome(p).acc;
+    let mut penalty = 1.0;
+    for c in constraints {
+        let v = dataset.metric(p, c);
+        if v > c.max {
+            penalty *= c.max / v;
+        }
+    }
+    acc * penalty
+}
+
+/// One optimizer iteration's record (per-iteration row of every figure).
+#[derive(Debug, Clone)]
+pub struct IterRecord {
+    /// 0-based iteration (init tests get negative-phase flag instead)
+    pub iter: usize,
+    pub is_init: bool,
+    pub tested: Point,
+    pub outcome: Outcome,
+    /// exploration cost charged for this test (USD)
+    pub explore_cost: f64,
+    pub cum_cost: f64,
+    /// cumulative simulated exploration time (s)
+    pub cum_time: f64,
+    /// wall-clock seconds spent choosing this test + refitting (Table III)
+    pub rec_wall_s: f64,
+    /// recommended incumbent after this iteration (full data-set config)
+    pub incumbent: Point,
+    /// ground-truth outcome of the incumbent in the dataset
+    pub inc_acc: f64,
+    pub inc_feasible: bool,
+    /// Constrained Accuracy of the incumbent (Eq. 7)
+    pub accuracy_c: f64,
+    /// unique acquisition evaluations spent this iteration
+    pub n_alpha_evals: usize,
+}
+
+/// Result of one optimizer run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub records: Vec<IterRecord>,
+    /// true optimum: best feasible full-data-set accuracy in the dataset
+    pub optimum_acc: f64,
+    pub optimum: Option<Point>,
+}
+
+impl RunResult {
+    pub fn final_accuracy_c(&self) -> f64 {
+        self.records.last().map_or(0.0, |r| r.accuracy_c)
+    }
+
+    pub fn total_cost(&self) -> f64 {
+        self.records.last().map_or(0.0, |r| r.cum_cost)
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.records.last().map_or(0.0, |r| r.cum_time)
+    }
+
+    /// Mean wall-clock recommendation latency over main-loop iterations.
+    pub fn mean_rec_wall_s(&self) -> f64 {
+        let xs: Vec<f64> = self
+            .records
+            .iter()
+            .filter(|r| !r.is_init)
+            .map(|r| r.rec_wall_s)
+            .collect();
+        crate::util::stats::mean(&xs)
+    }
+}
+
+/// Exploration (cost, time) spent until the incumbent's Accuracy_C first
+/// reaches `frac` of the optimum — the Fig. 2 "savings" quantity. `None`
+/// if never reached.
+pub fn cost_to_quality(run: &RunResult, frac: f64) -> Option<(f64, f64)> {
+    let target = frac * run.optimum_acc;
+    run.records
+        .iter()
+        .find(|r| r.accuracy_c >= target)
+        .map(|r| (r.cum_cost, r.cum_time))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::NetKind;
+
+    #[test]
+    fn accuracy_c_no_penalty_when_feasible() {
+        let d = Dataset::generate(NetKind::Rnn, 1);
+        let caps = vec![Constraint::cost_max(1e9)];
+        for id in [0usize, 500, 1439] {
+            let p = Point::from_id(id);
+            assert_eq!(accuracy_c(&d, &p, &caps), d.outcome(&p).acc);
+        }
+    }
+
+    #[test]
+    fn accuracy_c_penalizes_violations_proportionally() {
+        let d = Dataset::generate(NetKind::Rnn, 1);
+        let p = Point::from_id(700);
+        let cost = d.outcome(&p).cost_usd;
+        let caps = vec![Constraint::cost_max(cost / 2.0)];
+        let expect = d.outcome(&p).acc * 0.5;
+        assert!((accuracy_c(&d, &p, &caps) - expect).abs() < 1e-9);
+        // double violation -> multiplicative
+        let caps2 = vec![
+            Constraint::cost_max(cost / 2.0),
+            Constraint::time_max(d.outcome(&p).time_s / 4.0),
+        ];
+        let expect2 = d.outcome(&p).acc * 0.5 * 0.25;
+        assert!((accuracy_c(&d, &p, &caps2) - expect2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cost_to_quality_finds_first_crossing() {
+        let d = Dataset::generate(NetKind::Rnn, 1);
+        let p = Point::from_id(4); // arbitrary
+        let mk = |acc_c: f64, cum: f64| IterRecord {
+            iter: 0,
+            is_init: false,
+            tested: p,
+            outcome: d.outcome(&p),
+            explore_cost: 0.0,
+            cum_cost: cum,
+            cum_time: cum * 10.0,
+            rec_wall_s: 0.0,
+            incumbent: p,
+            inc_acc: 0.0,
+            inc_feasible: true,
+            accuracy_c: acc_c,
+            n_alpha_evals: 0,
+        };
+        let run = RunResult {
+            records: vec![mk(0.1, 1.0), mk(0.85, 2.0), mk(0.95, 3.0)],
+            optimum_acc: 1.0,
+            optimum: None,
+        };
+        assert_eq!(cost_to_quality(&run, 0.9), Some((3.0, 30.0)));
+        assert_eq!(cost_to_quality(&run, 0.5), Some((2.0, 20.0)));
+        assert_eq!(cost_to_quality(&run, 0.99), None);
+    }
+}

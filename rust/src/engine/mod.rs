@@ -1,0 +1,13 @@
+//! The Bayesian-optimization engine: paper Algorithm 1 plus all baseline
+//! optimizers, replaying a measured [`Dataset`] exactly like the paper's
+//! trace-driven evaluation.
+
+mod loop_;
+mod metrics;
+mod pareto;
+mod stop;
+
+pub use loop_::{run, EngineConfig, OptimizerKind};
+pub use metrics::{accuracy_c, cost_to_quality, IterRecord, RunResult};
+pub use pareto::{pareto_front, recommend_pareto, ParetoPoint};
+pub use stop::StopCondition;

@@ -1,0 +1,126 @@
+//! Multi-objective extension (paper §V future work): instead of a single
+//! constrained incumbent, recommend the *Pareto front* of (training cost,
+//! accuracy) over full-data-set configurations, as predicted by the fitted
+//! surrogates. A user can then pick any operating point on the frontier —
+//! the constrained incumbent of Algorithm 1 is one particular point of it.
+
+use crate::acq::Models;
+use crate::models::Feat;
+use crate::space::{encode, Config, Point, N_CONFIGS};
+
+/// One point of the predicted cost/accuracy frontier.
+#[derive(Debug, Clone, Copy)]
+pub struct ParetoPoint {
+    pub config_id: usize,
+    /// predicted accuracy at s = 1
+    pub pred_acc: f64,
+    /// predicted training cost at s = 1 (USD)
+    pub pred_cost: f64,
+}
+
+/// Non-dominated (maximize accuracy, minimize cost) subset of points.
+/// Input order is irrelevant; output is sorted by ascending cost.
+pub fn pareto_front(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
+    let mut sorted: Vec<ParetoPoint> = points.to_vec();
+    // ascending cost, ties broken by descending accuracy
+    sorted.sort_by(|a, b| {
+        a.pred_cost
+            .partial_cmp(&b.pred_cost)
+            .unwrap()
+            .then(b.pred_acc.partial_cmp(&a.pred_acc).unwrap())
+    });
+    let mut front = Vec::new();
+    let mut best_acc = f64::NEG_INFINITY;
+    for p in sorted {
+        if p.pred_acc > best_acc {
+            best_acc = p.pred_acc;
+            front.push(p);
+        }
+    }
+    front
+}
+
+/// Predict the cost/accuracy frontier over all full-data-set configs under
+/// the current surrogate models.
+pub fn recommend_pareto(models: &Models) -> Vec<ParetoPoint> {
+    let pts: Vec<ParetoPoint> = (0..N_CONFIGS)
+        .map(|id| {
+            let x: Feat =
+                encode(&Point { config: Config::from_id(id), s_idx: 4 });
+            let (acc, _) = models.acc.predict(&x);
+            ParetoPoint {
+                config_id: id,
+                pred_acc: acc,
+                pred_cost: models.predicted_cost(&x),
+            }
+        })
+        .collect();
+    pareto_front(&pts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{FitOptions, ModelKind};
+    use crate::sim::{CloudSim, NetKind};
+    use crate::util::Rng;
+
+    fn pp(id: usize, acc: f64, cost: f64) -> ParetoPoint {
+        ParetoPoint { config_id: id, pred_acc: acc, pred_cost: cost }
+    }
+
+    #[test]
+    fn front_drops_dominated_points() {
+        let pts = vec![
+            pp(0, 0.9, 1.0),
+            pp(1, 0.8, 2.0),  // dominated by 0 (worse acc, higher cost)
+            pp(2, 0.95, 3.0),
+            pp(3, 0.95, 4.0), // dominated by 2 (same acc, higher cost)
+            pp(4, 0.5, 0.1),
+        ];
+        let front = pareto_front(&pts);
+        let ids: Vec<usize> = front.iter().map(|p| p.config_id).collect();
+        assert_eq!(ids, vec![4, 0, 2]);
+        // frontier is monotone: cost up, accuracy up
+        assert!(front.windows(2).all(|w| {
+            w[0].pred_cost <= w[1].pred_cost && w[0].pred_acc < w[1].pred_acc
+        }));
+    }
+
+    #[test]
+    fn front_of_empty_and_singleton() {
+        assert!(pareto_front(&[]).is_empty());
+        let one = pareto_front(&[pp(7, 0.5, 0.5)]);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].config_id, 7);
+    }
+
+    #[test]
+    fn model_driven_frontier_is_consistent() {
+        let sim = CloudSim::new(NetKind::Mlp);
+        let mut rng = Rng::new(3);
+        let mut pts = Vec::new();
+        let mut outs = Vec::new();
+        for _ in 0..32 {
+            let p = Point {
+                config: Config::from_id(rng.below(N_CONFIGS)),
+                s_idx: rng.below(5),
+            };
+            pts.push(p);
+            outs.push(sim.observe(&p, &mut rng));
+        }
+        let mut models = Models::new(ModelKind::Trees, 2);
+        models.fit(&pts, &outs, FitOptions::default());
+        let front = recommend_pareto(&models);
+        assert!(!front.is_empty() && front.len() <= N_CONFIGS);
+        assert!(front.windows(2).all(|w| {
+            w[0].pred_cost <= w[1].pred_cost && w[0].pred_acc <= w[1].pred_acc
+        }));
+        // the most accurate predicted config must be the frontier's last
+        let max_acc = front.last().unwrap().pred_acc;
+        for id in 0..N_CONFIGS {
+            let x = encode(&Point { config: Config::from_id(id), s_idx: 4 });
+            assert!(models.acc.predict(&x).0 <= max_acc + 1e-9);
+        }
+    }
+}

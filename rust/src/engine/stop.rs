@@ -1,0 +1,146 @@
+//! Adaptive stop conditions (paper §III: "it would be relatively
+//! straightforward to incorporate more sophisticated, adaptive
+//! stop-conditions that, e.g., interrupt the optimization if the new
+//! predicted incumbent does not improve significantly over the best known
+//! optimum" — implemented here as a first-class extension).
+
+use super::metrics::IterRecord;
+
+/// When to terminate the main optimization loop (evaluated after every
+/// iteration, in addition to `max_iters`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StopCondition {
+    /// paper default: fixed number of cycles only
+    Never,
+    /// stop when the incumbent's predicted accuracy has not improved by at
+    /// least `min_delta` over the last `window` iterations
+    NoImprovement { window: usize, min_delta: f64 },
+    /// stop once cumulative exploration cost exceeds the budget (USD)
+    CostBudget(f64),
+    /// stop once cumulative exploration time exceeds the budget (seconds)
+    TimeBudget(f64),
+}
+
+impl StopCondition {
+    /// Should the loop stop after producing `records` (init + main)?
+    pub fn should_stop(&self, records: &[IterRecord]) -> bool {
+        match *self {
+            StopCondition::Never => false,
+            StopCondition::CostBudget(max) => {
+                records.last().map_or(false, |r| r.cum_cost >= max)
+            }
+            StopCondition::TimeBudget(max) => {
+                records.last().map_or(false, |r| r.cum_time >= max)
+            }
+            StopCondition::NoImprovement { window, min_delta } => {
+                let main: Vec<&IterRecord> =
+                    records.iter().filter(|r| !r.is_init).collect();
+                if main.len() <= window {
+                    return false;
+                }
+                // best incumbent accuracy before the window vs within it
+                let split = main.len() - window;
+                let before = main[..split]
+                    .iter()
+                    .map(|r| r.inc_acc)
+                    .fold(f64::NEG_INFINITY, f64::max);
+                let within = main[split..]
+                    .iter()
+                    .map(|r| r.inc_acc)
+                    .fold(f64::NEG_INFINITY, f64::max);
+                within - before < min_delta
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Dataset, NetKind, Outcome};
+    use crate::space::Point;
+
+    fn rec(is_init: bool, cum_cost: f64, cum_time: f64, inc_acc: f64) -> IterRecord {
+        let p = Point::from_id(4);
+        let _ = Dataset::generate as usize; // keep imports honest
+        IterRecord {
+            iter: 0,
+            is_init,
+            tested: p,
+            outcome: Outcome { acc: 0.5, time_s: 1.0, cost_usd: 0.01 },
+            explore_cost: 0.0,
+            cum_cost,
+            cum_time,
+            rec_wall_s: 0.0,
+            incumbent: p,
+            inc_acc,
+            inc_feasible: true,
+            accuracy_c: inc_acc,
+            n_alpha_evals: 0,
+        }
+    }
+
+    #[test]
+    fn never_never_stops() {
+        let rs = vec![rec(false, 1e9, 1e9, 0.0)];
+        assert!(!StopCondition::Never.should_stop(&rs));
+    }
+
+    #[test]
+    fn budgets_trigger() {
+        let rs = vec![rec(false, 0.5, 100.0, 0.9)];
+        assert!(StopCondition::CostBudget(0.4).should_stop(&rs));
+        assert!(!StopCondition::CostBudget(0.6).should_stop(&rs));
+        assert!(StopCondition::TimeBudget(99.0).should_stop(&rs));
+        assert!(!StopCondition::TimeBudget(101.0).should_stop(&rs));
+    }
+
+    #[test]
+    fn no_improvement_waits_for_window_then_triggers() {
+        let cond = StopCondition::NoImprovement { window: 3, min_delta: 0.01 };
+        // improving run: never stops
+        let rs: Vec<IterRecord> = (0..8)
+            .map(|i| rec(i < 2, i as f64, i as f64, 0.5 + 0.05 * i as f64))
+            .collect();
+        assert!(!cond.should_stop(&rs));
+        // plateaued run: stops once the window shows no gain
+        let mut rs: Vec<IterRecord> = (0..3)
+            .map(|i| rec(false, i as f64, i as f64, 0.8))
+            .collect();
+        assert!(!cond.should_stop(&rs), "window not full yet");
+        for i in 3..7 {
+            rs.push(rec(false, i as f64, i as f64, 0.8));
+        }
+        assert!(cond.should_stop(&rs));
+        // init records are ignored
+        let rs: Vec<IterRecord> =
+            (0..10).map(|i| rec(true, i as f64, 0.0, 0.8)).collect();
+        assert!(!cond.should_stop(&rs));
+    }
+
+    #[test]
+    fn integration_cost_budget_truncates_run() {
+        use crate::engine::{self, EngineConfig, OptimizerKind};
+        use crate::models::ModelKind;
+        use crate::space::Constraint;
+        let dataset = Dataset::generate(NetKind::Rnn, 42);
+        let caps = [Constraint::cost_max(0.02)];
+        let mut cfg = EngineConfig::paper_default(
+            OptimizerKind::TrimTuner(ModelKind::Trees),
+            1,
+        );
+        cfg.max_iters = 40;
+        cfg.stop = StopCondition::CostBudget(0.02);
+        let run = engine::run(&dataset, &caps, &cfg);
+        assert!(run.records.len() < 44, "stop condition never fired");
+        assert!(run.total_cost() >= 0.02);
+        // and it stops promptly: at most the init charge + one main
+        // iteration can land past the budget
+        let over: Vec<_> = run
+            .records
+            .iter()
+            .filter(|r| r.cum_cost > 0.02)
+            .collect();
+        assert!(over.len() <= 2, "{} records past budget", over.len());
+    }
+}

@@ -1,0 +1,117 @@
+//! Ablation studies for TrimTuner's own design knobs (DESIGN.md §4):
+//! representative-set size and Monte-Carlo depth of the p_opt estimator,
+//! and GP hyper-parameter refit cadence. Not part of the paper's figures —
+//! these back the implementation choices the paper leaves implicit.
+//!
+//! `trimtuner repro ablation [--seeds 3] [--iters 25]`
+
+use super::ExpOptions;
+use crate::engine::{self, EngineConfig, OptimizerKind};
+use crate::models::ModelKind;
+use crate::sim::{Dataset, NetKind};
+use crate::space::Constraint;
+use crate::util::csv::CsvWriter;
+use anyhow::Result;
+
+pub fn ablation(opts: &ExpOptions) -> Result<()> {
+    println!("== Ablations (RNN, TrimTuner-DT unless noted) ==");
+    let dataset = Dataset::generate(NetKind::Rnn, opts.dataset_seed);
+    let caps = [Constraint::cost_max(NetKind::Rnn.paper_cost_cap())];
+    let seeds = opts.seeds.min(3);
+    let iters = opts.max_iters.min(25);
+
+    let mut w = CsvWriter::create(
+        format!("{}/ablation.csv", opts.out_dir),
+        &["knob", "value", "final_acc_c", "std", "mean_rec_ms"],
+    )?;
+
+    let mut sweep = |label: &str,
+                     w: &mut CsvWriter,
+                     configure: &dyn Fn(&mut EngineConfig, f64),
+                     values: &[f64],
+                     optimizer: OptimizerKind|
+     -> Result<()> {
+        for &v in values {
+            let mut finals = Vec::new();
+            let mut recs = Vec::new();
+            for seed in 0..seeds {
+                let mut cfg =
+                    EngineConfig::paper_default(optimizer, seed as u64);
+                cfg.max_iters = iters;
+                configure(&mut cfg, v);
+                let run = engine::run(&dataset, &caps, &cfg);
+                finals.push(run.final_accuracy_c());
+                recs.push(run.mean_rec_wall_s() * 1e3);
+            }
+            let (m, s) = crate::util::stats::mean_std_pop(&finals);
+            let rec = crate::util::stats::mean(&recs);
+            println!(
+                "  {label:<22} = {v:<6} final Acc_C {m:.4}±{s:.4}  rec {rec:.1} ms"
+            );
+            w.row(&[
+                label.to_string(),
+                format!("{v}"),
+                format!("{m:.4}"),
+                format!("{s:.4}"),
+                format!("{rec:.2}"),
+            ])?;
+        }
+        Ok(())
+    };
+
+    let dt = OptimizerKind::TrimTuner(ModelKind::Trees);
+    let gp = OptimizerKind::TrimTuner(ModelKind::Gp);
+    sweep(
+        "n_rep (p_opt set)",
+        &mut w,
+        &|cfg, v| cfg.n_rep = v as usize,
+        &[10.0, 40.0, 80.0],
+        dt,
+    )?;
+    sweep(
+        "n_popt_samples",
+        &mut w,
+        &|cfg, v| cfg.n_popt_samples = v as usize,
+        &[40.0, 160.0, 320.0],
+        dt,
+    )?;
+    sweep(
+        "hyperopt_every (GP)",
+        &mut w,
+        &|cfg, v| cfg.hyperopt_every = v as usize,
+        &[1.0, 3.0, 10.0],
+        gp,
+    )?;
+    sweep(
+        "gp_hyper_samples (GP)",
+        &mut w,
+        &|cfg, v| cfg.gp_hyper_samples = v as usize,
+        &[1.0, 8.0, 16.0],
+        gp,
+    )?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_writes_csv() {
+        let dir = std::env::temp_dir().join("trimtuner_ablation_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let opts = ExpOptions {
+            out_dir: dir.to_str().unwrap().to_string(),
+            seeds: 1,
+            max_iters: 3,
+            dataset_seed: 42,
+            full: false,
+        };
+        ablation(&opts).unwrap();
+        let t = crate::util::csv::CsvTable::read(dir.join("ablation.csv"))
+            .unwrap();
+        assert_eq!(t.header[0], "knob");
+        assert_eq!(t.rows.len(), 12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,164 @@
+//! Aggregation of per-seed optimizer runs into averaged curves.
+//!
+//! Fig. 1/3/4 plot Accuracy_C against cumulative optimization *cost* (the
+//! independent variable). Runs with different seeds spend different costs
+//! per iteration, so we resample every run onto a common cost grid (step
+//! interpolation: the incumbent between observations is the last one) and
+//! average point-wise — the same procedure the paper's plotting uses.
+
+use crate::engine::RunResult;
+
+/// One point of an averaged curve.
+#[derive(Debug, Clone, Copy)]
+pub struct CurvePoint {
+    pub cost: f64,
+    pub mean_accuracy_c: f64,
+    pub std_accuracy_c: f64,
+    /// fraction of runs already past their init phase at this cost
+    pub main_phase_frac: f64,
+}
+
+/// Which budget axis a curve is parameterized by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BudgetAxis {
+    Cost,
+    Time,
+}
+
+impl BudgetAxis {
+    fn of(&self, r: &crate::engine::IterRecord) -> f64 {
+        match self {
+            BudgetAxis::Cost => r.cum_cost,
+            BudgetAxis::Time => r.cum_time,
+        }
+    }
+}
+
+/// Step-interpolate a run's Accuracy_C at a given cumulative budget.
+fn value_at(run: &RunResult, axis: BudgetAxis, budget: f64) -> (f64, bool) {
+    let mut acc = 0.0;
+    let mut in_main = false;
+    for r in &run.records {
+        if axis.of(r) <= budget + 1e-12 {
+            acc = r.accuracy_c;
+            in_main = !r.is_init;
+        } else {
+            break;
+        }
+    }
+    (acc, in_main)
+}
+
+/// Average `runs` onto `n_grid` log-spaced budget points spanning all runs.
+pub fn average_runs_axis(
+    runs: &[RunResult],
+    axis: BudgetAxis,
+    n_grid: usize,
+) -> Vec<CurvePoint> {
+    assert!(!runs.is_empty());
+    let min_b = runs
+        .iter()
+        .filter_map(|r| r.records.iter().map(|x| axis.of(x)).find(|&c| c > 0.0))
+        .fold(f64::INFINITY, f64::min);
+    let max_b = runs
+        .iter()
+        .map(|r| r.records.last().map_or(0.0, |x| axis.of(x)))
+        .fold(0.0f64, f64::max);
+    assert!(min_b.is_finite() && max_b > min_b);
+
+    let mut out = Vec::with_capacity(n_grid);
+    for i in 0..n_grid {
+        let t = i as f64 / (n_grid - 1) as f64;
+        let budget = min_b * (max_b / min_b).powf(t);
+        let vals: Vec<(f64, bool)> =
+            runs.iter().map(|r| value_at(r, axis, budget)).collect();
+        let accs: Vec<f64> = vals.iter().map(|v| v.0).collect();
+        let (mean, std) = crate::util::stats::mean_std_pop(&accs);
+        let main_frac = vals.iter().filter(|v| v.1).count() as f64
+            / vals.len() as f64;
+        out.push(CurvePoint {
+            cost: budget,
+            mean_accuracy_c: mean,
+            std_accuracy_c: std,
+            main_phase_frac: main_frac,
+        });
+    }
+    out
+}
+
+/// Average over the cost axis (Fig. 1/3/4 plotting).
+pub fn average_runs(runs: &[RunResult], n_grid: usize) -> Vec<CurvePoint> {
+    average_runs_axis(runs, BudgetAxis::Cost, n_grid)
+}
+
+/// Budget at which the *averaged* curve first reaches `target` Accuracy_C —
+/// the quantity read off the paper's Fig. 1-style plots. `None` if the
+/// averaged curve never reaches the target.
+pub fn budget_to_target(
+    runs: &[RunResult],
+    axis: BudgetAxis,
+    target: f64,
+) -> Option<f64> {
+    let curve = average_runs_axis(runs, axis, 240);
+    curve
+        .iter()
+        .find(|pt| pt.mean_accuracy_c >= target)
+        .map(|pt| pt.cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::IterRecord;
+    use crate::sim::{Dataset, NetKind};
+    use crate::space::Point;
+
+    fn mk_run(costs_accs: &[(f64, f64, bool)]) -> RunResult {
+        let d = Dataset::generate(NetKind::Rnn, 1);
+        let p = Point::from_id(0);
+        RunResult {
+            records: costs_accs
+                .iter()
+                .map(|&(c, a, is_init)| IterRecord {
+                    iter: 0,
+                    is_init,
+                    tested: p,
+                    outcome: d.outcome(&p),
+                    explore_cost: 0.0,
+                    cum_cost: c,
+                    cum_time: c,
+                    rec_wall_s: 0.0,
+                    incumbent: p,
+                    inc_acc: a,
+                    inc_feasible: true,
+                    accuracy_c: a,
+                    n_alpha_evals: 0,
+                })
+                .collect(),
+            optimum_acc: 1.0,
+            optimum: None,
+        }
+    }
+
+    #[test]
+    fn step_interpolation_holds_last_value() {
+        let run = mk_run(&[(0.1, 0.2, true), (1.0, 0.8, false)]);
+        assert_eq!(value_at(&run, BudgetAxis::Cost, 0.5).0, 0.2);
+        assert_eq!(value_at(&run, BudgetAxis::Cost, 1.5).0, 0.8);
+        assert_eq!(value_at(&run, BudgetAxis::Cost, 0.01).0, 0.0);
+    }
+
+    #[test]
+    fn averaging_two_runs() {
+        let a = mk_run(&[(0.1, 0.4, false), (1.0, 0.8, false)]);
+        let b = mk_run(&[(0.1, 0.6, false), (1.0, 1.0, false)]);
+        let curve = average_runs(&[a, b], 8);
+        assert_eq!(curve.len(), 8);
+        // at max cost both runs have settled
+        let last = curve.last().unwrap();
+        assert!((last.mean_accuracy_c - 0.9).abs() < 1e-9);
+        assert!((last.std_accuracy_c - 0.1).abs() < 1e-9);
+        // costs monotone increasing
+        assert!(curve.windows(2).all(|w| w[0].cost < w[1].cost));
+    }
+}

@@ -1,0 +1,315 @@
+//! Figures 1–4 of the paper.
+
+use super::aggregate::average_runs;
+use super::ExpOptions;
+use crate::engine::{self, EngineConfig, OptimizerKind, RunResult};
+use crate::heuristics::FilterKind;
+use crate::models::ModelKind;
+use crate::sim::{Dataset, NetKind};
+use crate::space::Constraint;
+use crate::util::csv::CsvWriter;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// (net name, optimizer name) -> per-seed runs.
+pub type RunStore = HashMap<(String, String), Vec<RunResult>>;
+
+pub const FIG1_OPTIMIZERS: [OptimizerKind; 6] = [
+    OptimizerKind::TrimTuner(ModelKind::Trees),
+    OptimizerKind::TrimTuner(ModelKind::Gp),
+    OptimizerKind::Eic,
+    OptimizerKind::EicUsd,
+    OptimizerKind::Fabolas,
+    OptimizerKind::RandomSearch,
+];
+
+/// Run `seeds` independent runs of each (net, optimizer) pair.
+pub fn run_matrix(
+    opts: &ExpOptions,
+    nets: &[NetKind],
+    optimizers: &[OptimizerKind],
+) -> Result<RunStore> {
+    let mut store = RunStore::new();
+    for &net in nets {
+        let dataset = Dataset::generate(net, opts.dataset_seed);
+        let caps = [Constraint::cost_max(net.paper_cost_cap())];
+        for &optimizer in optimizers {
+            let t0 = std::time::Instant::now();
+            let mut runs = Vec::with_capacity(opts.seeds);
+            for seed in 0..opts.seeds {
+                let mut cfg =
+                    EngineConfig::paper_default(optimizer, seed as u64);
+                cfg.max_iters = opts.max_iters;
+                runs.push(engine::run(&dataset, &caps, &cfg));
+            }
+            eprintln!(
+                "  [{}] {} x{} seeds: final Acc_C {:.4} (opt {:.4}), {:.1}s",
+                net.name(),
+                optimizer.name(),
+                opts.seeds,
+                crate::util::stats::mean(
+                    &runs.iter().map(|r| r.final_accuracy_c()).collect::<Vec<_>>()
+                ),
+                runs[0].optimum_acc,
+                t0.elapsed().as_secs_f64()
+            );
+            store.insert((net.name().into(), optimizer.name()), runs);
+        }
+    }
+    Ok(store)
+}
+
+fn write_curves(
+    path: &str,
+    _store: &RunStore,
+    net: NetKind,
+    series: &[(String, &Vec<RunResult>)],
+) -> Result<()> {
+    let mut w = CsvWriter::create(
+        path,
+        &[
+            "series", "cost_usd", "mean_accuracy_c", "std_accuracy_c",
+            "main_phase_frac",
+        ],
+    )?;
+    w.comment(&format!(
+        "net={} cost cap=${}",
+        net.name(),
+        net.paper_cost_cap()
+    ))?;
+    for (name, runs) in series {
+        for pt in average_runs(runs, 60) {
+            w.row(&[
+                name.clone(),
+                format!("{:.6}", pt.cost),
+                format!("{:.5}", pt.mean_accuracy_c),
+                format!("{:.5}", pt.std_accuracy_c),
+                format!("{:.3}", pt.main_phase_frac),
+            ])?;
+        }
+    }
+    w.flush()
+}
+
+/// Fig. 1: Accuracy_C vs optimization cost, per network × optimizer.
+pub fn fig1(opts: &ExpOptions) -> Result<RunStore> {
+    println!("== Fig 1: Accuracy_C vs optimization cost ==");
+    let store = run_matrix(opts, &NetKind::ALL, &FIG1_OPTIMIZERS)?;
+    for net in NetKind::ALL {
+        let series: Vec<(String, &Vec<RunResult>)> = FIG1_OPTIMIZERS
+            .iter()
+            .map(|o| {
+                let key = (net.name().to_string(), o.name());
+                (o.name(), store.get(&key).unwrap())
+            })
+            .collect();
+        write_curves(
+            &format!("{}/fig1_{}.csv", opts.out_dir, net.name()),
+            &store,
+            net,
+            &series,
+        )?;
+        // printed summary: final Accuracy_C and total cost per optimizer
+        println!("  [{}]", net.name());
+        for (name, runs) in &series {
+            let finals: Vec<f64> =
+                runs.iter().map(|r| r.final_accuracy_c()).collect();
+            let costs: Vec<f64> =
+                runs.iter().map(|r| r.total_cost()).collect();
+            println!(
+                "    {:<14} final Acc_C {:.4}±{:.4}  explore cost ${:.3}±{:.3}",
+                name,
+                crate::util::stats::mean(&finals),
+                crate::util::stats::std_dev(&finals),
+                crate::util::stats::mean(&costs),
+                crate::util::stats::std_dev(&costs),
+            );
+        }
+    }
+    Ok(store)
+}
+
+/// Fig. 2: time (a) and cost (b) savings of TrimTuner (DT) vs EIc and
+/// EIc/USD to reach >= 90% of the optimal feasible accuracy.
+pub fn fig2(opts: &ExpOptions) -> Result<()> {
+    let needed = [
+        OptimizerKind::TrimTuner(ModelKind::Trees),
+        OptimizerKind::Eic,
+        OptimizerKind::EicUsd,
+    ];
+    let store = run_matrix(opts, &NetKind::ALL, &needed)?;
+    fig2_from(opts, &store)
+}
+
+pub fn fig2_from(opts: &ExpOptions, store: &RunStore) -> Result<()> {
+    println!("== Fig 2: time & cost savings of TrimTuner(DT) at 90% of optimum ==");
+    let mut w = CsvWriter::create(
+        format!("{}/fig2.csv", opts.out_dir),
+        &[
+            "net", "baseline", "time_saving_x", "cost_saving_x",
+            "tt_cost_usd", "baseline_cost_usd", "tt_time_s", "baseline_time_s",
+        ],
+    )?;
+    for net in NetKind::ALL {
+        let tt = reach_stats(store, net, "trimtuner-dt");
+        for baseline in ["eic", "eic-usd"] {
+            let bl = reach_stats(store, net, baseline);
+            let (Some((tc, tt_s)), Some((bc, bt_s))) = (tt, bl) else {
+                println!("  [{}] {baseline}: 90% never reached", net.name());
+                continue;
+            };
+            let cost_x = bc / tc;
+            let time_x = bt_s / tt_s;
+            println!(
+                "  [{}] vs {:<8} time saving {:>6.1}x  cost saving {:>6.1}x",
+                net.name(),
+                baseline,
+                time_x,
+                cost_x
+            );
+            w.row(&[
+                net.name().to_string(),
+                baseline.to_string(),
+                format!("{time_x:.2}"),
+                format!("{cost_x:.2}"),
+                format!("{tc:.5}"),
+                format!("{bc:.5}"),
+                format!("{tt_s:.1}"),
+                format!("{bt_s:.1}"),
+            ])?;
+        }
+    }
+    w.flush()
+}
+
+/// (cost, time) at which the *averaged* Accuracy_C curve stably reaches
+/// 90% of the optimum — the quantity read off the paper's Fig. 1 plots.
+fn reach_stats(
+    store: &RunStore,
+    net: NetKind,
+    optimizer: &str,
+) -> Option<(f64, f64)> {
+    use super::aggregate::{budget_to_target, BudgetAxis};
+    let runs = store.get(&(net.name().to_string(), optimizer.to_string()))?;
+    let target = 0.90 * runs[0].optimum_acc;
+    let cost = budget_to_target(runs, BudgetAxis::Cost, target)?;
+    let time = budget_to_target(runs, BudgetAxis::Time, target)?;
+    Some((cost, time))
+}
+
+/// Fig. 3: filtering-heuristic comparison (RNN, TrimTuner-GP, β = 10%).
+pub fn fig3(opts: &ExpOptions) -> Result<()> {
+    println!("== Fig 3: heuristics on RNN (TrimTuner-GP, beta=10%) ==");
+    let dataset = Dataset::generate(NetKind::Rnn, opts.dataset_seed);
+    let caps = [Constraint::cost_max(NetKind::Rnn.paper_cost_cap())];
+    let filters = [
+        FilterKind::Cea,
+        FilterKind::Direct,
+        FilterKind::Cmaes,
+        FilterKind::RandomFilter,
+    ];
+    let mut store = RunStore::new();
+    for filter in filters {
+        let t0 = std::time::Instant::now();
+        let mut runs = Vec::new();
+        for seed in 0..opts.seeds {
+            let mut cfg = EngineConfig::paper_default(
+                OptimizerKind::TrimTuner(ModelKind::Gp),
+                seed as u64,
+            );
+            cfg.filter = filter;
+            cfg.max_iters = opts.max_iters;
+            runs.push(engine::run(&dataset, &caps, &cfg));
+        }
+        let finals: Vec<f64> =
+            runs.iter().map(|r| r.final_accuracy_c()).collect();
+        let reach: Vec<Option<(f64, f64)>> =
+            runs.iter().map(|r| crate::engine::cost_to_quality(r, 0.90)).collect();
+        let reach_cost = if reach.iter().all(|r| r.is_some()) {
+            format!(
+                "{:.4}",
+                crate::util::stats::mean(
+                    &reach.iter().map(|r| r.unwrap().0).collect::<Vec<_>>()
+                )
+            )
+        } else {
+            "n/a".to_string()
+        };
+        println!(
+            "  {:<8} final Acc_C {:.4}  cost to 90% ${}  ({:.1}s)",
+            filter.name(),
+            crate::util::stats::mean(&finals),
+            reach_cost,
+            t0.elapsed().as_secs_f64()
+        );
+        store.insert(("rnn".into(), filter.name().into()), runs);
+    }
+    let series: Vec<(String, &Vec<RunResult>)> = filters
+        .iter()
+        .map(|f| {
+            (
+                f.name().to_string(),
+                store.get(&("rnn".to_string(), f.name().to_string())).unwrap(),
+            )
+        })
+        .collect();
+    write_curves(
+        &format!("{}/fig3.csv", opts.out_dir),
+        &store,
+        NetKind::Rnn,
+        &series,
+    )
+}
+
+/// Fig. 4: sensitivity to the CEA filtering level β (RNN, TrimTuner-DT).
+pub fn fig4(opts: &ExpOptions) -> Result<()> {
+    println!("== Fig 4: beta sensitivity (RNN, TrimTuner-DT, CEA) ==");
+    let dataset = Dataset::generate(NetKind::Rnn, opts.dataset_seed);
+    let caps = [Constraint::cost_max(NetKind::Rnn.paper_cost_cap())];
+    let betas: [(f64, &str); 4] =
+        [(0.01, "1%"), (0.10, "10%"), (0.20, "20%"), (1.0, "nofilter")];
+    let mut store = RunStore::new();
+    for (beta, label) in betas {
+        let mut runs = Vec::new();
+        for seed in 0..opts.seeds {
+            let mut cfg = EngineConfig::paper_default(
+                OptimizerKind::TrimTuner(ModelKind::Trees),
+                seed as u64,
+            );
+            cfg.beta = beta;
+            cfg.filter = if beta >= 1.0 {
+                FilterKind::NoFilter
+            } else {
+                FilterKind::Cea
+            };
+            cfg.max_iters = opts.max_iters;
+            runs.push(engine::run(&dataset, &caps, &cfg));
+        }
+        let finals: Vec<f64> =
+            runs.iter().map(|r| r.final_accuracy_c()).collect();
+        println!(
+            "  beta {:<9} final Acc_C {:.4}±{:.4}",
+            label,
+            crate::util::stats::mean(&finals),
+            crate::util::stats::std_dev(&finals)
+        );
+        store.insert(("rnn".into(), label.into()), runs);
+    }
+    let series: Vec<(String, &Vec<RunResult>)> = betas
+        .iter()
+        .map(|(_, label)| {
+            (
+                label.to_string(),
+                store
+                    .get(&("rnn".to_string(), label.to_string()))
+                    .unwrap(),
+            )
+        })
+        .collect();
+    write_curves(
+        &format!("{}/fig4.csv", opts.out_dir),
+        &store,
+        NetKind::Rnn,
+        &series,
+    )
+}

@@ -1,0 +1,77 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§IV) as CSV series + printed rows. See DESIGN.md §4 for the
+//! experiment index.
+
+mod ablation;
+mod aggregate;
+mod figures;
+mod tables;
+
+pub use ablation::ablation;
+pub use aggregate::{average_runs, average_runs_axis, budget_to_target, BudgetAxis, CurvePoint};
+pub use figures::{fig1, fig2, fig3, fig4};
+pub use tables::{table1, table2, table3, table4};
+
+use crate::cli::Args;
+use anyhow::Result;
+
+/// Shared experiment options parsed from the CLI.
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    pub out_dir: String,
+    pub seeds: usize,
+    pub max_iters: usize,
+    pub dataset_seed: u64,
+    /// full paper scale (10 seeds) vs quick default
+    pub full: bool,
+}
+
+impl ExpOptions {
+    pub fn from_args(args: &Args) -> ExpOptions {
+        let full = args.has("full");
+        ExpOptions {
+            out_dir: args.get_or("out", "results"),
+            seeds: args.get_usize("seeds", if full { 10 } else { 5 }),
+            max_iters: args.get_usize("iters", 44),
+            dataset_seed: args.get_u64("dataset-seed", 42),
+            full,
+        }
+    }
+}
+
+pub fn cmd_repro(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let opts = ExpOptions::from_args(args);
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let t0 = std::time::Instant::now();
+    match what {
+        "table1" => table1(&opts)?,
+        "table2" => table2(&opts)?,
+        "table3" => table3(&opts)?,
+        "table4" => table4(&opts)?,
+        "fig1" => {
+            fig1(&opts)?;
+        }
+        "fig2" => fig2(&opts)?,
+        "fig3" => fig3(&opts)?,
+        "fig4" => fig4(&opts)?,
+        "ablation" => ablation(&opts)?,
+        "all" => {
+            table1(&opts)?;
+            table2(&opts)?;
+            let store = fig1(&opts)?;
+            figures::fig2_from(&opts, &store)?;
+            tables::table3_from(&opts, Some(&store))?;
+            fig3(&opts)?;
+            fig4(&opts)?;
+            table4(&opts)?;
+        }
+        other => anyhow::bail!("unknown experiment {other}"),
+    }
+    eprintln!("repro {what}: done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,247 @@
+//! Tables I–IV of the paper.
+
+use super::figures::{run_matrix, RunStore};
+use super::ExpOptions;
+use crate::engine::{EngineConfig, OptimizerKind};
+use crate::heuristics::FilterKind;
+use crate::models::ModelKind;
+use crate::sim::{Dataset, NetKind};
+use crate::space::{
+    Constraint, BATCH_SIZES, LEARNING_RATES, NVMS, N_CONFIGS, N_POINTS,
+    S_VALUES, VM_TYPES,
+};
+use crate::util::csv::CsvWriter;
+use anyhow::Result;
+
+/// Table I: the search space. Mostly a sanity printout of the catalog.
+pub fn table1(opts: &ExpOptions) -> Result<()> {
+    println!("== Table I: search space ==");
+    println!("learning rates: {LEARNING_RATES:?}");
+    println!("batch sizes:    {BATCH_SIZES:?}");
+    println!("training modes: [sync, async]");
+    println!(
+        "data-set sizes: {:?} (%)",
+        S_VALUES.iter().map(|s| s * 100.0).collect::<Vec<_>>()
+    );
+    for (vm, nvms) in VM_TYPES.iter().zip(NVMS.iter()) {
+        println!(
+            "{:<12} {{{} vCPU, {} GB}}  #VMs {:?}  (${}/h)",
+            vm.name,
+            vm.vcpus,
+            vm.ram_gb,
+            nvms,
+            vm.price_hr()
+        );
+    }
+    println!("=> {N_CONFIGS} configs x {} sizes = {N_POINTS} points", S_VALUES.len());
+
+    let mut w = CsvWriter::create(
+        format!("{}/table1.csv", opts.out_dir),
+        &["vm_type", "vcpus", "ram_gb", "price_hr", "nvms"],
+    )?;
+    for (vm, nvms) in VM_TYPES.iter().zip(NVMS.iter()) {
+        w.row(&[
+            vm.name.to_string(),
+            vm.vcpus.to_string(),
+            vm.ram_gb.to_string(),
+            format!("{}", vm.price_hr()),
+            format!("{nvms:?}").replace(',', ";"),
+        ])?;
+    }
+    w.flush()
+}
+
+/// Table II: feasible / near-optimal configuration counts per network.
+pub fn table2(opts: &ExpOptions) -> Result<()> {
+    // paper's measured values for side-by-side comparison
+    let paper = [
+        (NetKind::Rnn, 178, 61.8, 28, 9.72),
+        (NetKind::Mlp, 161, 55.8, 29, 10.07),
+        (NetKind::Cnn, 111, 38.5, 39, 13.54),
+    ];
+    println!("== Table II: feasible configurations (paper vs ours) ==");
+    println!(
+        "{:<5} {:>14} {:>14} {:>18} {:>18}",
+        "net", "feas (paper)", "feas (ours)", "near-opt (paper)", "near-opt (ours)"
+    );
+    let mut w = CsvWriter::create(
+        format!("{}/table2.csv", opts.out_dir),
+        &[
+            "net", "feasible", "feasible_pct", "near_optimal",
+            "near_optimal_pct", "paper_feasible_pct", "paper_near_pct",
+        ],
+    )?;
+    for (net, pf, pfp, pn, pnp) in paper {
+        let d = Dataset::generate(net, opts.dataset_seed);
+        let caps = [Constraint::cost_max(net.paper_cost_cap())];
+        let s = d.feasibility_stats(&caps);
+        println!(
+            "{:<5} {:>6} ({:4.1}%) {:>6} ({:4.1}%) {:>10} ({:5.2}%) {:>10} ({:5.2}%)",
+            net.name(),
+            pf,
+            pfp,
+            s.feasible,
+            s.feasible_pct,
+            pn,
+            pnp,
+            s.near_optimal,
+            s.near_optimal_pct
+        );
+        w.row(&[
+            net.name().to_string(),
+            s.feasible.to_string(),
+            format!("{:.2}", s.feasible_pct),
+            s.near_optimal.to_string(),
+            format!("{:.2}", s.near_optimal_pct),
+            format!("{pfp}"),
+            format!("{pnp}"),
+        ])?;
+    }
+    w.flush()
+}
+
+/// Table III: average wall-clock time to recommend a configuration,
+/// averaged over the three networks.
+pub fn table3(opts: &ExpOptions) -> Result<()> {
+    table3_from(opts, None)
+}
+
+pub fn table3_from(opts: &ExpOptions, store: Option<&RunStore>) -> Result<()> {
+    let optimizers = [
+        OptimizerKind::TrimTuner(ModelKind::Gp),
+        OptimizerKind::TrimTuner(ModelKind::Trees),
+        OptimizerKind::Fabolas,
+        OptimizerKind::Eic,
+    ];
+    // paper values in minutes (Table III)
+    let paper_min = [18.65, 1.36, 13.96, 1.17];
+
+    let local;
+    let store = match store {
+        Some(s) => s,
+        None => {
+            let mut o = opts.clone();
+            o.seeds = o.seeds.min(3);
+            local = run_matrix(&o, &NetKind::ALL, &optimizers)?;
+            &local
+        }
+    };
+
+    println!("== Table III: avg time to recommend a configuration ==");
+    println!(
+        "{:<14} {:>16} {:>16} {:>10}",
+        "optimizer", "paper [min]", "ours [ms]", "ours/DT"
+    );
+    let mut rows = Vec::new();
+    let mut dt_ms = f64::NAN;
+    for (i, opt) in optimizers.iter().enumerate() {
+        let mut times = Vec::new();
+        for net in NetKind::ALL {
+            if let Some(runs) = store.get(&(net.name().into(), opt.name())) {
+                times.extend(runs.iter().map(|r| r.mean_rec_wall_s()));
+            }
+        }
+        let (mean_s, std_s) = crate::util::stats::mean_std_pop(&times);
+        if *opt == OptimizerKind::TrimTuner(ModelKind::Trees) {
+            dt_ms = mean_s * 1e3;
+        }
+        rows.push((opt.name(), paper_min[i], mean_s * 1e3, std_s * 1e3));
+    }
+    let mut w = CsvWriter::create(
+        format!("{}/table3.csv", opts.out_dir),
+        &["optimizer", "paper_min", "ours_ms", "ours_std_ms", "ratio_to_dt"],
+    )?;
+    for (name, paper, ms, std) in rows {
+        println!(
+            "{:<14} {:>16.2} {:>16.1} {:>10.2}",
+            name,
+            paper,
+            ms,
+            ms / dt_ms
+        );
+        w.row(&[
+            name.clone(),
+            format!("{paper}"),
+            format!("{ms:.2}"),
+            format!("{std:.2}"),
+            format!("{:.3}", ms / dt_ms),
+        ])?;
+    }
+    w.flush()
+}
+
+/// Table IV: recommendation time per filtering heuristic / level (RNN).
+pub fn table4(opts: &ExpOptions) -> Result<()> {
+    let rows: Vec<(&str, FilterKind, f64)> = vec![
+        ("No filter", FilterKind::NoFilter, 1.0),
+        ("CEA (1%)", FilterKind::Cea, 0.01),
+        ("CEA (10%)", FilterKind::Cea, 0.10),
+        ("CEA (20%)", FilterKind::Cea, 0.20),
+        ("Direct (10%)", FilterKind::Direct, 0.10),
+        ("CMAES (10%)", FilterKind::Cmaes, 0.10),
+        ("Random (10%)", FilterKind::RandomFilter, 0.10),
+    ];
+    // paper values [min] for (GP, DT)
+    let paper = [
+        (125.76, 3.69),
+        (5.94, 1.07),
+        (16.85, 1.72),
+        (28.65, 2.05),
+        (36.18, 2.63),
+        (30.87, 2.26),
+        (16.53, 1.62),
+    ];
+
+    let dataset = Dataset::generate(NetKind::Rnn, opts.dataset_seed);
+    let caps = [Constraint::cost_max(NetKind::Rnn.paper_cost_cap())];
+    // shorter runs: recommendation latency stabilizes quickly with n
+    let iters = opts.max_iters.min(if opts.full { 20 } else { 10 });
+    let seeds = opts.seeds.min(if opts.full { 3 } else { 2 });
+
+    println!("== Table IV: recommendation time by heuristic (RNN) ==");
+    println!(
+        "{:<14} {:>12} {:>12} {:>12} {:>12}",
+        "heuristic", "GP paper[m]", "GP ours[ms]", "DT paper[m]", "DT ours[ms]"
+    );
+    let mut w = CsvWriter::create(
+        format!("{}/table4.csv", opts.out_dir),
+        &[
+            "heuristic", "beta", "gp_paper_min", "gp_ours_ms", "dt_paper_min",
+            "dt_ours_ms",
+        ],
+    )?;
+    for ((label, filter, beta), (gp_paper, dt_paper)) in
+        rows.iter().zip(paper.iter())
+    {
+        let mut ours = [0.0f64; 2];
+        for (k, kind) in [ModelKind::Gp, ModelKind::Trees].iter().enumerate()
+        {
+            let mut times = Vec::new();
+            for seed in 0..seeds {
+                let mut cfg = EngineConfig::paper_default(
+                    OptimizerKind::TrimTuner(*kind),
+                    seed as u64,
+                );
+                cfg.filter = *filter;
+                cfg.beta = *beta;
+                cfg.max_iters = iters;
+                let run = crate::engine::run(&dataset, &caps, &cfg);
+                times.push(run.mean_rec_wall_s());
+            }
+            ours[k] = crate::util::stats::mean(&times) * 1e3;
+        }
+        println!(
+            "{:<14} {:>12.2} {:>12.1} {:>12.2} {:>12.1}",
+            label, gp_paper, ours[0], dt_paper, ours[1]
+        );
+        w.row(&[
+            label.to_string(),
+            format!("{beta}"),
+            format!("{gp_paper}"),
+            format!("{:.2}", ours[0]),
+            format!("{dt_paper}"),
+            format!("{:.2}", ours[1]),
+        ])?;
+    }
+    w.flush()
+}

@@ -1,0 +1,59 @@
+//! Constrained Expected Accuracy (paper Eq. 6):
+//! CEA(x, s) = A(x, s) · Π_i P(q_i(x, s) ≥ 0 | S).
+//!
+//! A cheap stand-in for α_T used to rank untested points: unlike α_T it
+//! scores the *point itself* (no model refits, no p_opt), so it can be
+//! evaluated on the entire untested set every iteration.
+
+use crate::acq::{feasibility_prob, Models};
+use crate::space::{encode, Constraint, Point};
+
+/// CEA score for every point in `untested` (same order).
+pub fn cea_scores(
+    models: &Models,
+    constraints: &[Constraint],
+    untested: &[Point],
+) -> Vec<f64> {
+    untested
+        .iter()
+        .map(|p| {
+            let x = encode(p);
+            let (acc, _) = models.acc.predict(&x);
+            let pfeas: f64 = constraints
+                .iter()
+                .map(|c| feasibility_prob(models, c, &x))
+                .product();
+            acc.max(0.0) * pfeas
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::heuristics::tests::fixture;
+
+    #[test]
+    fn scores_in_unit_range_and_ordered_by_feasibility() {
+        let (m, cs, untested) = fixture();
+        let scores = cea_scores(&m, &cs, &untested);
+        assert_eq!(scores.len(), untested.len());
+        for &s in &scores {
+            assert!((0.0..=1.2).contains(&s), "score {s}");
+        }
+        // tightening the constraint can only lower each score
+        let tight = vec![Constraint::cost_max(cs[0].max / 100.0)];
+        let tight_scores = cea_scores(&m, &tight, &untested);
+        for (a, b) in scores.iter().zip(&tight_scores) {
+            assert!(b <= a, "tightening raised CEA: {a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn infeasible_points_scored_near_zero() {
+        let (m, _, untested) = fixture();
+        let impossible = vec![Constraint::cost_max(1e-12)];
+        let scores = cea_scores(&m, &impossible, &untested);
+        assert!(scores.iter().all(|&s| s < 1e-3));
+    }
+}

@@ -1,0 +1,191 @@
+//! (μ/μ_w, λ)-CMA-ES (Hansen 2006) over the [0,1]^7 continuous relaxation,
+//! used as a generic acquisition-maximization heuristic (paper Fig. 3 /
+//! Table IV baselines).
+//!
+//! Full covariance adaptation with rank-one + rank-μ updates; iterates are
+//! snapped to the nearest untested grid point for evaluation, and the run
+//! stops after `budget` unique acquisition evaluations.
+
+use super::{nearest_untested, AlphaCache, D_IN};
+use crate::linalg::{Cholesky, Mat};
+use crate::space::Point;
+use crate::util::Rng;
+
+pub struct CmaesSearch {
+    rng: Rng,
+}
+
+impl CmaesSearch {
+    pub fn new(rng: Rng) -> CmaesSearch {
+        CmaesSearch { rng }
+    }
+
+    pub fn run(
+        &mut self,
+        untested: &[Point],
+        budget: usize,
+        alpha: &mut AlphaCache<'_>,
+    ) {
+        let n = D_IN;
+        let lambda = 4 + (3.0 * (n as f64).ln()).floor() as usize; // ~9
+        let mu = lambda / 2;
+        // log-rank weights
+        let mut w: Vec<f64> = (0..mu)
+            .map(|i| ((mu as f64 + 0.5).ln() - ((i + 1) as f64).ln()).max(0.0))
+            .collect();
+        let wsum: f64 = w.iter().sum();
+        w.iter_mut().for_each(|x| *x /= wsum);
+        let mu_eff = 1.0 / w.iter().map(|x| x * x).sum::<f64>();
+
+        let nf = n as f64;
+        let cc = (4.0 + mu_eff / nf) / (nf + 4.0 + 2.0 * mu_eff / nf);
+        let cs = (mu_eff + 2.0) / (nf + mu_eff + 5.0);
+        let c1 = 2.0 / ((nf + 1.3).powi(2) + mu_eff);
+        let cmu = (1.0 - c1)
+            .min(2.0 * (mu_eff - 2.0 + 1.0 / mu_eff)
+                / ((nf + 2.0).powi(2) + mu_eff));
+        let damps =
+            1.0 + 2.0 * ((mu_eff - 1.0) / (nf + 1.0)).sqrt().max(0.0) + cs;
+        let chi_n = nf.sqrt() * (1.0 - 1.0 / (4.0 * nf) + 1.0 / (21.0 * nf * nf));
+
+        let mut mean = vec![0.5; n];
+        let mut sigma = 0.3;
+        let mut cov = Mat::eye(n);
+        let mut p_c = vec![0.0; n];
+        let mut p_s = vec![0.0; n];
+        let mut gen = 0usize;
+
+        while alpha.unique_evals() < budget && gen < 200 {
+            let chol = match Cholesky::factor(&cov) {
+                Ok(c) => c,
+                Err(_) => {
+                    cov = Mat::eye(n);
+                    Cholesky::factor(&cov).unwrap()
+                }
+            };
+            // sample λ offspring
+            let mut pop: Vec<(Vec<f64>, f64)> = Vec::with_capacity(lambda);
+            for _ in 0..lambda {
+                let z: Vec<f64> = (0..n).map(|_| self.rng.normal()).collect();
+                // y = L z ; x = mean + sigma y, clipped to the cube
+                let mut y = vec![0.0; n];
+                for i in 0..n {
+                    let row = chol.l().row(i);
+                    for j in 0..=i {
+                        y[i] += row[j] * z[j];
+                    }
+                }
+                let x: Vec<f64> = (0..n)
+                    .map(|i| (mean[i] + sigma * y[i]).clamp(0.0, 1.0))
+                    .collect();
+                let mut feat = [0.0; D_IN];
+                feat.copy_from_slice(&x);
+                let p = nearest_untested(&feat, untested);
+                let v = alpha.eval(&p);
+                pop.push((x, v));
+                if alpha.unique_evals() >= budget {
+                    break;
+                }
+            }
+            if pop.len() < 2 {
+                break;
+            }
+            // maximize: sort descending by value
+            pop.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let old_mean = mean.clone();
+            for i in 0..n {
+                mean[i] = pop
+                    .iter()
+                    .take(mu.min(pop.len()))
+                    .zip(&w)
+                    .map(|((x, _), wi)| wi * x[i])
+                    .sum();
+            }
+            // evolution paths
+            let mut delta: Vec<f64> =
+                (0..n).map(|i| (mean[i] - old_mean[i]) / sigma).collect();
+            // C^{-1/2} delta ≈ solve L z = delta
+            let cinv_half_delta = chol.solve_lower(&delta);
+            for i in 0..n {
+                p_s[i] = (1.0 - cs) * p_s[i]
+                    + (cs * (2.0 - cs) * mu_eff).sqrt() * cinv_half_delta[i];
+            }
+            let ps_norm =
+                p_s.iter().map(|v| v * v).sum::<f64>().sqrt();
+            let hsig = ps_norm
+                / (1.0 - (1.0 - cs).powi(2 * (gen as i32 + 1))).sqrt()
+                / chi_n
+                < 1.4 + 2.0 / (nf + 1.0);
+            for i in 0..n {
+                p_c[i] = (1.0 - cc) * p_c[i]
+                    + if hsig {
+                        (cc * (2.0 - cc) * mu_eff).sqrt() * delta[i]
+                    } else {
+                        0.0
+                    };
+            }
+            // covariance update (rank-1 + rank-mu)
+            let mut new_cov = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    let mut v = (1.0 - c1 - cmu) * cov[(i, j)]
+                        + c1 * p_c[i] * p_c[j];
+                    for (k, (x, _)) in
+                        pop.iter().take(mu.min(pop.len())).enumerate()
+                    {
+                        let yi = (x[i] - old_mean[i]) / sigma;
+                        let yj = (x[j] - old_mean[j]) / sigma;
+                        v += cmu * w[k] * yi * yj;
+                    }
+                    new_cov[(i, j)] = v;
+                }
+            }
+            // symmetrize + regularize
+            for i in 0..n {
+                for j in 0..i {
+                    let v = 0.5 * (new_cov[(i, j)] + new_cov[(j, i)]);
+                    new_cov[(i, j)] = v;
+                    new_cov[(j, i)] = v;
+                }
+                new_cov[(i, i)] = new_cov[(i, i)].max(1e-8);
+            }
+            cov = new_cov;
+            sigma *= ((cs / damps) * (ps_norm / chi_n - 1.0)).exp();
+            sigma = sigma.clamp(1e-4, 1.0);
+            delta.clear();
+            gen += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{all_points, encode};
+
+    #[test]
+    fn cmaes_improves_over_random_start() {
+        let untested: Vec<Point> = all_points().collect();
+        let target = encode(&Point::from_id(1000));
+        let objective = |p: &Point| {
+            let e = encode(p);
+            -e.iter()
+                .zip(&target)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+        };
+        let mut alpha = AlphaCache::new(objective);
+        CmaesSearch::new(Rng::new(8)).run(&untested, 120, &mut alpha);
+        let (_, v) = alpha.best().unwrap();
+        assert!(alpha.unique_evals() <= 120);
+        assert!(v > -0.4, "best {v}");
+    }
+
+    #[test]
+    fn cmaes_respects_budget() {
+        let untested: Vec<Point> = all_points().take(300).collect();
+        let mut alpha = AlphaCache::new(|p: &Point| encode(p)[0]);
+        CmaesSearch::new(Rng::new(9)).run(&untested, 7, &mut alpha);
+        assert!(alpha.unique_evals() <= 7);
+    }
+}

@@ -1,0 +1,273 @@
+//! Filtering heuristics (paper §III-B, Fig. 3, Table IV): given the set of
+//! untested (config, s) points and an acquisition-evaluation budget
+//! k = β·|T|, pick the next point to test while evaluating the (expensive)
+//! acquisition function at most k times.
+//!
+//! - **CEA** — the paper's contribution: rank all untested points by the
+//!   cheap Constrained-Expected-Accuracy score, evaluate α only on the
+//!   top-k.
+//! - **Random** — evaluate α on k uniformly-sampled untested points.
+//! - **NoFilter** — evaluate α everywhere (Table IV "No filter" row).
+//! - **DIRECT** / **CMA-ES** — generic black-box optimizers (as used by
+//!   FABOLAS) maximizing α over the continuous relaxation of the feature
+//!   space, snapping iterates to the nearest untested grid point, capped at
+//!   k unique α evaluations.
+
+mod cea;
+mod cmaes;
+mod direct;
+
+pub use cea::cea_scores;
+pub use cmaes::CmaesSearch;
+pub use direct::DirectSearch;
+
+use crate::acq::Models;
+use crate::space::{encode, Constraint, Point};
+use crate::util::stats::argmax;
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// Which heuristic an optimizer uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FilterKind {
+    Cea,
+    RandomFilter,
+    NoFilter,
+    Direct,
+    Cmaes,
+}
+
+impl FilterKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FilterKind::Cea => "cea",
+            FilterKind::RandomFilter => "random",
+            FilterKind::NoFilter => "nofilter",
+            FilterKind::Direct => "direct",
+            FilterKind::Cmaes => "cmaes",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<FilterKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "cea" => Some(FilterKind::Cea),
+            "random" => Some(FilterKind::RandomFilter),
+            "nofilter" | "none" => Some(FilterKind::NoFilter),
+            "direct" => Some(FilterKind::Direct),
+            "cmaes" | "cma-es" => Some(FilterKind::Cmaes),
+            _ => None,
+        }
+    }
+}
+
+/// Memoizing α evaluator: unique grid evaluations count against the budget.
+pub struct AlphaCache<'a> {
+    f: Box<dyn FnMut(&Point) -> f64 + 'a>,
+    cache: HashMap<usize, f64>,
+}
+
+impl<'a> AlphaCache<'a> {
+    pub fn new(f: impl FnMut(&Point) -> f64 + 'a) -> Self {
+        AlphaCache { f: Box::new(f), cache: HashMap::new() }
+    }
+
+    pub fn eval(&mut self, p: &Point) -> f64 {
+        let id = p.id();
+        if let Some(&v) = self.cache.get(&id) {
+            return v;
+        }
+        let v = (self.f)(p);
+        self.cache.insert(id, v);
+        v
+    }
+
+    pub fn unique_evals(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn best(&self) -> Option<(Point, f64)> {
+        // deterministic argmax: ties break towards the lowest point id
+        // (HashMap iteration order is seeded per instance — without an
+        // explicit tie-break, equal-α candidates would make runs
+        // non-reproducible)
+        self.cache
+            .iter()
+            .max_by(|a, b| {
+                a.1.partial_cmp(b.1)
+                    .unwrap()
+                    .then_with(|| b.0.cmp(a.0))
+            })
+            .map(|(&id, &v)| (Point::from_id(id), v))
+    }
+}
+
+/// Run one candidate-selection round: pick the untested point maximizing α,
+/// spending at most `budget` unique α evaluations (plus the heuristic's own
+/// cheap work). Returns the chosen point and the number of α evaluations.
+pub fn select_next(
+    kind: FilterKind,
+    models: &Models,
+    constraints: &[Constraint],
+    untested: &[Point],
+    budget: usize,
+    alpha: &mut AlphaCache<'_>,
+    rng: &mut Rng,
+) -> (Point, usize) {
+    assert!(!untested.is_empty(), "nothing left to test");
+    let budget = budget.clamp(1, untested.len());
+    match kind {
+        FilterKind::NoFilter => {
+            for p in untested {
+                alpha.eval(p);
+            }
+        }
+        FilterKind::Cea => {
+            let scores = cea_scores(models, constraints, untested);
+            let mut order: Vec<usize> = (0..untested.len()).collect();
+            order.sort_by(|&a, &b| {
+                scores[b].partial_cmp(&scores[a]).unwrap()
+            });
+            for &i in order.iter().take(budget) {
+                alpha.eval(&untested[i]);
+            }
+        }
+        FilterKind::RandomFilter => {
+            let idx = rng.sample_indices(untested.len(), budget);
+            for i in idx {
+                alpha.eval(&untested[i]);
+            }
+        }
+        FilterKind::Direct => {
+            DirectSearch::new().run(untested, budget, alpha);
+        }
+        FilterKind::Cmaes => {
+            CmaesSearch::new(rng.fork(0xC3A)).run(untested, budget, alpha);
+        }
+    }
+    let (p, _) = alpha.best().expect("at least one alpha evaluation");
+    (p, alpha.unique_evals())
+}
+
+/// Snap a continuous feature vector to the nearest *untested* grid point.
+pub(crate) fn nearest_untested(feat: &[f64], untested: &[Point]) -> Point {
+    let mut best = untested[0];
+    let mut best_d = f64::INFINITY;
+    for p in untested {
+        let e = encode(p);
+        let mut d = 0.0;
+        for (a, b) in e.iter().zip(feat) {
+            d += (a - b) * (a - b);
+        }
+        if d < best_d {
+            best_d = d;
+            best = *p;
+        }
+    }
+    best
+}
+
+pub(crate) use crate::space::D_IN;
+
+/// Helper for tests: index of max CEA score.
+pub fn argmax_cea(
+    models: &Models,
+    constraints: &[Constraint],
+    untested: &[Point],
+) -> Option<usize> {
+    argmax(&cea_scores(models, constraints, untested))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{FitOptions, ModelKind};
+    use crate::sim::{CloudSim, NetKind};
+    use crate::space::{all_points, Config};
+
+    pub(crate) fn fixture() -> (Models, Vec<Constraint>, Vec<Point>) {
+        let sim = CloudSim::new(NetKind::Mlp);
+        let mut rng = Rng::new(17);
+        let mut pts = Vec::new();
+        let mut outs = Vec::new();
+        for _ in 0..24 {
+            let p = Point {
+                config: Config::from_id(rng.below(288)),
+                s_idx: rng.below(5),
+            };
+            pts.push(p);
+            outs.push(sim.observe(&p, &mut rng));
+        }
+        let mut m = Models::new(ModelKind::Trees, 3);
+        m.fit(&pts, &outs, FitOptions::default());
+        let tested: std::collections::HashSet<usize> =
+            pts.iter().map(|p| p.id()).collect();
+        let untested: Vec<Point> =
+            all_points().filter(|p| !tested.contains(&p.id())).collect();
+        (m, vec![Constraint::cost_max(0.06)], untested)
+    }
+
+    #[test]
+    fn all_filters_respect_budget_and_return_untested() {
+        let (m, cs, untested) = fixture();
+        for kind in [
+            FilterKind::Cea,
+            FilterKind::RandomFilter,
+            FilterKind::Direct,
+            FilterKind::Cmaes,
+        ] {
+            let mut rng = Rng::new(5);
+            // cheap stand-in acquisition: predicted accuracy
+            let mut alpha =
+                AlphaCache::new(|p: &Point| m.acc.predict(&encode(p)).0);
+            let budget = 40;
+            let (chosen, evals) =
+                select_next(kind, &m, &cs, &untested, budget, &mut alpha, &mut rng);
+            assert!(evals <= budget, "{kind:?} used {evals} > {budget}");
+            assert!(
+                untested.iter().any(|p| p.id() == chosen.id()),
+                "{kind:?} returned tested point"
+            );
+        }
+    }
+
+    #[test]
+    fn no_filter_evaluates_everything() {
+        let (m, cs, untested) = fixture();
+        let small: Vec<Point> = untested.into_iter().take(50).collect();
+        let mut rng = Rng::new(6);
+        let mut alpha = AlphaCache::new(|p: &Point| encode(p)[0]);
+        let (_, evals) = select_next(
+            FilterKind::NoFilter,
+            &m,
+            &cs,
+            &small,
+            usize::MAX.min(small.len()),
+            &mut alpha,
+            &mut rng,
+        );
+        assert_eq!(evals, 50);
+    }
+
+    #[test]
+    fn alpha_cache_deduplicates() {
+        let mut calls = 0usize;
+        let mut cache = AlphaCache::new(|_: &Point| {
+            calls += 1;
+            1.0
+        });
+        let p = Point::from_id(3);
+        cache.eval(&p);
+        cache.eval(&p);
+        assert_eq!(cache.unique_evals(), 1);
+        drop(cache);
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn nearest_untested_prefers_exact_match() {
+        let untested: Vec<Point> = (0..100).map(Point::from_id).collect();
+        let target = Point::from_id(42);
+        let snapped = nearest_untested(&encode(&target), &untested);
+        assert_eq!(snapped.id(), 42);
+    }
+}

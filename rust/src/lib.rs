@@ -1,0 +1,39 @@
+//! # TrimTuner — constrained Bayesian optimization of ML jobs in the cloud via sub-sampling
+//!
+//! Reproduction of *TrimTuner: Efficient Optimization of Machine Learning Jobs
+//! in the Cloud via Sub-Sampling* (Mendes, Casimiro, Romano, Garlan — 2020).
+//!
+//! TrimTuner jointly optimizes the cloud configuration (VM type, #VMs) and the
+//! training hyper-parameters (learning rate, batch size, sync/async) of an ML
+//! training job so as to maximize final model accuracy subject to user QoS
+//! constraints (e.g. max training cost), while probing candidate
+//! configurations on *sub-sampled* data-sets to keep each probe cheap.
+//!
+//! ## Layering
+//!
+//! - Layer 3 (this crate): the optimizer — surrogate models, acquisition
+//!   functions, the CEA filtering heuristic, the Algorithm-1 engine, a
+//!   threaded job coordinator, the cloud simulator used as evaluation
+//!   substrate, and the experiment harness reproducing every table/figure of
+//!   the paper's evaluation.
+//! - Layer 2 (build-time JAX, `python/compile/model.py`): GP posterior and
+//!   MLP train/eval graphs, AOT-lowered to HLO text artifacts.
+//! - Layer 1 (build-time Pallas, `python/compile/kernels/`): the fused
+//!   Matérn-5/2 × sub-sampling covariance-matrix kernel.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT (`xla` crate)
+//! so that Python is never on the optimization path.
+
+pub mod cli;
+pub mod util;
+pub mod linalg;
+pub mod opt;
+pub mod space;
+pub mod sim;
+pub mod models;
+pub mod acq;
+pub mod heuristics;
+pub mod engine;
+pub mod coordinator;
+pub mod runtime;
+pub mod experiments;

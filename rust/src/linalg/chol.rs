@@ -1,0 +1,213 @@
+//! Cholesky factorization with O(n²) incremental extension.
+
+use super::Mat;
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor `L` with `K = L Lᵀ`.
+#[derive(Debug, Clone)]
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    /// Factorize a symmetric positive-definite matrix. Retries with growing
+    /// jitter on the diagonal (1e-10 … 1e-4) before giving up — standard GP
+    /// practice for near-singular covariance matrices.
+    pub fn factor(k: &Mat) -> Result<Cholesky> {
+        assert_eq!(k.rows, k.cols);
+        let mut jitter = 0.0;
+        for attempt in 0..8 {
+            match Self::try_factor(k, jitter) {
+                Ok(c) => return Ok(c),
+                Err(_) => {
+                    jitter = if attempt == 0 { 1e-10 } else { jitter * 10.0 };
+                }
+            }
+        }
+        bail!("matrix not positive definite even with jitter {jitter}")
+    }
+
+    fn try_factor(k: &Mat, jitter: f64) -> Result<Cholesky> {
+        let n = k.rows;
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = k[(i, j)] + if i == j { jitter } else { 0.0 };
+                for p in 0..j {
+                    sum -= l[(i, p)] * l[(j, p)];
+                }
+                if i == j {
+                    if sum <= 0.0 || !sum.is_finite() {
+                        bail!("not PD at pivot {i}: {sum}");
+                    }
+                    l[(i, i)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    pub fn n(&self) -> usize {
+        self.l.rows
+    }
+
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Solve `L x = b` (forward substitution).
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        let mut x = b.to_vec();
+        for i in 0..n {
+            let row = self.l.row(i);
+            let mut s = x[i];
+            for j in 0..i {
+                s -= row[j] * x[j];
+            }
+            x[i] = s / row[i];
+        }
+        x
+    }
+
+    /// Solve `Lᵀ x = b` (back substitution).
+    pub fn solve_lower_t(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        let mut x = b.to_vec();
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for j in i + 1..n {
+                s -= self.l[(j, i)] * x[j];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Solve `K x = b` via the factor.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.solve_lower_t(&self.solve_lower(b))
+    }
+
+    /// log det K = 2 Σ log L_ii.
+    pub fn log_det(&self) -> f64 {
+        (0..self.n()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    /// Extend the factor with one extra row/column of K in O(n²):
+    /// given K' = [[K, k12], [k12ᵀ, k22]], the new factor row is
+    /// l12 = L⁻¹ k12 and l22 = sqrt(k22 − l12ᵀ l12).
+    ///
+    /// This is what makes TrimTuner's per-candidate "simulate the refit"
+    /// step cheap (DESIGN.md §8).
+    pub fn extend(&self, k12: &[f64], k22: f64) -> Result<Cholesky> {
+        let n = self.n();
+        assert_eq!(k12.len(), n);
+        let l12 = self.solve_lower(k12);
+        let rem = k22 - l12.iter().map(|v| v * v).sum::<f64>();
+        // Guard: padding/jitter keeps this positive in practice.
+        let l22 = if rem > 1e-12 { rem.sqrt() } else { 1e-6 };
+        let mut l = Mat::zeros(n + 1, n + 1);
+        for i in 0..n {
+            let (src, dst) = (self.l.row(i), l.row_mut(i));
+            dst[..=i].copy_from_slice(&src[..=i]);
+        }
+        let last = l.row_mut(n);
+        last[..n].copy_from_slice(&l12);
+        last[n] = l22;
+        Ok(Cholesky { l })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::Rng;
+
+    fn random_spd(rng: &mut Rng, n: usize) -> Mat {
+        // A Aᵀ + n·I is SPD.
+        let a = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut k = a.matmul(&a.transpose());
+        for i in 0..n {
+            k[(i, i)] += n as f64;
+        }
+        k
+    }
+
+    #[test]
+    fn factor_reconstructs_k() {
+        check("LLt == K", 32, |rng| {
+            let n = 2 + rng.below(12);
+            let k = random_spd(rng, n);
+            let c = Cholesky::factor(&k).map_err(|e| e.to_string())?;
+            let rec = c.l().matmul(&c.l().transpose());
+            let err = rec.max_abs_diff(&k);
+            if err < 1e-8 {
+                Ok(())
+            } else {
+                Err(format!("reconstruction error {err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        check("K x = b solve", 32, |rng| {
+            let n = 2 + rng.below(10);
+            let k = random_spd(rng, n);
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let c = Cholesky::factor(&k).map_err(|e| e.to_string())?;
+            let x = c.solve(&b);
+            let kb = k.matvec(&x);
+            let err = kb
+                .iter()
+                .zip(&b)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            if err < 1e-7 {
+                Ok(())
+            } else {
+                Err(format!("residual {err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn extend_matches_full_refactor() {
+        check("incremental extend", 32, |rng| {
+            let n = 2 + rng.below(10);
+            let k_full = random_spd(rng, n + 1);
+            let k_sub = Mat::from_fn(n, n, |i, j| k_full[(i, j)]);
+            let c_sub = Cholesky::factor(&k_sub).map_err(|e| e.to_string())?;
+            let k12: Vec<f64> = (0..n).map(|i| k_full[(i, n)]).collect();
+            let ext = c_sub
+                .extend(&k12, k_full[(n, n)])
+                .map_err(|e| e.to_string())?;
+            let full = Cholesky::factor(&k_full).map_err(|e| e.to_string())?;
+            let err = ext.l().max_abs_diff(full.l());
+            if err < 1e-7 {
+                Ok(())
+            } else {
+                Err(format!("factor mismatch {err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn log_det_matches_2x2() {
+        let k = Mat::from_rows(&[vec![4.0, 1.0], vec![1.0, 3.0]]);
+        let c = Cholesky::factor(&k).unwrap();
+        assert!((c.log_det() - (11.0f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_pd_rejected() {
+        let k = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eig -1
+        assert!(Cholesky::try_factor(&k, 0.0).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Dense linear algebra substrate: column-ordered matrices, Cholesky
+//! factorization with incremental extension, and triangular solves.
+//!
+//! This is all the linear algebra the GP surrogate needs. The hot path of
+//! TrimTuner's acquisition function simulates *adding one observation and
+//! refitting* for every filtered candidate; [`Cholesky::extend`] makes that
+//! an O(n²) update instead of an O(n³) refactorization (see DESIGN.md §8).
+
+mod chol;
+mod mat;
+
+pub use chol::Cholesky;
+pub use mat::Mat;

@@ -1,0 +1,123 @@
+//! TrimTuner CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   optimize           run one optimizer on one network and print the trace
+//!   generate-datasets  materialize the 3 measurement campaigns as CSV
+//!   repro <exp>        regenerate a paper table/figure (table1..4, fig1..4, all)
+//!   runtime-check      load the AOT artifacts via PJRT and verify numerics
+//!   serve              run the threaded coordinator on the simulated cloud
+
+use anyhow::{bail, Result};
+use trimtuner::cli::Args;
+use trimtuner::engine::{self, EngineConfig, OptimizerKind};
+use trimtuner::experiments;
+use trimtuner::heuristics::FilterKind;
+use trimtuner::sim::{Dataset, NetKind};
+use trimtuner::space::Constraint;
+
+const USAGE: &str = "\
+trimtuner — TrimTuner (Mendes et al. 2020) reproduction
+
+USAGE:
+  trimtuner optimize [--net rnn|mlp|cnn] [--optimizer trimtuner-dt|trimtuner-gp|eic|eic-usd|fabolas|random]
+                     [--beta 0.1] [--filter cea|random|nofilter|direct|cmaes]
+                     [--iters 44] [--seed 0] [--cost-cap <usd>]
+  trimtuner generate-datasets [--out data] [--seed 42]
+  trimtuner repro <table1|table2|table3|table4|fig1|fig2|fig3|fig4|all>
+                  [--out results] [--seeds 5] [--full] [--iters 44]
+  trimtuner runtime-check [--artifacts artifacts]
+  trimtuner serve [--net mlp] [--jobs 16] [--workers 4]
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("optimize") => cmd_optimize(&args),
+        Some("generate-datasets") => cmd_generate(&args),
+        Some("repro") => experiments::cmd_repro(&args),
+        Some("runtime-check") => trimtuner::runtime::cmd_runtime_check(&args),
+        Some("serve") => trimtuner::coordinator::cmd_serve(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let net = NetKind::from_name(&args.get_or("net", "rnn"))
+        .ok_or_else(|| anyhow::anyhow!("unknown net"))?;
+    let Some(optimizer) =
+        OptimizerKind::from_name(&args.get_or("optimizer", "trimtuner-dt"))
+    else {
+        bail!("unknown optimizer");
+    };
+    let seed = args.get_u64("seed", 0);
+    let mut cfg = EngineConfig::paper_default(optimizer, seed);
+    cfg.beta = args.get_f64("beta", cfg.beta);
+    cfg.max_iters = args.get_usize("iters", cfg.max_iters);
+    if let Some(f) = args.get("filter") {
+        cfg.filter = FilterKind::from_name(f)
+            .ok_or_else(|| anyhow::anyhow!("unknown filter"))?;
+    }
+    let cap = args.get_f64("cost-cap", net.paper_cost_cap());
+    let constraints = vec![Constraint::cost_max(cap)];
+
+    eprintln!(
+        "optimize: net={} optimizer={} filter={} beta={} iters={} cap=${cap}",
+        net.name(),
+        optimizer.name(),
+        cfg.filter.name(),
+        cfg.beta,
+        cfg.max_iters
+    );
+    let dataset = Dataset::generate(net, args.get_u64("dataset-seed", 42));
+    let run = engine::run(&dataset, &constraints, &cfg);
+
+    println!(
+        "{:>4} {:>5} {:>30} {:>8} {:>9} {:>9} {:>8} {:>9} {:>6}",
+        "iter", "phase", "tested", "acc", "cost$", "cum$", "accC", "rec_ms", "evals"
+    );
+    for r in &run.records {
+        println!(
+            "{:>4} {:>5} {:>30} {:>8.4} {:>9.5} {:>9.4} {:>8.4} {:>9.1} {:>6}",
+            r.iter,
+            if r.is_init { "init" } else { "opt" },
+            format!("{} s={:.3}", r.tested.config.describe(), r.tested.s()),
+            r.outcome.acc,
+            r.explore_cost,
+            r.cum_cost,
+            r.accuracy_c,
+            r.rec_wall_s * 1e3,
+            r.n_alpha_evals,
+        );
+    }
+    println!(
+        "optimum_acc={:.4} final_accuracy_c={:.4} total_cost=${:.4} mean_rec={:.1}ms",
+        run.optimum_acc,
+        run.final_accuracy_c(),
+        run.total_cost(),
+        run.mean_rec_wall_s() * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "data");
+    let seed = args.get_u64("seed", 42);
+    std::fs::create_dir_all(&out)?;
+    for net in NetKind::ALL {
+        let d = Dataset::generate(net, seed);
+        let path = format!("{out}/{}.csv", net.name());
+        d.save_csv(&path)?;
+        let stats =
+            d.feasibility_stats(&[Constraint::cost_max(net.paper_cost_cap())]);
+        println!(
+            "{path}: {} points, feasible {:.1}%, near-optimal {:.1}%",
+            d.len(),
+            stats.feasible_pct,
+            stats.near_optimal_pct
+        );
+    }
+    Ok(())
+}

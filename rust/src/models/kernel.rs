@@ -1,0 +1,237 @@
+//! The Matérn-5/2 × FABOLAS sub-sampling covariance kernel (native f64).
+//!
+//! This mirrors, formula for formula, the Layer-1 Pallas kernel
+//! (`python/compile/kernels/matern_fabolas.py`) and its jnp oracle; parity
+//! is asserted against the AOT artifacts in `rust/tests/xla_parity.rs`.
+
+use super::surrogate::Feat;
+use crate::linalg::Mat;
+use crate::space::D_FEAT;
+
+/// Which sub-sampling basis the kernel uses (paper §III-A):
+/// accuracy grows as s→1 (phi = (1, 1-s)); cost grows with s (phi = (1, s)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Basis {
+    Acc,
+    Cost,
+}
+
+impl Basis {
+    #[inline]
+    pub fn g(&self, s: f64) -> f64 {
+        match self {
+            Basis::Acc => 1.0 - s,
+            Basis::Cost => s,
+        }
+    }
+}
+
+/// Kernel hyper-parameters. Layout matches the Python N_HYP vector:
+/// [ls_0..ls_5, sigma2, l00, l10, l11] (+ observation noise kept here too,
+/// which the XLA artifacts receive separately as the per-point noise input).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelParams {
+    pub ls: [f64; D_FEAT],
+    pub sigma2: f64,
+    pub l00: f64,
+    pub l10: f64,
+    pub l11: f64,
+    /// observation noise variance
+    pub noise: f64,
+}
+
+impl Default for KernelParams {
+    fn default() -> Self {
+        KernelParams {
+            ls: [0.5; D_FEAT],
+            sigma2: 1.0,
+            l00: 1.0,
+            l10: 0.5,
+            l11: 0.5,
+            noise: 1e-3,
+        }
+    }
+}
+
+impl KernelParams {
+    /// Pack as the f32 hyper vector consumed by the AOT artifacts.
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        let mut v: Vec<f32> = self.ls.iter().map(|&x| x as f32).collect();
+        v.push(self.sigma2 as f32);
+        v.push(self.l00 as f32);
+        v.push(self.l10 as f32);
+        v.push(self.l11 as f32);
+        v
+    }
+
+    /// Serialize to the log-space vector the hyper-optimizer searches over
+    /// (noise included, 11 dims).
+    pub fn to_log_vec(&self) -> Vec<f64> {
+        let mut v: Vec<f64> = self.ls.iter().map(|x| x.ln()).collect();
+        v.push(self.sigma2.ln());
+        v.push(self.l00.ln());
+        v.push(self.l10.ln());
+        v.push(self.l11.ln());
+        v.push(self.noise.ln());
+        v
+    }
+
+    pub fn from_log_vec(v: &[f64]) -> KernelParams {
+        assert_eq!(v.len(), D_FEAT + 5);
+        let clamp = |x: f64, lo: f64, hi: f64| x.exp().clamp(lo, hi);
+        let mut ls = [0.0; D_FEAT];
+        for (i, l) in ls.iter_mut().enumerate() {
+            *l = clamp(v[i], 0.03, 20.0);
+        }
+        KernelParams {
+            ls,
+            sigma2: clamp(v[D_FEAT], 1e-4, 50.0),
+            l00: clamp(v[D_FEAT + 1], 1e-3, 10.0),
+            l10: clamp(v[D_FEAT + 2], 1e-3, 10.0),
+            l11: clamp(v[D_FEAT + 3], 1e-3, 10.0),
+            noise: clamp(v[D_FEAT + 4], 1e-8, 1.0),
+        }
+    }
+
+    /// Basis factor phi(s1)^T Theta phi(s2) with Theta = L L^T.
+    #[inline]
+    pub fn basis_factor(&self, basis: Basis, s1: f64, s2: f64) -> f64 {
+        let (g1, g2) = (basis.g(s1), basis.g(s2));
+        let t00 = self.l00 * self.l00;
+        let t01 = self.l00 * self.l10;
+        let t11 = self.l10 * self.l10 + self.l11 * self.l11;
+        t00 + t01 * (g1 + g2) + t11 * g1 * g2
+    }
+
+    /// Full kernel value k((x1,s1),(x2,s2)).
+    pub fn k(&self, basis: Basis, a: &Feat, b: &Feat) -> f64 {
+        let mut r2 = 0.0;
+        for d in 0..D_FEAT {
+            let diff = (a[d] - b[d]) / self.ls[d];
+            r2 += diff * diff;
+        }
+        let r = r2.sqrt();
+        let sqrt5 = 5f64.sqrt();
+        let matern = (1.0 + sqrt5 * r + (5.0 / 3.0) * r2) * (-sqrt5 * r).exp();
+        self.sigma2 * matern * self.basis_factor(basis, a[D_FEAT], b[D_FEAT])
+    }
+
+    /// k((x,s),(x,s)) — Matérn at r=0 is 1.
+    #[inline]
+    pub fn k_diag(&self, basis: Basis, a: &Feat) -> f64 {
+        self.sigma2 * self.basis_factor(basis, a[D_FEAT], a[D_FEAT])
+    }
+
+    /// Training covariance matrix K(X, X) + noise I.
+    pub fn cov_matrix(&self, basis: Basis, xs: &[Feat]) -> Mat {
+        let n = xs.len();
+        let mut k = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = self.k(basis, &xs[i], &xs[j]);
+                k[(i, j)] = v;
+                k[(j, i)] = v;
+            }
+            k[(i, i)] += self.noise;
+        }
+        k
+    }
+
+    /// Cross-covariance vector k(X, x).
+    pub fn cov_vec(&self, basis: Basis, xs: &[Feat], x: &Feat) -> Vec<f64> {
+        xs.iter().map(|xi| self.k(basis, xi, x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn rand_feat(rng: &mut crate::util::Rng) -> Feat {
+        let mut f = [0.0; crate::space::D_IN];
+        for v in f.iter_mut() {
+            *v = rng.f64();
+        }
+        f
+    }
+
+    fn rand_params(rng: &mut crate::util::Rng) -> KernelParams {
+        let mut ls = [0.0; D_FEAT];
+        for l in ls.iter_mut() {
+            *l = rng.uniform(0.1, 2.0);
+        }
+        KernelParams {
+            ls,
+            sigma2: rng.uniform(0.1, 3.0),
+            l00: rng.uniform(0.05, 1.5),
+            l10: rng.uniform(0.05, 1.5),
+            l11: rng.uniform(0.05, 1.5),
+            noise: 1e-4,
+        }
+    }
+
+    #[test]
+    fn kernel_symmetric_and_bounded_by_diag() {
+        check("k symmetry + CS inequality", 48, |rng| {
+            let p = rand_params(rng);
+            let basis = if rng.f64() < 0.5 { Basis::Acc } else { Basis::Cost };
+            let (a, b) = (rand_feat(rng), rand_feat(rng));
+            let kab = p.k(basis, &a, &b);
+            let kba = p.k(basis, &b, &a);
+            if (kab - kba).abs() > 1e-12 {
+                return Err(format!("asymmetric {kab} {kba}"));
+            }
+            // Cauchy–Schwarz for PSD kernels
+            let bound = (p.k_diag(basis, &a) * p.k_diag(basis, &b)).sqrt();
+            if kab.abs() > bound + 1e-9 {
+                return Err(format!("|k|={kab} > sqrt(kaa kbb)={bound}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cov_matrix_is_pd() {
+        check("cov PD via cholesky", 24, |rng| {
+            let p = rand_params(rng);
+            let xs: Vec<Feat> = (0..12).map(|_| rand_feat(rng)).collect();
+            let k = p.cov_matrix(Basis::Acc, &xs);
+            crate::linalg::Cholesky::factor(&k)
+                .map(|_| ())
+                .map_err(|e| e.to_string())
+        });
+    }
+
+    #[test]
+    fn log_vec_round_trips() {
+        let mut rng = crate::util::Rng::new(5);
+        let p = rand_params(&mut rng);
+        let q = KernelParams::from_log_vec(&p.to_log_vec());
+        assert!((p.sigma2 - q.sigma2).abs() < 1e-9);
+        assert!((p.l10 - q.l10).abs() < 1e-9);
+        for d in 0..D_FEAT {
+            assert!((p.ls[d] - q.ls[d]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn acc_basis_vanishing_data_term_at_full() {
+        // At s=1 the accuracy basis reduces to Theta00 = l00² for all pairs.
+        let p = KernelParams::default();
+        assert!((p.basis_factor(Basis::Acc, 1.0, 1.0) - p.l00 * p.l00).abs() < 1e-12);
+        // and the cost basis grows with s
+        assert!(
+            p.basis_factor(Basis::Cost, 1.0, 1.0)
+                > p.basis_factor(Basis::Cost, 0.1, 0.1)
+        );
+    }
+
+    #[test]
+    fn matches_python_constants() {
+        // Same layout as python N_HYP vector
+        let p = KernelParams::default();
+        let v = p.to_f32_vec();
+        assert_eq!(v.len(), D_FEAT + 4);
+    }
+}

@@ -1,0 +1,13 @@
+//! Surrogate models (paper §III-A): Gaussian Processes with the
+//! Matérn-5/2 × FABOLAS sub-sampling kernel, and ensembles of extremely
+//! randomized decision trees as the lightweight alternative.
+
+mod gp;
+mod kernel;
+mod surrogate;
+mod trees;
+
+pub use gp::{Gp, GpHyp};
+pub use kernel::{Basis, KernelParams};
+pub use surrogate::{Feat, FitOptions, ModelKind, Posterior, Surrogate};
+pub use trees::{ExtraTrees, TreesOptions};

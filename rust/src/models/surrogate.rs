@@ -1,0 +1,225 @@
+//! The surrogate-model abstraction shared by GP and decision-tree variants.
+
+use crate::linalg::{Cholesky, Mat};
+use crate::space::D_IN;
+use crate::util::Rng;
+
+/// A feature vector (6 normalized config features + sub-sampling rate).
+pub type Feat = [f64; D_IN];
+
+/// Which surrogate family an optimizer uses (paper: "TrimTuner (GPs)" vs
+/// "TrimTuner (DTs)").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    Gp,
+    Trees,
+}
+
+impl ModelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Gp => "gp",
+            ModelKind::Trees => "dt",
+        }
+    }
+}
+
+/// Options controlling a (re)fit.
+#[derive(Debug, Clone, Copy)]
+pub struct FitOptions {
+    /// re-optimize hyper-parameters (GP: MLL Nelder–Mead; trees: n/a)
+    pub hyperopt: bool,
+    /// random restarts for the hyper-parameter search
+    pub restarts: usize,
+}
+
+impl Default for FitOptions {
+    fn default() -> Self {
+        FitOptions { hyperopt: true, restarts: 1 }
+    }
+}
+
+/// One mixture component of a joint posterior.
+pub struct PostComp {
+    pub mean: Vec<f64>,
+    cov_l: Option<Cholesky>,
+    diag_std: Option<Vec<f64>>,
+}
+
+/// Joint posterior over a set of points, used for Entropy-Search p_opt
+/// Monte-Carlo. GPs carry the full covariance Cholesky factor; tree
+/// ensembles an independent per-point std (their ensemble spread carries no
+/// cross-covariance information). Hyper-parameter-marginalized GPs
+/// (FABOLAS-style) carry one component per hyper-parameter sample;
+/// successive draws rotate across components (a draw from the mixture).
+pub struct Posterior {
+    comps: Vec<PostComp>,
+    /// round-robin component cursor for mixture sampling
+    cursor: std::cell::Cell<usize>,
+    /// mixture mean (averaged across components)
+    pub mean: Vec<f64>,
+}
+
+impl Posterior {
+    fn from_comps(comps: Vec<PostComp>) -> Posterior {
+        assert!(!comps.is_empty());
+        let n = comps[0].mean.len();
+        let mut mean = vec![0.0; n];
+        for c in &comps {
+            for (m, v) in mean.iter_mut().zip(&c.mean) {
+                *m += v / comps.len() as f64;
+            }
+        }
+        Posterior { comps, cursor: std::cell::Cell::new(0), mean }
+    }
+
+    pub fn joint(mean: Vec<f64>, cov_l: Cholesky) -> Posterior {
+        Posterior::from_comps(vec![PostComp {
+            mean,
+            cov_l: Some(cov_l),
+            diag_std: None,
+        }])
+    }
+
+    pub fn diagonal(mean: Vec<f64>, std: Vec<f64>) -> Posterior {
+        Posterior::from_comps(vec![PostComp {
+            mean,
+            cov_l: None,
+            diag_std: Some(std),
+        }])
+    }
+
+    pub fn mixture(comps: Vec<(Vec<f64>, Option<Cholesky>, Option<Vec<f64>>)>) -> Posterior {
+        Posterior::from_comps(
+            comps
+                .into_iter()
+                .map(|(mean, cov_l, diag_std)| PostComp { mean, cov_l, diag_std })
+                .collect(),
+        )
+    }
+
+    pub fn n_components(&self) -> usize {
+        self.comps.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.mean.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mean.is_empty()
+    }
+
+    /// Draw one sample of the joint function values given pre-drawn
+    /// standard normals `z` (common random numbers let the acquisition
+    /// function compare candidates without MC jitter; DESIGN.md §6).
+    /// Successive calls rotate round-robin over mixture components.
+    pub fn sample_with(&self, z: &[f64], out: &mut Vec<f64>) {
+        let k = self.cursor.get();
+        self.cursor.set((k + 1) % self.comps.len());
+        self.sample_component_with(k, z, out);
+    }
+
+    /// Sample a specific mixture component.
+    pub fn sample_component_with(&self, k: usize, z: &[f64], out: &mut Vec<f64>) {
+        let comp = &self.comps[k % self.comps.len()];
+        let n = comp.mean.len();
+        assert_eq!(z.len(), n);
+        out.clear();
+        if let Some(l) = &comp.cov_l {
+            // f = mean + L z
+            let lm: &Mat = l.l();
+            for i in 0..n {
+                let row = lm.row(i);
+                let mut acc = comp.mean[i];
+                for j in 0..=i {
+                    acc += row[j] * z[j];
+                }
+                out.push(acc);
+            }
+        } else {
+            let std = comp.diag_std.as_ref().expect("posterior without cov");
+            for i in 0..n {
+                out.push(comp.mean[i] + std[i] * z[i]);
+            }
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> Vec<f64> {
+        let z: Vec<f64> = (0..self.len()).map(|_| rng.normal()).collect();
+        let mut out = Vec::with_capacity(self.len());
+        self.sample_with(&z, &mut out);
+        out
+    }
+}
+
+/// A Bayesian surrogate over the (config, s) feature space.
+///
+/// The acquisition hot path relies on [`Surrogate::condition`]: a cheap
+/// clone extended with one hypothetical observation while hyper-parameters
+/// stay frozen (GP: O(n²) Cholesky extension; trees: rebuild on n+1 points).
+pub trait Surrogate: Send {
+    /// Fit from scratch on (xs, ys).
+    fn fit(&mut self, xs: &[Feat], ys: &[f64], opts: FitOptions);
+
+    /// Predictive mean and standard deviation at one point.
+    fn predict(&self, x: &Feat) -> (f64, f64);
+
+    /// Batch prediction (may be overridden with a faster path).
+    fn predict_many(&self, xs: &[Feat]) -> Vec<(f64, f64)> {
+        xs.iter().map(|x| self.predict(x)).collect()
+    }
+
+    /// Joint posterior over `xs` (for p_opt sampling).
+    fn posterior(&self, xs: &[Feat]) -> Posterior;
+
+    /// Clone extended with one observation, hyper-parameters frozen.
+    fn condition(&self, x: &Feat, y: f64) -> Box<dyn Surrogate>;
+
+    /// Number of observations currently fitted.
+    fn n_obs(&self) -> usize;
+
+    fn clone_box(&self) -> Box<dyn Surrogate>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn diagonal_posterior_sampling_moments() {
+        let p = Posterior::diagonal(vec![1.0, -2.0], vec![0.5, 2.0]);
+        let mut rng = Rng::new(3);
+        let n = 20_000;
+        let (mut m0, mut m1, mut v0, mut v1) = (0.0, 0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let s = p.sample(&mut rng);
+            m0 += s[0];
+            m1 += s[1];
+            v0 += (s[0] - 1.0) * (s[0] - 1.0);
+            v1 += (s[1] + 2.0) * (s[1] + 2.0);
+        }
+        let n = n as f64;
+        assert!((m0 / n - 1.0).abs() < 0.02);
+        assert!((m1 / n + 2.0).abs() < 0.05);
+        assert!((v0 / n - 0.25).abs() < 0.02);
+        assert!((v1 / n - 4.0).abs() < 0.15);
+    }
+
+    #[test]
+    fn joint_posterior_respects_covariance() {
+        // cov = [[1, 0.9], [0.9, 1]] -> samples strongly correlated
+        let k = Mat::from_rows(&[vec![1.0, 0.9], vec![0.9, 1.0]]);
+        let l = crate::linalg::Cholesky::factor(&k).unwrap();
+        let p = Posterior::joint(vec![0.0, 0.0], l);
+        let mut rng = Rng::new(4);
+        let mut corr = 0.0;
+        let n = 20_000;
+        for _ in 0..n {
+            let s = p.sample(&mut rng);
+            corr += s[0] * s[1];
+        }
+        assert!((corr / n as f64 - 0.9).abs() < 0.05);
+    }
+}

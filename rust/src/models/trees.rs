@@ -1,0 +1,399 @@
+//! Ensemble of extremely randomized trees (Extra-Trees, Geurts et al. 2006)
+//! — the paper's lightweight alternative to GPs (§III-A).
+//!
+//! Diversity comes from (i) bootstrap resampling of the training set per
+//! tree (Breiman bagging, as the paper describes) and (ii) the Extra-Trees
+//! split rule: at each node, draw one *uniformly random* cut-point per
+//! candidate feature and keep the best by variance reduction. The ensemble's
+//! per-point mean/std define a Gaussian predictive distribution.
+
+use super::surrogate::{Feat, FitOptions, Posterior, Surrogate};
+use crate::space::D_IN;
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct TreesOptions {
+    pub n_trees: usize,
+    /// features tried per split (<= D_IN)
+    pub k_features: usize,
+    pub min_samples_split: usize,
+    pub bootstrap: bool,
+}
+
+impl Default for TreesOptions {
+    fn default() -> Self {
+        TreesOptions {
+            n_trees: 30,
+            k_features: D_IN,
+            min_samples_split: 2,
+            bootstrap: true,
+        }
+    }
+}
+
+/// Flat-array binary regression tree.
+#[derive(Debug, Clone)]
+struct Tree {
+    /// (feature, threshold, left, right) per internal node; leaf when
+    /// feature == usize::MAX, then threshold stores the leaf mean.
+    nodes: Vec<(usize, f64, u32, u32)>,
+}
+
+const LEAF: usize = usize::MAX;
+
+impl Tree {
+    fn build(
+        xs: &[Feat],
+        ys: &[f64],
+        idx: &mut Vec<usize>,
+        opts: &TreesOptions,
+        rng: &mut Rng,
+    ) -> Tree {
+        let mut nodes = Vec::with_capacity(idx.len() * 2);
+        let len = idx.len();
+        let mut t = Tree { nodes };
+        t.build_node(xs, ys, idx, 0, len, opts, rng);
+        nodes = std::mem::take(&mut t.nodes);
+        Tree { nodes }
+    }
+
+    /// Recursively build over idx[lo..hi]; returns node index.
+    fn build_node(
+        &mut self,
+        xs: &[Feat],
+        ys: &[f64],
+        idx: &mut Vec<usize>,
+        lo: usize,
+        hi: usize,
+        opts: &TreesOptions,
+        rng: &mut Rng,
+    ) -> u32 {
+        let n = hi - lo;
+        let mean: f64 =
+            idx[lo..hi].iter().map(|&i| ys[i]).sum::<f64>() / n as f64;
+        // leaf conditions: small node or zero variance
+        let var: f64 = idx[lo..hi]
+            .iter()
+            .map(|&i| (ys[i] - mean) * (ys[i] - mean))
+            .sum::<f64>();
+        if n < opts.min_samples_split || var < 1e-18 {
+            let id = self.nodes.len() as u32;
+            self.nodes.push((LEAF, mean, 0, 0));
+            return id;
+        }
+
+        // Extra-Trees split: k random features, one random threshold each.
+        // Perf (EXPERIMENTS.md §Perf): feature ranges for all dimensions in
+        // one fused pass; avoid the per-node index-sampling allocation when
+        // every feature is a candidate (the default).
+        let mut best: Option<(usize, f64, f64)> = None; // (feat, thr, score)
+        let mut fmin = [f64::INFINITY; D_IN];
+        let mut fmax = [f64::NEG_INFINITY; D_IN];
+        for &i in &idx[lo..hi] {
+            let row = &xs[i];
+            for f in 0..D_IN {
+                let v = row[f];
+                if v < fmin[f] {
+                    fmin[f] = v;
+                }
+                if v > fmax[f] {
+                    fmax[f] = v;
+                }
+            }
+        }
+        let k = opts.k_features.min(D_IN);
+        let all_feats = k == D_IN;
+        let sampled;
+        let feats: &[usize] = if all_feats {
+            const ALL: [usize; D_IN] = {
+                let mut a = [0usize; D_IN];
+                let mut i = 0;
+                while i < D_IN {
+                    a[i] = i;
+                    i += 1;
+                }
+                a
+            };
+            &ALL
+        } else {
+            sampled = rng.sample_indices(D_IN, k);
+            &sampled
+        };
+        for &f in feats {
+            if fmax[f] - fmin[f] < 1e-12 {
+                continue;
+            }
+            let thr = rng.uniform(fmin[f], fmax[f]);
+            // variance reduction score
+            let (mut nl, mut sl, mut ssl) = (0.0, 0.0, 0.0);
+            let (mut nr, mut sr, mut ssr) = (0.0, 0.0, 0.0);
+            for &i in &idx[lo..hi] {
+                let y = ys[i];
+                if xs[i][f] <= thr {
+                    nl += 1.0;
+                    sl += y;
+                    ssl += y * y;
+                } else {
+                    nr += 1.0;
+                    sr += y;
+                    ssr += y * y;
+                }
+            }
+            if nl == 0.0 || nr == 0.0 {
+                continue;
+            }
+            let score = (ssl - sl * sl / nl) + (ssr - sr * sr / nr);
+            if best.map_or(true, |(_, _, b)| score < b) {
+                best = Some((f, thr, score));
+            }
+        }
+
+        let Some((f, thr, _)) = best else {
+            // all candidate features constant -> leaf
+            let id = self.nodes.len() as u32;
+            self.nodes.push((LEAF, mean, 0, 0));
+            return id;
+        };
+
+        // partition idx[lo..hi] in place
+        let mut mid = lo;
+        for i in lo..hi {
+            if xs[idx[i]][f] <= thr {
+                idx.swap(i, mid);
+                mid += 1;
+            }
+        }
+        debug_assert!(mid > lo && mid < hi);
+
+        let id = self.nodes.len() as u32;
+        self.nodes.push((f, thr, 0, 0));
+        let left = self.build_node(xs, ys, idx, lo, mid, opts, rng);
+        let right = self.build_node(xs, ys, idx, mid, hi, opts, rng);
+        self.nodes[id as usize].2 = left;
+        self.nodes[id as usize].3 = right;
+        id
+    }
+
+    #[inline]
+    fn predict(&self, x: &Feat) -> f64 {
+        let mut node = 0usize;
+        loop {
+            let (f, thr, l, r) = self.nodes[node];
+            if f == LEAF {
+                return thr;
+            }
+            node = if x[f] <= thr { l as usize } else { r as usize };
+        }
+    }
+}
+
+#[derive(Clone)]
+pub struct ExtraTrees {
+    pub opts: TreesOptions,
+    trees: Vec<Tree>,
+    xs: Vec<Feat>,
+    ys: Vec<f64>,
+    seed: u64,
+}
+
+impl ExtraTrees {
+    pub fn new(opts: TreesOptions) -> ExtraTrees {
+        ExtraTrees {
+            opts,
+            trees: Vec::new(),
+            xs: Vec::new(),
+            ys: Vec::new(),
+            seed: 0xd7_5eed,
+        }
+    }
+
+    pub fn with_seed(opts: TreesOptions, seed: u64) -> ExtraTrees {
+        ExtraTrees { seed, ..ExtraTrees::new(opts) }
+    }
+
+    fn rebuild(&mut self) {
+        let n = self.xs.len();
+        // Seed depends on data size only -> deterministic runs, fresh trees
+        // after every observation.
+        let mut rng = Rng::new(self.seed ^ ((n as u64) << 20));
+        self.trees = (0..self.opts.n_trees)
+            .map(|_| {
+                let mut idx: Vec<usize> = if self.opts.bootstrap {
+                    (0..n).map(|_| rng.below(n)).collect()
+                } else {
+                    (0..n).collect()
+                };
+                Tree::build(&self.xs, &self.ys, &mut idx, &self.opts, &mut rng)
+            })
+            .collect();
+    }
+}
+
+impl Surrogate for ExtraTrees {
+    fn fit(&mut self, xs: &[Feat], ys: &[f64], _opts: FitOptions) {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        self.xs = xs.to_vec();
+        self.ys = ys.to_vec();
+        self.rebuild();
+    }
+
+    fn predict(&self, x: &Feat) -> (f64, f64) {
+        debug_assert!(!self.trees.is_empty(), "predict before fit");
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        for t in &self.trees {
+            let p = t.predict(x);
+            sum += p;
+            sumsq += p * p;
+        }
+        let n = self.trees.len() as f64;
+        let mean = sum / n;
+        let var = (sumsq / n - mean * mean).max(0.0);
+        // Floor the ensemble spread: identical leaves would otherwise
+        // claim zero uncertainty and freeze exploration.
+        (mean, var.sqrt().max(1e-4))
+    }
+
+    fn posterior(&self, xs: &[Feat]) -> Posterior {
+        let (mut mean, mut std) =
+            (Vec::with_capacity(xs.len()), Vec::with_capacity(xs.len()));
+        for x in xs {
+            let (m, s) = self.predict(x);
+            mean.push(m);
+            std.push(s);
+        }
+        Posterior::diagonal(mean, std)
+    }
+
+    fn condition(&self, x: &Feat, y: f64) -> Box<dyn Surrogate> {
+        let mut t = self.clone();
+        t.xs.push(*x);
+        t.ys.push(y);
+        t.rebuild();
+        Box::new(t)
+    }
+
+    fn n_obs(&self) -> usize {
+        self.xs.len()
+    }
+
+    fn clone_box(&self) -> Box<dyn Surrogate> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn toy(n: usize, rng: &mut Rng) -> (Vec<Feat>, Vec<f64>) {
+        let xs: Vec<Feat> = (0..n)
+            .map(|_| {
+                let mut f = [0.0; D_IN];
+                for v in f.iter_mut() {
+                    *v = rng.f64();
+                }
+                f
+            })
+            .collect();
+        let ys =
+            xs.iter().map(|x| 2.0 * x[0] - x[3] + 0.5 * x[6]).collect();
+        (xs, ys)
+    }
+
+    #[test]
+    fn fits_linear_function() {
+        let mut rng = Rng::new(1);
+        let (xs, ys) = toy(200, &mut rng);
+        let mut et = ExtraTrees::new(TreesOptions::default());
+        et.fit(&xs, &ys, FitOptions::default());
+        let mut err = 0.0;
+        for _ in 0..50 {
+            let mut f = [0.0; D_IN];
+            for v in f.iter_mut() {
+                *v = rng.f64();
+            }
+            let truth = 2.0 * f[0] - f[3] + 0.5 * f[6];
+            let (mu, _) = et.predict(&f);
+            err += (mu - truth).abs();
+        }
+        err /= 50.0;
+        assert!(err < 0.25, "mean abs err {err}");
+    }
+
+    #[test]
+    fn constant_target_zero_spread() {
+        let mut rng = Rng::new(2);
+        let (xs, _) = toy(30, &mut rng);
+        let ys = vec![1.5; 30];
+        let mut et = ExtraTrees::new(TreesOptions::default());
+        et.fit(&xs, &ys, FitOptions::default());
+        let (mu, std) = et.predict(&xs[7]);
+        assert!((mu - 1.5).abs() < 1e-9);
+        assert!(std <= 1e-4 + 1e-12); // floored
+    }
+
+    #[test]
+    fn deterministic_given_same_data() {
+        let mut rng = Rng::new(3);
+        let (xs, ys) = toy(40, &mut rng);
+        let mut a = ExtraTrees::new(TreesOptions::default());
+        let mut b = ExtraTrees::new(TreesOptions::default());
+        a.fit(&xs, &ys, FitOptions::default());
+        b.fit(&xs, &ys, FitOptions::default());
+        let (ma, sa) = a.predict(&xs[0]);
+        let (mb, sb) = b.predict(&xs[0]);
+        assert_eq!(ma, mb);
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn uncertainty_positive_off_data() {
+        check("DT spread > 0 away from data", 16, |rng| {
+            let (xs, ys) = toy(20 + rng.below(30), rng);
+            let mut et = ExtraTrees::new(TreesOptions::default());
+            et.fit(&xs, &ys, FitOptions::default());
+            let mut f = [0.0; D_IN];
+            for v in f.iter_mut() {
+                *v = rng.f64();
+            }
+            let (_, std) = et.predict(&f);
+            if std > 0.0 {
+                Ok(())
+            } else {
+                Err("zero spread".into())
+            }
+        });
+    }
+
+    #[test]
+    fn condition_incorporates_new_point() {
+        let mut rng = Rng::new(5);
+        let (xs, ys) = toy(30, &mut rng);
+        let mut et = ExtraTrees::new(TreesOptions::default());
+        et.fit(&xs, &ys, FitOptions::default());
+        // inject an outlier at a fresh location; prediction must move
+        let mut xnew = [0.9; D_IN];
+        xnew[6] = 0.5;
+        let (before, _) = et.predict(&xnew);
+        let cond = et.condition(&xnew, before + 5.0);
+        let (after, _) = cond.predict(&xnew);
+        assert!(
+            (after - before).abs() > 0.5,
+            "prediction didn't move: {before} -> {after}"
+        );
+        assert_eq!(cond.n_obs(), 31);
+    }
+
+    #[test]
+    fn single_point_dataset() {
+        let xs = vec![[0.5; D_IN]];
+        let ys = vec![2.0];
+        let mut et = ExtraTrees::new(TreesOptions::default());
+        et.fit(&xs, &ys, FitOptions::default());
+        let (mu, _) = et.predict(&[0.1; D_IN]);
+        assert!((mu - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,57 @@
+//! Latin Hypercube Sampling over the unit hypercube.
+//!
+//! Used to pick initial full-data-set configurations for the EIc / EIc/USD
+//! baselines (the paper bootstraps them with 4 LHS samples, §IV) and offered
+//! for TrimTuner's multi-config initialization (paper footnote 1).
+
+use crate::util::Rng;
+
+/// `n` points in `[0,1]^d`, one per row, stratified per dimension.
+pub fn latin_hypercube(rng: &mut Rng, n: usize, d: usize) -> Vec<Vec<f64>> {
+    let mut out = vec![vec![0.0; d]; n];
+    for dim in 0..d {
+        // Stratified samples: one uniform draw inside each of n bins...
+        let mut vals: Vec<f64> =
+            (0..n).map(|i| (i as f64 + rng.f64()) / n as f64).collect();
+        // ...assigned to points in random order.
+        rng.shuffle(&mut vals);
+        for (row, v) in out.iter_mut().zip(vals) {
+            row[dim] = v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn stratification_holds_per_dimension() {
+        check("lhs stratification", 16, |rng| {
+            let n = 2 + rng.below(20);
+            let d = 1 + rng.below(6);
+            let pts = latin_hypercube(rng, n, d);
+            for dim in 0..d {
+                let mut bins = vec![0usize; n];
+                for p in &pts {
+                    let b = ((p[dim] * n as f64) as usize).min(n - 1);
+                    bins[b] += 1;
+                }
+                if bins.iter().any(|&c| c != 1) {
+                    return Err(format!("dim {dim} bins {bins:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn values_in_unit_cube() {
+        let mut rng = Rng::new(9);
+        for p in latin_hypercube(&mut rng, 16, 4) {
+            assert!(p.iter().all(|&v| (0.0..1.0).contains(&v)));
+        }
+    }
+}

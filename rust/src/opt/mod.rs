@@ -1,0 +1,8 @@
+//! Generic numeric optimizers used as substrates: Nelder–Mead (GP
+//! hyper-parameter fitting) and Latin Hypercube Sampling (initial designs).
+
+mod lhs;
+mod neldermead;
+
+pub use lhs::latin_hypercube;
+pub use neldermead::{nelder_mead, NmOptions};

@@ -1,0 +1,153 @@
+//! Nelder–Mead downhill simplex minimizer.
+//!
+//! Used to maximize the GP log marginal likelihood (we minimize its
+//! negation) in log-hyper-parameter space. Derivative-free, robust to the
+//! noisy/cliffy MLL surface, and tiny — exactly what the paper's George-based
+//! reference implementation uses under the hood.
+
+#[derive(Debug, Clone)]
+pub struct NmOptions {
+    pub max_iters: usize,
+    pub x_tol: f64,
+    pub f_tol: f64,
+    /// initial simplex edge length per dimension
+    pub step: f64,
+}
+
+impl Default for NmOptions {
+    fn default() -> Self {
+        NmOptions { max_iters: 200, x_tol: 1e-6, f_tol: 1e-9, step: 0.5 }
+    }
+}
+
+/// Minimize `f` starting at `x0`; returns (argmin, min).
+pub fn nelder_mead(
+    mut f: impl FnMut(&[f64]) -> f64,
+    x0: &[f64],
+    opts: &NmOptions,
+) -> (Vec<f64>, f64) {
+    let n = x0.len();
+    let (alpha, gamma, rho, sigma) = (1.0, 2.0, 0.5, 0.5);
+
+    // Initial simplex: x0 plus a step along each axis.
+    let mut simplex: Vec<(Vec<f64>, f64)> = Vec::with_capacity(n + 1);
+    simplex.push((x0.to_vec(), f(x0)));
+    for i in 0..n {
+        let mut v = x0.to_vec();
+        v[i] += opts.step;
+        let fv = f(&v);
+        simplex.push((v, fv));
+    }
+
+    for _ in 0..opts.max_iters {
+        simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let best = simplex[0].1;
+        let worst = simplex[n].1;
+        // Convergence: simplex collapsed in x and f.
+        let spread = simplex[1..]
+            .iter()
+            .flat_map(|(v, _)| v.iter().zip(&simplex[0].0).map(|(a, b)| (a - b).abs()))
+            .fold(0.0, f64::max);
+        if (worst - best).abs() < opts.f_tol && spread < opts.x_tol {
+            break;
+        }
+
+        // Centroid of all but worst.
+        let mut centroid = vec![0.0; n];
+        for (v, _) in &simplex[..n] {
+            for (c, x) in centroid.iter_mut().zip(v) {
+                *c += x / n as f64;
+            }
+        }
+
+        let at = |t: f64, towards: &[f64]| -> Vec<f64> {
+            centroid
+                .iter()
+                .zip(towards)
+                .map(|(c, w)| c + t * (c - w))
+                .collect()
+        };
+
+        // Reflection.
+        let xr = at(alpha, &simplex[n].0);
+        let fr = f(&xr);
+        if fr < simplex[0].1 {
+            // Expansion.
+            let xe = at(gamma, &simplex[n].0);
+            let fe = f(&xe);
+            simplex[n] = if fe < fr { (xe, fe) } else { (xr, fr) };
+            continue;
+        }
+        if fr < simplex[n - 1].1 {
+            simplex[n] = (xr, fr);
+            continue;
+        }
+        // Contraction.
+        let xc = at(-rho, &simplex[n].0);
+        let fc = f(&xc);
+        if fc < simplex[n].1 {
+            simplex[n] = (xc, fc);
+            continue;
+        }
+        // Shrink towards best.
+        let best_x = simplex[0].0.clone();
+        for item in simplex.iter_mut().skip(1) {
+            let v: Vec<f64> = item
+                .0
+                .iter()
+                .zip(&best_x)
+                .map(|(x, b)| b + sigma * (x - b))
+                .collect();
+            let fv = f(&v);
+            *item = (v, fv);
+        }
+    }
+
+    simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    simplex.swap_remove(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        let (x, fx) = nelder_mead(
+            |v| (v[0] - 3.0).powi(2) + (v[1] + 1.0).powi(2) + 0.5,
+            &[0.0, 0.0],
+            &NmOptions { max_iters: 500, ..Default::default() },
+        );
+        assert!((x[0] - 3.0).abs() < 1e-3, "{x:?}");
+        assert!((x[1] + 1.0).abs() < 1e-3, "{x:?}");
+        assert!((fx - 0.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn minimizes_rosenbrock_2d() {
+        let rosen = |v: &[f64]| {
+            (1.0 - v[0]).powi(2) + 100.0 * (v[1] - v[0] * v[0]).powi(2)
+        };
+        let (x, _) = nelder_mead(
+            rosen,
+            &[-1.2, 1.0],
+            &NmOptions { max_iters: 5000, x_tol: 1e-10, f_tol: 1e-14, step: 0.5 },
+        );
+        assert!((x[0] - 1.0).abs() < 1e-2, "{x:?}");
+        assert!((x[1] - 1.0).abs() < 1e-2, "{x:?}");
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let mut calls = 0usize;
+        let _ = nelder_mead(
+            |v| {
+                calls += 1;
+                v[0] * v[0]
+            },
+            &[10.0],
+            &NmOptions { max_iters: 5, ..Default::default() },
+        );
+        assert!(calls < 40, "calls {calls}");
+    }
+}

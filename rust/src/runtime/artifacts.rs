@@ -1,0 +1,171 @@
+//! Artifact registry: manifest parsing + lazy PJRT compilation.
+
+use super::json::JsonValue;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `artifacts/manifest.json` (shapes fixed at AOT time).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub n_train: usize,
+    pub n_query: usize,
+    pub d_in: usize,
+    pub n_hyp: usize,
+    pub mlp_batch: usize,
+    pub mlp_eval: usize,
+    pub mlp_in: usize,
+    pub mlp_hidden: usize,
+    pub mlp_out: usize,
+    pub artifacts: Vec<String>,
+}
+
+impl Manifest {
+    pub fn parse(src: &str) -> Result<Manifest> {
+        let v = JsonValue::parse(src)?;
+        let u = |key: &str| -> Result<usize> {
+            v.get(key)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow!("manifest missing {key}"))
+        };
+        let mlp = v.get("mlp").ok_or_else(|| anyhow!("missing mlp"))?;
+        let m = |key: &str| -> Result<usize> {
+            mlp.get(key)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow!("manifest missing mlp.{key}"))
+        };
+        let artifacts = v
+            .get("artifacts")
+            .map(|a| a.keys().into_iter().cloned().collect())
+            .unwrap_or_default();
+        Ok(Manifest {
+            n_train: u("n_train")?,
+            n_query: u("n_query")?,
+            d_in: u("d_in")?,
+            n_hyp: u("n_hyp")?,
+            mlp_batch: m("batch")?,
+            mlp_eval: m("eval")?,
+            mlp_in: m("in")?,
+            mlp_hidden: m("hidden")?,
+            mlp_out: m("out")?,
+            artifacts,
+        })
+    }
+}
+
+/// PJRT client + compiled executables, keyed by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    compiled: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Load the manifest and create the CPU client. Executables are
+    /// compiled lazily on first use and cached.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_src =
+            std::fs::read_to_string(dir.join("manifest.json")).with_context(
+                || format!("read {:?} — run `make artifacts` first", dir),
+            )?;
+        let manifest = Manifest::parse(&manifest_src)?;
+        // sanity: shapes must match the Rust-side constants
+        if manifest.d_in != crate::space::D_IN {
+            bail!(
+                "artifact D_IN {} != rust D_IN {} — re-run make artifacts",
+                manifest.d_in,
+                crate::space::D_IN
+            );
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            compiled: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.manifest.artifacts.clone()
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.compiled.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .with_context(|| format!("parse {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(self.client.compile(&comp)?);
+        self.compiled.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on f32 literals; returns the decomposed output
+    /// tuple (aot.py lowers everything with return_tuple=True).
+    pub fn run(
+        &self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], shape: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = shape.iter().product();
+    if expect != data.len() as i64 {
+        bail!("literal shape {:?} != data len {}", shape, data.len());
+    }
+    if shape.len() <= 1 {
+        return Ok(xla::Literal::vec1(data));
+    }
+    Ok(xla::Literal::vec1(data).reshape(shape)?)
+}
+
+pub fn literal_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let src = r#"{
+          "n_train": 64, "n_query": 288, "d_in": 7, "n_hyp": 10,
+          "mlp": {"batch": 128, "eval": 512, "in": 784, "hidden": 256, "out": 10},
+          "artifacts": {"gp_predict_acc": {"inputs": [], "bytes": 1}}
+        }"#;
+        let m = Manifest::parse(src).unwrap();
+        assert_eq!(m.n_train, 64);
+        assert_eq!(m.n_query, 288);
+        assert_eq!(m.mlp_hidden, 256);
+        assert_eq!(m.artifacts, vec!["gp_predict_acc".to_string()]);
+    }
+
+    #[test]
+    fn manifest_rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"n_train": 64}"#).is_err());
+    }
+}

@@ -1,0 +1,219 @@
+//! Batched GP posterior through the AOT artifacts (the XLA backend).
+//!
+//! Fixed AOT shapes: N_TRAIN training rows, N_QUERY query rows. Smaller
+//! training sets are padded with the "padding-as-noise" trick (y = 0,
+//! noise = 1e6 — exactly removes the padded rows' influence, see
+//! python/compile/model.py); query batches are padded to a whole tile and
+//! truncated on the way out.
+
+use super::artifacts::{literal_f32, Runtime};
+use crate::models::{Basis, Feat, KernelParams};
+use anyhow::{bail, Result};
+
+pub const PAD_NOISE: f32 = 1e6;
+
+/// Batched predictive posterior via the `gp_predict_{acc,cost}` artifacts.
+pub struct XlaGp<'rt> {
+    rt: &'rt Runtime,
+    pub basis: Basis,
+    x_tr: Vec<f32>,
+    y: Vec<f32>,
+    noise: Vec<f32>,
+    hyp: Vec<f32>,
+    n_real: usize,
+}
+
+impl<'rt> XlaGp<'rt> {
+    /// Build from a training set (<= manifest.n_train rows after padding).
+    pub fn new(
+        rt: &'rt Runtime,
+        basis: Basis,
+        params: &KernelParams,
+        xs: &[Feat],
+        ys: &[f64],
+    ) -> Result<XlaGp<'rt>> {
+        let n = rt.manifest.n_train;
+        let d = rt.manifest.d_in;
+        if xs.len() > n {
+            bail!("training set {} exceeds artifact capacity {n}", xs.len());
+        }
+        if xs.len() != ys.len() {
+            bail!("xs/ys length mismatch");
+        }
+        let mut x_tr = vec![0.0f32; n * d];
+        let mut y = vec![0.0f32; n];
+        let mut noise = vec![PAD_NOISE; n];
+        for (i, (x, &yv)) in xs.iter().zip(ys).enumerate() {
+            for (j, &v) in x.iter().enumerate() {
+                x_tr[i * d + j] = v as f32;
+            }
+            y[i] = yv as f32;
+            noise[i] = params.noise as f32;
+        }
+        let hyp = params.to_f32_vec();
+        if hyp.len() != rt.manifest.n_hyp {
+            bail!("hyp len {} != manifest {}", hyp.len(), rt.manifest.n_hyp);
+        }
+        Ok(XlaGp { rt, basis, x_tr, y, noise, hyp, n_real: xs.len() })
+    }
+
+    pub fn n_obs(&self) -> usize {
+        self.n_real
+    }
+
+    fn artifact(&self) -> &'static str {
+        match self.basis {
+            Basis::Acc => "gp_predict_acc",
+            Basis::Cost => "gp_predict_cost",
+        }
+    }
+
+    /// Predictive (mean, variance) at arbitrary query points, tiled through
+    /// the fixed-shape artifact.
+    pub fn predict_batch(
+        &self,
+        queries: &[Feat],
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let q = self.rt.manifest.n_query;
+        let d = self.rt.manifest.d_in;
+        let n = self.rt.manifest.n_train;
+        let mut mu = Vec::with_capacity(queries.len());
+        let mut var = Vec::with_capacity(queries.len());
+
+        let x_tr = literal_f32(&self.x_tr, &[n as i64, d as i64])?;
+        let y = literal_f32(&self.y, &[n as i64])?;
+        let noise = literal_f32(&self.noise, &[n as i64])?;
+        let hyp = literal_f32(&self.hyp, &[self.hyp.len() as i64])?;
+
+        for chunk in queries.chunks(q) {
+            let mut xq = vec![0.0f32; q * d];
+            for (i, x) in chunk.iter().enumerate() {
+                for (j, &v) in x.iter().enumerate() {
+                    xq[i * d + j] = v as f32;
+                }
+            }
+            let xq = literal_f32(&xq, &[q as i64, d as i64])?;
+            let out = self.rt.run(
+                self.artifact(),
+                &[x_tr.clone(), y.clone(), noise.clone(), xq, hyp.clone()],
+            )?;
+            let mu_t: Vec<f32> = out[0].to_vec()?;
+            let var_t: Vec<f32> = out[1].to_vec()?;
+            mu.extend(mu_t[..chunk.len()].iter().map(|&v| v as f64));
+            var.extend(var_t[..chunk.len()].iter().map(|&v| v as f64));
+        }
+        Ok((mu, var))
+    }
+
+    /// Log marginal likelihood via the `gp_mll_*` artifact.
+    pub fn mll(&self) -> Result<f64> {
+        let n = self.rt.manifest.n_train;
+        let d = self.rt.manifest.d_in;
+        let name = match self.basis {
+            Basis::Acc => "gp_mll_acc",
+            Basis::Cost => "gp_mll_cost",
+        };
+        let out = self.rt.run(
+            name,
+            &[
+                literal_f32(&self.x_tr, &[n as i64, d as i64])?,
+                literal_f32(&self.y, &[n as i64])?,
+                literal_f32(&self.noise, &[n as i64])?,
+                literal_f32(&self.hyp, &[self.hyp.len() as i64])?,
+            ],
+        )?;
+        Ok(out[0].to_vec::<f32>()?[0] as f64)
+    }
+}
+
+/// Parity check: `cov_acc` artifact (Pallas kernel lowering) vs the native
+/// f64 kernel. Returns (max abs error, number of entries compared).
+pub fn cov_parity_check(rt: &Runtime) -> Result<(f64, usize)> {
+    let n = rt.manifest.n_train;
+    let q = rt.manifest.n_query;
+    let d = rt.manifest.d_in;
+    let mut rng = crate::util::Rng::new(0xC0F);
+    let params = KernelParams {
+        ls: [0.4, 0.6, 0.8, 0.5, 0.7, 0.9],
+        sigma2: 1.3,
+        l00: 0.9,
+        l10: 0.35,
+        l11: 0.45,
+        noise: 0.0,
+    };
+    let xs1: Vec<Feat> = (0..n).map(|_| rand_feat(&mut rng)).collect();
+    let xs2: Vec<Feat> = (0..q).map(|_| rand_feat(&mut rng)).collect();
+
+    let flat = |xs: &[Feat]| -> Vec<f32> {
+        xs.iter().flat_map(|x| x.iter().map(|&v| v as f32)).collect()
+    };
+    let out = rt.run(
+        "cov_acc",
+        &[
+            literal_f32(&flat(&xs1), &[n as i64, d as i64])?,
+            literal_f32(&flat(&xs2), &[q as i64, d as i64])?,
+            literal_f32(&params.to_f32_vec(), &[rt.manifest.n_hyp as i64])?,
+        ],
+    )?;
+    let k_xla: Vec<f32> = out[0].to_vec()?;
+    let mut max_err = 0.0f64;
+    for i in 0..n {
+        for j in 0..q {
+            let native = params.k(Basis::Acc, &xs1[i], &xs2[j]);
+            let err = (k_xla[i * q + j] as f64 - native).abs();
+            max_err = max_err.max(err);
+        }
+    }
+    Ok((max_err, n * q))
+}
+
+/// Parity check: artifact GP posterior vs the native Rust GP with identical
+/// hyper-parameters. Returns (max |mu| error, max |var| error).
+pub fn gp_parity_check(rt: &Runtime) -> Result<(f64, f64)> {
+    let mut rng = crate::util::Rng::new(0x6B);
+    let n_obs = 24;
+    let xs: Vec<Feat> = (0..n_obs).map(|_| rand_feat(&mut rng)).collect();
+    let ys: Vec<f64> = xs
+        .iter()
+        .map(|x| (2.5 * x[0]).sin() * 0.4 + 0.3 * x[6])
+        .collect();
+
+    let params = KernelParams {
+        ls: [0.5; 6],
+        sigma2: 1.0,
+        l00: 0.8,
+        l10: 0.3,
+        l11: 0.4,
+        noise: 1e-3,
+    };
+    // XlaGp models raw targets (no y-standardization), so the reference is
+    // a from-scratch posterior via the native kernel + Cholesky.
+    let k = params.cov_matrix(Basis::Acc, &xs);
+    let chol = crate::linalg::Cholesky::factor(&k)?;
+    let alpha = chol.solve(&ys);
+
+    let queries: Vec<Feat> = (0..50).map(|_| rand_feat(&mut rng)).collect();
+    let xgp = XlaGp::new(rt, Basis::Acc, &params, &xs, &ys)?;
+    let (mu_x, var_x) = xgp.predict_batch(&queries)?;
+
+    let mut mu_err = 0.0f64;
+    let mut var_err = 0.0f64;
+    for (qi, xq) in queries.iter().enumerate() {
+        let ks = params.cov_vec(Basis::Acc, &xs, xq);
+        let mu: f64 = ks.iter().zip(&alpha).map(|(a, b)| a * b).sum();
+        let v = chol.solve_lower(&ks);
+        let var = params.k_diag(Basis::Acc, xq)
+            - v.iter().map(|z| z * z).sum::<f64>();
+        mu_err = mu_err.max((mu - mu_x[qi]).abs());
+        var_err = var_err.max((var.max(1e-12) - var_x[qi]).abs());
+    }
+    Ok((mu_err, var_err))
+}
+
+fn rand_feat(rng: &mut crate::util::Rng) -> Feat {
+    let mut f = [0.0; crate::space::D_IN];
+    for v in f.iter_mut() {
+        *v = rng.f64();
+    }
+    f
+}

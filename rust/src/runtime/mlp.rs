@@ -1,0 +1,181 @@
+//! The end-to-end real workload: an MLP classifier trained entirely through
+//! the AOT `mlp_train_step` / `mlp_eval` artifacts, driven from Rust.
+//!
+//! The synthetic-MNIST generator produces a 10-class problem of 784-dim
+//! inputs (class-dependent Gaussian blobs over random prototype images), so
+//! the full stack — data loading, sub-sampling, SGD steps, evaluation — runs
+//! with Python nowhere on the path.
+
+use super::artifacts::{literal_f32, literal_scalar_f32, Runtime};
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Host-side copy of the MLP parameters.
+#[derive(Clone)]
+pub struct MlpParams {
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+impl MlpParams {
+    pub fn init(rt: &Runtime, rng: &mut Rng) -> MlpParams {
+        let m = &rt.manifest;
+        let scale1 = (2.0 / m.mlp_in as f64).sqrt();
+        let scale2 = (2.0 / m.mlp_hidden as f64).sqrt();
+        MlpParams {
+            w1: (0..m.mlp_in * m.mlp_hidden)
+                .map(|_| (rng.normal() * scale1) as f32)
+                .collect(),
+            b1: vec![0.0; m.mlp_hidden],
+            w2: (0..m.mlp_hidden * m.mlp_out)
+                .map(|_| (rng.normal() * scale2) as f32)
+                .collect(),
+            b2: vec![0.0; m.mlp_out],
+        }
+    }
+}
+
+/// Synthetic-MNIST dataset: `n` samples of 784 features, 10 classes.
+pub struct SyntheticMnist {
+    pub x: Vec<f32>,
+    /// one-hot labels
+    pub y: Vec<f32>,
+    pub labels: Vec<usize>,
+    pub n: usize,
+    pub d: usize,
+    pub classes: usize,
+}
+
+impl SyntheticMnist {
+    pub fn generate(n: usize, d: usize, classes: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        // class prototypes: sparse random "stroke" patterns
+        let protos: Vec<Vec<f32>> = (0..classes)
+            .map(|_| {
+                (0..d)
+                    .map(|_| {
+                        if rng.f64() < 0.15 {
+                            rng.uniform(0.5, 1.0) as f32
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut x = Vec::with_capacity(n * d);
+        let mut y = vec![0.0f32; n * classes];
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = rng.below(classes);
+            labels.push(c);
+            y[i * classes + c] = 1.0;
+            for j in 0..d {
+                let noise = (rng.normal() * 0.25) as f32;
+                x.push((protos[c][j] + noise).clamp(-1.0, 1.5));
+            }
+        }
+        SyntheticMnist { x, y, labels, n, d, classes }
+    }
+
+    /// Rows `[lo, hi)` as flat slices.
+    pub fn batch(&self, idx: &[usize]) -> (Vec<f32>, Vec<f32>) {
+        let mut bx = Vec::with_capacity(idx.len() * self.d);
+        let mut by = Vec::with_capacity(idx.len() * self.classes);
+        for &i in idx {
+            bx.extend_from_slice(&self.x[i * self.d..(i + 1) * self.d]);
+            by.extend_from_slice(
+                &self.y[i * self.classes..(i + 1) * self.classes],
+            );
+        }
+        (bx, by)
+    }
+}
+
+/// Trainer: repeatedly executes the `mlp_train_step` artifact.
+pub struct MlpTrainer<'rt> {
+    rt: &'rt Runtime,
+    pub params: MlpParams,
+    pub lr: f32,
+}
+
+impl<'rt> MlpTrainer<'rt> {
+    pub fn new(rt: &'rt Runtime, params: MlpParams, lr: f32) -> Self {
+        MlpTrainer { rt, params, lr }
+    }
+
+    /// One SGD step on a (batch, one-hot) pair; returns the loss.
+    pub fn step(&mut self, xb: &[f32], yb: &[f32]) -> Result<f64> {
+        let m = &self.rt.manifest;
+        let out = self.rt.run(
+            "mlp_train_step",
+            &[
+                literal_f32(&self.params.w1, &[m.mlp_in as i64, m.mlp_hidden as i64])?,
+                literal_f32(&self.params.b1, &[m.mlp_hidden as i64])?,
+                literal_f32(&self.params.w2, &[m.mlp_hidden as i64, m.mlp_out as i64])?,
+                literal_f32(&self.params.b2, &[m.mlp_out as i64])?,
+                literal_f32(xb, &[m.mlp_batch as i64, m.mlp_in as i64])?,
+                literal_f32(yb, &[m.mlp_batch as i64, m.mlp_out as i64])?,
+                literal_scalar_f32(self.lr),
+            ],
+        )?;
+        self.params.w1 = out[0].to_vec()?;
+        self.params.b1 = out[1].to_vec()?;
+        self.params.w2 = out[2].to_vec()?;
+        self.params.b2 = out[3].to_vec()?;
+        Ok(out[4].to_vec::<f32>()?[0] as f64)
+    }
+
+    /// Accuracy + loss on an eval batch (padded/truncated to MLP_EVAL rows).
+    pub fn eval(&self, xe: &[f32], ye: &[f32]) -> Result<(f64, f64)> {
+        let m = &self.rt.manifest;
+        let out = self.rt.run(
+            "mlp_eval",
+            &[
+                literal_f32(&self.params.w1, &[m.mlp_in as i64, m.mlp_hidden as i64])?,
+                literal_f32(&self.params.b1, &[m.mlp_hidden as i64])?,
+                literal_f32(&self.params.w2, &[m.mlp_hidden as i64, m.mlp_out as i64])?,
+                literal_f32(&self.params.b2, &[m.mlp_out as i64])?,
+                literal_f32(xe, &[m.mlp_eval as i64, m.mlp_in as i64])?,
+                literal_f32(ye, &[m.mlp_eval as i64, m.mlp_out as i64])?,
+            ],
+        )?;
+        Ok((
+            out[0].to_vec::<f32>()?[0] as f64,
+            out[1].to_vec::<f32>()?[0] as f64,
+        ))
+    }
+}
+
+/// Smoke training used by `runtime-check`: returns (first loss, last loss,
+/// final eval accuracy).
+pub fn train_smoke(rt: &Runtime, steps: usize) -> Result<(f64, f64, f64)> {
+    let m = &rt.manifest;
+    let mut rng = Rng::new(0x11);
+    let data = SyntheticMnist::generate(
+        m.mlp_batch * 8,
+        m.mlp_in,
+        m.mlp_out,
+        7,
+    );
+    let eval = SyntheticMnist::generate(m.mlp_eval, m.mlp_in, m.mlp_out, 7);
+    let params = MlpParams::init(rt, &mut rng);
+    let mut trainer = MlpTrainer::new(rt, params, 0.5);
+    let mut first = f64::NAN;
+    let mut last = f64::NAN;
+    for step in 0..steps {
+        let idx = rng.sample_indices(data.n, m.mlp_batch);
+        let (bx, by) = data.batch(&idx);
+        let loss = trainer.step(&bx, &by)?;
+        if step == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    let idx: Vec<usize> = (0..m.mlp_eval).collect();
+    let (ex, ey) = eval.batch(&idx);
+    let (acc, _) = trainer.eval(&ex, &ey)?;
+    Ok((first, last, acc))
+}

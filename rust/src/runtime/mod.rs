@@ -1,0 +1,55 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python never runs at optimization time: `make artifacts` lowers the
+//! Layer-2 JAX graphs (which embed the Layer-1 Pallas covariance kernel)
+//! once; this module compiles them on the PJRT CPU client and exposes typed
+//! entry points:
+//!
+//! - [`XlaGp`] — batched GP posterior (mean, var) over query tiles, used as
+//!   the accelerated backend for batched candidate scoring;
+//! - [`MlpTrainer`] — the end-to-end real workload: SGD training of an MLP
+//!   entirely through compiled artifacts, driven by the Rust coordinator.
+
+mod artifacts;
+mod gpx;
+mod json;
+mod mlp;
+
+pub use artifacts::{Manifest, Runtime};
+pub use gpx::{cov_parity_check, gp_parity_check, XlaGp};
+pub use json::JsonValue;
+pub use mlp::{train_smoke as mlp_train_smoke, MlpParams, MlpTrainer, SyntheticMnist};
+
+use crate::cli::Args;
+use anyhow::Result;
+
+/// `trimtuner runtime-check`: load every artifact, verify numerics against
+/// the native implementations, print a summary.
+pub fn cmd_runtime_check(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let rt = Runtime::load(&dir)?;
+    println!(
+        "runtime: platform={} artifacts={}",
+        rt.platform(),
+        rt.names().len()
+    );
+
+    // 1. covariance kernel parity: XLA (Pallas lowering) vs native f64
+    let (max_err, n) = gpx::cov_parity_check(&rt)?;
+    println!("cov_acc parity: {n} entries, max |err| = {max_err:.3e}");
+    anyhow::ensure!(max_err < 1e-4, "covariance parity failed");
+
+    // 2. GP posterior parity vs the native Rust GP
+    let (mu_err, var_err) = gpx::gp_parity_check(&rt)?;
+    println!("gp_predict parity: max |mu err| = {mu_err:.3e}, max |var err| = {var_err:.3e}");
+    anyhow::ensure!(mu_err < 1e-3 && var_err < 1e-3, "gp parity failed");
+
+    // 3. MLP training: loss must fall on a separable toy problem
+    let (first, last, acc) = mlp::train_smoke(&rt, 30)?;
+    println!("mlp train: loss {first:.4} -> {last:.4}, eval acc {acc:.3}");
+    anyhow::ensure!(last < first, "mlp loss did not decrease");
+
+    println!("runtime-check OK");
+    Ok(())
+}

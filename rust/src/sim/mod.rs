@@ -1,0 +1,29 @@
+//! Cloud-training simulator — the evaluation substrate.
+//!
+//! The paper's evaluation is trace-driven: the authors trained 3 neural
+//! networks (CNN / MLP / RNN on MNIST, distributed TensorFlow) on a 1440
+//! point grid of AWS configurations (~$1200, ~2 months) and replayed the
+//! resulting lookup tables inside the optimizers. We cannot re-run AWS, so
+//! [`CloudSim`] is a parametric generative model of that measurement
+//! campaign (DESIGN.md §1, substitution table):
+//!
+//! - **accuracy** follows an inverse-power-law learning curve in the number
+//!   of training samples `n = s · 60000`, with hyper-parameter effects
+//!   (learning-rate sweet spot, batch-size penalty, asynchrony staleness
+//!   growing with worker count, large-effective-batch penalty);
+//! - **time** decomposes into startup + compute (scaled by fleet size and
+//!   per-vCPU speed with burstable-instance sub-linearity) + communication
+//!   (per-step synchronization barriers, worse for sync mode, small batches
+//!   and large fleets);
+//! - **cost** = time × #VMs × on-demand price.
+//!
+//! Three "networks" are three calibrated parameter sets whose feasibility
+//! structure under the paper's cost caps reproduces Table II's bands.
+//! [`Dataset`] materializes the full grid (3 noisy repetitions averaged,
+//! like the paper) for replay by the optimizers.
+
+mod dataset;
+mod oracle;
+
+pub use dataset::*;
+pub use oracle::*;

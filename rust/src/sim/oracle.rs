@@ -1,0 +1,416 @@
+//! Parametric performance oracle for distributed MNIST training on t2.* VMs.
+
+use crate::space::{Config, Point, FULL_DATASET};
+use crate::util::Rng;
+
+/// The three neural networks of the paper's evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NetKind {
+    Cnn,
+    Mlp,
+    Rnn,
+}
+
+impl NetKind {
+    pub const ALL: [NetKind; 3] = [NetKind::Rnn, NetKind::Mlp, NetKind::Cnn];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetKind::Cnn => "cnn",
+            NetKind::Mlp => "mlp",
+            NetKind::Rnn => "rnn",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<NetKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "cnn" => Some(NetKind::Cnn),
+            "mlp" => Some(NetKind::Mlp),
+            "rnn" => Some(NetKind::Rnn),
+            _ => None,
+        }
+    }
+
+    /// Cost cap used in the paper's evaluation (§IV, Table II).
+    pub fn paper_cost_cap(&self) -> f64 {
+        match self {
+            NetKind::Rnn => 0.02,
+            NetKind::Mlp => 0.06,
+            NetKind::Cnn => 0.10,
+        }
+    }
+}
+
+/// Noiseless / noisy outcome of training in a configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Outcome {
+    /// final test accuracy in [0, 1]
+    pub acc: f64,
+    /// wall-clock training time, seconds
+    pub time_s: f64,
+    /// cloud cost, USD
+    pub cost_usd: f64,
+}
+
+/// Generative parameters of one network's measurement campaign.
+#[derive(Debug, Clone)]
+pub struct SimParams {
+    /// asymptotic accuracy with ideal hyper-parameters
+    pub a_base: f64,
+    /// learning-curve amplitude: acc = a_inf - lc_b * n^(-lc_gamma)
+    pub lc_b: f64,
+    pub lc_gamma: f64,
+    /// optimal log10 learning rate
+    pub lr_opt_log10: f64,
+    /// accuracy penalty per decade of lr *below* the optimum (undertraining
+    /// cliff: with a handful of epochs, lr=1e-5 barely moves the weights)
+    pub lr_under_pen: f64,
+    /// accuracy penalty per decade of lr *above* the optimum (instability)
+    pub lr_over_pen: f64,
+    /// accuracy penalty for the large batch (256)
+    pub batch_penalty: f64,
+    /// async staleness penalty coefficient (× ln(workers) × lr factor)
+    pub async_kappa: f64,
+    /// effective-batch generalization penalty coefficient
+    pub eff_batch_kappa: f64,
+    /// seconds of compute per training sample per epoch on one reference vCPU
+    pub c_sample: f64,
+    /// epochs of training
+    pub epochs: f64,
+    /// per-step barrier cost, seconds (sync mode)
+    pub tau_sync: f64,
+    /// per-step coordination cost, seconds (async mode)
+    pub tau_async: f64,
+    /// fixed startup/teardown overhead, seconds
+    pub startup_s: f64,
+    /// per-VM additional startup, seconds
+    pub startup_per_vm: f64,
+    /// observation noise: std of additive accuracy noise
+    pub noise_acc: f64,
+    /// observation noise: relative std of time noise
+    pub noise_time: f64,
+    /// per-config ruggedness: amplitude of the deterministic, unmodeled
+    /// accuracy interaction term (real measured surfaces are not smooth
+    /// parametric functions -- systems effects like NUMA placement,
+    /// stragglers and TCP incast produce config-specific offsets that a
+    /// surrogate can only learn by sampling)
+    pub rugged_acc: f64,
+    /// per-config ruggedness of time (log-normal scale)
+    pub rugged_time: f64,
+}
+
+impl SimParams {
+    /// Calibrated parameter sets (see sim::dataset tests: the resulting
+    /// Table II feasibility bands match the paper's).
+    pub fn for_net(kind: NetKind) -> SimParams {
+        match kind {
+            // CNN: expensive compute, high asymptotic accuracy, prefers
+            // lr=1e-3; constraint $0.10 is tight -> fewest feasible configs.
+            NetKind::Cnn => SimParams {
+                a_base: 0.993,
+                lc_b: 2.9,
+                lc_gamma: 0.42,
+                lr_opt_log10: -3.0,
+                lr_under_pen: 0.20,
+                lr_over_pen: 0.07,
+                batch_penalty: 0.014,
+                async_kappa: 0.007,
+                eff_batch_kappa: 0.009,
+                c_sample: 2.5e-2,
+                epochs: 4.0,
+                tau_sync: 0.13,
+                tau_async: 0.055,
+                startup_s: 4.0,
+                startup_per_vm: 0.2,
+                noise_acc: 0.004,
+                noise_time: 0.05,
+                rugged_acc: 0.12,
+                rugged_time: 0.30,
+            },
+            // MLP: cheap compute, prefers lr=1e-4, moderate constraint.
+            NetKind::Mlp => SimParams {
+                a_base: 0.982,
+                lc_b: 1.6,
+                lc_gamma: 0.38,
+                lr_opt_log10: -4.0,
+                lr_under_pen: 0.26,
+                lr_over_pen: 0.07,
+                batch_penalty: 0.015,
+                async_kappa: 0.006,
+                eff_batch_kappa: 0.008,
+                c_sample: 6.0e-3,
+                epochs: 6.0,
+                tau_sync: 0.055,
+                tau_async: 0.02,
+                startup_s: 5.0,
+                startup_per_vm: 0.25,
+                noise_acc: 0.003,
+                noise_time: 0.05,
+                rugged_acc: 0.11,
+                rugged_time: 0.30,
+            },
+            // RNN: sequential compute (poor parallel speedup), prefers
+            // lr=1e-4, tightest constraint ($0.02) but cheap fleet usage.
+            NetKind::Rnn => SimParams {
+                a_base: 0.972,
+                lc_b: 2.1,
+                lc_gamma: 0.36,
+                lr_opt_log10: -4.0,
+                lr_under_pen: 0.28,
+                lr_over_pen: 0.08,
+                batch_penalty: 0.012,
+                async_kappa: 0.007,
+                eff_batch_kappa: 0.011,
+                c_sample: 1.5e-3,
+                epochs: 3.0,
+                tau_sync: 0.045,
+                tau_async: 0.016,
+                startup_s: 2.0,
+                startup_per_vm: 0.1,
+                noise_acc: 0.005,
+                noise_time: 0.05,
+                rugged_acc: 0.12,
+                rugged_time: 0.30,
+            },
+        }
+    }
+}
+
+/// The simulator: a deterministic ground-truth surface + observation noise.
+#[derive(Debug, Clone)]
+pub struct CloudSim {
+    pub kind: NetKind,
+    pub params: SimParams,
+}
+
+impl CloudSim {
+    pub fn new(kind: NetKind) -> CloudSim {
+        CloudSim { kind, params: SimParams::for_net(kind) }
+    }
+
+    /// Deterministic per-config pseudo-random value in [-1, 1] (splitmix64
+    /// hash of the config id) -- the "unmodeled interaction" source.
+    fn rugged(&self, c: &Config, stream: u64) -> f64 {
+        let mut z = (c.id() as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
+            ^ stream.wrapping_mul(0xD1B54A32D192ED03)
+            ^ (self.kind as u64 + 1).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^= z >> 31;
+        (z >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0
+    }
+
+    /// Asymptotic (infinite-data) accuracy for a config: base minus
+    /// hyper-parameter penalties.
+    fn a_inf(&self, c: &Config) -> f64 {
+        let p = &self.params;
+        let w = c.nvms() as f64;
+        let lr_log = c.learning_rate().log10();
+        let mut a = p.a_base;
+        // learning-rate effect, asymmetric in decades from the optimum:
+        // too small -> undertrained cliff; too large -> instability.
+        let dlr = lr_log - p.lr_opt_log10;
+        if dlr < 0.0 {
+            a -= p.lr_under_pen * (-dlr);
+        } else {
+            a -= p.lr_over_pen * dlr;
+        }
+        // large mini-batch penalty
+        if c.batch_size() > 64 {
+            a -= p.batch_penalty;
+        }
+        if c.sync {
+            // synchronous data-parallelism: effective batch B*w hurts
+            // generalization past 2^10.
+            let eff_batch = (c.batch_size() as f64 * w).log2();
+            a -= p.eff_batch_kappa * (eff_batch - 10.0).max(0.0);
+        } else {
+            // asynchrony: gradient staleness grows with workers and with
+            // the learning rate.
+            let lr_factor = 10f64.powf((lr_log - p.lr_opt_log10) * 0.5);
+            a -= p.async_kappa * w.ln() * lr_factor;
+        }
+        // unmodeled config-specific interactions (one-sided: systems
+        // effects rarely make training *better* than the clean model)
+        a - p.rugged_acc * (0.5 + 0.5 * self.rugged(c, 1))
+    }
+
+    /// Noiseless outcome (the "true" surface the optimizers try to learn).
+    pub fn ground_truth(&self, pt: &Point) -> Outcome {
+        let p = &self.params;
+        let c = &pt.config;
+        let n = pt.s() * FULL_DATASET as f64;
+        let w = c.nvms() as f64;
+        let vcpus = c.vm().vcpus as f64;
+
+        // ---- accuracy: learning curve towards a_inf(c) ------------------
+        let mut acc = self.a_inf(c) - p.lc_b * n.powf(-p.lc_gamma);
+        // data starvation: fewer than ~50 samples per worker per epoch
+        // wastes the fleet.
+        let per_worker = n / w;
+        if per_worker < 50.0 {
+            acc -= 0.05 * (50.0 - per_worker) / 50.0;
+        }
+        acc = acc.clamp(0.05, 0.999);
+
+        // ---- time -------------------------------------------------------
+        // compute: t2.* burstable instances scale sub-linearly in vCPUs;
+        // large batches vectorize slightly better.
+        let batch_eff = (c.batch_size() as f64 / 256.0).powf(0.12);
+        let compute =
+            n * p.epochs * p.c_sample / (w * vcpus.powf(0.85) * batch_eff);
+        // communication: one barrier per optimization step.
+        let steps = (n * p.epochs / (c.batch_size() as f64 * w)).max(1.0);
+        let per_step = if c.sync {
+            p.tau_sync * (1.0 + w.log2())
+        } else {
+            p.tau_async * w.log2().max(0.5)
+        };
+        let comm = steps * per_step;
+        let mut time = p.startup_s + p.startup_per_vm * w + compute + comm;
+        // config-specific systems effects on throughput (stragglers, NUMA,
+        // incast): log-normal deterministic per config
+        time *= (p.rugged_time * self.rugged(c, 2)).exp();
+
+        // ---- cost -------------------------------------------------------
+        let cost = time / 3600.0 * c.fleet_price_hr();
+        Outcome { acc, time_s: time, cost_usd: cost }
+    }
+
+    /// One noisy measurement (a single training run).
+    pub fn observe(&self, pt: &Point, rng: &mut Rng) -> Outcome {
+        let p = &self.params;
+        let gt = self.ground_truth(pt);
+        let acc = (gt.acc + rng.normal_with(0.0, p.noise_acc)).clamp(0.0, 1.0);
+        let time = gt.time_s * (1.0 + rng.normal_with(0.0, p.noise_time)).max(0.2);
+        let cost = time / 3600.0 * pt.config.fleet_price_hr();
+        Outcome { acc, time_s: time, cost_usd: cost }
+    }
+
+    /// Average of `reps` noisy measurements (the paper averages 3 runs).
+    pub fn observe_avg(&self, pt: &Point, rng: &mut Rng, reps: usize) -> Outcome {
+        let mut acc = 0.0;
+        let mut time = 0.0;
+        let mut cost = 0.0;
+        for _ in 0..reps {
+            let o = self.observe(pt, rng);
+            acc += o.acc;
+            time += o.time_s;
+            cost += o.cost_usd;
+        }
+        let r = reps as f64;
+        Outcome { acc: acc / r, time_s: time / r, cost_usd: cost / r }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{all_configs, Point, S_VALUES};
+    use crate::util::proptest::check;
+
+    fn pt(cfg_id: usize, s_idx: usize) -> Point {
+        Point { config: crate::space::Config::from_id(cfg_id), s_idx }
+    }
+
+    #[test]
+    fn accuracy_monotone_in_s() {
+        for kind in NetKind::ALL {
+            let sim = CloudSim::new(kind);
+            for c in all_configs() {
+                let mut last = 0.0;
+                for s_idx in 0..S_VALUES.len() {
+                    let o = sim.ground_truth(&Point { config: c, s_idx });
+                    assert!(
+                        o.acc >= last - 1e-12,
+                        "{kind:?} {c:?} s{s_idx}: {} < {last}",
+                        o.acc
+                    );
+                    last = o.acc;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn outcomes_physical() {
+        check("outcome ranges", 64, |rng| {
+            let kind = *rng.choose(&NetKind::ALL);
+            let sim = CloudSim::new(kind);
+            let p = pt(rng.below(288), rng.below(5));
+            let o = sim.ground_truth(&p);
+            if !(0.0..=1.0).contains(&o.acc) {
+                return Err(format!("acc {o:?}"));
+            }
+            if o.time_s <= 0.0 || o.cost_usd <= 0.0 {
+                return Err(format!("nonpositive {o:?}"));
+            }
+            // cost must equal time * fleet price
+            let expect = o.time_s / 3600.0 * p.config.fleet_price_hr();
+            if (o.cost_usd - expect).abs() > 1e-9 {
+                return Err(format!("cost inconsistent {o:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sub_sampling_is_cheaper() {
+        for kind in NetKind::ALL {
+            let sim = CloudSim::new(kind);
+            for c in all_configs() {
+                let small = sim.ground_truth(&Point { config: c, s_idx: 0 });
+                let full = sim.ground_truth(&Point { config: c, s_idx: 4 });
+                assert!(
+                    small.cost_usd < full.cost_usd,
+                    "{kind:?} {}",
+                    c.describe()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn noise_is_centered_on_ground_truth() {
+        let sim = CloudSim::new(NetKind::Mlp);
+        let p = pt(100, 3);
+        let gt = sim.ground_truth(&p);
+        let mut rng = crate::util::Rng::new(11);
+        let o = sim.observe_avg(&p, &mut rng, 500);
+        assert!((o.acc - gt.acc).abs() < 0.002, "{} vs {}", o.acc, gt.acc);
+        assert!((o.time_s / gt.time_s - 1.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn async_penalty_grows_with_workers() {
+        let sim = CloudSim::new(NetKind::Cnn);
+        // same cfg but nvm_idx 0 vs 5, async
+        let base = crate::space::Config {
+            lr_idx: 0,
+            batch_idx: 0,
+            sync: false,
+            vm_idx: 1,
+            nvm_idx: 0,
+        };
+        let big = crate::space::Config { nvm_idx: 5, ..base };
+        let a_small = sim.ground_truth(&Point { config: base, s_idx: 4 }).acc;
+        let a_big = sim.ground_truth(&Point { config: big, s_idx: 4 }).acc;
+        assert!(a_big < a_small);
+    }
+
+    #[test]
+    fn more_workers_faster_but_costlier_per_sample() {
+        let sim = CloudSim::new(NetKind::Cnn);
+        let small = crate::space::Config {
+            lr_idx: 0,
+            batch_idx: 1,
+            sync: false,
+            vm_idx: 2,
+            nvm_idx: 0,
+        };
+        let big = crate::space::Config { nvm_idx: 4, ..small };
+        let t_small = sim.ground_truth(&Point { config: small, s_idx: 4 });
+        let t_big = sim.ground_truth(&Point { config: big, s_idx: 4 });
+        assert!(t_big.time_s < t_small.time_s, "{t_big:?} {t_small:?}");
+    }
+}

@@ -1,0 +1,218 @@
+//! Table I: parameter values and the VM catalog.
+
+/// AWS t2.* on-demand types used in the paper (us-east-1, mid-2020 pricing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VmType {
+    pub name: &'static str,
+    pub vcpus: u32,
+    pub ram_gb: u32,
+    /// USD per VM-hour (on-demand)
+    pub price_hr_milli: u32, // milli-USD to keep the type Copy+Eq
+}
+
+impl VmType {
+    pub fn price_hr(&self) -> f64 {
+        self.price_hr_milli as f64 / 1000.0
+    }
+}
+
+/// The four t2 types of Table I with their allowed fleet sizes.
+pub const VM_TYPES: [VmType; 4] = [
+    VmType { name: "t2.small", vcpus: 1, ram_gb: 2, price_hr_milli: 23 },
+    VmType { name: "t2.medium", vcpus: 2, ram_gb: 4, price_hr_milli: 46 },
+    VmType { name: "t2.xlarge", vcpus: 4, ram_gb: 16, price_hr_milli: 186 },
+    VmType { name: "t2.2xlarge", vcpus: 8, ram_gb: 32, price_hr_milli: 371 },
+];
+
+/// Allowed #VMs per VM type (row-aligned with [`VM_TYPES`]). Each row keeps
+/// the total vCPU budget in {8,16,32,48,64,80} like the paper.
+pub const NVMS: [[u32; 6]; 4] = [
+    [8, 16, 32, 48, 64, 80],
+    [4, 8, 16, 24, 32, 40],
+    [2, 4, 8, 12, 16, 20],
+    [1, 2, 4, 6, 8, 10],
+];
+
+pub const LEARNING_RATES: [f64; 3] = [1e-3, 1e-4, 1e-5];
+pub const BATCH_SIZES: [u32; 2] = [16, 256];
+pub const SYNC_MODES: [&str; 2] = ["sync", "async"];
+
+/// Sub-sampling rates (fraction of the full data-set). The paper's MNIST
+/// levels: 1/60 (1000 samples), 1/10, 1/4, 1/2 for bootstrap + 1 (full).
+pub const S_VALUES: [f64; 5] = [1.0 / 60.0, 0.10, 0.25, 0.50, 1.0];
+/// Indices of the sub-sampling levels used in the initialization phase.
+pub const S_INIT: [usize; 4] = [0, 1, 2, 3];
+/// Full MNIST training-set size.
+pub const FULL_DATASET: u32 = 60_000;
+
+pub const N_CONFIGS: usize =
+    LEARNING_RATES.len() * BATCH_SIZES.len() * SYNC_MODES.len() * 4 * 6; // 288
+pub const N_POINTS: usize = N_CONFIGS * S_VALUES.len(); // 1440
+
+/// One cloud + hyper-parameter configuration (288 total).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Config {
+    pub lr_idx: usize,    // 0..3
+    pub batch_idx: usize, // 0..2
+    pub sync: bool,       // true == synchronous training
+    pub vm_idx: usize,    // 0..4
+    pub nvm_idx: usize,   // 0..6
+}
+
+impl Config {
+    pub fn learning_rate(&self) -> f64 {
+        LEARNING_RATES[self.lr_idx]
+    }
+    pub fn batch_size(&self) -> u32 {
+        BATCH_SIZES[self.batch_idx]
+    }
+    pub fn vm(&self) -> VmType {
+        VM_TYPES[self.vm_idx]
+    }
+    pub fn nvms(&self) -> u32 {
+        NVMS[self.vm_idx][self.nvm_idx]
+    }
+    pub fn total_vcpus(&self) -> u32 {
+        self.nvms() * self.vm().vcpus
+    }
+    /// Fleet cost per hour in USD.
+    pub fn fleet_price_hr(&self) -> f64 {
+        self.nvms() as f64 * self.vm().price_hr()
+    }
+
+    /// Dense index in 0..288 (row-major over the Table-I axes).
+    pub fn id(&self) -> usize {
+        (((self.lr_idx * BATCH_SIZES.len() + self.batch_idx) * 2
+            + self.sync as usize)
+            * VM_TYPES.len()
+            + self.vm_idx)
+            * 6
+            + self.nvm_idx
+    }
+
+    pub fn from_id(id: usize) -> Config {
+        assert!(id < N_CONFIGS);
+        let nvm_idx = id % 6;
+        let rest = id / 6;
+        let vm_idx = rest % VM_TYPES.len();
+        let rest = rest / VM_TYPES.len();
+        let sync = rest % 2 == 1;
+        let rest = rest / 2;
+        let batch_idx = rest % BATCH_SIZES.len();
+        let lr_idx = rest / BATCH_SIZES.len();
+        Config { lr_idx, batch_idx, sync, vm_idx, nvm_idx }
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{}x{} lr={:.0e} batch={} {}",
+            self.nvms(),
+            self.vm().name,
+            self.learning_rate(),
+            self.batch_size(),
+            if self.sync { "sync" } else { "async" },
+        )
+    }
+}
+
+/// A (config, sub-sampling level) pair — the unit the optimizer tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Point {
+    pub config: Config,
+    pub s_idx: usize, // 0..5 into S_VALUES
+}
+
+impl Point {
+    pub fn s(&self) -> f64 {
+        S_VALUES[self.s_idx]
+    }
+    pub fn dataset_size(&self) -> u32 {
+        (self.s() * FULL_DATASET as f64).round() as u32
+    }
+    pub fn id(&self) -> usize {
+        self.config.id() * S_VALUES.len() + self.s_idx
+    }
+    pub fn from_id(id: usize) -> Point {
+        assert!(id < N_POINTS);
+        Point {
+            config: Config::from_id(id / S_VALUES.len()),
+            s_idx: id % S_VALUES.len(),
+        }
+    }
+    pub fn is_full(&self) -> bool {
+        self.s_idx == S_VALUES.len() - 1
+    }
+}
+
+/// Iterate all 288 configs.
+pub fn all_configs() -> impl Iterator<Item = Config> {
+    (0..N_CONFIGS).map(Config::from_id)
+}
+
+/// Iterate all 1440 (config, s) points.
+pub fn all_points() -> impl Iterator<Item = Point> {
+    (0..N_POINTS).map(Point::from_id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn catalog_sizes_match_paper() {
+        assert_eq!(N_CONFIGS, 288);
+        assert_eq!(N_POINTS, 1440);
+        assert_eq!(all_configs().count(), 288);
+        assert_eq!(all_points().count(), 1440);
+    }
+
+    #[test]
+    fn config_id_round_trips() {
+        let ids: HashSet<usize> = all_configs().map(|c| c.id()).collect();
+        assert_eq!(ids.len(), N_CONFIGS);
+        for id in 0..N_CONFIGS {
+            assert_eq!(Config::from_id(id).id(), id);
+        }
+        for id in 0..N_POINTS {
+            assert_eq!(Point::from_id(id).id(), id);
+        }
+    }
+
+    #[test]
+    fn vcpu_budget_rows_consistent() {
+        // Each nvm_idx column scales total vCPUs identically across types.
+        for col in 0..6 {
+            let totals: Vec<u32> = (0..4)
+                .map(|row| NVMS[row][col] * VM_TYPES[row].vcpus)
+                .collect();
+            assert!(totals.windows(2).all(|w| w[0] == w[1]), "{totals:?}");
+        }
+    }
+
+    #[test]
+    fn s_values_sorted_and_full_last() {
+        assert!(S_VALUES.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(S_VALUES[4], 1.0);
+        let p = Point { config: Config::from_id(0), s_idx: 4 };
+        assert!(p.is_full());
+        assert_eq!(p.dataset_size(), FULL_DATASET);
+        let p0 = Point { config: Config::from_id(0), s_idx: 0 };
+        assert_eq!(p0.dataset_size(), 1000);
+    }
+
+    #[test]
+    fn fleet_price_positive_and_monotone_in_nvms() {
+        for c in all_configs() {
+            assert!(c.fleet_price_hr() > 0.0);
+        }
+        for vm_idx in 0..4 {
+            let mut last = 0.0;
+            for nvm_idx in 0..6 {
+                let c = Config { lr_idx: 0, batch_idx: 0, sync: true, vm_idx, nvm_idx };
+                assert!(c.fleet_price_hr() > last);
+                last = c.fleet_price_hr();
+            }
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! QoS constraints (paper Eq. 4): each constraint is `q_i(x, s=1) >= 0`
+//! over an observable metric of the training run.
+
+/// Metrics observable when a configuration is tested.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Metric {
+    /// Cloud cost of the training run (USD).
+    Cost,
+    /// Wall-clock duration of the training run (seconds).
+    Time,
+}
+
+impl Metric {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Cost => "cost",
+            Metric::Time => "time",
+        }
+    }
+}
+
+/// Upper-bound constraint `metric <= max`, i.e. `q = max - metric >= 0`.
+///
+/// Constraint metrics are modeled in log space (they are positive with
+/// multiplicative noise), so feasibility probabilities are evaluated as
+/// `P(log metric <= log max)` under the surrogate's Gaussian posterior.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Constraint {
+    pub metric: Metric,
+    pub max: f64,
+}
+
+impl Constraint {
+    pub fn cost_max(max_usd: f64) -> Constraint {
+        Constraint { metric: Metric::Cost, max: max_usd }
+    }
+    pub fn time_max(max_s: f64) -> Constraint {
+        Constraint { metric: Metric::Time, max: max_s }
+    }
+
+    /// q-value of an observation (>= 0 iff feasible).
+    pub fn q(&self, obs_value: f64) -> f64 {
+        self.max - obs_value
+    }
+
+    pub fn is_satisfied(&self, obs_value: f64) -> bool {
+        self.q(obs_value) >= 0.0
+    }
+
+    pub fn describe(&self) -> String {
+        match self.metric {
+            Metric::Cost => format!("cost <= ${:.3}", self.max),
+            Metric::Time => format!("time <= {:.0}s", self.max),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q_sign_convention() {
+        let c = Constraint::cost_max(0.06);
+        assert!(c.is_satisfied(0.05));
+        assert!(c.is_satisfied(0.06));
+        assert!(!c.is_satisfied(0.061));
+        assert!(c.q(0.01) > 0.0 && c.q(0.10) < 0.0);
+    }
+
+    #[test]
+    fn describe_mentions_bound() {
+        assert!(Constraint::cost_max(0.1).describe().contains("0.100"));
+        assert!(Constraint::time_max(120.0).describe().contains("120"));
+    }
+}

@@ -1,0 +1,107 @@
+//! Feature encoding: `Point` → normalized 7-dim vector (6 config features +
+//! sub-sampling rate). Must stay byte-compatible with the Layer-1 kernel
+//! (`python/compile/kernels/matern_fabolas.py`: D_FEAT=6, column 6 is s).
+
+use super::catalog::*;
+
+pub const D_FEAT: usize = 6;
+pub const D_IN: usize = D_FEAT + 1;
+
+/// Normalized feature vector for a (config, s) point.
+///
+/// All features are log-scaled where the underlying parameter spans orders
+/// of magnitude, then min-max normalized to [0, 1]:
+///   0: log10(learning rate)      (1e-5..1e-3)
+///   1: log2(batch size)          (16..256)
+///   2: training mode             (async=0, sync=1)
+///   3: log2(vCPUs per VM)        (1..8)
+///   4: log2(RAM GB per VM)       (2..32)
+///   5: log2(#VMs)                (1..80)
+///   6: sub-sampling rate s       (raw — consumed by the FABOLAS basis
+///                                 kernel, not the Matérn distance)
+pub fn encode(p: &Point) -> [f64; D_IN] {
+    let c = &p.config;
+    let lr = (c.learning_rate().log10() + 5.0) / 2.0; // {-5,-4,-3} -> {0,.5,1}
+    let batch = ((c.batch_size() as f64).log2() - 4.0) / 4.0; // {16,256} -> {0,1}
+    let sync = c.sync as u8 as f64;
+    let vcpus = (c.vm().vcpus as f64).log2() / 3.0; // {1..8} -> {0..1}
+    let ram = ((c.vm().ram_gb as f64).log2() - 1.0) / 4.0; // {2..32} -> {0..1}
+    let nvms = (c.nvms() as f64).log2() / (80f64).log2();
+    [lr, batch, sync, vcpus, ram, nvms, p.s()]
+}
+
+/// Encode as f32 for the XLA artifacts (Layer-2 graphs are f32).
+pub fn encode_f32(p: &Point) -> [f32; D_IN] {
+    let e = encode(p);
+    [
+        e[0] as f32, e[1] as f32, e[2] as f32, e[3] as f32, e[4] as f32,
+        e[5] as f32, e[6] as f32,
+    ]
+}
+
+/// Nearest catalog point to an arbitrary feature vector — used by the
+/// continuous-relaxation heuristics (DIRECT, CMA-ES) to snap their iterates
+/// back onto the discrete grid.
+pub fn nearest_point(feat: &[f64]) -> Point {
+    assert_eq!(feat.len(), D_IN);
+    let mut best = Point::from_id(0);
+    let mut best_d = f64::INFINITY;
+    for p in all_points() {
+        let e = encode(&p);
+        let d: f64 = e.iter().zip(feat).map(|(a, b)| (a - b) * (a - b)).sum();
+        if d < best_d {
+            best_d = d;
+            best = p;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn features_in_unit_interval() {
+        for p in all_points() {
+            let e = encode(&p);
+            for (i, v) in e.iter().enumerate() {
+                assert!(
+                    (0.0..=1.0).contains(v),
+                    "feature {i} = {v} for {p:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn encoding_is_injective() {
+        let mut seen = std::collections::HashSet::new();
+        for p in all_points() {
+            let e = encode(&p);
+            let key: Vec<u64> = e.iter().map(|v| v.to_bits()).collect();
+            assert!(seen.insert(key), "duplicate encoding for {p:?}");
+        }
+    }
+
+    #[test]
+    fn nearest_point_round_trips() {
+        check("nearest(encode(p)) == p", 24, |rng| {
+            let p = Point::from_id(rng.below(N_POINTS));
+            let e = encode(&p);
+            let q = nearest_point(&e);
+            if q == p {
+                Ok(())
+            } else {
+                Err(format!("{p:?} -> {q:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn s_column_is_raw_rate() {
+        let p = Point { config: Config::from_id(7), s_idx: 2 };
+        assert_eq!(encode(&p)[6], S_VALUES[2]);
+    }
+}

@@ -1,0 +1,18 @@
+//! The TrimTuner search space (paper Table I): cloud parameters (VM type,
+//! #VMs) × TensorFlow parameters (learning rate, batch size, training mode)
+//! × sub-sampling rate.
+//!
+//! A [`Config`] is one of the 288 cloud/hyper-parameter combinations; a
+//! [`Point`] pairs a config with a sub-sampling level (one of 5), giving the
+//! 1440-point grid over which the optimizers search. [`encode`] maps a point
+//! to the 7-dimensional normalized feature vector shared with the Layer-1
+//! Pallas kernel (column 6 is `s` — keep in sync with
+//! `python/compile/kernels/matern_fabolas.py`).
+
+mod catalog;
+mod constraint;
+mod encode;
+
+pub use catalog::*;
+pub use constraint::*;
+pub use encode::*;

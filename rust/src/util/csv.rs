@@ -1,0 +1,141 @@
+//! Minimal CSV writer/reader for experiment outputs and datasets.
+//!
+//! Only what the harness needs: plain comma separation, no quoting of
+//! numeric cells, header row, `#`-prefixed comment lines ignored on read.
+
+use anyhow::{bail, Context, Result};
+use std::fs::{self, File};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Streaming CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    ncols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut out = BufWriter::new(
+            File::create(&path)
+                .with_context(|| format!("create {:?}", path.as_ref()))?,
+        );
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, ncols: header.len() })
+    }
+
+    pub fn comment(&mut self, text: &str) -> Result<()> {
+        writeln!(self.out, "# {text}")?;
+        Ok(())
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> Result<()> {
+        if cells.len() != self.ncols {
+            bail!("row has {} cells, header has {}", cells.len(), self.ncols);
+        }
+        writeln!(self.out, "{}", cells.join(","))?;
+        Ok(())
+    }
+
+    pub fn row_mixed(&mut self, label: &str, vals: &[f64]) -> Result<()> {
+        let mut cells = vec![label.to_string()];
+        cells.extend(vals.iter().map(|v| format!("{v}")));
+        self.row(&cells)
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Fully-parsed CSV table.
+#[derive(Debug, Clone)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn read<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let f = File::open(&path)
+            .with_context(|| format!("open {:?}", path.as_ref()))?;
+        let mut lines = BufReader::new(f).lines();
+        let header = loop {
+            match lines.next() {
+                Some(l) => {
+                    let l = l?;
+                    if l.trim().is_empty() || l.starts_with('#') {
+                        continue;
+                    }
+                    break l.split(',').map(|s| s.trim().to_string()).collect();
+                }
+                None => bail!("empty csv {:?}", path.as_ref()),
+            }
+        };
+        let mut rows = Vec::new();
+        for l in lines {
+            let l = l?;
+            if l.trim().is_empty() || l.starts_with('#') {
+                continue;
+            }
+            rows.push(l.split(',').map(|s| s.trim().to_string()).collect());
+        }
+        Ok(CsvTable { header, rows })
+    }
+
+    pub fn col_index(&self, name: &str) -> Result<usize> {
+        self.header
+            .iter()
+            .position(|h| h == name)
+            .with_context(|| format!("missing column {name}"))
+    }
+
+    pub fn f64_col(&self, name: &str) -> Result<Vec<f64>> {
+        let i = self.col_index(name)?;
+        self.rows
+            .iter()
+            .map(|r| {
+                r[i].parse::<f64>()
+                    .with_context(|| format!("parse {:?} in col {name}", r[i]))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let dir = std::env::temp_dir().join("trimtuner_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w =
+                CsvWriter::create(&path, &["name", "x", "y"]).unwrap();
+            w.comment("a comment").unwrap();
+            w.row_mixed("a", &[1.5, 2.0]).unwrap();
+            w.row_mixed("b", &[3.0, -4.25]).unwrap();
+            w.flush().unwrap();
+        }
+        let t = CsvTable::read(&path).unwrap();
+        assert_eq!(t.header, vec!["name", "x", "y"]);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.f64_col("y").unwrap(), vec![2.0, -4.25]);
+        assert_eq!(t.rows[1][0], "b");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn row_arity_enforced() {
+        let dir = std::env::temp_dir().join("trimtuner_csv_test2");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        assert!(w.row(&["1".into()]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,14 @@
+//! Substrate utilities: RNG, statistics, CSV I/O, timing, property testing.
+//!
+//! The offline crate registry for this build has no `rand`, `serde`,
+//! `criterion` or `proptest`, so these are small, self-contained
+//! implementations with unit tests of their own (see DESIGN.md §2,
+//! "Environment deviations").
+
+pub mod csv;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;

@@ -1,0 +1,64 @@
+//! Tiny property-testing harness (the offline registry has no `proptest`).
+//!
+//! A property is a closure over a seeded [`Rng`]; `check` runs it for `cases`
+//! independent seeds and reports the first failing seed so the case can be
+//! replayed deterministically:
+//!
+//! ```
+//! use trimtuner::util::proptest::check;
+//! check("addition commutes", 64, |rng| {
+//!     let (a, b) = (rng.f64(), rng.f64());
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use super::rng::Rng;
+
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` for `cases` seeds; panic with the failing seed + message.
+pub fn check(
+    name: &str,
+    cases: usize,
+    mut prop: impl FnMut(&mut Rng) -> Result<(), String>,
+) {
+    // Base seed is fixed so CI is deterministic; override with
+    // TRIMTUNER_PROPTEST_SEED to explore.
+    let base: u64 = std::env::var("TRIMTUNER_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x7714);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed at case {case} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("u64 below bound", 32, |rng| {
+            let n = 1 + rng.below(100);
+            let v = rng.below(n);
+            if v < n {
+                Ok(())
+            } else {
+                Err(format!("{v} >= {n}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 4, |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,118 @@
+//! Timing helpers shared by the experiment harness and the custom benches.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Summary of a micro-benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>6} iters  mean {}  p50 {}  p99 {}  min {}",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean_s),
+            fmt_dur(self.p50_s),
+            fmt_dur(self.p99_s),
+            fmt_dur(self.min_s),
+        )
+    }
+}
+
+pub fn fmt_dur(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:8.3} s")
+    } else if s >= 1e-3 {
+        format!("{:8.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:8.3} µs", s * 1e6)
+    } else {
+        format!("{:8.1} ns", s * 1e9)
+    }
+}
+
+/// Criterion-free micro-bench: warm up, then time `iters` runs of `f`.
+/// `f` should return something observable to prevent dead-code elimination;
+/// we black-box it via `std::hint::black_box`.
+pub fn bench<T>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut() -> T,
+) -> BenchStats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pick = |p: f64| samples[((p * (samples.len() - 1) as f64) as usize).min(samples.len() - 1)];
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        p50_s: pick(0.5),
+        p99_s: pick(0.99),
+        min_s: samples[0],
+        max_s: *samples.last().unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let stats = bench("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..50_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(stats.mean_s > 0.0);
+        assert!(stats.min_s <= stats.p50_s && stats.p50_s <= stats.max_s);
+        assert_eq!(stats.iters, 5);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(2.0).contains('s'));
+        assert!(fmt_dur(2e-3).contains("ms"));
+        assert!(fmt_dur(2e-6).contains("µs"));
+        assert!(fmt_dur(2e-9).contains("ns"));
+    }
+}

@@ -1,0 +1,62 @@
+//! Integration: threaded coordinator on the simulated cloud, including the
+//! snapshot-semantics contract the engine's init phase relies on.
+
+use trimtuner::coordinator::{Job, JobLauncher, SimLauncher, WorkerPool};
+use trimtuner::sim::{CloudSim, NetKind};
+use trimtuner::space::{Config, Point, S_INIT};
+
+#[test]
+fn pool_processes_many_jobs_across_workers() {
+    let pool = WorkerPool::new(Box::new(SimLauncher::new(NetKind::Mlp, 1)), 3);
+    let n = 24u64;
+    for i in 0..n {
+        pool.submit(Job {
+            id: i,
+            config: Config::from_id((i as usize * 13) % 288),
+            s_levels: S_INIT.to_vec(),
+        })
+        .unwrap();
+    }
+    let mut ids: Vec<u64> = (0..n).map(|_| pool.recv().unwrap().job_id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n).collect::<Vec<_>>());
+    pool.shutdown();
+}
+
+#[test]
+fn snapshot_outcomes_are_consistent_with_direct_simulation() {
+    // The launcher's noisy observations must stay centered on the same
+    // ground truth the engine's replay datasets are drawn from.
+    let net = NetKind::Rnn;
+    let launcher = SimLauncher::new(net, 7);
+    let sim = CloudSim::new(net);
+    let config = Config::from_id(120);
+    let job = Job { id: 0, config, s_levels: S_INIT.to_vec() };
+    let r = launcher.launch(&job).unwrap();
+    for (s_idx, o) in &r.outcomes {
+        let gt = sim.ground_truth(&Point { config, s_idx: *s_idx });
+        assert!(
+            (o.acc - gt.acc).abs() < 0.05,
+            "snapshot s{} acc {} vs gt {}",
+            s_idx,
+            o.acc,
+            gt.acc
+        );
+        assert!(o.time_s > 0.3 * gt.time_s && o.time_s < 3.0 * gt.time_s);
+    }
+}
+
+#[test]
+fn charged_cost_is_cheaper_than_individual_tests() {
+    // the paper's init-phase claim: 4 snapshot levels for the price of the
+    // largest one
+    let launcher = SimLauncher::new(NetKind::Cnn, 9);
+    let job = Job {
+        id: 1,
+        config: Config::from_id(200),
+        s_levels: S_INIT.to_vec(),
+    };
+    let r = launcher.launch(&job).unwrap();
+    let sum: f64 = r.outcomes.iter().map(|(_, o)| o.cost_usd).sum();
+    assert!(r.charged_cost < 0.75 * sum, "{} vs {}", r.charged_cost, sum);
+}

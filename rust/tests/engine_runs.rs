@@ -1,0 +1,165 @@
+//! Integration tests: full Algorithm-1 runs over the measurement campaigns.
+
+use trimtuner::engine::{self, EngineConfig, OptimizerKind};
+use trimtuner::models::ModelKind;
+use trimtuner::sim::{Dataset, NetKind};
+use trimtuner::space::Constraint;
+
+fn caps(net: NetKind) -> Vec<Constraint> {
+    vec![Constraint::cost_max(net.paper_cost_cap())]
+}
+
+#[test]
+fn trimtuner_dt_reaches_90pct_on_every_network() {
+    for net in NetKind::ALL {
+        let dataset = Dataset::generate(net, 42);
+        let mut cfg = EngineConfig::paper_default(
+            OptimizerKind::TrimTuner(ModelKind::Trees),
+            1,
+        );
+        cfg.max_iters = 30;
+        let run = engine::run(&dataset, &caps(net), &cfg);
+        let best = run
+            .records
+            .iter()
+            .map(|r| r.accuracy_c)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(
+            best >= 0.90 * run.optimum_acc,
+            "{net:?}: best Accuracy_C {best:.4} < 90% of {:.4}",
+            run.optimum_acc
+        );
+    }
+}
+
+#[test]
+fn runs_are_deterministic_per_seed() {
+    let dataset = Dataset::generate(NetKind::Rnn, 42);
+    let mk = |seed| {
+        let mut cfg = EngineConfig::paper_default(
+            OptimizerKind::TrimTuner(ModelKind::Trees),
+            seed,
+        );
+        cfg.max_iters = 6;
+        engine::run(&dataset, &caps(NetKind::Rnn), &cfg)
+    };
+    let (a, b, c) = (mk(5), mk(5), mk(6));
+    assert_eq!(a.records.len(), b.records.len());
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.tested.id(), rb.tested.id());
+        assert_eq!(ra.accuracy_c, rb.accuracy_c);
+    }
+    // a different seed must explore differently
+    let same = a
+        .records
+        .iter()
+        .zip(&c.records)
+        .all(|(x, y)| x.tested.id() == y.tested.id());
+    assert!(!same, "seeds 5 and 6 produced identical runs");
+}
+
+#[test]
+fn baselines_test_only_full_configs_and_trimtuner_subsamples() {
+    let dataset = Dataset::generate(NetKind::Mlp, 42);
+    let mut cfg = EngineConfig::paper_default(OptimizerKind::Eic, 2);
+    cfg.max_iters = 8;
+    let run = engine::run(&dataset, &caps(NetKind::Mlp), &cfg);
+    assert!(run.records.iter().all(|r| r.tested.is_full()));
+
+    let mut cfg = EngineConfig::paper_default(
+        OptimizerKind::TrimTuner(ModelKind::Trees),
+        2,
+    );
+    cfg.max_iters = 12;
+    let run = engine::run(&dataset, &caps(NetKind::Mlp), &cfg);
+    let sub = run.records.iter().filter(|r| !r.tested.is_full()).count();
+    assert!(
+        sub * 2 > run.records.len(),
+        "TrimTuner barely sub-sampled: {sub}/{}",
+        run.records.len()
+    );
+}
+
+#[test]
+fn engine_accounting_invariants() {
+    let dataset = Dataset::generate(NetKind::Rnn, 42);
+    for optimizer in [
+        OptimizerKind::TrimTuner(ModelKind::Trees),
+        OptimizerKind::Eic,
+        OptimizerKind::EicUsd,
+        OptimizerKind::Fabolas,
+        OptimizerKind::RandomSearch,
+    ] {
+        let mut cfg = EngineConfig::paper_default(optimizer, 3);
+        cfg.max_iters = 6;
+        let run = engine::run(&dataset, &caps(NetKind::Rnn), &cfg);
+        let mut last_cost = 0.0;
+        let mut seen = std::collections::HashSet::new();
+        for r in &run.records {
+            assert!(r.cum_cost >= last_cost - 1e-12, "{optimizer:?}: cost regressed");
+            last_cost = r.cum_cost;
+            assert!(r.explore_cost >= 0.0);
+            assert!(r.incumbent.is_full(), "{optimizer:?}: incumbent not full");
+            assert!((0.0..=1.0).contains(&r.accuracy_c));
+            assert!(seen.insert(r.tested.id()), "{optimizer:?}: retested a point");
+        }
+        assert_eq!(run.records.len(), 4 + 6, "{optimizer:?}: record count");
+    }
+}
+
+#[test]
+fn trimtuner_cheaper_than_eic_at_same_iteration_count() {
+    // The paper's core claim in miniature: same number of probes, far less
+    // exploration spend thanks to sub-sampling.
+    let dataset = Dataset::generate(NetKind::Cnn, 42);
+    let caps = caps(NetKind::Cnn);
+    let mut tt_cost = 0.0;
+    let mut eic_cost = 0.0;
+    for seed in 0..3 {
+        let mut cfg = EngineConfig::paper_default(
+            OptimizerKind::TrimTuner(ModelKind::Trees),
+            seed,
+        );
+        cfg.max_iters = 15;
+        tt_cost += engine::run(&dataset, &caps, &cfg).total_cost();
+        let mut cfg = EngineConfig::paper_default(OptimizerKind::Eic, seed);
+        cfg.max_iters = 15;
+        eic_cost += engine::run(&dataset, &caps, &cfg).total_cost();
+    }
+    assert!(
+        tt_cost * 2.0 < eic_cost,
+        "sub-sampling saved too little: TrimTuner ${tt_cost:.3} vs EIc ${eic_cost:.3}"
+    );
+}
+
+#[test]
+fn random_search_is_dominated_on_average() {
+    // best-ever Accuracy_C over the run, averaged across seeds: random can
+    // get lucky on single seeds, so allow a small tolerance.
+    let dataset = Dataset::generate(NetKind::Cnn, 42);
+    let caps = caps(NetKind::Cnn);
+    let best_of = |run: &trimtuner::engine::RunResult| {
+        run.records
+            .iter()
+            .map(|r| r.accuracy_c)
+            .fold(f64::NEG_INFINITY, f64::max)
+    };
+    let mut tt = 0.0;
+    let mut rnd = 0.0;
+    for seed in 0..4 {
+        let mut cfg = EngineConfig::paper_default(
+            OptimizerKind::TrimTuner(ModelKind::Trees),
+            seed,
+        );
+        cfg.max_iters = 30;
+        tt += best_of(&engine::run(&dataset, &caps, &cfg));
+        let mut cfg =
+            EngineConfig::paper_default(OptimizerKind::RandomSearch, seed);
+        cfg.max_iters = 30;
+        rnd += best_of(&engine::run(&dataset, &caps, &cfg));
+    }
+    assert!(
+        tt >= rnd - 0.1,
+        "TrimTuner {tt:.3} clearly worse than random {rnd:.3}"
+    );
+}

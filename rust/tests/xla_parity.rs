@@ -1,0 +1,49 @@
+//! Integration tests for the PJRT runtime: AOT artifacts (Pallas Layer-1
+//! kernel + JAX Layer-2 graphs) must agree with the native Rust
+//! implementations. Skipped (with a message) when `make artifacts` has not
+//! been run — CI should always run it first.
+
+use trimtuner::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIPPING xla parity tests: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn cov_artifact_matches_native_kernel() {
+    let Some(rt) = runtime() else { return };
+    let (max_err, n) = trimtuner::runtime::cov_parity_check(&rt).unwrap();
+    assert!(n > 10_000);
+    assert!(max_err < 1e-4, "cov parity err {max_err}");
+}
+
+#[test]
+fn gp_posterior_artifact_matches_native_gp() {
+    let Some(rt) = runtime() else { return };
+    let (mu_err, var_err) = trimtuner::runtime::gp_parity_check(&rt).unwrap();
+    assert!(mu_err < 1e-3, "mu err {mu_err}");
+    assert!(var_err < 1e-3, "var err {var_err}");
+}
+
+#[test]
+fn mlp_artifacts_train_and_learn() {
+    let Some(rt) = runtime() else { return };
+    let (first, last, acc) = trimtuner::runtime::mlp_train_smoke(&rt, 25).unwrap();
+    assert!(last < first * 0.8, "loss {first} -> {last}");
+    assert!(acc > 0.5, "eval accuracy {acc}");
+}
+
+#[test]
+fn manifest_shapes_match_rust_constants() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.manifest.d_in, trimtuner::space::D_IN);
+    assert_eq!(rt.manifest.n_hyp, 10);
+    assert!(rt.manifest.n_train >= 48, "artifact too small for 44-iter runs");
+    assert_eq!(rt.manifest.artifacts.len(), 8);
+}
