@@ -1,23 +1,35 @@
 //! Acquisition-function micro-benchmarks: the cost of one α_T evaluation
-//! (the unit Table IV counts), its EI/EIc baselines, and p_opt estimation.
+//! (the unit Table IV counts), its EI/EIc baselines, p_opt estimation, and
+//! the per-iteration candidate-sweep latency of the sequential vs the
+//! parallel slate evaluator.
+//!
+//! Results are also written to `BENCH_acquisition.json` (override the path
+//! with the `BENCH_JSON` env var) so CI can track the perf trajectory.
 mod common;
 
 use trimtuner::acq::{
-    eic, eic_usd, fabolas_alpha, trimtuner_alpha, EntropyEstimator,
-    TrimTunerAcq,
+    eic, eic_usd, fabolas_alpha, joint_feasibility_many, trimtuner_alpha,
+    EntropyEstimator, TrimTunerAcq,
 };
+use trimtuner::heuristics::AlphaCache;
 use trimtuner::models::{Feat, ModelKind};
 use trimtuner::space::{encode, Config, Point};
-use trimtuner::util::timer::bench;
+use trimtuner::util::timer::{bench, BenchStats};
 use trimtuner::util::Rng;
 
 fn main() {
     common::print_header("acquisition");
+    let mut all: Vec<BenchStats> = Vec::new();
     let caps = common::caps();
     let full_feats: Vec<Feat> = (0..288)
         .map(|id| encode(&Point { config: Config::from_id(id), s_idx: 4 }))
         .collect();
     let probe = encode(&Point { config: Config::from_id(33), s_idx: 1 });
+    // β = 0.1 of the 1440-point grid: the slate one engine iteration sweeps
+    let slate: Vec<Point> = (0..1440).step_by(10).map(Point::from_id).collect();
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
 
     for (label, kind, k) in [
         ("dt", ModelKind::Trees, 1usize),
@@ -35,24 +47,35 @@ fn main() {
             est.p_opt(models.acc.as_ref())
         });
         println!("{}", stats.report());
+        all.push(stats);
 
         let shortlist: Vec<usize> = (0..32).collect();
+        let shortlist_feats: Vec<Feat> =
+            shortlist.iter().map(|&id| full_feats[id]).collect();
+        let feas = joint_feasibility_many(&models, &caps, &shortlist_feats);
         let ctx = TrimTunerAcq {
             models: &models,
             est: &est,
             constraints: &caps,
-            full_feats: &full_feats,
             inc_shortlist: &shortlist,
+            inc_shortlist_feats: &shortlist_feats,
+            inc_feas: if models.constraints_fixed_under_condition() {
+                Some(feas.as_slice())
+            } else {
+                None
+            },
             baseline,
         };
         let stats = bench(&format!("{label} alpha_T(1 candidate)"), 1, 10, || {
             trimtuner_alpha(&ctx, &probe)
         });
         println!("{}", stats.report());
+        all.push(stats);
         let stats = bench(&format!("{label} fabolas(1 candidate)"), 1, 10, || {
             fabolas_alpha(&models, &est, baseline, &probe)
         });
         println!("{}", stats.report());
+        all.push(stats);
         let stats = bench(&format!("{label} eic x288"), 2, 10, || {
             full_feats
                 .iter()
@@ -60,6 +83,7 @@ fn main() {
                 .sum::<f64>()
         });
         println!("{}", stats.report());
+        all.push(stats);
         let stats = bench(&format!("{label} eic_usd x288"), 2, 10, || {
             full_feats
                 .iter()
@@ -67,5 +91,46 @@ fn main() {
                 .sum::<f64>()
         });
         println!("{}", stats.report());
+        all.push(stats);
+
+        // The headline comparison: one engine iteration's α_T candidate
+        // sweep, sequential vs sharded across all cores. mcmc8 is skipped
+        // (same code path as gp-ml2, 8x the runtime).
+        if k <= 1 {
+            let mut per_threads = Vec::new();
+            for threads in [1usize, workers] {
+                let stats = bench(
+                    &format!(
+                        "{label} alpha_T slate x{} threads={threads}",
+                        slate.len()
+                    ),
+                    1,
+                    5,
+                    || {
+                        let mut alpha = AlphaCache::shared(|p: &Point| {
+                            trimtuner_alpha(&ctx, &encode(p))
+                        })
+                        .with_threads(threads);
+                        alpha.eval_slate(&slate);
+                        alpha.best()
+                    },
+                );
+                println!("{}", stats.report());
+                per_threads.push(stats.mean_s);
+                all.push(stats);
+            }
+            if per_threads.len() == 2 && per_threads[1] > 0.0 {
+                println!(
+                    "{:<44} {:.2}x speedup ({} workers)",
+                    format!("{label} slate parallel vs sequential"),
+                    per_threads[0] / per_threads[1],
+                    workers,
+                );
+            }
+        }
     }
+
+    let path = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_acquisition.json".to_string());
+    common::write_bench_json("acquisition", &path, &all);
 }

@@ -1,5 +1,7 @@
 //! Recommendation-latency benchmark (paper Table III): wall-clock time of
-//! one full choose-next + refit + recommend iteration per optimizer.
+//! one full choose-next + refit + recommend iteration per optimizer, plus
+//! the sequential-vs-parallel candidate-sweep comparison (the engine's
+//! slate evaluator honours `TRIMTUNER_SLATE_THREADS`).
 mod common;
 
 use trimtuner::engine::{self, EngineConfig, OptimizerKind};
@@ -12,6 +14,36 @@ fn main() {
     common::print_header("recommendation latency (Table III)");
     let dataset = Dataset::generate(NetKind::Rnn, 42);
     let caps = [Constraint::cost_max(NetKind::Rnn.paper_cost_cap())];
+
+    // per-iteration recommendation latency, serial slate vs all cores
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut means = Vec::new();
+    for threads in [1usize, workers] {
+        std::env::set_var("TRIMTUNER_SLATE_THREADS", threads.to_string());
+        let mut cfg = EngineConfig::paper_default(
+            OptimizerKind::TrimTuner(ModelKind::Trees),
+            1,
+        );
+        cfg.max_iters = 6;
+        let run = engine::run(&dataset, &caps, &cfg);
+        let mean = run.mean_rec_wall_s();
+        println!(
+            "{:<44} mean rec latency {:8.1} ms",
+            format!("trimtuner-dt threads={threads}"),
+            mean * 1e3
+        );
+        means.push(mean);
+    }
+    std::env::remove_var("TRIMTUNER_SLATE_THREADS");
+    if means.len() == 2 && means[1] > 0.0 {
+        println!(
+            "{:<44} {:.2}x speedup ({workers} workers)",
+            "trimtuner-dt parallel vs sequential",
+            means[0] / means[1],
+        );
+    }
 
     for optimizer in [
         OptimizerKind::TrimTuner(ModelKind::Gp),

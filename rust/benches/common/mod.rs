@@ -5,6 +5,7 @@ use trimtuner::acq::Models;
 use trimtuner::models::{FitOptions, ModelKind};
 use trimtuner::sim::{CloudSim, NetKind, Outcome};
 use trimtuner::space::{Config, Constraint, Point};
+use trimtuner::util::timer::BenchStats;
 use trimtuner::util::Rng;
 
 pub fn observations(n: usize, seed: u64) -> (Vec<Point>, Vec<Outcome>) {
@@ -36,4 +37,33 @@ pub fn caps() -> Vec<Constraint> {
 
 pub fn print_header(name: &str) {
     println!("\n### bench: {name} ###");
+}
+
+/// Serialize bench results as JSON so CI can archive the perf trajectory
+/// (no serde in the offline registry — names are plain ASCII labels, so a
+/// minimal escape of `"` and `\` suffices).
+pub fn write_bench_json(bench: &str, path: &str, all: &[BenchStats]) {
+    let mut out = String::new();
+    out.push_str(&format!("{{\n  \"bench\": \"{bench}\",\n  \"results\": [\n"));
+    for (i, s) in all.iter().enumerate() {
+        let name = s.name.replace('\\', "\\\\").replace('"', "\\\"");
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"iters\": {}, \"mean_s\": {:e}, \
+             \"p50_s\": {:e}, \"p99_s\": {:e}, \"min_s\": {:e}, \
+             \"max_s\": {:e}}}{}\n",
+            name,
+            s.iters,
+            s.mean_s,
+            s.p50_s,
+            s.p99_s,
+            s.min_s,
+            s.max_s,
+            if i + 1 == all.len() { "" } else { "," },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write(path, out) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

@@ -36,6 +36,9 @@ impl EntropyEstimator {
     }
 
     /// p_opt over the representative set under `acc_model`'s posterior.
+    /// The joint posterior is built through the models' batched prediction
+    /// cores (GP: one multi-RHS triangular solve over the representative
+    /// set; trees: one tree-major slate pass), not per-point predictions.
     pub fn p_opt(&self, acc_model: &dyn Surrogate) -> Vec<f64> {
         let post = acc_model.posterior(&self.rep_feats);
         let m = self.rep_feats.len();

@@ -11,5 +11,10 @@ mod trimtuner;
 pub use ei::{ei, eic, eic_usd};
 pub use entropy::EntropyEstimator;
 pub use fabolas::fabolas_alpha;
-pub use models::{feasibility_prob, joint_feasibility, select_incumbent, select_incumbent_from, Incumbent, Models, FEAS_THRESHOLD, FEAS_THRESHOLD_HYST};
+pub use models::{
+    feasibility_prob, feasibility_probs, joint_feasibility,
+    joint_feasibility_many, select_incumbent, select_incumbent_from,
+    select_incumbent_over, select_incumbent_over_with_feas, Incumbent,
+    Models, FEAS_THRESHOLD, FEAS_THRESHOLD_HYST,
+};
 pub use trimtuner::{trimtuner_alpha, TrimTunerAcq};

@@ -8,7 +8,7 @@ use crate::models::{
 };
 use crate::sim::Outcome;
 use crate::space::{encode, Constraint, Metric, Point};
-use crate::util::stats::normal_cdf;
+use crate::util::stats::{cmp_nan_low, normal_cdf};
 
 /// Accuracy + log-cost + log-time surrogates over (config, s) features.
 pub struct Models {
@@ -97,6 +97,24 @@ impl Models {
         mu.exp().max(1e-9)
     }
 
+    /// Batched [`Models::predicted_cost`] over a slate of points.
+    pub fn predicted_cost_many(&self, xs: &[Feat]) -> Vec<f64> {
+        self.cost
+            .predict_many(xs)
+            .into_iter()
+            .map(|(mu, _)| mu.exp().max(1e-9))
+            .collect()
+    }
+
+    /// Does [`Models::condition`] leave the constraint (cost/time) models
+    /// untouched? True for tree ensembles — see the perf note on
+    /// `condition`. Callers may then precompute constraint feasibility
+    /// once per iteration and reuse it across conditioned clones; keep
+    /// this predicate in sync with `condition` below.
+    pub fn constraints_fixed_under_condition(&self) -> bool {
+        self.kind == ModelKind::Trees
+    }
+
     /// Clone of the bundle with one simulated observation added to every
     /// surrogate (hyper-parameters frozen) — TrimTuner's 1-root
     /// Gauss–Hermite "simulate the refit" step (§III, simulation approach).
@@ -138,6 +156,21 @@ pub fn feasibility_prob(models: &Models, c: &Constraint, x: &Feat) -> f64 {
     normal_cdf(z)
 }
 
+/// Batched [`feasibility_prob`] over a slate of points (one constraint).
+pub fn feasibility_probs(
+    models: &Models,
+    c: &Constraint,
+    xs: &[Feat],
+) -> Vec<f64> {
+    let lim = c.max.max(1e-12).ln();
+    models
+        .metric_model(c.metric)
+        .predict_many(xs)
+        .into_iter()
+        .map(|(mu, std)| normal_cdf((lim - mu) / std.max(1e-9)))
+        .collect()
+}
+
 /// Joint feasibility (constraints independent, paper Eq. 5 product).
 pub fn joint_feasibility(
     models: &Models,
@@ -148,6 +181,23 @@ pub fn joint_feasibility(
         .iter()
         .map(|c| feasibility_prob(models, c, x))
         .product()
+}
+
+/// Batched [`joint_feasibility`] over a slate of points: one
+/// [`Surrogate::predict_many`] call per constraint instead of a scalar
+/// prediction per (constraint, point) pair.
+pub fn joint_feasibility_many(
+    models: &Models,
+    constraints: &[Constraint],
+    xs: &[Feat],
+) -> Vec<f64> {
+    let mut out = vec![1.0; xs.len()];
+    for c in constraints {
+        for (o, p) in out.iter_mut().zip(feasibility_probs(models, c, xs)) {
+            *o *= p;
+        }
+    }
+    out
 }
 
 /// Recommended incumbent (paper footnote 2: feasible with probability
@@ -191,20 +241,62 @@ pub fn select_incumbent_from(
     full_feats: &[Feat],
     subset: &[usize],
 ) -> Incumbent {
+    let feats: Vec<Feat> = subset.iter().map(|&id| full_feats[id]).collect();
+    select_incumbent_over(models, constraints, subset, &feats)
+}
+
+/// Incumbent scan over pre-gathered subset features (`feats[k]` is the
+/// feature vector of config `subset[k]`) — the α_T hot path gathers the
+/// shortlist features once per iteration instead of once per candidate.
+pub fn select_incumbent_over(
+    models: &Models,
+    constraints: &[Constraint],
+    subset: &[usize],
+    feats: &[Feat],
+) -> Incumbent {
+    let feas = joint_feasibility_many(models, constraints, feats);
+    let accs = models.acc.predict_many(feats);
+    incumbent_scan(subset, &feas, &accs)
+}
+
+/// [`select_incumbent_over`] with the joint feasibility also supplied by
+/// the caller. Valid when conditioning leaves the constraint models
+/// untouched ([`Models::constraints_fixed_under_condition`]): the
+/// shortlist feasibility is then iteration-constant and the engine
+/// precomputes it once instead of re-deriving it inside every α_T call.
+pub fn select_incumbent_over_with_feas(
+    models: &Models,
+    subset: &[usize],
+    feats: &[Feat],
+    feas: &[f64],
+) -> Incumbent {
+    assert_eq!(subset.len(), feas.len());
+    let accs = models.acc.predict_many(feats);
+    incumbent_scan(subset, feas, &accs)
+}
+
+fn incumbent_scan(
+    subset: &[usize],
+    feas: &[f64],
+    accs: &[(f64, f64)],
+) -> Incumbent {
     let mut best: Option<Incumbent> = None;
     let mut fallback: Option<Incumbent> = None;
-    for &id in subset {
-        let x = &full_feats[id];
-        let p = joint_feasibility(models, constraints, x);
-        let (acc, _) = models.acc.predict(x);
+    for ((&id, &p), &(acc, _)) in subset.iter().zip(feas).zip(accs) {
         let cand = Incumbent { config_id: id, pred_acc: acc, feas_prob: p };
+        // NaN-safe comparisons: a NaN prediction loses to any real value
+        // instead of freezing an early entry in place
         if p >= FEAS_THRESHOLD
-            && best.as_ref().map_or(true, |b| acc > b.pred_acc)
+            && best
+                .as_ref()
+                .map_or(true, |b| cmp_nan_low(acc, b.pred_acc).is_gt())
         {
             best = Some(cand);
         }
         if fallback.as_ref().map_or(true, |f| {
-            (p, acc) > (f.feas_prob, f.pred_acc)
+            cmp_nan_low(p, f.feas_prob)
+                .then_with(|| cmp_nan_low(acc, f.pred_acc))
+                .is_gt()
         }) {
             fallback = Some(cand);
         }

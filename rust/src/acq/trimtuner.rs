@@ -4,7 +4,9 @@
 //! satisfies every QoS constraint.
 
 use super::entropy::EntropyEstimator;
-use super::models::{joint_feasibility, select_incumbent_from, Models};
+use super::models::{
+    select_incumbent_over, select_incumbent_over_with_feas, Models,
+};
 use crate::models::Feat;
 use crate::space::Constraint;
 
@@ -13,11 +15,20 @@ pub struct TrimTunerAcq<'a> {
     pub models: &'a Models,
     pub est: &'a EntropyEstimator,
     pub constraints: &'a [Constraint],
-    /// encode(config_i, s=1) for all 288 configs (incumbent scan)
-    pub full_feats: &'a [Feat],
     /// CEA-ranked shortlist of config ids scanned for the simulated
-    /// incumbent (perf: O(shortlist) instead of O(288) per candidate)
+    /// incumbent (perf: O(shortlist) instead of O(288 configs) per
+    /// candidate)
     pub inc_shortlist: &'a [usize],
+    /// `encode(config at s=1)` for each shortlist id, gathered once per
+    /// iteration so the per-candidate incumbent scan allocates nothing
+    pub inc_shortlist_feats: &'a [Feat],
+    /// Joint feasibility of each shortlist entry under the *current*
+    /// models, precomputed once per iteration by the engine. Only valid
+    /// when conditioning leaves the constraint models untouched
+    /// ([`Models::constraints_fixed_under_condition`] — tree surrogates);
+    /// `None` recomputes per candidate (GPs, whose conditioning shifts the
+    /// cost/time posteriors).
+    pub inc_feas: Option<&'a [f64]>,
     /// KL(p_opt ‖ u) of the current accuracy model
     pub baseline: f64,
 }
@@ -33,19 +44,25 @@ pub struct TrimTunerAcq<'a> {
 pub fn trimtuner_alpha(ctx: &TrimTunerAcq<'_>, x: &Feat) -> f64 {
     // 1. simulate testing (x, s)
     let updated = ctx.models.condition(x);
-    // 2. incumbent under updated models (shortlist scan)
-    let inc = select_incumbent_from(
-        &updated,
-        ctx.constraints,
-        ctx.full_feats,
-        ctx.inc_shortlist,
-    );
-    // 3. probability the new incumbent is actually feasible
-    let p_feas = joint_feasibility(
-        &updated,
-        ctx.constraints,
-        &ctx.full_feats[inc.config_id],
-    );
+    // 2. incumbent under updated models (shortlist scan; the precomputed
+    //    per-iteration feasibility is used when conditioning cannot move it)
+    let inc = match ctx.inc_feas {
+        Some(feas) => select_incumbent_over_with_feas(
+            &updated,
+            ctx.inc_shortlist,
+            ctx.inc_shortlist_feats,
+            feas,
+        ),
+        None => select_incumbent_over(
+            &updated,
+            ctx.constraints,
+            ctx.inc_shortlist,
+            ctx.inc_shortlist_feats,
+        ),
+    };
+    // 3. probability the new incumbent is actually feasible — already
+    //    computed by the shortlist scan for exactly this config
+    let p_feas = inc.feas_prob;
     // 4. information gain per dollar
     let gain = ctx.est.info_gain(updated.acc.as_ref(), ctx.baseline);
     p_feas * gain / ctx.models.predicted_cost(x)
@@ -62,8 +79,8 @@ mod tests {
     struct Fixture {
         models: Models,
         est: EntropyEstimator,
-        full_feats: Vec<Feat>,
         shortlist: Vec<usize>,
+        shortlist_feats: Vec<Feat>,
         constraints: Vec<Constraint>,
         baseline: f64,
     }
@@ -93,7 +110,16 @@ mod tests {
             EntropyEstimator::kl_from_uniform(&est.p_opt(models.acc.as_ref()));
         let constraints = vec![Constraint::cost_max(cap)];
         let shortlist: Vec<usize> = (0..288).step_by(4).collect();
-        Fixture { models, est, full_feats, shortlist, constraints, baseline }
+        let shortlist_feats: Vec<Feat> =
+            shortlist.iter().map(|&id| full_feats[id]).collect();
+        Fixture {
+            models,
+            est,
+            shortlist,
+            shortlist_feats,
+            constraints,
+            baseline,
+        }
     }
 
     fn ctx(f: &Fixture) -> TrimTunerAcq<'_> {
@@ -101,8 +127,9 @@ mod tests {
             models: &f.models,
             est: &f.est,
             constraints: &f.constraints,
-            full_feats: &f.full_feats,
             inc_shortlist: &f.shortlist,
+            inc_shortlist_feats: &f.shortlist_feats,
+            inc_feas: None,
             baseline: f.baseline,
         }
     }
@@ -158,5 +185,31 @@ mod tests {
         let c = ctx(&f);
         let x = encode(&Point { config: Config::from_id(33), s_idx: 1 });
         assert_eq!(trimtuner_alpha(&c, &x), trimtuner_alpha(&c, &x));
+    }
+
+    #[test]
+    fn precomputed_shortlist_feasibility_is_bit_identical_for_trees() {
+        // For tree surrogates, conditioning shares the constraint models,
+        // so the engine's precomputed shortlist feasibility must reproduce
+        // the recompute-inside-α_T path exactly.
+        let f = setup(ModelKind::Trees, 0.02);
+        let feas = crate::acq::joint_feasibility_many(
+            &f.models,
+            &f.constraints,
+            &f.shortlist_feats,
+        );
+        let slow = ctx(&f);
+        let fast = TrimTunerAcq { inc_feas: Some(feas.as_slice()), ..ctx(&f) };
+        let mut rng = Rng::new(51);
+        for _ in 0..6 {
+            let p = Point {
+                config: Config::from_id(rng.below(288)),
+                s_idx: rng.below(5),
+            };
+            let x = encode(&p);
+            let a = trimtuner_alpha(&slow, &x);
+            let b = trimtuner_alpha(&fast, &x);
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
     }
 }

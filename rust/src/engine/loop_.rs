@@ -4,17 +4,18 @@
 
 use super::metrics::{accuracy_c, IterRecord, RunResult};
 use crate::acq::{
-    eic, eic_usd, fabolas_alpha, select_incumbent, trimtuner_alpha,
-    EntropyEstimator, Models, TrimTunerAcq,
+    eic, eic_usd, fabolas_alpha, joint_feasibility_many, select_incumbent,
+    trimtuner_alpha, EntropyEstimator, Models, TrimTunerAcq,
 };
-use crate::heuristics::{cea_scores, select_next, AlphaCache, FilterKind};
+use crate::heuristics::{cea_scores_feats, select_next, AlphaCache, FilterKind};
 use crate::models::{Feat, FitOptions, ModelKind};
 use crate::opt::latin_hypercube;
 use crate::sim::{Dataset, Outcome};
 use crate::space::{
-    encode, nearest_point, Config, Constraint, Point, N_CONFIGS, S_INIT,
-    S_VALUES,
+    encode, nearest_point, Config, Constraint, Point, N_CONFIGS, N_POINTS,
+    S_INIT, S_VALUES,
 };
+use crate::util::stats::cmp_nan_low;
 use crate::util::timer::Timer;
 use crate::util::Rng;
 use std::collections::HashSet;
@@ -159,9 +160,15 @@ pub fn run(
     cfg: &EngineConfig,
 ) -> RunResult {
     let mut rng = Rng::new(cfg.seed);
+    // Per-run precomputed context: the full-data-set feature matrix (the
+    // incumbent scan's domain) and the feature vector of every grid point,
+    // indexed by Point::id(). The grid never changes, so the acquisition
+    // closures look features up instead of re-encoding per α evaluation.
     let full_feats: Vec<Feat> = (0..N_CONFIGS)
         .map(|id| encode(&Point { config: Config::from_id(id), s_idx: 4 }))
         .collect();
+    let grid_feats: Vec<Feat> =
+        (0..N_POINTS).map(|id| encode(&Point::from_id(id))).collect();
     let (optimum, optimum_acc) = dataset
         .best_feasible_full(constraints)
         .map(|(p, a)| (Some(p), a))
@@ -195,7 +202,8 @@ pub fn run(
             ((cfg.beta * untested.len() as f64).ceil() as usize).max(1);
 
         let (chosen, n_evals) = choose_next(
-            cfg, constraints, &st, &untested, &full_feats, budget, &mut rng,
+            cfg, constraints, &st, &untested, &full_feats, &grid_feats,
+            budget, &mut rng,
         );
 
         let o = st.observe(dataset, chosen);
@@ -311,12 +319,19 @@ fn untested_points(
 }
 
 /// Pick the next point to test (one iteration's acquisition maximization).
+///
+/// Every α closure is a pure `Fn + Sync` over precomputed per-iteration
+/// context ([`AlphaCache::shared`]), so the slate heuristics can shard the
+/// candidate sweep across threads while staying bit-identical to the
+/// sequential path.
+#[allow(clippy::too_many_arguments)]
 fn choose_next(
     cfg: &EngineConfig,
     constraints: &[Constraint],
     st: &State,
     untested: &[Point],
     full_feats: &[Feat],
+    grid_feats: &[Feat],
     budget: usize,
     rng: &mut Rng,
 ) -> (Point, usize) {
@@ -328,12 +343,12 @@ fn choose_next(
             let eta = incumbent_eta(st, constraints);
             let models = &st.models;
             let use_usd = cfg.optimizer == OptimizerKind::EicUsd;
-            let mut alpha = AlphaCache::new(move |p: &Point| {
-                let x = encode(p);
+            let mut alpha = AlphaCache::shared(move |p: &Point| {
+                let x = &grid_feats[p.id()];
                 if use_usd {
-                    eic_usd(models, constraints, &x, eta)
+                    eic_usd(models, constraints, x, eta)
                 } else {
-                    eic(models, constraints, &x, eta)
+                    eic(models, constraints, x, eta)
                 }
             });
             select_next(
@@ -353,8 +368,8 @@ fn choose_next(
             );
             let models = &st.models;
             let est_ref = &est;
-            let mut alpha = AlphaCache::new(move |p: &Point| {
-                fabolas_alpha(models, est_ref, baseline, &encode(p))
+            let mut alpha = AlphaCache::shared(move |p: &Point| {
+                fabolas_alpha(models, est_ref, baseline, &grid_feats[p.id()])
             });
             select_next(
                 cfg.filter,
@@ -372,20 +387,41 @@ fn choose_next(
             let baseline = EntropyEstimator::kl_from_uniform(
                 &est.p_opt(st.models.acc.as_ref()),
             );
-            // incumbent shortlist: top configs by CEA under current models
+            // incumbent shortlist: top configs by CEA under current
+            // models, with the feature rows gathered once per iteration
             let shortlist: Vec<usize> =
                 cea_order.iter().take(INC_SHORTLIST).copied().collect();
+            let shortlist_feats: Vec<Feat> =
+                shortlist.iter().map(|&id| full_feats[id]).collect();
+            // When conditioning leaves the constraint models untouched
+            // (trees — see Models::constraints_fixed_under_condition), the
+            // shortlist feasibility scanned inside every α_T call is
+            // iteration-constant — compute it once here instead of
+            // 2 × |shortlist| surrogate predictions per candidate. GP
+            // conditioning shifts the constraint posteriors, so GPs keep
+            // the per-candidate recomputation.
+            let shortlist_feas: Option<Vec<f64>> =
+                if st.models.constraints_fixed_under_condition() {
+                    Some(joint_feasibility_many(
+                        &st.models,
+                        constraints,
+                        &shortlist_feats,
+                    ))
+                } else {
+                    None
+                };
             let ctx = TrimTunerAcq {
                 models: &st.models,
                 est: &est,
                 constraints,
-                full_feats,
                 inc_shortlist: &shortlist,
+                inc_shortlist_feats: &shortlist_feats,
+                inc_feas: shortlist_feas.as_deref(),
                 baseline,
             };
             let ctx_ref = &ctx;
-            let mut alpha = AlphaCache::new(move |p: &Point| {
-                trimtuner_alpha(ctx_ref, &encode(p))
+            let mut alpha = AlphaCache::shared(move |p: &Point| {
+                trimtuner_alpha(ctx_ref, &grid_feats[p.id()])
             });
             select_next(
                 cfg.filter,
@@ -414,12 +450,11 @@ fn build_estimator(
     full_feats: &[Feat],
     rng: &mut Rng,
 ) -> (EntropyEstimator, Vec<usize>) {
-    let full_points: Vec<Point> = (0..N_CONFIGS)
-        .map(|id| Point { config: Config::from_id(id), s_idx: 4 })
-        .collect();
-    let scores = cea_scores(&st.models, constraints, &full_points);
-    let mut order: Vec<usize> = (0..full_points.len()).collect();
-    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    // full_feats[i] == encode(config_i at s=1), precomputed by run() — no
+    // per-iteration re-encoding of the 288-config grid
+    let scores = cea_scores_feats(&st.models, constraints, full_feats);
+    let mut order: Vec<usize> = (0..full_feats.len()).collect();
+    order.sort_by(|&a, &b| cmp_nan_low(scores[b], scores[a]));
     let rep: Vec<Feat> = order
         .iter()
         .take(cfg.n_rep.max(2))

@@ -7,6 +7,7 @@
 use crate::acq::Models;
 use crate::models::Feat;
 use crate::space::{encode, Config, Point, N_CONFIGS};
+use crate::util::stats::{cmp_nan_high, cmp_nan_low};
 
 /// One point of the predicted cost/accuracy frontier.
 #[derive(Debug, Clone, Copy)]
@@ -22,12 +23,11 @@ pub struct ParetoPoint {
 /// Input order is irrelevant; output is sorted by ascending cost.
 pub fn pareto_front(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
     let mut sorted: Vec<ParetoPoint> = points.to_vec();
-    // ascending cost, ties broken by descending accuracy
+    // ascending cost, ties broken by descending accuracy; NaN predictions
+    // sort last on both axes (and can never enter the front below)
     sorted.sort_by(|a, b| {
-        a.pred_cost
-            .partial_cmp(&b.pred_cost)
-            .unwrap()
-            .then(b.pred_acc.partial_cmp(&a.pred_acc).unwrap())
+        cmp_nan_high(a.pred_cost, b.pred_cost)
+            .then_with(|| cmp_nan_low(b.pred_acc, a.pred_acc))
     });
     let mut front = Vec::new();
     let mut best_acc = f64::NEG_INFINITY;
@@ -43,16 +43,19 @@ pub fn pareto_front(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
 /// Predict the cost/accuracy frontier over all full-data-set configs under
 /// the current surrogate models.
 pub fn recommend_pareto(models: &Models) -> Vec<ParetoPoint> {
-    let pts: Vec<ParetoPoint> = (0..N_CONFIGS)
-        .map(|id| {
-            let x: Feat =
-                encode(&Point { config: Config::from_id(id), s_idx: 4 });
-            let (acc, _) = models.acc.predict(&x);
-            ParetoPoint {
-                config_id: id,
-                pred_acc: acc,
-                pred_cost: models.predicted_cost(&x),
-            }
+    let xs: Vec<Feat> = (0..N_CONFIGS)
+        .map(|id| encode(&Point { config: Config::from_id(id), s_idx: 4 }))
+        .collect();
+    let accs = models.acc.predict_many(&xs);
+    let costs = models.predicted_cost_many(&xs);
+    let pts: Vec<ParetoPoint> = accs
+        .into_iter()
+        .zip(costs)
+        .enumerate()
+        .map(|(id, ((acc, _), cost))| ParetoPoint {
+            config_id: id,
+            pred_acc: acc,
+            pred_cost: cost,
         })
         .collect();
     pareto_front(&pts)

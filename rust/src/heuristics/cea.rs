@@ -5,7 +5,8 @@
 //! scores the *point itself* (no model refits, no p_opt), so it can be
 //! evaluated on the entire untested set every iteration.
 
-use crate::acq::{feasibility_prob, Models};
+use crate::acq::{joint_feasibility_many, Models};
+use crate::models::Feat;
 use crate::space::{encode, Constraint, Point};
 
 /// CEA score for every point in `untested` (same order).
@@ -14,17 +15,23 @@ pub fn cea_scores(
     constraints: &[Constraint],
     untested: &[Point],
 ) -> Vec<f64> {
-    untested
-        .iter()
-        .map(|p| {
-            let x = encode(p);
-            let (acc, _) = models.acc.predict(&x);
-            let pfeas: f64 = constraints
-                .iter()
-                .map(|c| feasibility_prob(models, c, &x))
-                .product();
-            acc.max(0.0) * pfeas
-        })
+    let xs: Vec<Feat> = untested.iter().map(encode).collect();
+    cea_scores_feats(models, constraints, &xs)
+}
+
+/// CEA over pre-encoded features: one batched accuracy prediction plus one
+/// batched feasibility pass per constraint, instead of per-point scalar
+/// predictions across three surrogates.
+pub fn cea_scores_feats(
+    models: &Models,
+    constraints: &[Constraint],
+    xs: &[Feat],
+) -> Vec<f64> {
+    let accs = models.acc.predict_many(xs);
+    let feas = joint_feasibility_many(models, constraints, xs);
+    accs.into_iter()
+        .zip(feas)
+        .map(|((acc, _), pfeas)| acc.max(0.0) * pfeas)
         .collect()
 }
 

@@ -90,8 +90,8 @@ impl CmaesSearch {
             if pop.len() < 2 {
                 break;
             }
-            // maximize: sort descending by value
-            pop.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            // maximize: sort descending by value (NaN α ranked last)
+            pop.sort_by(|a, b| crate::util::stats::cmp_nan_low(b.1, a.1));
             let old_mean = mean.clone();
             for i in 0..n {
                 mean[i] = pop

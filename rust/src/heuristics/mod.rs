@@ -17,15 +17,15 @@ mod cea;
 mod cmaes;
 mod direct;
 
-pub use cea::cea_scores;
+pub use cea::{cea_scores, cea_scores_feats};
 pub use cmaes::CmaesSearch;
 pub use direct::DirectSearch;
 
 use crate::acq::Models;
 use crate::space::{encode, Constraint, Point};
-use crate::util::stats::argmax;
+use crate::util::stats::{argmax, cmp_nan_low};
 use crate::util::Rng;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 /// Which heuristic an optimizer uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -61,14 +61,62 @@ impl FilterKind {
 }
 
 /// Memoizing α evaluator: unique grid evaluations count against the budget.
+///
+/// Two construction modes:
+/// - [`AlphaCache::new`] wraps any `FnMut` — sequential evaluation only
+///   (adaptive searches and tests that count calls);
+/// - [`AlphaCache::shared`] wraps a pure `Fn + Sync`, which additionally
+///   lets [`AlphaCache::eval_slate`] shard a whole candidate slate across
+///   `std::thread::scope` workers. Results are merged back in slate order,
+///   so cache contents, unique-eval count and the id-tie-broken argmax are
+///   bit-identical to the sequential path regardless of worker count.
 pub struct AlphaCache<'a> {
-    f: Box<dyn FnMut(&Point) -> f64 + 'a>,
+    f: AlphaFn<'a>,
     cache: HashMap<usize, f64>,
+    threads: usize,
+}
+
+enum AlphaFn<'a> {
+    Serial(Box<dyn FnMut(&Point) -> f64 + 'a>),
+    Shared(Box<dyn Fn(&Point) -> f64 + Sync + 'a>),
+}
+
+/// Worker count for slate evaluation: `TRIMTUNER_SLATE_THREADS` if set,
+/// otherwise the machine's available parallelism.
+fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("TRIMTUNER_SLATE_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 impl<'a> AlphaCache<'a> {
+    /// Sequential evaluator (the closure may capture mutable state).
     pub fn new(f: impl FnMut(&Point) -> f64 + 'a) -> Self {
-        AlphaCache { f: Box::new(f), cache: HashMap::new() }
+        AlphaCache {
+            f: AlphaFn::Serial(Box::new(f)),
+            cache: HashMap::new(),
+            threads: 1,
+        }
+    }
+
+    /// Thread-shareable evaluator: `f` must be a pure function of the
+    /// point (all TrimTuner acquisition functions are — they only read
+    /// fitted models and per-iteration context).
+    pub fn shared(f: impl Fn(&Point) -> f64 + Sync + 'a) -> Self {
+        AlphaCache {
+            f: AlphaFn::Shared(Box::new(f)),
+            cache: HashMap::new(),
+            threads: default_threads(),
+        }
+    }
+
+    /// Override the slate worker count (1 forces sequential evaluation).
+    pub fn with_threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
     }
 
     pub fn eval(&mut self, p: &Point) -> f64 {
@@ -76,9 +124,67 @@ impl<'a> AlphaCache<'a> {
         if let Some(&v) = self.cache.get(&id) {
             return v;
         }
-        let v = (self.f)(p);
+        let v = match &mut self.f {
+            AlphaFn::Serial(f) => f(p),
+            AlphaFn::Shared(f) => f(p),
+        };
         self.cache.insert(id, v);
         v
+    }
+
+    /// Evaluate α on every point of `slate` (cached points are skipped,
+    /// duplicates deduplicated). With a [`AlphaCache::shared`] evaluator
+    /// and more than one worker the fresh points are sharded across scoped
+    /// threads; α must then be order-independent, which holds for every
+    /// acquisition function here (fixed common random numbers, no RNG).
+    pub fn eval_slate(&mut self, slate: &[Point]) {
+        let mut seen = HashSet::new();
+        let fresh: Vec<Point> = slate
+            .iter()
+            .filter(|p| {
+                let id = p.id();
+                !self.cache.contains_key(&id) && seen.insert(id)
+            })
+            .copied()
+            .collect();
+        if fresh.is_empty() {
+            return;
+        }
+        match &mut self.f {
+            AlphaFn::Serial(f) => {
+                for p in &fresh {
+                    let v = f(p);
+                    self.cache.insert(p.id(), v);
+                }
+            }
+            AlphaFn::Shared(f) => {
+                let workers = self.threads.min(fresh.len());
+                if workers <= 1 {
+                    for p in &fresh {
+                        let v = f(p);
+                        self.cache.insert(p.id(), v);
+                    }
+                    return;
+                }
+                let f: &(dyn Fn(&Point) -> f64 + Sync) = &**f;
+                let mut results = vec![0.0f64; fresh.len()];
+                let chunk = (fresh.len() + workers - 1) / workers;
+                std::thread::scope(|s| {
+                    for (pts, out) in
+                        fresh.chunks(chunk).zip(results.chunks_mut(chunk))
+                    {
+                        s.spawn(move || {
+                            for (p, slot) in pts.iter().zip(out.iter_mut()) {
+                                *slot = f(p);
+                            }
+                        });
+                    }
+                });
+                for (p, v) in fresh.iter().zip(results) {
+                    self.cache.insert(p.id(), v);
+                }
+            }
+        }
     }
 
     pub fn unique_evals(&self) -> usize {
@@ -89,13 +195,12 @@ impl<'a> AlphaCache<'a> {
         // deterministic argmax: ties break towards the lowest point id
         // (HashMap iteration order is seeded per instance — without an
         // explicit tie-break, equal-α candidates would make runs
-        // non-reproducible)
+        // non-reproducible); NaN α ranks below every real value instead of
+        // panicking
         self.cache
             .iter()
             .max_by(|a, b| {
-                a.1.partial_cmp(b.1)
-                    .unwrap()
-                    .then_with(|| b.0.cmp(a.0))
+                cmp_nan_low(*a.1, *b.1).then_with(|| b.0.cmp(a.0))
             })
             .map(|(&id, &v)| (Point::from_id(id), v))
     }
@@ -104,6 +209,12 @@ impl<'a> AlphaCache<'a> {
 /// Run one candidate-selection round: pick the untested point maximizing α,
 /// spending at most `budget` unique α evaluations (plus the heuristic's own
 /// cheap work). Returns the chosen point and the number of α evaluations.
+///
+/// The slate-based heuristics (CEA / random filter / no filter) know their
+/// whole candidate set up front and hand it to [`AlphaCache::eval_slate`],
+/// which shards the expensive α evaluations across threads; the adaptive
+/// searches (DIRECT, CMA-ES) pick each iterate from the previous values and
+/// stay sequential.
 pub fn select_next(
     kind: FilterKind,
     models: &Models,
@@ -117,25 +228,21 @@ pub fn select_next(
     let budget = budget.clamp(1, untested.len());
     match kind {
         FilterKind::NoFilter => {
-            for p in untested {
-                alpha.eval(p);
-            }
+            alpha.eval_slate(untested);
         }
         FilterKind::Cea => {
             let scores = cea_scores(models, constraints, untested);
             let mut order: Vec<usize> = (0..untested.len()).collect();
-            order.sort_by(|&a, &b| {
-                scores[b].partial_cmp(&scores[a]).unwrap()
-            });
-            for &i in order.iter().take(budget) {
-                alpha.eval(&untested[i]);
-            }
+            order.sort_by(|&a, &b| cmp_nan_low(scores[b], scores[a]));
+            let slate: Vec<Point> =
+                order.iter().take(budget).map(|&i| untested[i]).collect();
+            alpha.eval_slate(&slate);
         }
         FilterKind::RandomFilter => {
             let idx = rng.sample_indices(untested.len(), budget);
-            for i in idx {
-                alpha.eval(&untested[i]);
-            }
+            let slate: Vec<Point> =
+                idx.into_iter().map(|i| untested[i]).collect();
+            alpha.eval_slate(&slate);
         }
         FilterKind::Direct => {
             DirectSearch::new().run(untested, budget, alpha);
@@ -246,6 +353,61 @@ mod tests {
             &mut rng,
         );
         assert_eq!(evals, 50);
+    }
+
+    #[test]
+    fn eval_slate_parallel_matches_sequential_bitwise() {
+        let objective = |p: &Point| {
+            // arbitrary deterministic, irrational-ish surface
+            let e = encode(p);
+            (e[0] * 31.7).sin() + e[5] / (1.0 + e[3])
+        };
+        let slate: Vec<Point> = (0..400).map(Point::from_id).collect();
+        let mut seq = AlphaCache::shared(objective).with_threads(1);
+        seq.eval_slate(&slate);
+        let mut par = AlphaCache::shared(objective).with_threads(7);
+        par.eval_slate(&slate);
+        assert_eq!(seq.unique_evals(), par.unique_evals());
+        let (ps, vs) = seq.best().unwrap();
+        let (pp, vp) = par.best().unwrap();
+        assert_eq!(ps.id(), pp.id());
+        assert_eq!(vs.to_bits(), vp.to_bits());
+        for p in &slate {
+            assert_eq!(seq.eval(p).to_bits(), par.eval(p).to_bits());
+        }
+    }
+
+    #[test]
+    fn eval_slate_skips_cached_and_duplicate_points() {
+        let calls = std::sync::atomic::AtomicUsize::new(0);
+        let mut cache = AlphaCache::shared(|p: &Point| {
+            calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            p.id() as f64
+        })
+        .with_threads(4);
+        cache.eval(&Point::from_id(3));
+        let slate: Vec<Point> =
+            [0, 1, 3, 1, 2, 0].into_iter().map(Point::from_id).collect();
+        cache.eval_slate(&slate);
+        assert_eq!(cache.unique_evals(), 4);
+        assert_eq!(calls.load(std::sync::atomic::Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn alpha_cache_best_survives_nan() {
+        let mut cache = AlphaCache::new(|p: &Point| {
+            if p.id() == 1 {
+                f64::NAN
+            } else {
+                p.id() as f64
+            }
+        });
+        for id in 0..4 {
+            cache.eval(&Point::from_id(id));
+        }
+        let (best, v) = cache.best().unwrap();
+        assert_eq!(best.id(), 3);
+        assert_eq!(v, 3.0);
     }
 
     #[test]

@@ -21,8 +21,11 @@
 //! - Layer 1 (build-time Pallas, `python/compile/kernels/`): the fused
 //!   Matérn-5/2 × sub-sampling covariance-matrix kernel.
 //!
-//! The [`runtime`] module loads the AOT artifacts through PJRT (`xla` crate)
-//! so that Python is never on the optimization path.
+//! The `runtime` module loads the AOT artifacts through PJRT (`xla` crate)
+//! so that Python is never on the optimization path. It is gated behind the
+//! off-by-default `xla` cargo feature: the default build is fully offline
+//! and self-contained, while `--features xla` (with the `xla` crate
+//! vendored) re-enables the accelerated backend.
 
 pub mod cli;
 pub mod util;
@@ -35,5 +38,6 @@ pub mod acq;
 pub mod heuristics;
 pub mod engine;
 pub mod coordinator;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod experiments;

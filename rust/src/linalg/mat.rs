@@ -35,6 +35,12 @@ impl Mat {
         Mat { rows: r, cols: c, data }
     }
 
+    /// Build from an existing row-major buffer (must be rows × cols long).
+    pub fn from_flat(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "flat buffer size mismatch");
+        Mat { rows, cols, data }
+    }
+
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
         let mut m = Mat::zeros(rows, cols);
         for i in 0..rows {

@@ -35,7 +35,12 @@ fn main() -> Result<()> {
         Some("optimize") => cmd_optimize(&args),
         Some("generate-datasets") => cmd_generate(&args),
         Some("repro") => experiments::cmd_repro(&args),
+        #[cfg(feature = "xla")]
         Some("runtime-check") => trimtuner::runtime::cmd_runtime_check(&args),
+        #[cfg(not(feature = "xla"))]
+        Some("runtime-check") => {
+            bail!("runtime-check requires a build with `--features xla`")
+        }
         Some("serve") => trimtuner::coordinator::cmd_serve(&args),
         _ => {
             print!("{USAGE}");

@@ -103,6 +103,64 @@ impl Gp {
         &self.params
     }
 
+    /// Cross-covariance matrix K(X, Xq) (one column per query) and the
+    /// standardized predictive means, shared by every batched path. The
+    /// mean is accumulated in ascending training-row order — the same op
+    /// order as the scalar `predict_norm` dot product, keeping the batched
+    /// paths bit-identical to the scalar ones.
+    fn cross_cov_mus(
+        &self,
+        params: &KernelParams,
+        alpha: &[f64],
+        xs: &[Feat],
+    ) -> (Mat, Vec<f64>) {
+        let n = self.xs.len();
+        let m = xs.len();
+        let mut ks = Mat::zeros(n, m);
+        for (i, xi) in self.xs.iter().enumerate() {
+            let row = ks.row_mut(i);
+            for (c, xq) in xs.iter().enumerate() {
+                row[c] = params.k(self.basis, xi, xq);
+            }
+        }
+        let mut mus = vec![0.0; m];
+        for (i, &a) in alpha.iter().enumerate() {
+            for (mu, &k) in mus.iter_mut().zip(ks.row(i)) {
+                *mu += k * a;
+            }
+        }
+        (ks, mus)
+    }
+
+    /// Batched core shared by `predict_many` and the joint posterior:
+    /// standardized predictive means and *unclamped* variances for one
+    /// hyper-parameter sample, via one K(X, Xq) build and one multi-RHS
+    /// forward solve against the stored Cholesky factor. The per-point
+    /// accumulation order mirrors `predict_norm` op for op, so results are
+    /// bit-identical to the scalar path.
+    fn predict_raw_many(
+        &self,
+        params: &KernelParams,
+        chol: &Cholesky,
+        alpha: &[f64],
+        xs: &[Feat],
+    ) -> (Vec<f64>, Vec<f64>) {
+        let (ks, mus) = self.cross_cov_mus(params, alpha, xs);
+        let v = chol.solve_lower_multi(&ks);
+        let mut ss = vec![0.0; xs.len()];
+        for i in 0..self.xs.len() {
+            for (s, &z) in ss.iter_mut().zip(v.row(i)) {
+                *s += z * z;
+            }
+        }
+        let vars = xs
+            .iter()
+            .zip(&ss)
+            .map(|(x, &s)| params.k_diag(self.basis, x) - s)
+            .collect();
+        (mus, vars)
+    }
+
     /// Joint posterior (mean, cov factor) over `xs` for one hyper sample.
     #[allow(clippy::type_complexity)]
     fn posterior_component(
@@ -113,14 +171,16 @@ impl Gp {
         xs: &[Feat],
     ) -> (Vec<f64>, Option<Cholesky>, Option<Vec<f64>>) {
         let m = xs.len();
-        let mut vcols: Vec<Vec<f64>> = Vec::with_capacity(m);
-        let mut mean = Vec::with_capacity(m);
-        for x in xs {
-            let ks = params.cov_vec(self.basis, &self.xs, x);
-            let mu: f64 = ks.iter().zip(alpha).map(|(k, a)| k * a).sum();
-            mean.push(mu * self.y_std + self.y_mean);
-            vcols.push(chol.solve_lower(&ks));
-        }
+        let n = self.xs.len();
+        // batched cross-covariance + one multi-RHS solve (the p_opt hot
+        // path calls this once per α_T evaluation)
+        let (ks, mus) = self.cross_cov_mus(params, alpha, xs);
+        let mean: Vec<f64> =
+            mus.into_iter().map(|mu| mu * self.y_std + self.y_mean).collect();
+        let vmat = chol.solve_lower_multi(&ks);
+        let vcols: Vec<Vec<f64>> = (0..m)
+            .map(|c| (0..n).map(|i| vmat[(i, c)]).collect())
+            .collect();
         // posterior covariance: K(Xq,Xq) - V^T V, scaled back
         let mut cov = Mat::zeros(m, m);
         for i in 0..m {
@@ -263,6 +323,63 @@ impl Surrogate for Gp {
             mean * self.y_std + self.y_mean,
             var.max(1e-12).sqrt() * self.y_std,
         )
+    }
+
+    /// Native batch prediction: one shared multi-RHS triangular solve for
+    /// the whole query slate (per hyper-parameter sample) instead of an
+    /// O(n²) solve per point. Bit-identical to mapping [`Gp::predict`].
+    fn predict_many(&self, xs: &[Feat]) -> Vec<(f64, f64)> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        let chol = self.chol.as_ref().expect("predict before fit");
+        let (mus, vars) =
+            self.predict_raw_many(&self.params, chol, &self.alpha, xs);
+        if self.extra.is_empty() {
+            return mus
+                .into_iter()
+                .zip(vars)
+                .map(|(mu, var)| {
+                    let std = var.max(1e-12).sqrt();
+                    (mu * self.y_std + self.y_mean, std * self.y_std)
+                })
+                .collect();
+        }
+        // Mixture moments over MAP + sampled hyper-parameters. Component
+        // order and clamping mirror the scalar path exactly: the MAP
+        // variance round-trips through predict_norm's sqrt (std²), the
+        // sampled components clamp the raw variance.
+        let map_vars: Vec<f64> = vars
+            .iter()
+            .map(|&v| {
+                let std = v.max(1e-12).sqrt();
+                std * std
+            })
+            .collect();
+        let mut comp_mus = vec![mus];
+        let mut comp_vars = vec![map_vars];
+        for (params, chol_k, alpha_k) in &self.extra {
+            let (mk, vk) = self.predict_raw_many(params, chol_k, alpha_k, xs);
+            comp_mus.push(mk);
+            comp_vars.push(vk.into_iter().map(|v| v.max(1e-12)).collect());
+        }
+        let kf = comp_mus.len() as f64;
+        (0..xs.len())
+            .map(|c| {
+                let mean: f64 =
+                    comp_mus.iter().map(|m| m[c]).sum::<f64>() / kf;
+                let var: f64 = comp_mus
+                    .iter()
+                    .zip(&comp_vars)
+                    .map(|(m, v)| v[c] + (m[c] - mean) * (m[c] - mean))
+                    .sum::<f64>()
+                    / kf;
+                (
+                    mean * self.y_std + self.y_mean,
+                    var.max(1e-12).sqrt() * self.y_std,
+                )
+            })
+            .collect()
     }
 
     fn posterior(&self, xs: &[Feat]) -> Posterior {
@@ -438,6 +555,33 @@ mod tests {
         for (i, p) in probes.iter().enumerate() {
             let (mu, _) = gp.predict(p);
             assert!((post.mean[i] - mu).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn predict_many_bitwise_matches_scalar() {
+        // ML-II GP and hyper-marginalized mixture GP: the batched path must
+        // reproduce the scalar path bit for bit.
+        for k in [1usize, 4] {
+            let mut rng = Rng::new(11 + k as u64);
+            let (xs, ys) = toy(18, &mut rng);
+            let mut gp = Gp::with_hyper_samples(Basis::Acc, 7, k);
+            gp.fit(&xs, &ys, FitOptions { hyperopt: true, restarts: 1 });
+            let probes: Vec<Feat> = (0..25)
+                .map(|_| {
+                    let mut f = [0.0; D_IN];
+                    for v in f.iter_mut() {
+                        *v = rng.f64();
+                    }
+                    f
+                })
+                .collect();
+            let batch = gp.predict_many(&probes);
+            for (p, (bm, bs)) in probes.iter().zip(&batch) {
+                let (m, s) = gp.predict(p);
+                assert_eq!(m.to_bits(), bm.to_bits(), "k={k} mean mismatch");
+                assert_eq!(s.to_bits(), bs.to_bits(), "k={k} std mismatch");
+            }
         }
     }
 

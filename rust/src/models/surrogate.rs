@@ -158,14 +158,21 @@ impl Posterior {
 /// The acquisition hot path relies on [`Surrogate::condition`]: a cheap
 /// clone extended with one hypothetical observation while hyper-parameters
 /// stay frozen (GP: O(n²) Cholesky extension; trees: rebuild on n+1 points).
-pub trait Surrogate: Send {
+///
+/// `Send + Sync` because the slate evaluator shares fitted surrogates
+/// (read-only) across `std::thread::scope` workers.
+pub trait Surrogate: Send + Sync {
     /// Fit from scratch on (xs, ys).
     fn fit(&mut self, xs: &[Feat], ys: &[f64], opts: FitOptions);
 
     /// Predictive mean and standard deviation at one point.
     fn predict(&self, x: &Feat) -> (f64, f64);
 
-    /// Batch prediction (may be overridden with a faster path).
+    /// Batch prediction over a whole candidate slate. The default maps
+    /// [`Surrogate::predict`]; both native models override it with a
+    /// genuinely batched pass (GP: one multi-RHS triangular solve; trees:
+    /// one cache-friendly tree-major traversal) that is bit-identical to
+    /// the scalar path.
     fn predict_many(&self, xs: &[Feat]) -> Vec<(f64, f64)> {
         xs.iter().map(|x| self.predict(x)).collect()
     }

@@ -40,7 +40,7 @@ pub fn nelder_mead(
     }
 
     for _ in 0..opts.max_iters {
-        simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        simplex.sort_by(|a, b| crate::util::stats::cmp_nan_high(a.1, b.1));
         let best = simplex[0].1;
         let worst = simplex[n].1;
         // Convergence: simplex collapsed in x and f.
@@ -103,7 +103,7 @@ pub fn nelder_mead(
         }
     }
 
-    simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    simplex.sort_by(|a, b| crate::util::stats::cmp_nan_high(a.1, b.1));
     simplex.swap_remove(0)
 }
 

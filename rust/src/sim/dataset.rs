@@ -74,7 +74,7 @@ impl Dataset {
         all_points()
             .filter(|p| p.is_full() && self.is_feasible(p, constraints))
             .map(|p| (p, self.outcome(&p).acc))
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .max_by(|a, b| crate::util::stats::cmp_nan_low(a.1, b.1))
     }
 
     /// Paper Table II: feasible + near-optimal (within 5% of best) counts

@@ -64,15 +64,21 @@ impl Rng {
         lo + (hi - lo) * self.f64()
     }
 
-    /// Uniform integer in [0, n). Unbiased via rejection.
+    /// Uniform integer in [0, n). Unbiased via rejection: `zone` is
+    /// 2^64 mod n (computed as `n.wrapping_neg() % n`, the standard
+    /// formulation), and rejecting the `zone` lowest draws leaves exactly
+    /// 2^64 − (2^64 mod n) values — a multiple of n — mapping uniformly
+    /// onto [0, n) under `% n`. This is the minimal rejection zone: the
+    /// previous `u64::MAX - (u64::MAX % n)` cutoff was also unbiased but
+    /// rejected n values (instead of 0) whenever n divides 2^64.
     #[inline]
     pub fn below(&mut self, n: usize) -> usize {
         debug_assert!(n > 0);
         let n = n as u64;
-        let zone = u64::MAX - (u64::MAX % n);
+        let zone = n.wrapping_neg() % n;
         loop {
             let v = self.next_u64();
-            if v < zone {
+            if v >= zone {
                 return (v % n) as usize;
             }
         }
@@ -147,6 +153,30 @@ mod tests {
         for _ in 0..10_000 {
             let v = r.f64();
             assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_rejection_zone_is_exact() {
+        // The accepted range [zone, 2^64) must have a length divisible by n
+        // for every n, which is what makes the draw unbiased.
+        for n in [1u64, 2, 3, 7, 10, 288, 1440, (1 << 33) + 5, u64::MAX / 3] {
+            let zone = n.wrapping_neg() % n;
+            // length of [zone, 2^64) = 2^64 - zone ≡ 0 (mod n)
+            assert_eq!(zone.wrapping_neg() % n, 0, "n = {n}");
+        }
+    }
+
+    #[test]
+    fn below_deterministic_per_seed() {
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for n in [1usize, 2, 3, 7, 288, 1440] {
+            for _ in 0..200 {
+                let (x, y) = (a.below(n), b.below(n));
+                assert_eq!(x, y);
+                assert!(x < n);
+            }
         }
     }
 

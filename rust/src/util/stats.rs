@@ -1,5 +1,33 @@
 //! Scalar statistics and Gaussian special functions.
 
+use std::cmp::Ordering;
+
+/// Total order for ranking scores: ascending, with every NaN below every
+/// real value. `max_by(|a, b| cmp_nan_low(*a, *b))` never picks a NaN over a
+/// number, and descending sorts (`|a, b| cmp_nan_low(s[b], s[a])`) push NaN
+/// to the end. Built on [`f64::total_cmp`] so it never panics — a single
+/// NaN surrogate prediction degrades a ranking gracefully instead of
+/// crashing the engine mid-run.
+pub fn cmp_nan_low(a: f64, b: f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Less,
+        (false, true) => Ordering::Greater,
+        (false, false) => a.total_cmp(&b),
+    }
+}
+
+/// Ascending total order with every NaN *above* every real value, so
+/// ascending sorts over costs/latencies push NaN (unknown = worst) last.
+pub fn cmp_nan_high(a: f64, b: f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => a.total_cmp(&b),
+    }
+}
+
 /// Abramowitz & Stegun 7.1.26 rational approximation of erf (|err| < 1.5e-7).
 pub fn erf(x: f64) -> f64 {
     let sign = if x < 0.0 { -1.0 } else { 1.0 };
@@ -62,7 +90,7 @@ pub fn mean_std_pop(xs: &[f64]) -> (f64, f64) {
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| cmp_nan_high(*a, *b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -144,5 +172,28 @@ mod tests {
         assert_eq!(argmax(&[1.0, 3.0, 3.0]), Some(1));
         assert_eq!(argmax(&[f64::NAN, 2.0]), Some(1));
         assert_eq!(argmax(&[]), None);
+    }
+
+    #[test]
+    fn nan_safe_comparators_rank_nan_as_worst() {
+        use std::cmp::Ordering;
+        // max_by with cmp_nan_low never picks NaN over a real number
+        let best = [f64::NAN, 1.0, 3.0, f64::NAN, 2.0]
+            .into_iter()
+            .max_by(|a, b| cmp_nan_low(*a, *b))
+            .unwrap();
+        assert_eq!(best, 3.0);
+        assert_eq!(cmp_nan_low(f64::NAN, f64::NAN), Ordering::Equal);
+        assert_eq!(cmp_nan_low(f64::NAN, f64::NEG_INFINITY), Ordering::Less);
+        // descending sort by score pushes NaN to the end
+        let scores = [0.5, f64::NAN, 0.9, 0.1];
+        let mut order: Vec<usize> = (0..scores.len()).collect();
+        order.sort_by(|&a, &b| cmp_nan_low(scores[b], scores[a]));
+        assert_eq!(order, vec![2, 0, 3, 1]);
+        // ascending sort by cost pushes NaN to the end
+        let mut costs = vec![2.0, f64::NAN, 1.0];
+        costs.sort_by(|a, b| cmp_nan_high(*a, *b));
+        assert_eq!(&costs[..2], &[1.0, 2.0]);
+        assert!(costs[2].is_nan());
     }
 }

@@ -76,7 +76,7 @@ pub fn bench<T>(
         std::hint::black_box(f());
         samples.push(t.elapsed().as_secs_f64());
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let pick = |p: f64| samples[((p * (samples.len() - 1) as f64) as usize).min(samples.len() - 1)];
     BenchStats {

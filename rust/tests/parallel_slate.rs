@@ -1,0 +1,157 @@
+//! Integration tests for the batched + parallel acquisition pipeline:
+//! the parallel slate evaluator must return bit-identical results to the
+//! sequential path for every filtering heuristic and both surrogate
+//! families, and every optimizer must still run end-to-end.
+
+use trimtuner::acq::{
+    joint_feasibility_many, trimtuner_alpha, EntropyEstimator, Models,
+    TrimTunerAcq,
+};
+use trimtuner::engine::{self, EngineConfig, OptimizerKind};
+use trimtuner::heuristics::{select_next, AlphaCache, FilterKind};
+use trimtuner::models::{Feat, FitOptions, ModelKind, Surrogate};
+use trimtuner::sim::{CloudSim, Dataset, NetKind};
+use trimtuner::space::{all_points, encode, Config, Constraint, Point};
+use trimtuner::util::Rng;
+
+fn fitted(kind: ModelKind) -> (Models, Vec<Constraint>, Vec<Point>) {
+    let sim = CloudSim::new(NetKind::Mlp);
+    let mut rng = Rng::new(17);
+    let mut pts = Vec::new();
+    let mut outs = Vec::new();
+    for _ in 0..20 {
+        let p = Point {
+            config: Config::from_id(rng.below(288)),
+            s_idx: rng.below(5),
+        };
+        pts.push(p);
+        outs.push(sim.observe(&p, &mut rng));
+    }
+    let mut m = Models::new(kind, 3);
+    m.fit(&pts, &outs, FitOptions { hyperopt: true, restarts: 1 });
+    let tested: std::collections::HashSet<usize> =
+        pts.iter().map(|p| p.id()).collect();
+    // a slice of the grid keeps the NoFilter sweep fast while still
+    // exercising hundreds of candidates
+    let untested: Vec<Point> = all_points()
+        .filter(|p| !tested.contains(&p.id()))
+        .take(220)
+        .collect();
+    (m, vec![Constraint::cost_max(0.06)], untested)
+}
+
+#[test]
+fn parallel_slate_bit_identical_for_every_filter_and_model() {
+    for kind in [ModelKind::Gp, ModelKind::Trees] {
+        let (models, constraints, untested) = fitted(kind);
+        let full_feats: Vec<Feat> = (0..288)
+            .map(|id| {
+                encode(&Point { config: Config::from_id(id), s_idx: 4 })
+            })
+            .collect();
+        let mut rng = Rng::new(5);
+        let rep: Vec<Feat> = (0..12).map(|i| full_feats[i * 23]).collect();
+        let est = EntropyEstimator::new(rep, 60, &mut rng);
+        let baseline = EntropyEstimator::kl_from_uniform(
+            &est.p_opt(models.acc.as_ref()),
+        );
+        let shortlist: Vec<usize> = (0..288).step_by(12).collect();
+        let shortlist_feats: Vec<Feat> =
+            shortlist.iter().map(|&id| full_feats[id]).collect();
+        let feas =
+            joint_feasibility_many(&models, &constraints, &shortlist_feats);
+        let ctx = TrimTunerAcq {
+            models: &models,
+            est: &est,
+            constraints: &constraints,
+            inc_shortlist: &shortlist,
+            inc_shortlist_feats: &shortlist_feats,
+            inc_feas: if models.constraints_fixed_under_condition() {
+                Some(feas.as_slice())
+            } else {
+                None
+            },
+            baseline,
+        };
+        for filter in [
+            FilterKind::Cea,
+            FilterKind::RandomFilter,
+            FilterKind::NoFilter,
+            FilterKind::Direct,
+            FilterKind::Cmaes,
+        ] {
+            let run = |threads: usize| {
+                let mut rng = Rng::new(99);
+                let mut alpha = AlphaCache::shared(|p: &Point| {
+                    trimtuner_alpha(&ctx, &encode(p))
+                })
+                .with_threads(threads);
+                let (chosen, evals) = select_next(
+                    filter,
+                    &models,
+                    &constraints,
+                    &untested,
+                    24,
+                    &mut alpha,
+                    &mut rng,
+                );
+                (chosen.id(), evals)
+            };
+            let seq = run(1);
+            let par = run(4);
+            assert_eq!(
+                seq, par,
+                "{kind:?}/{filter:?}: parallel (chosen, n_evals) diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_predict_many_is_bitwise_scalar_for_all_surrogates() {
+    for kind in [ModelKind::Gp, ModelKind::Trees] {
+        let (models, _, untested) = fitted(kind);
+        let xs: Vec<Feat> = untested.iter().take(64).map(encode).collect();
+        for model in
+            [models.acc.as_ref(), models.cost.as_ref(), models.time.as_ref()]
+        {
+            let batch = model.predict_many(&xs);
+            for (x, (bm, bs)) in xs.iter().zip(&batch) {
+                let (m, s) = model.predict(x);
+                assert_eq!(m.to_bits(), bm.to_bits(), "{kind:?} mean");
+                assert_eq!(s.to_bits(), bs.to_bits(), "{kind:?} std");
+            }
+        }
+    }
+}
+
+#[test]
+fn every_optimizer_smokes_end_to_end() {
+    let dataset = Dataset::generate(NetKind::Mlp, 42);
+    let caps = vec![Constraint::cost_max(NetKind::Mlp.paper_cost_cap())];
+    for optimizer in [
+        OptimizerKind::TrimTuner(ModelKind::Gp),
+        OptimizerKind::TrimTuner(ModelKind::Trees),
+        OptimizerKind::Eic,
+        OptimizerKind::EicUsd,
+        OptimizerKind::Fabolas,
+        OptimizerKind::RandomSearch,
+    ] {
+        let mut cfg = EngineConfig::paper_default(optimizer, 11);
+        cfg.max_iters = 3;
+        // shrink the entropy machinery so the GP variants stay fast
+        cfg.n_rep = 10;
+        cfg.n_popt_samples = 40;
+        cfg.gp_hyper_samples = cfg.gp_hyper_samples.min(2);
+        let run = engine::run(&dataset, &caps, &cfg);
+        assert_eq!(
+            run.records.len(),
+            4 + 3,
+            "{optimizer:?}: unexpected record count"
+        );
+        for r in &run.records {
+            assert!(r.incumbent.is_full(), "{optimizer:?}: partial incumbent");
+            assert!(r.outcome.acc.is_finite());
+        }
+    }
+}
