@@ -1,0 +1,92 @@
+//! Coordinator throughput: worker-count sweep over snapshot jobs with
+//! simulated launch latency, plus a short live engine run — the live-tuning
+//! counterpart of `bench_end_to_end`.
+//!
+//! Results are also written to `BENCH_coordinator.json` (override the path
+//! with the `BENCH_JSON` env var) so CI can track the perf trajectory. The
+//! headline is the `serve` line sweep: wall time for the same job batch
+//! must drop as workers are added (the launcher sleeps proportionally to
+//! the simulated training duration, so parallelism is actually observable).
+mod common;
+
+use trimtuner::coordinator::{Job, SimLauncher, WorkerPool};
+use trimtuner::engine::{self, EngineConfig, EvalBackend, LiveEval, OptimizerKind};
+use trimtuner::models::ModelKind;
+use trimtuner::sim::NetKind;
+use trimtuner::space::{Config, Constraint, N_CONFIGS, S_INIT};
+use trimtuner::util::timer::bench;
+
+/// Wall seconds slept per simulated training second: MLP runs simulate
+/// O(100 s) trainings, so jobs cost a few ms each — enough to measure
+/// scaling, small enough for CI.
+const LATENCY: f64 = 3e-5;
+const N_JOBS: usize = 24;
+
+fn main() {
+    common::print_header("coordinator (worker sweep + live engine)");
+    let mut all = Vec::new();
+
+    for workers in [1usize, 2, 4, 8] {
+        let stats = bench(
+            &format!("serve {N_JOBS} snapshot jobs workers={workers}"),
+            1,
+            3,
+            || {
+                let launcher =
+                    SimLauncher::with_options(NetKind::Mlp, 7, 1.0, LATENCY);
+                let pool = WorkerPool::new(Box::new(launcher), workers);
+                for i in 0..N_JOBS {
+                    pool.submit(Job {
+                        id: i as u64,
+                        config: Config::from_id((i * 37) % N_CONFIGS),
+                        s_levels: S_INIT.to_vec(),
+                    })
+                    .unwrap();
+                }
+                let mut cost = 0.0;
+                for _ in 0..N_JOBS {
+                    cost += pool.recv().unwrap().charged_cost;
+                }
+                pool.shutdown();
+                cost
+            },
+        );
+        println!("{}", stats.report());
+        all.push(stats);
+    }
+
+    // Live Algorithm-1 runs through the pool (the engine's probe path is
+    // sequential, so this measures per-iteration coordinator overhead, not
+    // scaling).
+    for workers in [1usize, 4] {
+        let stats = bench(
+            &format!("live trimtuner-dt 6-iter run workers={workers}"),
+            0,
+            3,
+            || {
+                let mut cfg = EngineConfig::paper_default(
+                    OptimizerKind::TrimTuner(ModelKind::Trees),
+                    5,
+                );
+                cfg.max_iters = 6;
+                let launcher =
+                    SimLauncher::with_options(NetKind::Rnn, 5, 1.0, LATENCY);
+                let mut backend = EvalBackend::Live(LiveEval::new(
+                    Box::new(launcher),
+                    workers,
+                ));
+                let caps =
+                    [Constraint::cost_max(NetKind::Rnn.paper_cost_cap())];
+                let run = engine::run_backend(&mut backend, &caps, &cfg)
+                    .expect("live run failed");
+                run.records.len()
+            },
+        );
+        println!("{}", stats.report());
+        all.push(stats);
+    }
+
+    let path = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_coordinator.json".to_string());
+    common::write_bench_json("coordinator", &path, &all);
+}

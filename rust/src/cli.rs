@@ -62,6 +62,15 @@ impl Args {
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
+
+    /// Boolean switch: bare `--flag` (stored as "true") or an explicit
+    /// `--flag true|false`.
+    pub fn get_bool(&self, key: &str) -> bool {
+        match self.get(key) {
+            Some(v) => v != "false" && v != "0",
+            None => false,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -89,5 +98,14 @@ mod tests {
         let a = Args::parse(&argv("optimize"));
         assert_eq!(a.get_f64("beta", 0.1), 0.1);
         assert_eq!(a.get_or("net", "mlp"), "mlp");
+    }
+
+    #[test]
+    fn bool_switches() {
+        let a = Args::parse(&argv("optimize --live --workers 4"));
+        assert!(a.get_bool("live"));
+        assert!(!a.get_bool("replay"));
+        let b = Args::parse(&argv("optimize --live false"));
+        assert!(!b.get_bool("live"));
     }
 }

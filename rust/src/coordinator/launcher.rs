@@ -36,15 +36,44 @@ pub trait JobLauncher: Send + Sync {
 }
 
 /// Simulated cloud: noisy observations from [`CloudSim`], deterministic per
-/// (seed, job id).
+/// (seed, job id). Observation noise can be scaled (0 = exact ground truth,
+/// the reference point for live-vs-replay parity tests), and an optional
+/// wall-clock latency proportional to the simulated training duration makes
+/// multi-worker throughput measurable for the coordinator benches.
 pub struct SimLauncher {
     sim: CloudSim,
     seed: u64,
+    /// seconds of real `thread::sleep` per simulated training second
+    latency_per_sim_s: f64,
 }
 
 impl SimLauncher {
     pub fn new(net: NetKind, seed: u64) -> SimLauncher {
-        SimLauncher { sim: CloudSim::new(net), seed }
+        SimLauncher::with_options(net, seed, 1.0, 0.0)
+    }
+
+    /// Zero-noise launcher: every observation equals the oracle's ground
+    /// truth, so a live run is exactly reproducible against
+    /// `Dataset::ground_truth`.
+    pub fn noiseless(net: NetKind) -> SimLauncher {
+        SimLauncher::with_options(net, 0, 0.0, 0.0)
+    }
+
+    /// Full-control constructor: `noise_scale` multiplies the oracle's
+    /// observation-noise parameters (1 = calibrated noise, 0 = noiseless);
+    /// `latency_per_sim_s` makes each launch sleep that many wall-clock
+    /// seconds per simulated training second (0 = return immediately).
+    pub fn with_options(
+        net: NetKind,
+        seed: u64,
+        noise_scale: f64,
+        latency_per_sim_s: f64,
+    ) -> SimLauncher {
+        assert!(noise_scale >= 0.0 && latency_per_sim_s >= 0.0);
+        let mut sim = CloudSim::new(net);
+        sim.params.noise_acc *= noise_scale;
+        sim.params.noise_time *= noise_scale;
+        SimLauncher { sim, seed, latency_per_sim_s }
     }
 
     pub fn net(&self) -> NetKind {
@@ -68,7 +97,17 @@ impl JobLauncher for SimLauncher {
             duration = duration.max(o.time_s);
             outcomes.push((s_idx, o));
         }
-        Ok(JobResult { job_id: job.id, outcomes, charged_cost: charged, duration_s: duration })
+        if self.latency_per_sim_s > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                duration * self.latency_per_sim_s,
+            ));
+        }
+        Ok(JobResult {
+            job_id: job.id,
+            outcomes,
+            charged_cost: charged,
+            duration_s: duration,
+        })
     }
 }
 
@@ -80,8 +119,11 @@ mod tests {
     #[test]
     fn snapshot_cost_is_max_not_sum() {
         let l = SimLauncher::new(NetKind::Cnn, 1);
-        let job =
-            Job { id: 1, config: Config::from_id(40), s_levels: S_INIT.to_vec() };
+        let job = Job {
+            id: 1,
+            config: Config::from_id(40),
+            s_levels: S_INIT.to_vec(),
+        };
         let r = l.launch(&job).unwrap();
         let sum: f64 = r.outcomes.iter().map(|(_, o)| o.cost_usd).sum();
         let max = r
@@ -98,5 +140,20 @@ mod tests {
         let l = SimLauncher::new(NetKind::Cnn, 1);
         let job = Job { id: 1, config: Config::from_id(0), s_levels: vec![] };
         assert!(l.launch(&job).is_err());
+    }
+
+    #[test]
+    fn noiseless_launcher_reproduces_ground_truth_exactly() {
+        let l = SimLauncher::noiseless(NetKind::Mlp);
+        let sim = CloudSim::new(NetKind::Mlp);
+        let config = Config::from_id(123);
+        let job = Job { id: 9, config, s_levels: vec![0, 2, 4] };
+        let r = l.launch(&job).unwrap();
+        for (s_idx, o) in &r.outcomes {
+            let gt = sim.ground_truth(&Point { config, s_idx: *s_idx });
+            assert_eq!(o.acc, gt.acc);
+            assert_eq!(o.time_s, gt.time_s);
+            assert_eq!(o.cost_usd, gt.cost_usd);
+        }
     }
 }

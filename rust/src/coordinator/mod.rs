@@ -3,11 +3,20 @@
 //! paper's snapshot semantics for sub-sampled probes, and feeds results back
 //! to the optimization engine.
 //!
+//! This is the engine's *live* execution spine: `engine::EvalBackend::Live`
+//! wraps a [`WorkerPool`] over any [`JobLauncher`], so the same Algorithm 1
+//! loop that replays a measured `Dataset` can instead drive real
+//! (simulated-latency, noisy) deployments — `trimtuner optimize --live`.
+//! Launch failures carry job-id attribution ([`JobError`]) so the engine
+//! requeues the exact probe that failed, and every submission / completion
+//! / failure / incumbent update lands in an [`EventLog`].
+//!
 //! The BO loop itself is sequential (each acquisition depends on the last
 //! observation), but the coordinator parallelizes what the paper's testbed
-//! parallelized: the initialization batch, and an optional *batched
-//! evaluation* extension (`batch_size > 1`) that submits the top-q
-//! acquisition points per round — one of the paper's natural follow-ups.
+//! parallelized: the initialization batch (independent LHS deployments),
+//! and an optional *batched evaluation* extension that would submit the
+//! top-q acquisition points per round — one of the paper's natural
+//! follow-ups.
 
 mod events;
 mod launcher;
@@ -15,7 +24,7 @@ mod pool;
 
 pub use events::{Event, EventKind, EventLog};
 pub use launcher::{Job, JobLauncher, JobResult, SimLauncher};
-pub use pool::WorkerPool;
+pub use pool::{JobError, WorkerPool};
 
 use crate::cli::Args;
 use crate::sim::NetKind;

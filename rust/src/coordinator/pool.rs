@@ -1,6 +1,13 @@
 //! Worker pool over std threads + channels (the offline registry has no
 //! tokio; the coordinator's work units are coarse training jobs, for which
 //! OS threads are the right granularity anyway).
+//!
+//! Shutdown contract: `shutdown()`/`Drop` first close the submit queue and
+//! *drop the result receiver*, then join the workers. Dropping the receiver
+//! is load-bearing — a worker blocked in `tx.send` on a full result channel
+//! can only observe shutdown through the channel disconnecting; joining
+//! while still holding the receiver would deadlock forever (each worker
+//! waiting for a `recv` that never comes, the join waiting for the worker).
 
 use super::launcher::{Job, JobLauncher, JobResult};
 use anyhow::{anyhow, Result};
@@ -8,21 +15,67 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+/// A launcher failure with the job attached, so a live engine can requeue
+/// the exact probe that failed instead of losing it.
+#[derive(Debug)]
+pub struct JobError {
+    /// id of the job whose launch failed; [`JobError::NO_JOB`] when the
+    /// failure is channel-level (pool shut down) rather than per-job.
+    pub job_id: u64,
+    pub error: anyhow::Error,
+}
+
+impl JobError {
+    /// Sentinel job id for failures not attributable to any single job.
+    pub const NO_JOB: u64 = u64::MAX;
+
+    fn pool_level(error: anyhow::Error) -> JobError {
+        JobError { job_id: JobError::NO_JOB, error }
+    }
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.job_id == JobError::NO_JOB {
+            write!(f, "worker pool failure: {}", self.error)
+        } else {
+            write!(f, "job {} failed: {}", self.job_id, self.error)
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+/// Default bound of the completed-results channel.
+const RESULT_QUEUE_CAP: usize = 1024;
+
 /// Fixed-size worker pool executing [`Job`]s through a shared launcher.
 /// The bounded submit queue (2× workers) provides natural backpressure.
 pub struct WorkerPool {
     submit_tx: Option<SyncSender<Job>>,
-    result_rx: Receiver<Result<JobResult>>,
+    result_rx: Option<Receiver<Result<JobResult, JobError>>>,
     handles: Vec<JoinHandle<()>>,
 }
 
 impl WorkerPool {
     pub fn new(launcher: Box<dyn JobLauncher>, workers: usize) -> WorkerPool {
+        WorkerPool::with_result_capacity(launcher, workers, RESULT_QUEUE_CAP)
+    }
+
+    /// [`WorkerPool::new`] with an explicit result-channel bound (tests use
+    /// a tiny bound to exercise the workers-blocked-in-send shutdown path).
+    pub fn with_result_capacity(
+        launcher: Box<dyn JobLauncher>,
+        workers: usize,
+        result_cap: usize,
+    ) -> WorkerPool {
         assert!(workers > 0);
+        assert!(result_cap > 0);
         let launcher: Arc<dyn JobLauncher> = Arc::from(launcher);
         let (submit_tx, submit_rx) = sync_channel::<Job>(workers * 2);
         let submit_rx = Arc::new(Mutex::new(submit_rx));
-        let (result_tx, result_rx) = sync_channel::<Result<JobResult>>(1024);
+        let (result_tx, result_rx) =
+            sync_channel::<Result<JobResult, JobError>>(result_cap);
 
         let handles = (0..workers)
             .map(|_| {
@@ -35,7 +88,10 @@ impl WorkerPool {
                         Ok(j) => j,
                         Err(_) => break, // queue closed -> shut down
                     };
-                    let result = launcher.launch(&job);
+                    let job_id = job.id;
+                    let result = launcher
+                        .launch(&job)
+                        .map_err(|error| JobError { job_id, error });
                     if tx.send(result).is_err() {
                         break; // receiver dropped
                     }
@@ -43,7 +99,11 @@ impl WorkerPool {
             })
             .collect();
 
-        WorkerPool { submit_tx: Some(submit_tx), result_rx, handles }
+        WorkerPool {
+            submit_tx: Some(submit_tx),
+            result_rx: Some(result_rx),
+            handles,
+        }
     }
 
     /// Submit a job (blocks when the queue is full — backpressure).
@@ -55,16 +115,29 @@ impl WorkerPool {
             .map_err(|e| anyhow!("submit failed: {e}"))
     }
 
-    /// Receive the next completed job (blocking, completion order).
-    pub fn recv(&self) -> Result<JobResult> {
-        self.result_rx
-            .recv()
-            .map_err(|e| anyhow!("pool hung up: {e}"))?
+    /// Receive the next completed job (blocking, completion order). Launch
+    /// failures come back as [`JobError`] with the failing job's id, so the
+    /// caller can requeue that exact probe.
+    pub fn recv(&self) -> Result<JobResult, JobError> {
+        let rx = self.result_rx.as_ref().ok_or_else(|| {
+            JobError::pool_level(anyhow!("pool already shut down"))
+        })?;
+        rx.recv()
+            .map_err(|e| JobError::pool_level(anyhow!("pool hung up: {e}")))?
     }
 
-    /// Close the queue and join all workers.
+    /// Close the queues and join all workers. Un-received results are
+    /// discarded; workers blocked sending one exit instead of deadlocking.
     pub fn shutdown(mut self) {
-        self.submit_tx.take(); // closes the channel
+        self.close();
+    }
+
+    fn close(&mut self) {
+        self.submit_tx.take(); // closes the submit queue
+        // Drop the receiver *before* joining: a worker blocked in `send`
+        // on a full result channel only unblocks when the channel
+        // disconnects.
+        self.result_rx.take();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -73,10 +146,7 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        self.submit_tx.take();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+        self.close();
     }
 }
 
@@ -125,18 +195,17 @@ mod tests {
         }
     }
 
+    fn job(i: u64) -> Job {
+        Job { id: i, config: Config::from_id(0), s_levels: vec![0] }
+    }
+
     #[test]
     fn executes_concurrently_up_to_worker_count() {
         let launcher = TestLauncher::new(vec![]);
         let max_seen = launcher.max_seen.clone();
         let pool = WorkerPool::new(Box::new(launcher), 4);
         for i in 0..16 {
-            pool.submit(Job {
-                id: i,
-                config: Config::from_id(0),
-                s_levels: vec![0],
-            })
-            .unwrap();
+            pool.submit(job(i)).unwrap();
         }
         for _ in 0..16 {
             pool.recv().unwrap();
@@ -148,23 +217,21 @@ mod tests {
     }
 
     #[test]
-    fn failure_injection_propagates_as_error_not_panic() {
+    fn failure_injection_propagates_with_job_id_attribution() {
         let launcher = TestLauncher::new(vec![3]);
         let pool = WorkerPool::new(Box::new(launcher), 2);
         for i in 0..6 {
-            pool.submit(Job {
-                id: i,
-                config: Config::from_id(0),
-                s_levels: vec![0],
-            })
-            .unwrap();
+            pool.submit(job(i)).unwrap();
         }
         let mut ok = 0;
         let mut err = 0;
         for _ in 0..6 {
             match pool.recv() {
                 Ok(_) => ok += 1,
-                Err(_) => err += 1,
+                Err(e) => {
+                    assert_eq!(e.job_id, 3, "wrong attribution: {e}");
+                    err += 1;
+                }
             }
         }
         assert_eq!((ok, err), (5, 1));
@@ -175,5 +242,52 @@ mod tests {
     fn shutdown_joins_cleanly_with_pending_nothing() {
         let pool = WorkerPool::new(Box::new(TestLauncher::new(vec![])), 3);
         pool.shutdown(); // no jobs at all
+    }
+
+    /// Regression: shutting down (or dropping) the pool while workers are
+    /// blocked in `tx.send` on a *full* result channel used to join-hang
+    /// forever, because the receiver was still alive during the join.
+    #[test]
+    fn shutdown_with_full_result_channel_does_not_hang() {
+        let pool = WorkerPool::with_result_capacity(
+            Box::new(TestLauncher::new(vec![])),
+            2,
+            1, // tiny bound: the 2nd completed job blocks its worker in send
+        );
+        for i in 0..6 {
+            pool.submit(job(i)).unwrap();
+        }
+        // let the workers fill the result channel and block in send
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            pool.shutdown();
+            let _ = done_tx.send(());
+        });
+        done_rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("shutdown deadlocked with workers blocked on result send");
+    }
+
+    /// Same scenario through the `Drop` path instead of `shutdown()`.
+    #[test]
+    fn drop_with_full_result_channel_does_not_hang() {
+        let pool = WorkerPool::with_result_capacity(
+            Box::new(TestLauncher::new(vec![])),
+            2,
+            1,
+        );
+        for i in 0..5 {
+            pool.submit(job(i)).unwrap();
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            drop(pool);
+            let _ = done_tx.send(());
+        });
+        done_rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("drop deadlocked with workers blocked on result send");
     }
 }

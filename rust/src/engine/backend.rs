@@ -1,0 +1,432 @@
+//! Evaluation substrate for Algorithm 1: where "Train M in configuration
+//! ⟨x, s⟩" actually happens.
+//!
+//! The paper evaluates trace-driven (replaying a measured lookup table),
+//! but the algorithm itself tunes a *live* job — each probe is a real cloud
+//! deployment with snapshot semantics for sub-sampled levels. [`EvalBackend`]
+//! abstracts the two so the same engine loop drives both:
+//!
+//! - [`EvalBackend::Replay`] looks outcomes up in a pre-materialized
+//!   [`Dataset`] (the paper's simulation methodology, deterministic and
+//!   instant);
+//! - [`EvalBackend::Live`] submits every probe as a [`Job`] through the
+//!   threaded [`WorkerPool`] to any [`JobLauncher`] — the simulated cloud,
+//!   or a real trainer. Sub-sampled levels of one config ride a single
+//!   snapshot deployment charged at the largest level (paper §III), failed
+//!   launches are requeued with job-id attribution, and every submission /
+//!   completion / failure lands in an [`EventLog`].
+//!
+//! Ground truth is quarantined: the optimizer only ever sees [`Probe`] /
+//! [`Snapshot`] observations. Evaluation-only record fields (the incumbent's
+//! *true* accuracy, Accuracy_C) come from [`EvalBackend::eval_dataset`],
+//! which is `None` for a live run unless an offline oracle is attached
+//! explicitly via [`LiveEval::with_eval`].
+
+use crate::coordinator::{
+    EventKind, EventLog, Job, JobLauncher, JobResult, WorkerPool,
+};
+use crate::sim::{Dataset, Outcome};
+use crate::space::{Config, Point};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// One evaluated probe: the observation the optimizer sees, plus the
+/// accounting of the deployment that produced it.
+#[derive(Debug, Clone, Copy)]
+pub struct Probe {
+    pub outcome: Outcome,
+    /// USD actually charged for the deployment
+    pub charged_cost: f64,
+    /// measured wall-clock duration of the deployment (s)
+    pub duration_s: f64,
+}
+
+/// A snapshot deployment: one training run of `config`, observed at several
+/// ascending sub-sampling levels, charged once at the largest level.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub outcomes: Vec<(usize, Outcome)>,
+    pub charged_cost: f64,
+    pub duration_s: f64,
+}
+
+/// How many times a failed launch is requeued before the run aborts.
+const LAUNCH_RETRIES: usize = 3;
+
+/// Live evaluation state: the worker pool, job-id bookkeeping, and the
+/// observability log.
+pub struct LiveEval<'a> {
+    pool: WorkerPool,
+    next_job: u64,
+    pub log: EventLog,
+    /// Optional ground-truth oracle for *evaluation-only* record fields
+    /// (`inc_acc`, `accuracy_c`, `optimum_acc`). A real deployment has
+    /// none; without it those fields are NaN and the optimizer still runs.
+    eval: Option<&'a Dataset>,
+}
+
+impl<'a> LiveEval<'a> {
+    pub fn new(launcher: Box<dyn JobLauncher>, workers: usize) -> LiveEval<'a> {
+        LiveEval {
+            pool: WorkerPool::new(launcher, workers),
+            next_job: 0,
+            log: EventLog::new(),
+            eval: None,
+        }
+    }
+
+    /// Attach an offline ground-truth oracle so records carry the same
+    /// evaluation metrics a replay run would (for experiments/parity only —
+    /// nothing on the optimization path reads it).
+    pub fn with_eval(mut self, dataset: &'a Dataset) -> LiveEval<'a> {
+        self.eval = Some(dataset);
+        self
+    }
+
+    fn submit(&mut self, config: Config, s_levels: Vec<usize>) -> Result<u64> {
+        let id = self.next_job;
+        self.next_job += 1;
+        self.submit_with_id(id, config, s_levels)?;
+        Ok(id)
+    }
+
+    fn submit_with_id(
+        &mut self,
+        id: u64,
+        config: Config,
+        s_levels: Vec<usize>,
+    ) -> Result<()> {
+        self.log.record(EventKind::JobSubmitted { job: id });
+        self.pool.submit(Job { id, config, s_levels })
+    }
+
+    /// Deterministic id for the `attempt`-th retry of job `original`:
+    /// a function of (original id, attempt) rather than of the shared
+    /// counter, so which of two concurrently-failed jobs reports first
+    /// cannot swap the ids (and hence the launcher's per-id noise draws)
+    /// between otherwise-identical runs. The high marker bit keeps retry
+    /// ids disjoint from the sequential primary ids.
+    fn retry_id(original: u64, attempt: usize) -> u64 {
+        (1u64 << 63) | ((attempt as u64) << 48) | (original & 0xFFFF_FFFF_FFFF)
+    }
+
+    /// Drive a batch of deployments to completion and return their results
+    /// in *submission order* (not completion order), so multi-worker runs
+    /// stay deterministic. Failed launches are requeued up to
+    /// [`LAUNCH_RETRIES`] times using the job id the pool attributes to the
+    /// error.
+    fn run_jobs(
+        &mut self,
+        specs: &[(Config, Vec<usize>)],
+    ) -> Result<Vec<JobResult>> {
+        let mut slot_of: HashMap<u64, usize> = HashMap::new();
+        let mut attempts = vec![0usize; specs.len()];
+        let mut primary = vec![0u64; specs.len()];
+        for (slot, (config, levels)) in specs.iter().enumerate() {
+            let id = self.submit(*config, levels.clone())?;
+            primary[slot] = id;
+            slot_of.insert(id, slot);
+        }
+        let mut results: Vec<Option<JobResult>> = vec![None; specs.len()];
+        let mut pending = specs.len();
+        while pending > 0 {
+            match self.pool.recv() {
+                Ok(r) => {
+                    let slot = slot_of.remove(&r.job_id).ok_or_else(|| {
+                        anyhow!("pool returned unknown job id {}", r.job_id)
+                    })?;
+                    self.log.record(EventKind::JobCompleted {
+                        job: r.job_id,
+                        cost: r.charged_cost,
+                    });
+                    results[slot] = Some(r);
+                    pending -= 1;
+                }
+                Err(e) => {
+                    // job-id attribution lets us requeue the exact probe
+                    let slot = slot_of.remove(&e.job_id).ok_or_else(|| {
+                        anyhow!("unattributable launcher failure: {e}")
+                    })?;
+                    self.log.record(EventKind::JobFailed {
+                        job: e.job_id,
+                        reason: e.error.to_string(),
+                    });
+                    attempts[slot] += 1;
+                    if attempts[slot] > LAUNCH_RETRIES {
+                        return Err(anyhow!(
+                            "deployment of {} failed {} times, giving up: {e}",
+                            specs[slot].0.describe(),
+                            attempts[slot]
+                        ));
+                    }
+                    let (config, levels) = &specs[slot];
+                    let id =
+                        LiveEval::retry_id(primary[slot], attempts[slot]);
+                    self.submit_with_id(id, *config, levels.clone())?;
+                    slot_of.insert(id, slot);
+                }
+            }
+        }
+        Ok(results.into_iter().map(|r| r.expect("all slots filled")).collect())
+    }
+}
+
+/// The engine's evaluation substrate: trace replay or live deployments.
+pub enum EvalBackend<'a> {
+    /// The paper's methodology: every probe is a lookup in a
+    /// pre-materialized measurement campaign.
+    Replay(&'a Dataset),
+    /// Every probe is a (simulated-latency, noisy, or real) deployment
+    /// through the worker pool.
+    Live(LiveEval<'a>),
+}
+
+impl<'a> EvalBackend<'a> {
+    /// Evaluate one (config, s) probe.
+    pub fn probe(&mut self, p: Point) -> Result<Probe> {
+        let mut probes = self.probe_batch(&[p])?;
+        Ok(probes.pop().expect("one probe per point"))
+    }
+
+    /// Evaluate a batch of independent probes (parallel across the worker
+    /// pool under `Live`); results are in input order.
+    pub fn probe_batch(&mut self, points: &[Point]) -> Result<Vec<Probe>> {
+        match self {
+            EvalBackend::Replay(d) => Ok(points
+                .iter()
+                .map(|p| {
+                    let o = d.outcome(p);
+                    Probe {
+                        outcome: o,
+                        charged_cost: o.cost_usd,
+                        duration_s: o.time_s,
+                    }
+                })
+                .collect()),
+            EvalBackend::Live(live) => {
+                let specs: Vec<(Config, Vec<usize>)> = points
+                    .iter()
+                    .map(|p| (p.config, vec![p.s_idx]))
+                    .collect();
+                let results = live.run_jobs(&specs)?;
+                points
+                    .iter()
+                    .zip(&results)
+                    .map(|(p, r)| {
+                        let o = r
+                            .outcomes
+                            .iter()
+                            .find(|(s, _)| *s == p.s_idx)
+                            .map(|(_, o)| *o)
+                            .ok_or_else(|| {
+                                anyhow!(
+                                    "launcher returned no snapshot at level {}",
+                                    p.s_idx
+                                )
+                            })?;
+                        Ok(Probe {
+                            outcome: o,
+                            charged_cost: r.charged_cost,
+                            duration_s: r.duration_s,
+                        })
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Snapshot deployment of one config at several *ascending*
+    /// sub-sampling levels, charged once at the largest level (paper §III).
+    /// Replay emulates the same accounting on the lookup table: the charge
+    /// is the last (largest) level's measured cost — the one training run
+    /// that would have produced every snapshot.
+    pub fn snapshot(
+        &mut self,
+        config: Config,
+        s_levels: &[usize],
+    ) -> Result<Snapshot> {
+        anyhow::ensure!(!s_levels.is_empty(), "snapshot without levels");
+        anyhow::ensure!(
+            s_levels.windows(2).all(|w| w[0] < w[1]),
+            "snapshot levels must be strictly ascending: {s_levels:?}"
+        );
+        match self {
+            EvalBackend::Replay(d) => {
+                let outcomes: Vec<(usize, Outcome)> = s_levels
+                    .iter()
+                    .map(|&s| (s, d.outcome(&Point { config, s_idx: s })))
+                    .collect();
+                let (_, largest) = *outcomes.last().expect("nonempty");
+                Ok(Snapshot {
+                    outcomes,
+                    charged_cost: largest.cost_usd,
+                    duration_s: largest.time_s,
+                })
+            }
+            EvalBackend::Live(live) => {
+                let results =
+                    live.run_jobs(&[(config, s_levels.to_vec())])?;
+                let r = results.into_iter().next().expect("one job");
+                Ok(Snapshot {
+                    outcomes: r.outcomes,
+                    charged_cost: r.charged_cost,
+                    duration_s: r.duration_s,
+                })
+            }
+        }
+    }
+
+    /// Ground truth for evaluation-only metrics, when available (always in
+    /// replay; in live runs only if an oracle was attached).
+    pub fn eval_dataset(&self) -> Option<&Dataset> {
+        match self {
+            EvalBackend::Replay(d) => Some(*d),
+            EvalBackend::Live(live) => live.eval,
+        }
+    }
+
+    /// The live event log (`None` under replay).
+    pub fn event_log(&self) -> Option<&EventLog> {
+        match self {
+            EvalBackend::Replay(_) => None,
+            EvalBackend::Live(live) => Some(&live.log),
+        }
+    }
+
+    /// Tear down the live worker pool (no-op for replay). Dropping the
+    /// backend does the same — the pool's `Drop` joins its workers.
+    pub fn shutdown(self) {
+        if let EvalBackend::Live(live) = self {
+            live.pool.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SimLauncher;
+    use crate::sim::NetKind;
+    use crate::space::{S_INIT, S_VALUES};
+
+    fn backend_pair(net: NetKind) -> (Dataset, LiveEval<'static>) {
+        let truth = Dataset::ground_truth(net);
+        let live =
+            LiveEval::new(Box::new(SimLauncher::noiseless(net)), 2);
+        (truth, live)
+    }
+
+    #[test]
+    fn replay_and_noiseless_live_probes_agree_exactly() {
+        let (truth, live) = backend_pair(NetKind::Rnn);
+        let mut replay = EvalBackend::Replay(&truth);
+        let mut live = EvalBackend::Live(live);
+        for id in [3usize, 600, 1204] {
+            let p = Point::from_id(id);
+            let a = replay.probe(p).unwrap();
+            let b = live.probe(p).unwrap();
+            assert_eq!(a.outcome, b.outcome);
+            assert_eq!(a.charged_cost, b.charged_cost);
+            assert_eq!(a.duration_s, b.duration_s);
+        }
+    }
+
+    #[test]
+    fn snapshot_accounting_matches_across_backends() {
+        let (truth, live) = backend_pair(NetKind::Mlp);
+        let mut replay = EvalBackend::Replay(&truth);
+        let mut live = EvalBackend::Live(live);
+        let config = Config::from_id(42);
+        let a = replay.snapshot(config, &S_INIT).unwrap();
+        let b = live.snapshot(config, &S_INIT).unwrap();
+        assert_eq!(a.outcomes.len(), b.outcomes.len());
+        for ((sa, oa), (sb, ob)) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(sa, sb);
+            assert_eq!(oa, ob);
+        }
+        assert_eq!(a.charged_cost, b.charged_cost);
+        // charged at the largest level, not the sum
+        let largest = truth
+            .outcome(&Point { config, s_idx: S_INIT[S_INIT.len() - 1] })
+            .cost_usd;
+        assert_eq!(a.charged_cost, largest);
+        let sum: f64 = a.outcomes.iter().map(|(_, o)| o.cost_usd).sum();
+        assert!(a.charged_cost < sum);
+    }
+
+    #[test]
+    fn live_batch_results_come_back_in_submission_order() {
+        let (_, live) = backend_pair(NetKind::Rnn);
+        let mut live = EvalBackend::Live(live);
+        let points: Vec<Point> = (0..12)
+            .map(|i| Point { config: Config::from_id(i * 20), s_idx: 4 })
+            .collect();
+        let probes = live.probe_batch(&points).unwrap();
+        let truth = Dataset::ground_truth(NetKind::Rnn);
+        for (p, pr) in points.iter().zip(&probes) {
+            assert_eq!(pr.outcome, truth.outcome(p));
+        }
+        // and the log saw every submission + completion
+        let log = live.event_log().unwrap();
+        let submitted = log
+            .count(|k| matches!(k, EventKind::JobSubmitted { .. }));
+        let completed = log
+            .count(|k| matches!(k, EventKind::JobCompleted { .. }));
+        assert_eq!((submitted, completed), (12, 12));
+    }
+
+    /// Launcher that fails the first `fail_first` launches (by a global
+    /// counter), then succeeds — exercises the requeue path end to end.
+    struct FlakyLauncher {
+        inner: SimLauncher,
+        remaining_failures: std::sync::atomic::AtomicUsize,
+    }
+
+    impl JobLauncher for FlakyLauncher {
+        fn launch(&self, job: &Job) -> Result<JobResult> {
+            use std::sync::atomic::Ordering;
+            let prev = self
+                .remaining_failures
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+                    v.checked_sub(1)
+                })
+                .unwrap_or(0);
+            if prev > 0 {
+                anyhow::bail!("transient launch failure");
+            }
+            self.inner.launch(job)
+        }
+    }
+
+    #[test]
+    fn failed_launches_are_requeued_and_the_run_completes() {
+        let launcher = FlakyLauncher {
+            inner: SimLauncher::noiseless(NetKind::Rnn),
+            remaining_failures: std::sync::atomic::AtomicUsize::new(2),
+        };
+        let mut live =
+            EvalBackend::Live(LiveEval::new(Box::new(launcher), 2));
+        let points: Vec<Point> = (0..6)
+            .map(|i| Point { config: Config::from_id(i * 40), s_idx: 4 })
+            .collect();
+        let probes = live.probe_batch(&points).unwrap();
+        assert_eq!(probes.len(), 6);
+        let truth = Dataset::ground_truth(NetKind::Rnn);
+        for (p, pr) in points.iter().zip(&probes) {
+            assert_eq!(pr.outcome, truth.outcome(p));
+        }
+        let log = live.event_log().unwrap();
+        assert_eq!(
+            log.count(|k| matches!(k, EventKind::JobFailed { .. })),
+            2
+        );
+    }
+
+    #[test]
+    fn snapshot_rejects_empty_levels_everywhere() {
+        let truth = Dataset::ground_truth(NetKind::Rnn);
+        let mut replay = EvalBackend::Replay(&truth);
+        assert!(replay.snapshot(Config::from_id(0), &[]).is_err());
+        assert_eq!(S_VALUES.len(), 5); // levels referenced above stay valid
+    }
+}

@@ -1,12 +1,16 @@
-//! Paper Algorithm 1 and the baseline optimizers, trace-driven over a
-//! [`Dataset`] (exactly the paper's simulation methodology: every "Train M
-//! in configuration ⟨x,s⟩" is a lookup of the measured outcome).
+//! Paper Algorithm 1 and the baseline optimizers, driven through an
+//! [`EvalBackend`]: trace replay over a [`Dataset`] (exactly the paper's
+//! simulation methodology: every "Train M in configuration ⟨x,s⟩" is a
+//! lookup of the measured outcome) or live deployments through the
+//! threaded coordinator.
 
+use super::backend::{EvalBackend, Probe};
 use super::metrics::{accuracy_c, IterRecord, RunResult};
 use crate::acq::{
     eic, eic_usd, fabolas_alpha, joint_feasibility_many, select_incumbent,
     trimtuner_alpha, EntropyEstimator, Models, TrimTunerAcq,
 };
+use crate::coordinator::EventKind;
 use crate::heuristics::{cea_scores_feats, select_next, AlphaCache, FilterKind};
 use crate::models::{Feat, FitOptions, ModelKind};
 use crate::opt::latin_hypercube;
@@ -18,6 +22,7 @@ use crate::space::{
 use crate::util::stats::cmp_nan_low;
 use crate::util::timer::Timer;
 use crate::util::Rng;
+use anyhow::Result;
 use std::collections::HashSet;
 
 /// Which optimizer to run (paper §IV "Baselines").
@@ -131,6 +136,19 @@ impl EngineConfig {
     }
 }
 
+/// A post-iteration incumbent recommendation. `acc_estimate` is the
+/// accuracy figure the recommender itself acted on — model-predicted for
+/// the model-based recommenders, *observed* for the observation-based ones.
+/// No ground truth is involved, so stop conditions may consume it.
+#[derive(Debug, Clone, Copy)]
+struct Recommendation {
+    point: Point,
+    acc_estimate: f64,
+    /// true when the estimate had to fall back to a sub-sampled probe of
+    /// the config (no full-data-set observation existed yet)
+    from_subsample: bool,
+}
+
 struct State {
     tested: Vec<Point>,
     outcomes: Vec<Outcome>,
@@ -144,21 +162,45 @@ struct State {
 }
 
 impl State {
-    fn observe(&mut self, dataset: &Dataset, p: Point) -> Outcome {
-        let o = dataset.outcome(&p);
+    /// Evaluate one probe through the backend and record the observation.
+    fn observe(
+        &mut self,
+        backend: &mut EvalBackend,
+        p: Point,
+    ) -> Result<Probe> {
+        let probe = backend.probe(p)?;
+        self.push_observation(p, probe.outcome);
+        Ok(probe)
+    }
+
+    fn push_observation(&mut self, p: Point, o: Outcome) {
         self.tested.push(p);
         self.outcomes.push(o);
         self.tested_ids.insert(p.id());
-        o
     }
 }
 
-/// Run one optimizer on one dataset. Deterministic per (config, seed).
+/// Run one optimizer replaying one dataset (the paper's trace-driven
+/// evaluation). Deterministic per (config, seed).
 pub fn run(
     dataset: &Dataset,
     constraints: &[Constraint],
     cfg: &EngineConfig,
 ) -> RunResult {
+    let mut backend = EvalBackend::Replay(dataset);
+    run_backend(&mut backend, constraints, cfg)
+        .expect("replay evaluation cannot fail")
+}
+
+/// Run one optimizer over any evaluation substrate — the same Algorithm 1
+/// loop drives trace replay and live (worker-pool) deployments. Only a
+/// `Live` backend can return an error (a deployment that keeps failing
+/// after requeues).
+pub fn run_backend(
+    backend: &mut EvalBackend,
+    constraints: &[Constraint],
+    cfg: &EngineConfig,
+) -> Result<RunResult> {
     let mut rng = Rng::new(cfg.seed);
     // Per-run precomputed context: the full-data-set feature matrix (the
     // incumbent scan's domain) and the feature vector of every grid point,
@@ -169,8 +211,11 @@ pub fn run(
         .collect();
     let grid_feats: Vec<Feat> =
         (0..N_POINTS).map(|id| encode(&Point::from_id(id))).collect();
-    let (optimum, optimum_acc) = dataset
-        .best_feasible_full(constraints)
+    // Evaluation-only: the true optimum, when a ground-truth oracle exists
+    // (always under replay; optional for live runs).
+    let (optimum, optimum_acc) = backend
+        .eval_dataset()
+        .and_then(|d| d.best_feasible_full(constraints))
         .map(|(p, a)| (Some(p), a))
         .unwrap_or((None, f64::NAN));
 
@@ -189,7 +234,7 @@ pub fn run(
         incumbent_id: None,
     };
 
-    initialize(dataset, constraints, cfg, &mut st, &mut rng, &full_feats);
+    initialize(backend, constraints, cfg, &mut st, &mut rng, &full_feats)?;
 
     // ---------------- main optimization loop (Alg. 1 lines 11-20) --------
     for iter in 0..cfg.max_iters {
@@ -206,55 +251,72 @@ pub fn run(
             budget, &mut rng,
         );
 
-        let o = st.observe(dataset, chosen);
-        st.cum_cost += o.cost_usd;
-        st.cum_time += o.time_s;
+        let probe = st.observe(backend, chosen)?;
+        st.cum_cost += probe.charged_cost;
+        st.cum_time += probe.duration_s;
 
         refit(cfg, &mut st, iter);
-        let incumbent =
-            recommend(cfg.optimizer, &mut st, constraints, &full_feats);
+        let rec = recommend(cfg.optimizer, &mut st, constraints, &full_feats);
         let rec_wall_s = timer.elapsed_s();
 
         push_record(
-            &mut st, dataset, constraints, iter, false, chosen, o,
-            o.cost_usd, rec_wall_s, incumbent, n_evals,
+            &mut st,
+            backend,
+            constraints,
+            iter,
+            false,
+            chosen,
+            probe.outcome,
+            probe.charged_cost,
+            probe.duration_s,
+            rec_wall_s,
+            rec,
+            n_evals,
         );
         if cfg.stop.should_stop(&st.records) {
             break;
         }
     }
 
-    RunResult { records: st.records, optimum_acc, optimum }
+    Ok(RunResult { records: st.records, optimum_acc, optimum })
 }
 
 /// Initialization phase (Alg. 1 lines 2-10).
 fn initialize(
-    dataset: &Dataset,
+    backend: &mut EvalBackend,
     constraints: &[Constraint],
     cfg: &EngineConfig,
     st: &mut State,
     rng: &mut Rng,
     full_feats: &[Feat],
-) {
-    let mut init: Vec<(Point, f64)> = Vec::new(); // (point, cost charged)
+) -> Result<()> {
+    // (point, outcome, cost charged, deployment duration attributed here)
+    let mut init: Vec<(Point, Outcome, f64, f64)> = Vec::new();
     if cfg.optimizer.uses_subsampling() {
-        // one random config tested at the k init sub-sampling levels; the
-        // snapshot trick (paper §III) charges only the largest level.
+        // one random config tested at the k init sub-sampling levels via a
+        // single snapshot deployment (paper §III): only the largest level
+        // is charged, and the whole batch costs one training run's time.
         let config = Config::from_id(rng.below(N_CONFIGS));
         let levels = &S_INIT[..S_INIT.len().min(cfg.init_samples)];
-        for (j, &s_idx) in levels.iter().enumerate() {
-            let p = Point { config, s_idx };
-            let charge = if j + 1 == levels.len() {
-                dataset.outcome(&p).cost_usd
-            } else {
-                0.0
-            };
-            init.push((p, charge));
+        let snap = backend.snapshot(config, levels)?;
+        let n = snap.outcomes.len();
+        for (j, (s_idx, o)) in snap.outcomes.iter().enumerate() {
+            let p = Point { config, s_idx: *s_idx };
+            let is_last = j + 1 == n;
+            init.push((
+                p,
+                *o,
+                if is_last { snap.charged_cost } else { 0.0 },
+                if is_last { snap.duration_s } else { 0.0 },
+            ));
         }
     } else {
-        // LHS over the feature space, snapped to distinct full configs.
+        // LHS over the feature space, snapped to distinct full configs;
+        // independent deployments, launched in parallel under a live
+        // backend (the testbed parallelized exactly this batch).
         let samples = latin_hypercube(rng, cfg.init_samples, 7);
         let mut seen = HashSet::new();
+        let mut points = Vec::with_capacity(samples.len());
         for mut f in samples {
             f[6] = 1.0;
             let mut p = nearest_point(&f);
@@ -265,18 +327,20 @@ fn initialize(
                     s_idx: S_VALUES.len() - 1,
                 };
             }
-            let charge = dataset.outcome(&p).cost_usd;
-            init.push((p, charge));
+            points.push(p);
+        }
+        let probes = backend.probe_batch(&points)?;
+        for (p, pr) in points.iter().zip(&probes) {
+            init.push((*p, pr.outcome, pr.charged_cost, pr.duration_s));
         }
     }
 
-    for (i, (p, charge)) in init.iter().enumerate() {
-        let o = st.observe(dataset, *p);
+    let n = init.len();
+    for (i, (p, o, charge, duration)) in init.iter().enumerate() {
+        st.push_observation(*p, *o);
         st.cum_cost += charge;
-        if *charge > 0.0 || !cfg.optimizer.uses_subsampling() {
-            st.cum_time += o.time_s;
-        }
-        let is_last = i + 1 == init.len();
+        st.cum_time += duration;
+        let is_last = i + 1 == n;
         if is_last {
             let t = Timer::start();
             st.models.fit(
@@ -284,23 +348,23 @@ fn initialize(
                 &st.outcomes,
                 FitOptions { hyperopt: true, restarts: 1 },
             );
-            let incumbent =
-                recommend(cfg.optimizer, st, constraints, full_feats);
+            let rec = recommend(cfg.optimizer, st, constraints, full_feats);
             let wall = t.elapsed_s();
             push_record(
-                st, dataset, constraints, i, true, *p, o, *charge, wall,
-                incumbent, 0,
+                st, backend, constraints, i, true, *p, *o, *charge,
+                *duration, wall, rec, 0,
             );
         } else {
             // record without a model-based incumbent yet: report the best
-            // observed feasible point's config
-            let incumbent = best_observed(st, constraints);
+            // observed config (full-data-set observations preferred)
+            let rec = best_observed(st, constraints);
             push_record(
-                st, dataset, constraints, i, true, *p, o, *charge, 0.0,
-                incumbent, 0,
+                st, backend, constraints, i, true, *p, *o, *charge,
+                *duration, 0.0, rec, 0,
             );
         }
     }
+    Ok(())
 }
 
 fn untested_points(
@@ -502,17 +566,33 @@ fn refit(cfg: &EngineConfig, st: &mut State, iter: usize) {
     );
 }
 
-/// Best *observed* full config satisfying the measured constraints.
-fn best_observed(st: &State, constraints: &[Constraint]) -> Point {
-    let mut best: Option<(Point, f64)> = None;
-    let mut best_any: Option<(Point, f64)> = None;
+/// Best *observed* config satisfying the measured constraints, reported at
+/// s = 1. Full-data-set observations take strict precedence; a sub-sampled
+/// probe's accuracy is used only when no full observation exists yet, and
+/// the recommendation is flagged so the record can't silently attribute a
+/// sub-sampled accuracy to a full-data-set measurement.
+fn best_observed(st: &State, constraints: &[Constraint]) -> Recommendation {
+    let full_s = S_VALUES.len() - 1;
+    let mut best_feas: Option<(Point, f64)> = None; // full + feasible
+    let mut best_full: Option<(Point, f64)> = None; // full, any feasibility
+    let mut best_sub: Option<(Point, f64)> = None; // sub-sampled fallback
     for (p, o) in st.tested.iter().zip(&st.outcomes) {
-        let q = Point { config: p.config, s_idx: S_VALUES.len() - 1 };
-        if best_any.as_ref().map_or(true, |(_, a)| o.acc > *a) {
-            best_any = Some((q, o.acc));
-        }
         if !p.is_full() {
+            // fallback ranking: largest sub-sampling level first (closest
+            // to a full-data-set measurement), accuracy second
+            let better = match &best_sub {
+                None => true,
+                Some((q, a)) => {
+                    p.s_idx > q.s_idx || (p.s_idx == q.s_idx && o.acc > *a)
+                }
+            };
+            if better {
+                best_sub = Some((*p, o.acc));
+            }
             continue;
+        }
+        if best_full.as_ref().map_or(true, |(_, a)| o.acc > *a) {
+            best_full = Some((*p, o.acc));
         }
         let feas = constraints.iter().all(|c| {
             let v = match c.metric {
@@ -521,11 +601,21 @@ fn best_observed(st: &State, constraints: &[Constraint]) -> Point {
             };
             c.is_satisfied(v)
         });
-        if feas && best.as_ref().map_or(true, |(_, a)| o.acc > *a) {
-            best = Some((q, o.acc));
+        if feas && best_feas.as_ref().map_or(true, |(_, a)| o.acc > *a) {
+            best_feas = Some((*p, o.acc));
         }
     }
-    best.or(best_any).map(|(p, _)| p).expect("no observations")
+    if let Some((p, acc)) = best_feas.or(best_full) {
+        Recommendation { point: p, acc_estimate: acc, from_subsample: false }
+    } else if let Some((p, acc)) = best_sub {
+        Recommendation {
+            point: Point { config: p.config, s_idx: full_s },
+            acc_estimate: acc,
+            from_subsample: true,
+        }
+    } else {
+        panic!("no observations");
+    }
 }
 
 /// Post-iteration incumbent recommendation, per optimizer semantics.
@@ -541,7 +631,7 @@ fn recommend(
     st: &mut State,
     constraints: &[Constraint],
     full_feats: &[Feat],
-) -> Point {
+) -> Recommendation {
     match optimizer {
         // Model-based recommendation: TrimTuner (paper footnote 2) and the
         // CherryPick/Lynceus baselines (their GPs drive the final pick).
@@ -549,7 +639,7 @@ fn recommend(
         | OptimizerKind::Eic
         | OptimizerKind::EicUsd => {
             let inc = select_incumbent(&st.models, constraints, full_feats);
-            let chosen = match st.incumbent_id {
+            let (chosen, pred_acc) = match st.incumbent_id {
                 Some(prev) if prev != inc.config_id => {
                     let x_prev = &full_feats[prev];
                     let prev_feas = crate::acq::joint_feasibility(
@@ -561,15 +651,19 @@ fn recommend(
                     if prev_feas >= crate::acq::FEAS_THRESHOLD_HYST
                         && inc.pred_acc < prev_acc + SWITCH_MARGIN
                     {
-                        prev
+                        (prev, prev_acc)
                     } else {
-                        inc.config_id
+                        (inc.config_id, inc.pred_acc)
                     }
                 }
-                _ => inc.config_id,
+                _ => (inc.config_id, inc.pred_acc),
             };
             st.incumbent_id = Some(chosen);
-            Point { config: Config::from_id(chosen), s_idx: 4 }
+            Recommendation {
+                point: Point { config: Config::from_id(chosen), s_idx: 4 },
+                acc_estimate: pred_acc,
+                from_subsample: false,
+            }
         }
         OptimizerKind::Fabolas => {
             // constraint-oblivious: predicted-accuracy argmax at s=1
@@ -580,7 +674,11 @@ fn recommend(
                     best = (id, mu);
                 }
             }
-            Point { config: Config::from_id(best.0), s_idx: 4 }
+            Recommendation {
+                point: Point { config: Config::from_id(best.0), s_idx: 4 },
+                acc_estimate: best.1,
+                from_subsample: false,
+            }
         }
         // Random search recommends the best tested feasible config
         OptimizerKind::RandomSearch => best_observed(st, constraints),
@@ -590,18 +688,36 @@ fn recommend(
 #[allow(clippy::too_many_arguments)]
 fn push_record(
     st: &mut State,
-    dataset: &Dataset,
+    backend: &EvalBackend,
     constraints: &[Constraint],
     iter: usize,
     is_init: bool,
     tested: Point,
     outcome: Outcome,
     explore_cost: f64,
+    duration_s: f64,
     rec_wall_s: f64,
-    incumbent: Point,
+    rec: Recommendation,
     n_alpha_evals: usize,
 ) {
-    let inc_out = dataset.outcome(&incumbent);
+    // Evaluation-only ground truth: never consumed by the optimizer or its
+    // stop conditions. Present under replay; under live only when an
+    // offline oracle was attached.
+    let (inc_acc, inc_feasible, acc_c) = match backend.eval_dataset() {
+        Some(d) => (
+            d.outcome(&rec.point).acc,
+            d.is_feasible(&rec.point, constraints),
+            accuracy_c(d, &rec.point, constraints),
+        ),
+        None => (f64::NAN, false, f64::NAN),
+    };
+    if let Some(log) = backend.event_log() {
+        log.record(EventKind::IncumbentUpdated {
+            config_id: rec.point.config.id(),
+            pred_acc: rec.acc_estimate,
+        });
+        log.record(EventKind::IterationDone { iter, cum_cost: st.cum_cost });
+    }
     st.records.push(IterRecord {
         iter,
         is_init,
@@ -610,11 +726,14 @@ fn push_record(
         explore_cost,
         cum_cost: st.cum_cost,
         cum_time: st.cum_time,
+        duration_s,
         rec_wall_s,
-        incumbent,
-        inc_acc: inc_out.acc,
-        inc_feasible: dataset.is_feasible(&incumbent, constraints),
-        accuracy_c: accuracy_c(dataset, &incumbent, constraints),
+        incumbent: rec.point,
+        inc_pred_acc: rec.acc_estimate,
+        inc_from_subsample: rec.from_subsample,
+        inc_acc,
+        inc_feasible,
+        accuracy_c: acc_c,
         n_alpha_evals,
     });
 }

@@ -35,14 +35,30 @@ pub struct IterRecord {
     pub cum_cost: f64,
     /// cumulative simulated exploration time (s)
     pub cum_time: f64,
+    /// measured wall-clock duration of the deployment that produced this
+    /// observation (replay: the recorded training time; live: the job's
+    /// duration as reported by the launcher)
+    pub duration_s: f64,
     /// wall-clock seconds spent choosing this test + refitting (Table III)
     pub rec_wall_s: f64,
     /// recommended incumbent after this iteration (full data-set config)
     pub incumbent: Point,
-    /// ground-truth outcome of the incumbent in the dataset
+    /// the recommender's own accuracy estimate for the incumbent —
+    /// model-predicted (or observed, for observation-based recommenders).
+    /// This is what adaptive stop conditions consume: it involves no
+    /// ground truth, so it exists in live runs too.
+    pub inc_pred_acc: f64,
+    /// the incumbent's accuracy estimate came from a sub-sampled probe
+    /// (no full-data-set observation of any config existed yet)
+    pub inc_from_subsample: bool,
+    /// EVALUATION-ONLY: ground-truth outcome of the incumbent in the
+    /// dataset (NaN in live runs without an offline oracle attached)
     pub inc_acc: f64,
+    /// EVALUATION-ONLY: ground-truth feasibility of the incumbent.
+    /// Meaningless (always `false`) when no ground-truth oracle exists —
+    /// i.e. whenever `inc_acc.is_nan()`; check that before reading this.
     pub inc_feasible: bool,
-    /// Constrained Accuracy of the incumbent (Eq. 7)
+    /// EVALUATION-ONLY: Constrained Accuracy of the incumbent (Eq. 7)
     pub accuracy_c: f64,
     /// unique acquisition evaluations spent this iteration
     pub n_alpha_evals: usize,
@@ -137,8 +153,11 @@ mod tests {
             explore_cost: 0.0,
             cum_cost: cum,
             cum_time: cum * 10.0,
+            duration_s: 0.0,
             rec_wall_s: 0.0,
             incumbent: p,
+            inc_pred_acc: acc_c,
+            inc_from_subsample: false,
             inc_acc: 0.0,
             inc_feasible: true,
             accuracy_c: acc_c,

@@ -1,13 +1,16 @@
 //! The Bayesian-optimization engine: paper Algorithm 1 plus all baseline
-//! optimizers, replaying a measured [`Dataset`] exactly like the paper's
-//! trace-driven evaluation.
+//! optimizers, driven through an [`EvalBackend`] — trace replay over a
+//! measured [`crate::sim::Dataset`] (the paper's evaluation methodology) or
+//! live job deployments through the threaded coordinator.
 
+mod backend;
 mod loop_;
 mod metrics;
 mod pareto;
 mod stop;
 
-pub use loop_::{run, EngineConfig, OptimizerKind};
+pub use backend::{EvalBackend, LiveEval, Probe, Snapshot};
+pub use loop_::{run, run_backend, EngineConfig, OptimizerKind};
 pub use metrics::{accuracy_c, cost_to_quality, IterRecord, RunResult};
 pub use pareto::{pareto_front, recommend_pareto, ParetoPoint};
 pub use stop::StopCondition;

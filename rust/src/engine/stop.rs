@@ -12,8 +12,11 @@ use super::metrics::IterRecord;
 pub enum StopCondition {
     /// paper default: fixed number of cycles only
     Never,
-    /// stop when the incumbent's predicted accuracy has not improved by at
-    /// least `min_delta` over the last `window` iterations
+    /// stop when the incumbent's *model-predicted* accuracy
+    /// (`IterRecord::inc_pred_acc`) has not improved by at least
+    /// `min_delta` over the last `window` iterations. Deliberately blind
+    /// to ground truth: the decision must be computable in a live run,
+    /// where the true incumbent accuracy is unknown.
     NoImprovement { window: usize, min_delta: f64 },
     /// stop once cumulative exploration cost exceeds the budget (USD)
     CostBudget(f64),
@@ -38,15 +41,17 @@ impl StopCondition {
                 if main.len() <= window {
                     return false;
                 }
-                // best incumbent accuracy before the window vs within it
+                // best *predicted* incumbent accuracy before the window vs
+                // within it (never the ground-truth `inc_acc`, which a
+                // live tuner does not have)
                 let split = main.len() - window;
                 let before = main[..split]
                     .iter()
-                    .map(|r| r.inc_acc)
+                    .map(|r| r.inc_pred_acc)
                     .fold(f64::NEG_INFINITY, f64::max);
                 let within = main[split..]
                     .iter()
-                    .map(|r| r.inc_acc)
+                    .map(|r| r.inc_pred_acc)
                     .fold(f64::NEG_INFINITY, f64::max);
                 within - before < min_delta
             }
@@ -60,7 +65,7 @@ mod tests {
     use crate::sim::{Dataset, NetKind, Outcome};
     use crate::space::Point;
 
-    fn rec(is_init: bool, cum_cost: f64, cum_time: f64, inc_acc: f64) -> IterRecord {
+    fn rec(is_init: bool, cum_cost: f64, cum_time: f64, pred: f64) -> IterRecord {
         let p = Point::from_id(4);
         let _ = Dataset::generate as usize; // keep imports honest
         IterRecord {
@@ -71,11 +76,16 @@ mod tests {
             explore_cost: 0.0,
             cum_cost,
             cum_time,
+            duration_s: 1.0,
             rec_wall_s: 0.0,
             incumbent: p,
-            inc_acc,
+            inc_pred_acc: pred,
+            inc_from_subsample: false,
+            // ground truth deliberately disagrees with the prediction: a
+            // correct NoImprovement must never read it
+            inc_acc: f64::NAN,
             inc_feasible: true,
-            accuracy_c: inc_acc,
+            accuracy_c: pred,
             n_alpha_evals: 0,
         }
     }

@@ -127,8 +127,11 @@ mod tests {
                     explore_cost: 0.0,
                     cum_cost: c,
                     cum_time: c,
+                    duration_s: 0.0,
                     rec_wall_s: 0.0,
                     incumbent: p,
+                    inc_pred_acc: a,
+                    inc_from_subsample: false,
                     inc_acc: a,
                     inc_feasible: true,
                     accuracy_c: a,

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   optimize           run one optimizer on one network and print the trace
+//!                      (--live drives real simulated deployments through
+//!                      the threaded coordinator instead of trace replay)
 //!   generate-datasets  materialize the 3 measurement campaigns as CSV
 //!   repro <exp>        regenerate a paper table/figure (table1..4, fig1..4, all)
 //!   runtime-check      load the AOT artifacts via PJRT and verify numerics
@@ -9,7 +11,8 @@
 
 use anyhow::{bail, Result};
 use trimtuner::cli::Args;
-use trimtuner::engine::{self, EngineConfig, OptimizerKind};
+use trimtuner::coordinator::{EventKind, SimLauncher};
+use trimtuner::engine::{self, EngineConfig, EvalBackend, LiveEval, OptimizerKind};
 use trimtuner::experiments;
 use trimtuner::heuristics::FilterKind;
 use trimtuner::sim::{Dataset, NetKind};
@@ -19,14 +22,22 @@ const USAGE: &str = "\
 trimtuner — TrimTuner (Mendes et al. 2020) reproduction
 
 USAGE:
-  trimtuner optimize [--net rnn|mlp|cnn] [--optimizer trimtuner-dt|trimtuner-gp|eic|eic-usd|fabolas|random]
+  trimtuner optimize [--net rnn|mlp|cnn|multilayer]
+                     [--optimizer trimtuner-dt|trimtuner-gp|eic|eic-usd|fabolas|random]
                      [--beta 0.1] [--filter cea|random|nofilter|direct|cmaes]
                      [--iters 44] [--seed 0] [--cost-cap <usd>]
+                     [--live] [--workers 4] [--launcher-noise 1.0]
+                     [--launcher-seed <seed>]
   trimtuner generate-datasets [--out data] [--seed 42]
   trimtuner repro <table1|table2|table3|table4|fig1|fig2|fig3|fig4|all>
                   [--out results] [--seeds 5] [--full] [--iters 44]
   trimtuner runtime-check [--artifacts artifacts]
   trimtuner serve [--net mlp] [--jobs 16] [--workers 4]
+
+  --live submits every probe as a snapshot job through the worker pool
+  (coordinator::WorkerPool over a noisy SimLauncher) instead of replaying
+  the pre-materialized dataset; the dataset is still generated and attached
+  as an evaluation-only oracle so Accuracy_C stays comparable.
 ";
 
 fn main() -> Result<()> {
@@ -67,31 +78,63 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     }
     let cap = args.get_f64("cost-cap", net.paper_cost_cap());
     let constraints = vec![Constraint::cost_max(cap)];
+    let live = args.get_bool("live");
 
     eprintln!(
-        "optimize: net={} optimizer={} filter={} beta={} iters={} cap=${cap}",
+        "optimize: net={} optimizer={} filter={} beta={} iters={} cap=${cap} mode={}",
         net.name(),
         optimizer.name(),
         cfg.filter.name(),
         cfg.beta,
-        cfg.max_iters
+        cfg.max_iters,
+        if live { "live" } else { "replay" },
     );
     let dataset = Dataset::generate(net, args.get_u64("dataset-seed", 42));
-    let run = engine::run(&dataset, &constraints, &cfg);
+    let run = if live {
+        // Live tuning: every probe is a snapshot deployment through the
+        // worker pool. The generated dataset is attached purely as an
+        // evaluation oracle (accC column); the optimizer never reads it.
+        let workers = args.get_usize("workers", 4);
+        let noise = args.get_f64("launcher-noise", 1.0);
+        let launcher = SimLauncher::with_options(
+            net,
+            args.get_u64("launcher-seed", seed ^ 0x11FE),
+            noise,
+            0.0,
+        );
+        let mut backend = EvalBackend::Live(
+            LiveEval::new(Box::new(launcher), workers).with_eval(&dataset),
+        );
+        let run = engine::run_backend(&mut backend, &constraints, &cfg)?;
+        if let Some(log) = backend.event_log() {
+            eprintln!(
+                "live: {} jobs submitted, {} completed, {} failed on {workers} workers",
+                log.count(|k| matches!(k, EventKind::JobSubmitted { .. })),
+                log.count(|k| matches!(k, EventKind::JobCompleted { .. })),
+                log.count(|k| matches!(k, EventKind::JobFailed { .. })),
+            );
+        }
+        backend.shutdown();
+        run
+    } else {
+        engine::run(&dataset, &constraints, &cfg)
+    };
 
     println!(
-        "{:>4} {:>5} {:>30} {:>8} {:>9} {:>9} {:>8} {:>9} {:>6}",
-        "iter", "phase", "tested", "acc", "cost$", "cum$", "accC", "rec_ms", "evals"
+        "{:>4} {:>5} {:>30} {:>8} {:>9} {:>9} {:>9} {:>8} {:>9} {:>6}",
+        "iter", "phase", "tested", "acc", "cost$", "cum$", "dur_s", "accC",
+        "rec_ms", "evals"
     );
     for r in &run.records {
         println!(
-            "{:>4} {:>5} {:>30} {:>8.4} {:>9.5} {:>9.4} {:>8.4} {:>9.1} {:>6}",
+            "{:>4} {:>5} {:>30} {:>8.4} {:>9.5} {:>9.4} {:>9.2} {:>8.4} {:>9.1} {:>6}",
             r.iter,
             if r.is_init { "init" } else { "opt" },
             format!("{} s={:.3}", r.tested.config.describe(), r.tested.s()),
             r.outcome.acc,
             r.explore_cost,
             r.cum_cost,
+            r.duration_s,
             r.accuracy_c,
             r.rec_wall_s * 1e3,
             r.n_alpha_evals,

@@ -41,6 +41,15 @@ impl Dataset {
         Dataset { net, rows }
     }
 
+    /// Materialize the *noiseless* ground-truth surface. This is the
+    /// replay-side reference for live-vs-replay parity: a zero-noise
+    /// `SimLauncher` observes exactly these outcomes.
+    pub fn ground_truth(net: NetKind) -> Dataset {
+        let sim = CloudSim::new(net);
+        let rows = all_points().map(|p| sim.ground_truth(&p)).collect();
+        Dataset { net, rows }
+    }
+
     pub fn outcome(&self, p: &Point) -> Outcome {
         self.rows[p.id()]
     }
@@ -280,6 +289,34 @@ mod tests {
             assert!((a.cost_usd - b.cost_usd).abs() < 1e-5);
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn ground_truth_table_matches_oracle_pointwise() {
+        let d = Dataset::ground_truth(NetKind::Rnn);
+        let sim = CloudSim::new(NetKind::Rnn);
+        for id in [0usize, 77, 700, 1439] {
+            let p = Point::from_id(id);
+            assert_eq!(d.outcome(&p), sim.ground_truth(&p));
+        }
+        // and it still has a feasible optimum under the paper's cap
+        let (p, acc) = d.best_feasible_full(&caps(NetKind::Rnn)).unwrap();
+        assert!(p.is_full() && acc > 0.8);
+    }
+
+    #[test]
+    fn multilayer_extension_net_is_well_formed() {
+        // Not part of the paper's Table II (NetKind::ALL), but the live
+        // path accepts it: a non-trivial feasibility structure must exist.
+        let d = Dataset::generate(NetKind::Multilayer, 42);
+        let cap = NetKind::Multilayer.paper_cost_cap();
+        let s = d.feasibility_stats(&[Constraint::cost_max(cap)]);
+        assert_eq!(s.n_full, 288);
+        assert!(
+            s.feasible > 10 && s.feasible < 280,
+            "degenerate feasibility: {s:?}"
+        );
+        assert!(s.best_feasible_acc > 0.7, "{s:?}");
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! Live/replay parity: the coordinator-driven `Live` backend must be an
+//! exact substitute for trace replay when observation noise is zero, and a
+//! deterministic one regardless of worker count.
+
+use trimtuner::coordinator::SimLauncher;
+use trimtuner::engine::{
+    self, EngineConfig, EvalBackend, LiveEval, OptimizerKind, RunResult,
+    StopCondition,
+};
+use trimtuner::models::ModelKind;
+use trimtuner::sim::{Dataset, NetKind};
+use trimtuner::space::Constraint;
+
+fn caps(net: NetKind) -> Vec<Constraint> {
+    vec![Constraint::cost_max(net.paper_cost_cap())]
+}
+
+/// Paper defaults shrunk like `parallel_slate`'s smoke test so the GP
+/// variants stay fast.
+fn small_cfg(optimizer: OptimizerKind, seed: u64, iters: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::paper_default(optimizer, seed);
+    cfg.max_iters = iters;
+    cfg.n_rep = 10;
+    cfg.n_popt_samples = 40;
+    cfg.gp_hyper_samples = cfg.gp_hyper_samples.min(2);
+    cfg
+}
+
+fn live_run(
+    launcher: SimLauncher,
+    workers: usize,
+    eval: &Dataset,
+    constraints: &[Constraint],
+    cfg: &EngineConfig,
+) -> RunResult {
+    let mut backend = EvalBackend::Live(
+        LiveEval::new(Box::new(launcher), workers).with_eval(eval),
+    );
+    let run = engine::run_backend(&mut backend, constraints, cfg)
+        .expect("live run failed");
+    backend.shutdown();
+    run
+}
+
+fn assert_same_trajectory(a: &RunResult, b: &RunResult, label: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{label}: record count");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.tested.id(), rb.tested.id(), "{label}: tested point");
+        assert_eq!(
+            ra.outcome.acc.to_bits(),
+            rb.outcome.acc.to_bits(),
+            "{label}: observed accuracy"
+        );
+        assert_eq!(
+            ra.explore_cost.to_bits(),
+            rb.explore_cost.to_bits(),
+            "{label}: charged cost"
+        );
+        assert_eq!(
+            ra.cum_cost.to_bits(),
+            rb.cum_cost.to_bits(),
+            "{label}: cumulative cost"
+        );
+        assert_eq!(
+            ra.duration_s.to_bits(),
+            rb.duration_s.to_bits(),
+            "{label}: measured duration"
+        );
+        assert_eq!(
+            ra.incumbent.id(),
+            rb.incumbent.id(),
+            "{label}: incumbent"
+        );
+    }
+}
+
+/// ISSUE acceptance: with a zero-noise launcher, a `Live` run produces the
+/// same tested-point trajectory and charged costs as `Replay` on the
+/// matching ground-truth dataset — for both TrimTuner model kinds and a
+/// full-config baseline (which also exercises the parallel LHS init batch).
+#[test]
+fn zero_noise_live_matches_replay_exactly() {
+    let net = NetKind::Rnn;
+    let truth = Dataset::ground_truth(net);
+    let constraints = caps(net);
+    for (optimizer, iters) in [
+        (OptimizerKind::TrimTuner(ModelKind::Gp), 3),
+        (OptimizerKind::TrimTuner(ModelKind::Trees), 6),
+        (OptimizerKind::Eic, 4),
+    ] {
+        let cfg = small_cfg(optimizer, 5, iters);
+        let replay = engine::run(&truth, &constraints, &cfg);
+        let live = live_run(
+            SimLauncher::noiseless(net),
+            2,
+            &truth,
+            &constraints,
+            &cfg,
+        );
+        assert_same_trajectory(&replay, &live, &optimizer.name());
+        // with the same eval oracle the evaluation metrics agree too
+        for (ra, rb) in replay.records.iter().zip(&live.records) {
+            assert_eq!(
+                ra.accuracy_c.to_bits(),
+                rb.accuracy_c.to_bits(),
+                "{}: accuracy_c",
+                optimizer.name()
+            );
+        }
+    }
+}
+
+/// A *noisy* live run must be deterministic in the worker count: the
+/// launcher draws noise per job id, ids are assigned in submission order,
+/// and results are consumed in submission order — so 1 worker and 4
+/// workers must produce identical trajectories.
+#[test]
+fn noisy_live_runs_identical_across_worker_counts() {
+    let net = NetKind::Mlp;
+    let truth = Dataset::ground_truth(net);
+    let constraints = caps(net);
+    for optimizer in [
+        OptimizerKind::TrimTuner(ModelKind::Trees),
+        OptimizerKind::Eic,
+    ] {
+        let cfg = small_cfg(optimizer, 9, 5);
+        let mk = |workers| {
+            live_run(
+                SimLauncher::new(net, 33),
+                workers,
+                &truth,
+                &constraints,
+                &cfg,
+            )
+        };
+        let one = mk(1);
+        let four = mk(4);
+        assert_same_trajectory(&one, &four, &optimizer.name());
+    }
+}
+
+/// Without an eval oracle the live run still works end to end; the
+/// evaluation-only fields are NaN while the decision-side fields (model
+/// predictions, charged costs) stay real — and the `NoImprovement` stop
+/// condition keeps functioning, since it reads only predictions.
+#[test]
+fn live_without_oracle_runs_and_quarantines_ground_truth() {
+    let net = NetKind::Multilayer;
+    let mut cfg =
+        small_cfg(OptimizerKind::TrimTuner(ModelKind::Trees), 2, 12);
+    cfg.stop = StopCondition::NoImprovement { window: 3, min_delta: 1e-4 };
+    let mut backend = EvalBackend::Live(LiveEval::new(
+        Box::new(SimLauncher::new(net, 4)),
+        3,
+    ));
+    let run = engine::run_backend(&mut backend, &caps(net), &cfg)
+        .expect("live run failed");
+    assert!(run.optimum_acc.is_nan(), "no oracle, no ground-truth optimum");
+    assert!(run.optimum.is_none());
+    assert!(!run.records.is_empty());
+    for r in &run.records {
+        assert!(r.inc_acc.is_nan(), "ground truth leaked into live record");
+        assert!(r.accuracy_c.is_nan());
+        assert!(r.outcome.acc.is_finite(), "observations must be real");
+        assert!(r.cum_cost.is_finite() && r.cum_cost >= 0.0);
+    }
+    // the last main-loop record's prediction is finite: the stop decision
+    // was computable without ground truth
+    let last = run.records.last().unwrap();
+    assert!(last.inc_pred_acc.is_finite());
+}
+
+/// The init snapshot charge must match between backends even when noisy:
+/// one training run at the largest level, not four separate probes.
+#[test]
+fn live_init_charges_snapshot_cost_once() {
+    let net = NetKind::Rnn;
+    let truth = Dataset::ground_truth(net);
+    let cfg = small_cfg(OptimizerKind::TrimTuner(ModelKind::Trees), 7, 1);
+    let run = live_run(
+        SimLauncher::noiseless(net),
+        2,
+        &truth,
+        &caps(net),
+        &cfg,
+    );
+    let init: Vec<_> = run.records.iter().filter(|r| r.is_init).collect();
+    assert_eq!(init.len(), 4);
+    // only the last (largest-level) init record carries a charge
+    for r in &init[..3] {
+        assert_eq!(r.explore_cost, 0.0);
+        assert_eq!(r.duration_s, 0.0);
+    }
+    let last = init[3];
+    assert!(last.explore_cost > 0.0);
+    // and that charge is exactly the largest tested level's ground truth
+    assert_eq!(last.explore_cost, truth.outcome(&last.tested).cost_usd);
+}
