@@ -9,7 +9,7 @@
 //! Common random numbers (one fixed z-matrix per optimizer iteration) keep
 //! the candidate ranking free of MC jitter — see DESIGN.md §6.
 
-use crate::models::{Feat, Surrogate};
+use crate::models::{Feat, Posterior, Surrogate};
 use crate::util::Rng;
 
 pub struct EntropyEstimator {
@@ -17,7 +17,8 @@ pub struct EntropyEstimator {
     pub rep_feats: Vec<Feat>,
     /// common random numbers: n_samples × |rep| standard normals
     z: Vec<Vec<f64>>,
-    /// scratch buffer for one posterior draw
+    /// Laplace smoothing constant added to each candidate's arg-max count
+    /// (keeps p_opt strictly positive so the KL terms stay finite)
     laplace: f64,
 }
 
@@ -40,8 +41,16 @@ impl EntropyEstimator {
     /// cores (GP: one multi-RHS triangular solve over the representative
     /// set; trees: one tree-major slate pass), not per-point predictions.
     pub fn p_opt(&self, acc_model: &dyn Surrogate) -> Vec<f64> {
-        let post = acc_model.posterior(&self.rep_feats);
+        self.p_opt_from(&acc_model.posterior(&self.rep_feats))
+    }
+
+    /// p_opt from a precomputed joint posterior over the representative
+    /// set — the fantasy α_T path builds each candidate's conditioned
+    /// posterior by rank-one algebra and hands it in directly, without
+    /// materializing a conditioned surrogate.
+    pub fn p_opt_from(&self, post: &Posterior) -> Vec<f64> {
         let m = self.rep_feats.len();
+        assert_eq!(post.len(), m, "posterior not over the representative set");
         let mut counts = vec![self.laplace; m];
         let mut draw = Vec::with_capacity(m);
         for z in &self.z {
@@ -75,6 +84,13 @@ impl EntropyEstimator {
     /// current model (pass `baseline = kl_from_uniform(p_opt(current))`).
     pub fn info_gain(&self, model_after: &dyn Surrogate, baseline: f64) -> f64 {
         let p = self.p_opt(model_after);
+        (Self::kl_from_uniform(&p) - baseline).max(0.0)
+    }
+
+    /// [`EntropyEstimator::info_gain`] from a precomputed conditioned
+    /// posterior over the representative set.
+    pub fn info_gain_from(&self, post: &Posterior, baseline: f64) -> f64 {
+        let p = self.p_opt_from(post);
         (Self::kl_from_uniform(&p) - baseline).max(0.0)
     }
 }

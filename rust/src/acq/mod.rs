@@ -17,4 +17,6 @@ pub use models::{
     select_incumbent_over, select_incumbent_over_with_feas, Incumbent,
     Models, FEAS_THRESHOLD, FEAS_THRESHOLD_HYST,
 };
-pub use trimtuner::{trimtuner_alpha, TrimTunerAcq};
+pub use trimtuner::{
+    alpha_slate, trimtuner_alpha, AlphaMode, AlphaSlate, TrimTunerAcq,
+};

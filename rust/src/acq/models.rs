@@ -18,6 +18,10 @@ pub struct Models {
     /// models ln(time_s)
     pub time: Box<dyn Surrogate>,
     pub kind: ModelKind,
+    /// bumped on every [`Models::fit`] — lets per-iteration acquisition
+    /// context (CEA ordering, entropy estimator, fantasy surfaces) be
+    /// cached and reused as long as the fitted models are unchanged
+    generation: u64,
 }
 
 impl Models {
@@ -46,6 +50,7 @@ impl Models {
                     gp_k,
                 )),
                 kind,
+                generation: 0,
             },
             ModelKind::Trees => Models {
                 acc: Box::new(ExtraTrees::with_seed(
@@ -61,8 +66,15 @@ impl Models {
                     seed ^ 2,
                 )),
                 kind,
+                generation: 0,
             },
         }
+    }
+
+    /// Fit generation: distinct values mean the surrogates were refitted
+    /// in between (conditioned clones inherit the parent's generation).
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     /// Fit all three surrogates from the observation log.
@@ -81,6 +93,7 @@ impl Models {
         self.acc.fit(&xs, &acc, opts);
         self.cost.fit(&xs, &lc, opts);
         self.time.fit(&xs, &lt, opts);
+        self.generation += 1;
     }
 
     /// The surrogate that models a constraint's metric.
@@ -145,6 +158,7 @@ impl Models {
             cost,
             time,
             kind: self.kind,
+            generation: self.generation,
         }
     }
 }
@@ -275,7 +289,10 @@ pub fn select_incumbent_over_with_feas(
     incumbent_scan(subset, feas, &accs)
 }
 
-fn incumbent_scan(
+/// Core incumbent argmax over pre-gathered (feasibility, prediction) rows —
+/// shared by the scan entry points above and the fantasy α_T evaluator,
+/// which supplies conditioned predictions without a conditioned surrogate.
+pub(crate) fn incumbent_scan(
     subset: &[usize],
     feas: &[f64],
     accs: &[(f64, f64)],

@@ -5,10 +5,12 @@
 
 use super::entropy::EntropyEstimator;
 use super::models::{
-    select_incumbent_over, select_incumbent_over_with_feas, Models,
+    incumbent_scan, joint_feasibility_many, select_incumbent_over,
+    select_incumbent_over_with_feas, Models,
 };
-use crate::models::Feat;
-use crate::space::Constraint;
+use crate::models::{FantasySurface, Feat};
+use crate::space::{encode, Constraint, Point};
+use crate::util::stats::normal_cdf;
 
 /// Precomputed per-iteration context for evaluating α_T on many candidates.
 pub struct TrimTunerAcq<'a> {
@@ -66,6 +68,175 @@ pub fn trimtuner_alpha(ctx: &TrimTunerAcq<'_>, x: &Feat) -> f64 {
     // 4. information gain per dollar
     let gain = ctx.est.info_gain(updated.acc.as_ref(), ctx.baseline);
     p_feas * gain / ctx.models.predicted_cost(x)
+}
+
+/// Which α_T evaluation strategy the slate evaluator uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlphaMode {
+    /// Shared per-iteration fantasy posteriors + rank-one conditioning per
+    /// candidate (the default).
+    Fantasy,
+    /// Per-candidate `Models::condition` clone-and-extend — the reference
+    /// path [`trimtuner_alpha`] implements.
+    Clone,
+}
+
+impl AlphaMode {
+    /// `TRIMTUNER_ALPHA=clone` is the escape hatch back to per-candidate
+    /// clone-conditioning; anything else (or unset) is the fantasy path.
+    pub fn from_env() -> AlphaMode {
+        match std::env::var("TRIMTUNER_ALPHA") {
+            Ok(v) if v.eq_ignore_ascii_case("clone") => AlphaMode::Clone,
+            _ => AlphaMode::Fantasy,
+        }
+    }
+}
+
+/// Per-iteration slate evaluator for α_T.
+///
+/// Construction performs all work that is shared across the whole
+/// candidate slate once: the fused query grid Q = representer set ∪
+/// incumbent shortlist, one [`FantasySurface`] per conditioned surrogate
+/// (joint posterior + cross-solve matrices), and — when conditioning
+/// cannot move the constraint models — the shortlist feasibility. Each
+/// candidate then costs one O(n·|Q| + m²) rank-one view instead of a
+/// surrogate clone, a shortlist re-prediction and an O(m³) representer
+/// covariance refactorization. Evaluation shards candidates across
+/// `std::thread::scope` workers with order-independent, bit-stable
+/// results (the CRN z-matrix is fixed per iteration).
+///
+/// Parity with mapping [`trimtuner_alpha`]: bit-exact for tree
+/// surrogates, within 1e-9 relative for GPs (hyper-sample mixtures
+/// included) — see `tests/alpha_parity.rs`.
+pub struct AlphaSlate<'a> {
+    ctx: &'a TrimTunerAcq<'a>,
+    mode: AlphaMode,
+    threads: usize,
+    /// conditioned-accuracy surface over reps ++ shortlist (fantasy mode)
+    acc: Option<Box<dyn FantasySurface>>,
+    /// conditioned constraint-metric surfaces over the shortlist, one per
+    /// constraint — built only when conditioning moves the constraint
+    /// models (GPs)
+    metrics: Vec<Box<dyn FantasySurface>>,
+    /// owned shortlist feasibility when conditioning cannot move it and
+    /// the engine did not precompute `ctx.inc_feas`
+    fixed_feas: Option<Vec<f64>>,
+}
+
+impl<'a> AlphaSlate<'a> {
+    /// Build the per-iteration evaluator, honoring `TRIMTUNER_ALPHA`.
+    pub fn new(ctx: &'a TrimTunerAcq<'a>) -> AlphaSlate<'a> {
+        AlphaSlate::with_mode(ctx, AlphaMode::from_env())
+    }
+
+    pub fn with_mode(
+        ctx: &'a TrimTunerAcq<'a>,
+        mode: AlphaMode,
+    ) -> AlphaSlate<'a> {
+        let mut slate = AlphaSlate {
+            ctx,
+            mode,
+            threads: crate::util::slate_threads(),
+            acc: None,
+            metrics: Vec::new(),
+            fixed_feas: None,
+        };
+        if mode == AlphaMode::Clone {
+            return slate;
+        }
+        // fused query grid: representer set first (the joint prefix p_opt
+        // samples over), then the incumbent shortlist
+        let m = ctx.est.rep_feats.len();
+        let mut grid: Vec<Feat> =
+            Vec::with_capacity(m + ctx.inc_shortlist_feats.len());
+        grid.extend_from_slice(&ctx.est.rep_feats);
+        grid.extend_from_slice(ctx.inc_shortlist_feats);
+        slate.acc = Some(ctx.models.acc.fantasy_surface(&grid, m));
+        if ctx.models.constraints_fixed_under_condition() {
+            if ctx.inc_feas.is_none() {
+                slate.fixed_feas = Some(joint_feasibility_many(
+                    ctx.models,
+                    ctx.constraints,
+                    ctx.inc_shortlist_feats,
+                ));
+            }
+        } else {
+            slate.metrics = ctx
+                .constraints
+                .iter()
+                .map(|c| {
+                    ctx.models
+                        .metric_model(c.metric)
+                        .fantasy_surface(ctx.inc_shortlist_feats, 0)
+                })
+                .collect();
+        }
+        slate
+    }
+
+    /// Override the worker count (1 forces sequential evaluation).
+    pub fn with_threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// α_T for every candidate of the slate, in slate order. Bit-stable
+    /// for any worker count.
+    pub fn eval_feats(&self, xs: &[Feat]) -> Vec<f64> {
+        crate::util::shard_map(xs, self.threads, |x| self.eval_one(x))
+    }
+
+    /// [`AlphaSlate::eval_feats`] over grid points.
+    pub fn eval_points(&self, pts: &[Point]) -> Vec<f64> {
+        let xs: Vec<Feat> = pts.iter().map(encode).collect();
+        self.eval_feats(&xs)
+    }
+
+    /// α_T of one candidate under the configured mode.
+    pub fn eval_one(&self, x: &Feat) -> f64 {
+        match self.mode {
+            AlphaMode::Clone => trimtuner_alpha(self.ctx, x),
+            AlphaMode::Fantasy => self.eval_fantasy(x),
+        }
+    }
+
+    fn eval_fantasy(&self, x: &Feat) -> f64 {
+        let ctx = self.ctx;
+        let m = ctx.est.rep_feats.len();
+        let av = self.acc.as_ref().expect("fantasy surfaces built").view(x);
+        // steps 2-3: incumbent under the conditioned models, and its
+        // feasibility — conditioned accuracy comes from the shortlist
+        // suffix of the fused grid
+        let accs = &av.grid[m..];
+        let inc = match ctx.inc_feas.or(self.fixed_feas.as_deref()) {
+            Some(feas) => incumbent_scan(ctx.inc_shortlist, feas, accs),
+            None => {
+                let mut feas = vec![1.0; ctx.inc_shortlist.len()];
+                for (c, surf) in ctx.constraints.iter().zip(&self.metrics) {
+                    let mv = surf.view(x);
+                    let lim = c.max.max(1e-12).ln();
+                    for (f, &(mu, std)) in feas.iter_mut().zip(&mv.grid) {
+                        *f *= normal_cdf((lim - mu) / std.max(1e-9));
+                    }
+                }
+                incumbent_scan(ctx.inc_shortlist, &feas, accs)
+            }
+        };
+        // step 4: information gain per dollar, from the conditioned joint
+        // posterior over the representer prefix
+        let joint = av.joint.as_ref().expect("joint prefix present");
+        let gain = ctx.est.info_gain_from(joint, ctx.baseline);
+        inc.feas_prob * gain / ctx.models.predicted_cost(x)
+    }
+}
+
+/// Batched α_T over a candidate slate: one shared per-iteration
+/// precomputation, then a rank-one fantasy view per candidate (honors the
+/// `TRIMTUNER_ALPHA=clone` escape hatch). Equal to mapping
+/// [`trimtuner_alpha`] over the slate — bit-exact for tree surrogates,
+/// within 1e-9 relative for GPs.
+pub fn alpha_slate(ctx: &TrimTunerAcq<'_>, slate: &[Point]) -> Vec<f64> {
+    AlphaSlate::new(ctx).eval_points(slate)
 }
 
 #[cfg(test)]
@@ -185,6 +356,94 @@ mod tests {
         let c = ctx(&f);
         let x = encode(&Point { config: Config::from_id(33), s_idx: 1 });
         assert_eq!(trimtuner_alpha(&c, &x), trimtuner_alpha(&c, &x));
+    }
+
+    fn mixed_slate(seed: u64, n: usize) -> Vec<Point> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| Point {
+                config: Config::from_id(rng.below(288)),
+                s_idx: rng.below(5),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn alpha_slate_bit_identical_to_per_candidate_for_trees() {
+        let f = setup(ModelKind::Trees, 0.02);
+        // both engine configurations: precomputed shortlist feasibility
+        // (the engine's trees path) and the recompute-inside variant
+        let feas = crate::acq::joint_feasibility_many(
+            &f.models,
+            &f.constraints,
+            &f.shortlist_feats,
+        );
+        for with_feas in [false, true] {
+            let c = TrimTunerAcq {
+                inc_feas: with_feas.then_some(feas.as_slice()),
+                ..ctx(&f)
+            };
+            let slate = mixed_slate(61, 12);
+            // pin the fantasy path: an ambient TRIMTUNER_ALPHA=clone must
+            // not turn this into a clone-vs-clone no-op
+            let batch = AlphaSlate::with_mode(&c, AlphaMode::Fantasy)
+                .eval_points(&slate);
+            for (p, b) in slate.iter().zip(&batch) {
+                let a = trimtuner_alpha(&c, &encode(p));
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "with_feas={with_feas}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_slate_matches_per_candidate_for_gp_within_1e9() {
+        let f = setup(ModelKind::Gp, 0.02);
+        let c = ctx(&f);
+        let slate = mixed_slate(71, 10);
+        let batch = AlphaSlate::with_mode(&c, AlphaMode::Fantasy)
+            .eval_points(&slate);
+        for (p, b) in slate.iter().zip(&batch) {
+            let a = trimtuner_alpha(&c, &encode(p));
+            assert!(
+                (a - b).abs() <= 1e-9 * a.abs().max(1e-12),
+                "fantasy {b} vs clone {a}"
+            );
+        }
+    }
+
+    #[test]
+    fn clone_mode_escape_hatch_is_bitwise_reference() {
+        for kind in [ModelKind::Gp, ModelKind::Trees] {
+            let f = setup(kind, 0.02);
+            let c = ctx(&f);
+            let slate = mixed_slate(81, 8);
+            let evals = AlphaSlate::with_mode(&c, AlphaMode::Clone)
+                .eval_points(&slate);
+            for (p, b) in slate.iter().zip(&evals) {
+                let a = trimtuner_alpha(&c, &encode(p));
+                assert_eq!(a.to_bits(), b.to_bits(), "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_slate_sharded_matches_sequential_bitwise() {
+        let f = setup(ModelKind::Trees, 0.02);
+        let c = ctx(&f);
+        let slate = mixed_slate(91, 16);
+        let seq = AlphaSlate::with_mode(&c, AlphaMode::Fantasy)
+            .with_threads(1)
+            .eval_points(&slate);
+        let par = AlphaSlate::with_mode(&c, AlphaMode::Fantasy)
+            .with_threads(5)
+            .eval_points(&slate);
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

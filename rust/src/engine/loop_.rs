@@ -6,9 +6,10 @@
 
 use super::backend::{EvalBackend, Probe};
 use super::metrics::{accuracy_c, IterRecord, RunResult};
+use super::pareto::recommend_pareto;
 use crate::acq::{
     eic, eic_usd, fabolas_alpha, joint_feasibility_many, select_incumbent,
-    trimtuner_alpha, EntropyEstimator, Models, TrimTunerAcq,
+    AlphaSlate, EntropyEstimator, Models, TrimTunerAcq,
 };
 use crate::coordinator::EventKind;
 use crate::heuristics::{cea_scores_feats, select_next, AlphaCache, FilterKind};
@@ -107,6 +108,9 @@ pub struct EngineConfig {
     /// adaptive stop condition evaluated after every iteration, in
     /// addition to `max_iters` (paper §III extension)
     pub stop: super::stop::StopCondition,
+    /// also compute the predicted (cost, accuracy) Pareto frontier under
+    /// the final models (`RunResult::pareto`, paper §V future work)
+    pub pareto: bool,
 }
 
 impl EngineConfig {
@@ -132,8 +136,28 @@ impl EngineConfig {
                 _ => 1,
             },
             stop: super::stop::StopCondition::Never,
+            pareto: false,
         }
     }
+}
+
+/// Per-iteration acquisition context that is valid as long as the fitted
+/// models are unchanged (`Models::generation`): the CEA config ordering,
+/// the entropy estimator (representer set + CRN z-matrix) and the
+/// current-model p_opt baseline. Algorithm 1 refits after every
+/// observation, so the standard loop rebuilds it every iteration — the
+/// cache pays off when selection is re-entered without a refit (repeated
+/// selection rounds, batched probe slates, external callers driving
+/// `choose_next` directly).
+struct AcqContext {
+    generation: u64,
+    /// built for the constraint-free (FABOLAS) estimator
+    constraint_free: bool,
+    /// full-data-set config ids, CEA-descending under the current models
+    cea_order: Vec<usize>,
+    est: EntropyEstimator,
+    /// KL(p_opt ‖ u) of the current accuracy model
+    baseline: f64,
 }
 
 /// A post-iteration incumbent recommendation. `acc_estimate` is the
@@ -236,6 +260,10 @@ pub fn run_backend(
 
     initialize(backend, constraints, cfg, &mut st, &mut rng, &full_feats)?;
 
+    // Acquisition context persisted across iterations; rebuilt only when
+    // the models were refitted in between.
+    let mut acq_cache: Option<AcqContext> = None;
+
     // ---------------- main optimization loop (Alg. 1 lines 11-20) --------
     for iter in 0..cfg.max_iters {
         let timer = Timer::start();
@@ -248,7 +276,7 @@ pub fn run_backend(
 
         let (chosen, n_evals) = choose_next(
             cfg, constraints, &st, &untested, &full_feats, &grid_feats,
-            budget, &mut rng,
+            budget, &mut rng, &mut acq_cache,
         );
 
         let probe = st.observe(backend, chosen)?;
@@ -278,7 +306,8 @@ pub fn run_backend(
         }
     }
 
-    Ok(RunResult { records: st.records, optimum_acc, optimum })
+    let pareto = cfg.pareto.then(|| recommend_pareto(&st.models));
+    Ok(RunResult { records: st.records, optimum_acc, optimum, pareto })
 }
 
 /// Initialization phase (Alg. 1 lines 2-10).
@@ -398,6 +427,7 @@ fn choose_next(
     grid_feats: &[Feat],
     budget: usize,
     rng: &mut Rng,
+    acq_cache: &mut Option<AcqContext>,
 ) -> (Point, usize) {
     match cfg.optimizer {
         OptimizerKind::RandomSearch => {
@@ -426,12 +456,11 @@ fn choose_next(
             )
         }
         OptimizerKind::Fabolas => {
-            let (est, _) = build_estimator(cfg, st, &[], full_feats, rng);
-            let baseline = EntropyEstimator::kl_from_uniform(
-                &est.p_opt(st.models.acc.as_ref()),
-            );
+            let actx =
+                acq_context(cfg, st, &[], full_feats, rng, acq_cache);
             let models = &st.models;
-            let est_ref = &est;
+            let est_ref = &actx.est;
+            let baseline = actx.baseline;
             let mut alpha = AlphaCache::shared(move |p: &Point| {
                 fabolas_alpha(models, est_ref, baseline, &grid_feats[p.id()])
             });
@@ -446,15 +475,12 @@ fn choose_next(
             )
         }
         OptimizerKind::TrimTuner(_) => {
-            let (est, cea_order) =
-                build_estimator(cfg, st, constraints, full_feats, rng);
-            let baseline = EntropyEstimator::kl_from_uniform(
-                &est.p_opt(st.models.acc.as_ref()),
-            );
+            let actx =
+                acq_context(cfg, st, constraints, full_feats, rng, acq_cache);
             // incumbent shortlist: top configs by CEA under current
             // models, with the feature rows gathered once per iteration
             let shortlist: Vec<usize> =
-                cea_order.iter().take(INC_SHORTLIST).copied().collect();
+                actx.cea_order.iter().take(INC_SHORTLIST).copied().collect();
             let shortlist_feats: Vec<Feat> =
                 shortlist.iter().map(|&id| full_feats[id]).collect();
             // When conditioning leaves the constraint models untouched
@@ -462,8 +488,9 @@ fn choose_next(
             // shortlist feasibility scanned inside every α_T call is
             // iteration-constant — compute it once here instead of
             // 2 × |shortlist| surrogate predictions per candidate. GP
-            // conditioning shifts the constraint posteriors, so GPs keep
-            // the per-candidate recomputation.
+            // conditioning shifts the constraint posteriors; their
+            // conditioned feasibility comes from the slate evaluator's
+            // rank-one metric surfaces.
             let shortlist_feas: Option<Vec<f64>> =
                 if st.models.constraints_fixed_under_condition() {
                     Some(joint_feasibility_many(
@@ -476,16 +503,21 @@ fn choose_next(
                 };
             let ctx = TrimTunerAcq {
                 models: &st.models,
-                est: &est,
+                est: &actx.est,
                 constraints,
                 inc_shortlist: &shortlist,
                 inc_shortlist_feats: &shortlist_feats,
                 inc_feas: shortlist_feas.as_deref(),
-                baseline,
+                baseline: actx.baseline,
             };
-            let ctx_ref = &ctx;
-            let mut alpha = AlphaCache::shared(move |p: &Point| {
-                trimtuner_alpha(ctx_ref, &grid_feats[p.id()])
+            // Slate-wide α_T: one shared fantasy-posterior precompute per
+            // iteration, then a rank-one conditioned view per candidate
+            // (`TRIMTUNER_ALPHA=clone` reverts to per-candidate cloning).
+            let slate = AlphaSlate::new(&ctx);
+            let mut alpha = AlphaCache::batch(|pts: &[Point]| {
+                let feats: Vec<Feat> =
+                    pts.iter().map(|p| grid_feats[p.id()]).collect();
+                slate.eval_feats(&feats)
             });
             select_next(
                 cfg.filter,
@@ -525,6 +557,40 @@ fn build_estimator(
         .map(|&i| full_feats[i])
         .collect();
     (EntropyEstimator::new(rep, cfg.n_popt_samples, rng), order)
+}
+
+/// The cached [`AcqContext`] for the current models, rebuilt when stale.
+/// A cache hit consumes no RNG (the CRN z-matrix is reused), which is
+/// exactly the semantics the per-iteration estimator requires: the models
+/// are unchanged, so the iteration's common random numbers may be too.
+fn acq_context<'c>(
+    cfg: &EngineConfig,
+    st: &State,
+    constraints: &[Constraint],
+    full_feats: &[Feat],
+    rng: &mut Rng,
+    cache: &'c mut Option<AcqContext>,
+) -> &'c AcqContext {
+    let generation = st.models.generation();
+    let constraint_free = constraints.is_empty();
+    let stale = cache.as_ref().map_or(true, |c| {
+        c.generation != generation || c.constraint_free != constraint_free
+    });
+    if stale {
+        let (est, cea_order) =
+            build_estimator(cfg, st, constraints, full_feats, rng);
+        let baseline = EntropyEstimator::kl_from_uniform(
+            &est.p_opt(st.models.acc.as_ref()),
+        );
+        *cache = Some(AcqContext {
+            generation,
+            constraint_free,
+            cea_order,
+            est,
+            baseline,
+        });
+    }
+    cache.as_ref().expect("acquisition context built")
 }
 
 /// Incumbent accuracy target for EI variants: best observed accuracy among

@@ -1,6 +1,7 @@
 //! Evaluation metrics: Constrained Accuracy (paper Eq. 7) and derived
 //! savings measures (Fig. 2).
 
+use super::pareto::ParetoPoint;
 use crate::sim::{Dataset, Outcome};
 use crate::space::{Constraint, Point};
 
@@ -71,6 +72,9 @@ pub struct RunResult {
     /// true optimum: best feasible full-data-set accuracy in the dataset
     pub optimum_acc: f64,
     pub optimum: Option<Point>,
+    /// predicted (cost, accuracy) Pareto frontier under the final models,
+    /// populated when [`super::EngineConfig`]'s `pareto` flag is set
+    pub pareto: Option<Vec<ParetoPoint>>,
 }
 
 impl RunResult {
@@ -167,6 +171,7 @@ mod tests {
             records: vec![mk(0.1, 1.0), mk(0.85, 2.0), mk(0.95, 3.0)],
             optimum_acc: 1.0,
             optimum: None,
+            pareto: None,
         };
         assert_eq!(cost_to_quality(&run, 0.9), Some((3.0, 30.0)));
         assert_eq!(cost_to_quality(&run, 0.5), Some((2.0, 20.0)));

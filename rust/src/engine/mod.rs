@@ -12,5 +12,8 @@ mod stop;
 pub use backend::{EvalBackend, LiveEval, Probe, Snapshot};
 pub use loop_::{run, run_backend, EngineConfig, OptimizerKind};
 pub use metrics::{accuracy_c, cost_to_quality, IterRecord, RunResult};
-pub use pareto::{pareto_front, recommend_pareto, ParetoPoint};
+pub use pareto::{
+    frontier_quality, hypervolume, pareto_front, recommend_pareto,
+    true_frontier, ParetoPoint,
+};
 pub use stop::StopCondition;

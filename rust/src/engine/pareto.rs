@@ -6,6 +6,7 @@
 
 use crate::acq::Models;
 use crate::models::Feat;
+use crate::sim::Dataset;
 use crate::space::{encode, Config, Point, N_CONFIGS};
 use crate::util::stats::{cmp_nan_high, cmp_nan_low};
 
@@ -61,6 +62,83 @@ pub fn recommend_pareto(models: &Models) -> Vec<ParetoPoint> {
     pareto_front(&pts)
 }
 
+/// 2D hypervolume of a (cost ↓, accuracy ↑) point set w.r.t. the reference
+/// point `(ref_cost, 0)`: the area its Pareto front dominates inside the
+/// box `cost ≤ ref_cost, acc ≥ 0`. Points costlier than the reference
+/// contribute nothing.
+pub fn hypervolume(points: &[ParetoPoint], ref_cost: f64) -> f64 {
+    let front = pareto_front(points);
+    let mut hv = 0.0;
+    let mut prev_acc = 0.0;
+    // the front is ascending in both cost and accuracy: each point adds
+    // the rectangle from its cost to the reference, for its accuracy gain
+    for p in &front {
+        if p.pred_cost >= ref_cost {
+            break;
+        }
+        let da = p.pred_acc.max(0.0) - prev_acc;
+        if da > 0.0 {
+            hv += da * (ref_cost - p.pred_cost);
+            prev_acc = p.pred_acc;
+        }
+    }
+    hv
+}
+
+/// The dataset's *measured* (cost, accuracy) frontier over full-data-set
+/// configurations — the ground truth a predicted frontier is judged
+/// against in replay mode.
+pub fn true_frontier(dataset: &Dataset) -> Vec<ParetoPoint> {
+    let pts: Vec<ParetoPoint> = (0..N_CONFIGS)
+        .map(|id| {
+            let o = dataset
+                .outcome(&Point { config: Config::from_id(id), s_idx: 4 });
+            ParetoPoint {
+                config_id: id,
+                pred_acc: o.acc,
+                pred_cost: o.cost_usd,
+            }
+        })
+        .collect();
+    pareto_front(&pts)
+}
+
+/// Frontier-quality metric for replay evaluation: look up the *measured*
+/// outcomes of the predicted frontier's configurations and compare their
+/// hypervolume to the measured true frontier's (shared reference point
+/// just beyond the costliest point of either set). 1.0 means the
+/// recommendation recovers the true frontier; lower values mean dominated
+/// or mispredicted configs.
+pub fn frontier_quality(dataset: &Dataset, predicted: &[ParetoPoint]) -> f64 {
+    let truth = true_frontier(dataset);
+    let measured: Vec<ParetoPoint> = predicted
+        .iter()
+        .map(|p| {
+            let o = dataset.outcome(&Point {
+                config: Config::from_id(p.config_id),
+                s_idx: 4,
+            });
+            ParetoPoint {
+                config_id: p.config_id,
+                pred_acc: o.acc,
+                pred_cost: o.cost_usd,
+            }
+        })
+        .collect();
+    let ref_cost = truth
+        .iter()
+        .chain(&measured)
+        .map(|p| p.pred_cost)
+        .fold(0.0, f64::max)
+        * 1.05
+        + 1e-12;
+    let hv_true = hypervolume(&truth, ref_cost);
+    if hv_true <= 0.0 {
+        return f64::NAN;
+    }
+    hypervolume(&measured, ref_cost) / hv_true
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,6 +174,40 @@ mod tests {
         let one = pareto_front(&[pp(7, 0.5, 0.5)]);
         assert_eq!(one.len(), 1);
         assert_eq!(one[0].config_id, 7);
+    }
+
+    #[test]
+    fn hypervolume_of_simple_staircase() {
+        // front: (cost 1, acc 0.5), (cost 2, acc 0.8); ref cost 4
+        // area = 0.5·(4−1) + 0.3·(4−2) = 2.1; dominated points change nothing
+        let pts =
+            vec![pp(0, 0.5, 1.0), pp(1, 0.8, 2.0), pp(2, 0.4, 3.0)];
+        assert!((hypervolume(&pts, 4.0) - 2.1).abs() < 1e-12);
+        // points beyond the reference contribute nothing
+        assert!((hypervolume(&pts, 1.5) - 0.25).abs() < 1e-12);
+        assert_eq!(hypervolume(&[], 4.0), 0.0);
+    }
+
+    #[test]
+    fn frontier_quality_perfect_for_true_frontier() {
+        let d = crate::sim::Dataset::generate(NetKind::Mlp, 42);
+        let truth = true_frontier(&d);
+        assert!(!truth.is_empty());
+        let q = frontier_quality(&d, &truth);
+        assert!((q - 1.0).abs() < 1e-9, "quality {q}");
+    }
+
+    #[test]
+    fn frontier_quality_penalizes_incomplete_recommendations() {
+        let d = crate::sim::Dataset::generate(NetKind::Mlp, 42);
+        let truth = true_frontier(&d);
+        assert!(truth.len() >= 2, "degenerate frontier");
+        // drop the most accurate point: the recommendation misses the top
+        // of the staircase, so its hypervolume ratio must fall below 1
+        let partial = &truth[..truth.len() - 1];
+        let q = frontier_quality(&d, partial);
+        assert!(q < 1.0 - 1e-12, "quality {q} not penalized");
+        assert!(q > 0.0);
     }
 
     #[test]

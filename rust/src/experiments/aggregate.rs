@@ -140,6 +140,7 @@ mod tests {
                 .collect(),
             optimum_acc: 1.0,
             optimum: None,
+            pareto: None,
         }
     }
 

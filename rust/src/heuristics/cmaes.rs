@@ -8,6 +8,7 @@
 
 use super::{nearest_untested, AlphaCache, D_IN};
 use crate::linalg::{Cholesky, Mat};
+use crate::models::Feat;
 use crate::space::Point;
 use crate::util::Rng;
 
@@ -20,9 +21,12 @@ impl CmaesSearch {
         CmaesSearch { rng }
     }
 
+    /// `untested_feats[i]` must be `encode(&untested[i])` — encoded once by
+    /// the caller, reused across every offspring snap.
     pub fn run(
         &mut self,
         untested: &[Point],
+        untested_feats: &[Feat],
         budget: usize,
         alpha: &mut AlphaCache<'_>,
     ) {
@@ -80,7 +84,7 @@ impl CmaesSearch {
                     .collect();
                 let mut feat = [0.0; D_IN];
                 feat.copy_from_slice(&x);
-                let p = nearest_untested(&feat, untested);
+                let p = nearest_untested(&feat, untested, untested_feats);
                 let v = alpha.eval(&p);
                 pop.push((x, v));
                 if alpha.unique_evals() >= budget {
@@ -166,6 +170,7 @@ mod tests {
     #[test]
     fn cmaes_improves_over_random_start() {
         let untested: Vec<Point> = all_points().collect();
+        let feats: Vec<Feat> = untested.iter().map(encode).collect();
         let target = encode(&Point::from_id(1000));
         let objective = |p: &Point| {
             let e = encode(p);
@@ -175,7 +180,7 @@ mod tests {
                 .sum::<f64>()
         };
         let mut alpha = AlphaCache::new(objective);
-        CmaesSearch::new(Rng::new(8)).run(&untested, 120, &mut alpha);
+        CmaesSearch::new(Rng::new(8)).run(&untested, &feats, 120, &mut alpha);
         let (_, v) = alpha.best().unwrap();
         assert!(alpha.unique_evals() <= 120);
         assert!(v > -0.4, "best {v}");
@@ -184,8 +189,9 @@ mod tests {
     #[test]
     fn cmaes_respects_budget() {
         let untested: Vec<Point> = all_points().take(300).collect();
+        let feats: Vec<Feat> = untested.iter().map(encode).collect();
         let mut alpha = AlphaCache::new(|p: &Point| encode(p)[0]);
-        CmaesSearch::new(Rng::new(9)).run(&untested, 7, &mut alpha);
+        CmaesSearch::new(Rng::new(9)).run(&untested, &feats, 7, &mut alpha);
         assert!(alpha.unique_evals() <= 7);
     }
 }

@@ -7,6 +7,7 @@
 //! acquisition evaluations is exhausted.
 
 use super::{nearest_untested, AlphaCache, D_IN};
+use crate::models::Feat;
 use crate::space::Point;
 
 #[derive(Debug, Clone)]
@@ -41,14 +42,17 @@ impl DirectSearch {
         DirectSearch
     }
 
+    /// `untested_feats[i]` must be `encode(&untested[i])` — encoded once by
+    /// the caller, reused across every center snap.
     pub fn run(
         &self,
         untested: &[Point],
+        untested_feats: &[Feat],
         budget: usize,
         alpha: &mut AlphaCache<'_>,
     ) {
         let eval = |center: &[f64; D_IN], alpha: &mut AlphaCache<'_>| {
-            let p = nearest_untested(center, untested);
+            let p = nearest_untested(center, untested, untested_feats);
             alpha.eval(&p)
         };
 
@@ -135,6 +139,7 @@ mod tests {
     #[test]
     fn direct_finds_good_point_on_smooth_surface() {
         let untested: Vec<Point> = all_points().collect();
+        let feats: Vec<Feat> = untested.iter().map(encode).collect();
         // objective: negative distance to a known target point
         let target = encode(&Point::from_id(777));
         let mut alpha = AlphaCache::new(|p: &Point| {
@@ -144,7 +149,7 @@ mod tests {
                 .map(|(a, b)| (a - b) * (a - b))
                 .sum::<f64>()
         });
-        DirectSearch::new().run(&untested, 120, &mut alpha);
+        DirectSearch::new().run(&untested, &feats, 120, &mut alpha);
         let (best, v) = alpha.best().unwrap();
         assert!(alpha.unique_evals() <= 120);
         // must get close to the optimum (value 0 at the target itself)
@@ -154,8 +159,9 @@ mod tests {
     #[test]
     fn direct_respects_tiny_budget() {
         let untested: Vec<Point> = all_points().take(200).collect();
+        let feats: Vec<Feat> = untested.iter().map(encode).collect();
         let mut alpha = AlphaCache::new(|p: &Point| encode(p)[5]);
-        DirectSearch::new().run(&untested, 5, &mut alpha);
+        DirectSearch::new().run(&untested, &feats, 5, &mut alpha);
         assert!(alpha.unique_evals() <= 5);
         assert!(alpha.unique_evals() >= 1);
     }

@@ -22,6 +22,7 @@ pub use cmaes::CmaesSearch;
 pub use direct::DirectSearch;
 
 use crate::acq::Models;
+use crate::models::Feat;
 use crate::space::{encode, Constraint, Point};
 use crate::util::stats::{argmax, cmp_nan_low};
 use crate::util::Rng;
@@ -62,14 +63,18 @@ impl FilterKind {
 
 /// Memoizing α evaluator: unique grid evaluations count against the budget.
 ///
-/// Two construction modes:
+/// Three construction modes:
 /// - [`AlphaCache::new`] wraps any `FnMut` — sequential evaluation only
 ///   (adaptive searches and tests that count calls);
 /// - [`AlphaCache::shared`] wraps a pure `Fn + Sync`, which additionally
 ///   lets [`AlphaCache::eval_slate`] shard a whole candidate slate across
 ///   `std::thread::scope` workers. Results are merged back in slate order,
 ///   so cache contents, unique-eval count and the id-tie-broken argmax are
-///   bit-identical to the sequential path regardless of worker count.
+///   bit-identical to the sequential path regardless of worker count;
+/// - [`AlphaCache::batch`] wraps a slate-wide evaluator (e.g.
+///   [`crate::acq::AlphaSlate`]): the whole fresh slate is scored in one
+///   call, letting the evaluator amortize per-iteration precomputation
+///   and do its own sharding.
 pub struct AlphaCache<'a> {
     f: AlphaFn<'a>,
     cache: HashMap<usize, f64>,
@@ -79,17 +84,7 @@ pub struct AlphaCache<'a> {
 enum AlphaFn<'a> {
     Serial(Box<dyn FnMut(&Point) -> f64 + 'a>),
     Shared(Box<dyn Fn(&Point) -> f64 + Sync + 'a>),
-}
-
-/// Worker count for slate evaluation: `TRIMTUNER_SLATE_THREADS` if set,
-/// otherwise the machine's available parallelism.
-fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("TRIMTUNER_SLATE_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    Batch(Box<dyn Fn(&[Point]) -> Vec<f64> + 'a>),
 }
 
 impl<'a> AlphaCache<'a> {
@@ -109,7 +104,19 @@ impl<'a> AlphaCache<'a> {
         AlphaCache {
             f: AlphaFn::Shared(Box::new(f)),
             cache: HashMap::new(),
-            threads: default_threads(),
+            threads: crate::util::slate_threads(),
+        }
+    }
+
+    /// Slate-batched evaluator: `f` scores every point of a slate in one
+    /// call and parallelizes internally if it wants to.
+    /// [`AlphaCache::eval`] passes single-point slates, so the adaptive
+    /// searches (DIRECT, CMA-ES) drive it unchanged.
+    pub fn batch(f: impl Fn(&[Point]) -> Vec<f64> + 'a) -> Self {
+        AlphaCache {
+            f: AlphaFn::Batch(Box::new(f)),
+            cache: HashMap::new(),
+            threads: 1,
         }
     }
 
@@ -127,6 +134,7 @@ impl<'a> AlphaCache<'a> {
         let v = match &mut self.f {
             AlphaFn::Serial(f) => f(p),
             AlphaFn::Shared(f) => f(p),
+            AlphaFn::Batch(f) => f(std::slice::from_ref(p))[0],
         };
         self.cache.insert(id, v);
         v
@@ -157,29 +165,17 @@ impl<'a> AlphaCache<'a> {
                     self.cache.insert(p.id(), v);
                 }
             }
-            AlphaFn::Shared(f) => {
-                let workers = self.threads.min(fresh.len());
-                if workers <= 1 {
-                    for p in &fresh {
-                        let v = f(p);
-                        self.cache.insert(p.id(), v);
-                    }
-                    return;
+            AlphaFn::Batch(f) => {
+                let vals = f(&fresh);
+                assert_eq!(vals.len(), fresh.len(), "batch α arity");
+                for (p, v) in fresh.iter().zip(vals) {
+                    self.cache.insert(p.id(), v);
                 }
+            }
+            AlphaFn::Shared(f) => {
                 let f: &(dyn Fn(&Point) -> f64 + Sync) = &**f;
-                let mut results = vec![0.0f64; fresh.len()];
-                let chunk = (fresh.len() + workers - 1) / workers;
-                std::thread::scope(|s| {
-                    for (pts, out) in
-                        fresh.chunks(chunk).zip(results.chunks_mut(chunk))
-                    {
-                        s.spawn(move || {
-                            for (p, slot) in pts.iter().zip(out.iter_mut()) {
-                                *slot = f(p);
-                            }
-                        });
-                    }
-                });
+                let results =
+                    crate::util::shard_map(&fresh, self.threads, f);
                 for (p, v) in fresh.iter().zip(results) {
                     self.cache.insert(p.id(), v);
                 }
@@ -189,6 +185,14 @@ impl<'a> AlphaCache<'a> {
 
     pub fn unique_evals(&self) -> usize {
         self.cache.len()
+    }
+
+    /// Cached (point id, α) pairs sorted by id — parity-test introspection.
+    pub fn entries(&self) -> Vec<(usize, f64)> {
+        let mut v: Vec<(usize, f64)> =
+            self.cache.iter().map(|(&id, &a)| (id, a)).collect();
+        v.sort_by_key(|e| e.0);
+        v
     }
 
     pub fn best(&self) -> Option<(Point, f64)> {
@@ -245,10 +249,16 @@ pub fn select_next(
             alpha.eval_slate(&slate);
         }
         FilterKind::Direct => {
-            DirectSearch::new().run(untested, budget, alpha);
+            // the adaptive searches snap every iterate to the nearest
+            // untested grid point: encode the grid once per round instead
+            // of once per snap inside the search loop
+            let feats: Vec<Feat> = untested.iter().map(encode).collect();
+            DirectSearch::new().run(untested, &feats, budget, alpha);
         }
         FilterKind::Cmaes => {
-            CmaesSearch::new(rng.fork(0xC3A)).run(untested, budget, alpha);
+            let feats: Vec<Feat> = untested.iter().map(encode).collect();
+            CmaesSearch::new(rng.fork(0xC3A))
+                .run(untested, &feats, budget, alpha);
         }
     }
     let (p, _) = alpha.best().expect("at least one alpha evaluation");
@@ -256,11 +266,17 @@ pub fn select_next(
 }
 
 /// Snap a continuous feature vector to the nearest *untested* grid point.
-pub(crate) fn nearest_untested(feat: &[f64], untested: &[Point]) -> Point {
+/// `untested_feats[i]` must be `encode(&untested[i])` — callers encode the
+/// grid once per selection round and reuse it across every snap.
+pub(crate) fn nearest_untested(
+    feat: &[f64],
+    untested: &[Point],
+    untested_feats: &[Feat],
+) -> Point {
+    debug_assert_eq!(untested.len(), untested_feats.len());
     let mut best = untested[0];
     let mut best_d = f64::INFINITY;
-    for p in untested {
-        let e = encode(p);
+    for (p, e) in untested.iter().zip(untested_feats) {
         let mut d = 0.0;
         for (a, b) in e.iter().zip(feat) {
             d += (a - b) * (a - b);
@@ -428,8 +444,41 @@ mod tests {
     #[test]
     fn nearest_untested_prefers_exact_match() {
         let untested: Vec<Point> = (0..100).map(Point::from_id).collect();
+        let feats: Vec<Feat> = untested.iter().map(encode).collect();
         let target = Point::from_id(42);
-        let snapped = nearest_untested(&encode(&target), &untested);
+        let snapped = nearest_untested(&encode(&target), &untested, &feats);
         assert_eq!(snapped.id(), 42);
+    }
+
+    #[test]
+    fn batch_cache_matches_shared_and_respects_dedup() {
+        let objective = |p: &Point| {
+            let e = encode(p);
+            (e[1] * 17.3).cos() + e[6]
+        };
+        let slate: Vec<Point> = (0..50).map(Point::from_id).collect();
+        let mut shared = AlphaCache::shared(objective).with_threads(1);
+        shared.eval_slate(&slate);
+        let calls = std::sync::atomic::AtomicUsize::new(0);
+        let mut batch = AlphaCache::batch(|pts: &[Point]| {
+            calls.fetch_add(pts.len(), std::sync::atomic::Ordering::SeqCst);
+            pts.iter().map(objective).collect()
+        });
+        batch.eval(&Point::from_id(3));
+        batch.eval_slate(&slate);
+        batch.eval_slate(&slate); // all cached: no further calls
+        assert_eq!(
+            calls.load(std::sync::atomic::Ordering::SeqCst),
+            slate.len()
+        );
+        assert_eq!(shared.unique_evals(), batch.unique_evals());
+        for (a, b) in shared.entries().iter().zip(batch.entries()) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1.to_bits(), b.1.to_bits());
+        }
+        let (ps, vs) = shared.best().unwrap();
+        let (pb, vb) = batch.best().unwrap();
+        assert_eq!(ps.id(), pb.id());
+        assert_eq!(vs.to_bits(), vb.to_bits());
     }
 }

@@ -128,6 +128,66 @@ impl Cholesky {
         (0..self.n()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
     }
 
+    /// Rank-one *update* in O(n²): the factor of `K + u uᵀ` from the factor
+    /// of `K` (LINPACK `dchud`-style Givens sweep). Never loses positive
+    /// definiteness for finite input, since `K + u uᵀ` is PD whenever `K`
+    /// is.
+    pub fn update(&self, u: &[f64]) -> Cholesky {
+        let n = self.n();
+        assert_eq!(u.len(), n);
+        let mut l = self.l.clone();
+        let mut w = u.to_vec();
+        for k in 0..n {
+            let lkk = l[(k, k)];
+            let r = (lkk * lkk + w[k] * w[k]).sqrt();
+            let c = r / lkk;
+            let s = w[k] / lkk;
+            l[(k, k)] = r;
+            for i in k + 1..n {
+                l[(i, k)] = (l[(i, k)] + s * w[i]) / c;
+                w[i] = c * w[i] - s * l[(i, k)];
+            }
+        }
+        Cholesky { l }
+    }
+
+    /// Rank-one *downdate* in O(n²): the factor of `K − u uᵀ` from the
+    /// factor of `K` (hyperbolic-rotation sweep, LINPACK `dchdd`). Fails
+    /// when the downdated matrix is no longer (numerically) positive
+    /// definite — callers fall back to a full refactorization or a diagonal
+    /// approximation.
+    ///
+    /// This is the α_T fantasy-posterior hot path: conditioning a GP on one
+    /// simulated observation shrinks the joint posterior covariance over a
+    /// fixed query grid by exactly one outer product, so each candidate's
+    /// conditioned covariance factor is one O(m²) downdate of the shared
+    /// per-iteration factor instead of an O(m³) refactorization.
+    pub fn downdate(&self, u: &[f64]) -> Result<Cholesky> {
+        let n = self.n();
+        assert_eq!(u.len(), n);
+        let mut l = self.l.clone();
+        let mut w = u.to_vec();
+        for k in 0..n {
+            let lkk = l[(k, k)];
+            let r2 = lkk * lkk - w[k] * w[k];
+            // near-singular pivots (ratio below ~1e-7) cannot be resolved
+            // in f64 hyperbolic rotations; report failure instead of
+            // emitting a garbage factor
+            if r2.is_nan() || r2 <= lkk * lkk * 1e-14 {
+                bail!("downdate loses positive definiteness at pivot {k}");
+            }
+            let r = r2.sqrt();
+            let c = r / lkk;
+            let s = w[k] / lkk;
+            l[(k, k)] = r;
+            for i in k + 1..n {
+                l[(i, k)] = (l[(i, k)] - s * w[i]) / c;
+                w[i] = c * w[i] - s * l[(i, k)];
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
     /// Extend the factor with one extra row/column of K in O(n²):
     /// given K' = [[K, k12], [k12ᵀ, k22]], the new factor row is
     /// l12 = L⁻¹ k12 and l22 = sqrt(k22 − l12ᵀ l12).
@@ -252,6 +312,113 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Random vector scaled so that `uᵀ K⁻¹ u == target` — the downdated
+    /// matrix `K − u uᵀ` is PD iff that quadratic form is < 1.
+    fn scaled_downdate_vec(
+        c: &Cholesky,
+        rng: &mut Rng,
+        target: f64,
+    ) -> Vec<f64> {
+        let n = c.n();
+        let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let kinv_u = c.solve(&u);
+        let q: f64 = u.iter().zip(&kinv_u).map(|(a, b)| a * b).sum();
+        let scale = (target / q).sqrt();
+        u.into_iter().map(|v| v * scale).collect()
+    }
+
+    #[test]
+    fn update_matches_refactorization() {
+        check("rank-one update == refactor", 32, |rng| {
+            let n = 2 + rng.below(10);
+            let k = random_spd(rng, n);
+            let c = Cholesky::factor(&k).map_err(|e| e.to_string())?;
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let up = c.update(&u);
+            let mut k2 = k.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    k2[(i, j)] += u[i] * u[j];
+                }
+            }
+            let full = Cholesky::factor(&k2).map_err(|e| e.to_string())?;
+            let err = up.l().max_abs_diff(full.l());
+            if err < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("update factor mismatch {err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn downdate_matches_refactorization() {
+        check("rank-one downdate == refactor", 32, |rng| {
+            let n = 2 + rng.below(10);
+            let k = random_spd(rng, n);
+            let c = Cholesky::factor(&k).map_err(|e| e.to_string())?;
+            // keep K − u uᵀ safely PD (uᵀK⁻¹u = 0.6 < 1)
+            let u = scaled_downdate_vec(&c, rng, 0.6);
+            let down = c.downdate(&u).map_err(|e| e.to_string())?;
+            let mut k2 = k.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    k2[(i, j)] -= u[i] * u[j];
+                }
+            }
+            let full = Cholesky::factor(&k2).map_err(|e| e.to_string())?;
+            let err = down.l().max_abs_diff(full.l());
+            if err < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("downdate factor mismatch {err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn update_then_downdate_roundtrips() {
+        check("update ∘ downdate == identity", 32, |rng| {
+            let n = 2 + rng.below(10);
+            let k = random_spd(rng, n);
+            let c = Cholesky::factor(&k).map_err(|e| e.to_string())?;
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let round = c.update(&u).downdate(&u).map_err(|e| e.to_string())?;
+            let err = round.l().max_abs_diff(c.l());
+            if err < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("round-trip drift {err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn downdate_rejects_pd_breaking_vector() {
+        check("downdate rejects uᵀK⁻¹u > 1", 24, |rng| {
+            let n = 2 + rng.below(8);
+            let k = random_spd(rng, n);
+            let c = Cholesky::factor(&k).map_err(|e| e.to_string())?;
+            let u = scaled_downdate_vec(&c, rng, 1.5);
+            match c.downdate(&u) {
+                Err(_) => Ok(()),
+                Ok(_) => Err("accepted a PD-breaking downdate".into()),
+            }
+        });
+    }
+
+    #[test]
+    fn downdate_rejects_near_singular_pivot() {
+        // Downdating by the factor's own first column drives the first
+        // pivot of K − u uᵀ to exactly zero: the degenerate path must
+        // report failure instead of emitting a factor full of garbage.
+        let mut rng = Rng::new(7);
+        let k = random_spd(&mut rng, 6);
+        let c = Cholesky::factor(&k).unwrap();
+        let u: Vec<f64> = (0..6).map(|i| c.l()[(i, 0)]).collect();
+        assert!(c.downdate(&u).is_err());
     }
 
     #[test]

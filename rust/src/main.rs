@@ -16,7 +16,7 @@ use trimtuner::engine::{self, EngineConfig, EvalBackend, LiveEval, OptimizerKind
 use trimtuner::experiments;
 use trimtuner::heuristics::FilterKind;
 use trimtuner::sim::{Dataset, NetKind};
-use trimtuner::space::Constraint;
+use trimtuner::space::{Config, Constraint};
 
 const USAGE: &str = "\
 trimtuner — TrimTuner (Mendes et al. 2020) reproduction
@@ -25,7 +25,7 @@ USAGE:
   trimtuner optimize [--net rnn|mlp|cnn|multilayer]
                      [--optimizer trimtuner-dt|trimtuner-gp|eic|eic-usd|fabolas|random]
                      [--beta 0.1] [--filter cea|random|nofilter|direct|cmaes]
-                     [--iters 44] [--seed 0] [--cost-cap <usd>]
+                     [--iters 44] [--seed 0] [--cost-cap <usd>] [--pareto]
                      [--live] [--workers 4] [--launcher-noise 1.0]
                      [--launcher-seed <seed>]
   trimtuner generate-datasets [--out data] [--seed 42]
@@ -38,6 +38,10 @@ USAGE:
   (coordinator::WorkerPool over a noisy SimLauncher) instead of replaying
   the pre-materialized dataset; the dataset is still generated and attached
   as an evaluation-only oracle so Accuracy_C stays comparable.
+
+  --pareto additionally reports the predicted (cost, accuracy) Pareto
+  frontier under the final surrogates; in replay mode it is scored against
+  the dataset's measured frontier (hypervolume ratio, 1.0 = recovered).
 ";
 
 fn main() -> Result<()> {
@@ -79,6 +83,7 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     let cap = args.get_f64("cost-cap", net.paper_cost_cap());
     let constraints = vec![Constraint::cost_max(cap)];
     let live = args.get_bool("live");
+    cfg.pareto = args.get_bool("pareto");
 
     eprintln!(
         "optimize: net={} optimizer={} filter={} beta={} iters={} cap=${cap} mode={}",
@@ -147,6 +152,30 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         run.total_cost(),
         run.mean_rec_wall_s() * 1e3
     );
+    if let Some(front) = &run.pareto {
+        println!(
+            "\npredicted (cost, accuracy) frontier — {} points:",
+            front.len()
+        );
+        println!("{:>4} {:>26} {:>10} {:>8}", "id", "config", "cost$", "acc");
+        for p in front {
+            println!(
+                "{:>4} {:>26} {:>10.5} {:>8.4}",
+                p.config_id,
+                Config::from_id(p.config_id).describe(),
+                p.pred_cost,
+                p.pred_acc
+            );
+        }
+        if !live {
+            // replay mode: score the recommendation against the dataset's
+            // measured frontier
+            println!(
+                "frontier_quality (hypervolume ratio vs true frontier): {:.4}",
+                engine::frontier_quality(&dataset, front)
+            );
+        }
+    }
     Ok(())
 }
 

@@ -6,7 +6,9 @@
 //! for the acquisition function's simulate-one-observation step.
 
 use super::kernel::{Basis, KernelParams};
-use super::surrogate::{Feat, FitOptions, Posterior, Surrogate};
+use super::surrogate::{
+    FantasySurface, FantasyView, Feat, FitOptions, Posterior, Surrogate,
+};
 use crate::linalg::{Cholesky, Mat};
 use crate::opt::{nelder_mead, NmOptions};
 use crate::util::Rng;
@@ -101,6 +103,17 @@ impl Gp {
 
     pub fn hyp(&self) -> &KernelParams {
         &self.params
+    }
+
+    /// (params, training factor, alpha) per hyper-parameter sample, MAP
+    /// first — the component order every mixture path iterates in.
+    fn hyper_comps(&self) -> Vec<(&KernelParams, &Cholesky, &[f64])> {
+        let chol = self.chol.as_ref().expect("hyper_comps before fit");
+        let mut out = vec![(&self.params, chol, self.alpha.as_slice())];
+        for (p, c, a) in &self.extra {
+            out.push((p, c, a.as_slice()));
+        }
+        out
     }
 
     /// Cross-covariance matrix K(X, Xq) (one column per query) and the
@@ -206,6 +219,247 @@ impl Gp {
                 (mean, None, Some(std))
             }
         }
+    }
+}
+
+/// Shared per-iteration precomputation for one hyper-parameter sample of a
+/// [`GpFantasy`] surface.
+struct GpFantasyComp {
+    /// query-major cross-solves: row q holds column q of `L⁻¹ K(X, grid)`
+    vt_grid: Mat,
+    /// standardized predictive means on the grid
+    mu_grid: Vec<f64>,
+    /// raw (unclamped) standardized predictive variances on the grid
+    var_grid: Vec<f64>,
+    /// factor of the *scaled* joint-prefix posterior covariance (incl. the
+    /// 1e-9 jitter `posterior_component` adds), when it is PD
+    joint_l: Option<Cholesky>,
+    /// diagonal of that matrix — the diagonal fallback for downdates that
+    /// lose positive definiteness (mirrors `posterior_component`'s
+    /// degenerate branch)
+    joint_diag: Vec<f64>,
+}
+
+/// Rank-one fantasy surface for a fitted GP (all hyper-parameter samples).
+///
+/// Per iteration it precomputes, for every component, the cross-solve
+/// matrix `V = L⁻¹ K(X, Q)` over the fused query grid Q plus the current
+/// joint posterior (means, variances, and the Cholesky factor of the
+/// joint-prefix covariance). Conditioning on a simulated observation
+/// `(x, ŷ(x))` then reduces to closed-form rank-one algebra per candidate:
+///
+/// - posterior cross-covariance `c(q) = k(x, q) − wᵀ V[:, q]` with
+///   `w = L⁻¹ k(X, x)` — O(n·|Q|);
+/// - conditioned mean `μ(q) + c(q)·(ŷ − μ(x))/v` and variance
+///   `σ²(q) − c(q)²/v`, with `v = σ²(x) + noise` (exactly the `l22²` pivot
+///   the clone path's `Cholesky::extend` produces, guard included);
+/// - conditioned joint covariance `Σ − c cᵀ/v`: one O(m²)
+///   [`Cholesky::downdate`] of the shared prefix factor.
+///
+/// No surrogate clone, no per-candidate re-factorization; agreement with
+/// the clone-and-extend path is within 1e-9 relative (`tests/alpha_parity`).
+/// Caveat: that bound presumes the shared prefix factor succeeds without
+/// `Cholesky::factor`'s jitter retries (the explicit +1e-9 diagonal makes
+/// this the overwhelmingly common case) — a fit degenerate enough to need
+/// retry jitter can put the two paths on different jitter levels, where
+/// only the coarser 1e-6 sanity bound is guaranteed.
+pub(crate) struct GpFantasy {
+    gp: Gp,
+    grid: Vec<Feat>,
+    m_joint: usize,
+    comps: Vec<GpFantasyComp>,
+}
+
+impl GpFantasy {
+    fn new(gp: &Gp, grid: &[Feat], m_joint: usize) -> GpFantasy {
+        let comps = gp
+            .hyper_comps()
+            .into_iter()
+            .map(|(params, chol, alpha)| {
+                GpFantasyComp::build(gp, params, chol, alpha, grid, m_joint)
+            })
+            .collect();
+        GpFantasy { gp: gp.clone(), grid: grid.to_vec(), m_joint, comps }
+    }
+}
+
+impl GpFantasyComp {
+    fn build(
+        gp: &Gp,
+        params: &KernelParams,
+        chol: &Cholesky,
+        alpha: &[f64],
+        grid: &[Feat],
+        m_joint: usize,
+    ) -> GpFantasyComp {
+        let n = gp.xs.len();
+        let nq = grid.len();
+        let (ks, mu_grid) = gp.cross_cov_mus(params, alpha, grid);
+        let v = chol.solve_lower_multi(&ks);
+        // raw variances, same accumulation order as predict_raw_many
+        let mut ss = vec![0.0; nq];
+        for i in 0..n {
+            for (s, &z) in ss.iter_mut().zip(v.row(i)) {
+                *s += z * z;
+            }
+        }
+        let var_grid: Vec<f64> = grid
+            .iter()
+            .zip(&ss)
+            .map(|(x, &s)| params.k_diag(gp.basis, x) - s)
+            .collect();
+        // scaled joint-prefix covariance, mirroring posterior_component
+        let m = m_joint;
+        let vcols: Vec<Vec<f64>> = (0..m)
+            .map(|c| (0..n).map(|i| v[(i, c)]).collect())
+            .collect();
+        let mut cov = Mat::zeros(m, m);
+        for i in 0..m {
+            for j in 0..=i {
+                let kij = params.k(gp.basis, &grid[i], &grid[j]);
+                let vv: f64 = vcols[i]
+                    .iter()
+                    .zip(&vcols[j])
+                    .map(|(a, b)| a * b)
+                    .sum();
+                let c = (kij - vv) * gp.y_std * gp.y_std;
+                cov[(i, j)] = c;
+                cov[(j, i)] = c;
+            }
+            cov[(i, i)] += 1e-9;
+        }
+        let joint_diag: Vec<f64> = (0..m).map(|i| cov[(i, i)]).collect();
+        let joint_l =
+            if m > 0 { Cholesky::factor(&cov).ok() } else { None };
+        // query-major layout: each view's cross-covariance pass walks one
+        // contiguous row per grid point
+        let mut vt_grid = Mat::zeros(nq, n);
+        for q in 0..nq {
+            let row = vt_grid.row_mut(q);
+            for (i, slot) in row.iter_mut().enumerate() {
+                *slot = v[(i, q)];
+            }
+        }
+        GpFantasyComp { vt_grid, mu_grid, var_grid, joint_l, joint_diag }
+    }
+}
+
+impl FantasySurface for GpFantasy {
+    fn view(&self, x: &Feat) -> FantasyView {
+        let gp = &self.gp;
+        let nq = self.grid.len();
+        let m = self.m_joint;
+        // simulated outcome: the mixture predictive mean, standardized —
+        // the same value Models::condition feeds the clone path
+        let y_tilde = (gp.predict(x).0 - gp.y_mean) / gp.y_std;
+
+        let mut comp_mus: Vec<Vec<f64>> = Vec::with_capacity(self.comps.len());
+        let mut comp_vars: Vec<Vec<f64>> = Vec::with_capacity(self.comps.len());
+        // (mean, cov factor, diag-fallback std) per component, the exact
+        // triple Posterior::mixture consumes
+        let mut joint_comps = Vec::with_capacity(self.comps.len());
+        for (fc, (params, chol, alpha)) in
+            self.comps.iter().zip(gp.hyper_comps())
+        {
+            let k12 = params.cov_vec(gp.basis, &gp.xs, x);
+            let w = chol.solve_lower(&k12);
+            let mu_x: f64 = k12.iter().zip(alpha).map(|(k, a)| k * a).sum();
+            let k22 = params.k_diag(gp.basis, x) + params.noise;
+            let rem = k22 - w.iter().map(|v| v * v).sum::<f64>();
+            // mirror Cholesky::extend's pivot guard: v is the clone path's
+            // l22² (1e-6² when the remainder degenerates)
+            let v_eff = if rem > 1e-12 { rem } else { 1e-12 };
+            let r = y_tilde - mu_x;
+            // posterior cross-covariances candidate → grid
+            let mut c = vec![0.0; nq];
+            for (q, cq) in c.iter_mut().enumerate() {
+                let dot: f64 = w
+                    .iter()
+                    .zip(fc.vt_grid.row(q))
+                    .map(|(a, b)| a * b)
+                    .sum();
+                *cq = params.k(gp.basis, x, &self.grid[q]) - dot;
+            }
+            let mus: Vec<f64> = (0..nq)
+                .map(|q| fc.mu_grid[q] + c[q] * r / v_eff)
+                .collect();
+            let vars: Vec<f64> = (0..nq)
+                .map(|q| fc.var_grid[q] - c[q] * c[q] / v_eff)
+                .collect();
+            if m > 0 {
+                let mean: Vec<f64> = mus[..m]
+                    .iter()
+                    .map(|mu| mu * gp.y_std + gp.y_mean)
+                    .collect();
+                let scale = gp.y_std / v_eff.sqrt();
+                let u: Vec<f64> =
+                    c[..m].iter().map(|ci| ci * scale).collect();
+                let down = fc
+                    .joint_l
+                    .as_ref()
+                    .and_then(|l| l.downdate(&u).ok());
+                match down {
+                    Some(l) => joint_comps.push((mean, Some(l), None)),
+                    None => {
+                        // numerically degenerate: diagonal fallback, like
+                        // posterior_component's failed factorization
+                        let std = (0..m)
+                            .map(|i| {
+                                (fc.joint_diag[i] - u[i] * u[i])
+                                    .max(0.0)
+                                    .sqrt()
+                            })
+                            .collect();
+                        joint_comps.push((mean, None, Some(std)));
+                    }
+                }
+            }
+            comp_mus.push(mus);
+            comp_vars.push(vars);
+        }
+
+        // mixture (mean, std) on the grid, op-for-op like Gp::predict_many
+        let grid_pred: Vec<(f64, f64)> = if comp_mus.len() == 1 {
+            comp_mus[0]
+                .iter()
+                .zip(&comp_vars[0])
+                .map(|(&mu, &var)| {
+                    let std = var.max(1e-12).sqrt();
+                    (mu * gp.y_std + gp.y_mean, std * gp.y_std)
+                })
+                .collect()
+        } else {
+            let kf = comp_mus.len() as f64;
+            (0..nq)
+                .map(|q| {
+                    let mean: f64 =
+                        comp_mus.iter().map(|mu| mu[q]).sum::<f64>() / kf;
+                    let var: f64 = comp_mus
+                        .iter()
+                        .zip(&comp_vars)
+                        .enumerate()
+                        .map(|(k, (mu, va))| {
+                            // the MAP variance round-trips through
+                            // predict_norm's sqrt, the samples clamp raw
+                            let v = if k == 0 {
+                                let std = va[q].max(1e-12).sqrt();
+                                std * std
+                            } else {
+                                va[q].max(1e-12)
+                            };
+                            v + (mu[q] - mean) * (mu[q] - mean)
+                        })
+                        .sum::<f64>()
+                        / kf;
+                    (
+                        mean * gp.y_std + gp.y_mean,
+                        var.max(1e-12).sqrt() * gp.y_std,
+                    )
+                })
+                .collect()
+        };
+        let joint = (m > 0).then(|| Posterior::mixture(joint_comps));
+        FantasyView { grid: grid_pred, joint }
     }
 }
 
@@ -422,6 +676,15 @@ impl Surrogate for Gp {
     fn clone_box(&self) -> Box<dyn Surrogate> {
         Box::new(self.clone())
     }
+
+    fn fantasy_surface(
+        &self,
+        grid: &[Feat],
+        m_joint: usize,
+    ) -> Box<dyn FantasySurface> {
+        assert!(m_joint <= grid.len());
+        Box::new(GpFantasy::new(self, grid, m_joint))
+    }
 }
 
 #[cfg(test)]
@@ -581,6 +844,71 @@ mod tests {
                 let (m, s) = gp.predict(p);
                 assert_eq!(m.to_bits(), bm.to_bits(), "k={k} mean mismatch");
                 assert_eq!(s.to_bits(), bs.to_bits(), "k={k} std mismatch");
+            }
+        }
+    }
+
+    #[test]
+    fn fantasy_view_matches_clone_and_extend() {
+        // Rank-one fantasy conditioning vs the reference clone path, for
+        // ML-II and hyper-marginalized mixture GPs: conditioned grid
+        // (mean, std) and the conditioned joint posterior (via CRN draws)
+        // must agree to numerical precision.
+        for k in [1usize, 4] {
+            let mut rng = Rng::new(23 + k as u64);
+            let (xs, ys) = toy(20, &mut rng);
+            let mut gp = Gp::with_hyper_samples(Basis::Acc, 5, k);
+            gp.fit(&xs, &ys, FitOptions { hyperopt: true, restarts: 1 });
+            let grid: Vec<Feat> = (0..14)
+                .map(|_| {
+                    let mut f = [0.0; D_IN];
+                    for v in f.iter_mut() {
+                        *v = rng.f64();
+                    }
+                    f
+                })
+                .collect();
+            let m_joint = 8;
+            let surf = gp.fantasy_surface(&grid, m_joint);
+            for _ in 0..4 {
+                let mut x = [0.0; D_IN];
+                for v in x.iter_mut() {
+                    *v = rng.f64();
+                }
+                let view = surf.view(&x);
+                // reference: clone, extend, re-predict
+                let (y, _) = gp.predict(&x);
+                let cond = gp.condition(&x, y);
+                let want = cond.predict_many(&grid);
+                for (q, ((vm, vs), (wm, ws))) in
+                    view.grid.iter().zip(&want).enumerate()
+                {
+                    assert!(
+                        (vm - wm).abs() <= 1e-9 * wm.abs().max(1.0),
+                        "k={k} q={q} mean {vm} vs {wm}"
+                    );
+                    assert!(
+                        (vs - ws).abs() <= 1e-9 * ws.abs().max(1.0),
+                        "k={k} q={q} std {vs} vs {ws}"
+                    );
+                }
+                // joint posterior: identical CRN draws must agree
+                let post_f = view.joint.expect("joint prefix");
+                let post_c = cond.posterior(&grid[..m_joint]);
+                assert_eq!(post_f.n_components(), post_c.n_components());
+                let z: Vec<f64> =
+                    (0..m_joint).map(|_| rng.normal()).collect();
+                let (mut df, mut dc) = (Vec::new(), Vec::new());
+                for comp in 0..post_f.n_components() {
+                    post_f.sample_component_with(comp, &z, &mut df);
+                    post_c.sample_component_with(comp, &z, &mut dc);
+                    for (a, b) in df.iter().zip(&dc) {
+                        assert!(
+                            (a - b).abs() <= 2e-7 * b.abs().max(1.0),
+                            "k={k} comp={comp} draw {a} vs {b}"
+                        );
+                    }
+                }
             }
         }
     }

@@ -9,5 +9,8 @@ mod trees;
 
 pub use gp::{Gp, GpHyp};
 pub use kernel::{Basis, KernelParams};
-pub use surrogate::{Feat, FitOptions, ModelKind, Posterior, Surrogate};
+pub use surrogate::{
+    FantasySurface, FantasyView, Feat, FitOptions, ModelKind, Posterior,
+    Surrogate,
+};
 pub use trees::{ExtraTrees, TreesOptions};

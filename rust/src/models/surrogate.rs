@@ -153,6 +153,57 @@ impl Posterior {
     }
 }
 
+/// One candidate's conditioned view of a fantasy query grid: the posterior
+/// the surrogate *would* have after observing `(x, ŷ(x))`, evaluated on the
+/// fixed grid its [`FantasySurface`] was built over.
+pub struct FantasyView {
+    /// Conditioned mixture (mean, std) on every grid point — matches
+    /// `condition(x, ŷ).predict_many(grid)`.
+    pub grid: Vec<(f64, f64)>,
+    /// Conditioned joint posterior over the grid's joint prefix — matches
+    /// `condition(x, ŷ).posterior(&grid[..m_joint])`. `None` when the
+    /// surface was built with `m_joint == 0`.
+    pub joint: Option<Posterior>,
+}
+
+/// Per-iteration fantasy-conditioning surface over a fixed query grid.
+///
+/// Built once per acquisition round via [`Surrogate::fantasy_surface`];
+/// every [`FantasySurface::view`] call then yields the grid under the
+/// surrogate conditioned on one simulated observation `(x, ŷ(x))` — for
+/// GPs via closed-form rank-one posterior algebra (no surrogate clone, no
+/// Cholesky re-factorization), for tree ensembles via a single fused-grid
+/// pass over one conditioned rebuild.
+///
+/// `Send + Sync` so the slate evaluator can shard candidate views across
+/// `std::thread::scope` workers.
+pub trait FantasySurface: Send + Sync {
+    /// The conditioned view for one candidate. The simulated outcome is
+    /// the surrogate's own predictive mean at `x` — the single-root
+    /// Gauss–Hermite collapse `Models::condition` uses.
+    fn view(&self, x: &Feat) -> FantasyView;
+}
+
+/// Reference fantasy surface for surrogates without a specialized
+/// implementation: clone-and-condition per candidate — exactly the
+/// baseline the rank-one paths are verified against.
+struct CloneFantasy {
+    base: Box<dyn Surrogate>,
+    grid: Vec<Feat>,
+    m_joint: usize,
+}
+
+impl FantasySurface for CloneFantasy {
+    fn view(&self, x: &Feat) -> FantasyView {
+        let (y, _) = self.base.predict(x);
+        let cond = self.base.condition(x, y);
+        let grid = cond.predict_many(&self.grid);
+        let joint = (self.m_joint > 0)
+            .then(|| cond.posterior(&self.grid[..self.m_joint]));
+        FantasyView { grid, joint }
+    }
+}
+
 /// A Bayesian surrogate over the (config, s) feature space.
 ///
 /// The acquisition hot path relies on [`Surrogate::condition`]: a cheap
@@ -182,6 +233,26 @@ pub trait Surrogate: Send + Sync {
 
     /// Clone extended with one observation, hyper-parameters frozen.
     fn condition(&self, x: &Feat, y: f64) -> Box<dyn Surrogate>;
+
+    /// Build a fantasy surface over a fixed query grid: shared
+    /// per-iteration precomputation, then one cheap conditioned view per
+    /// candidate. Views carry a joint conditioned posterior over the first
+    /// `m_joint` grid points (for p_opt sampling) and conditioned
+    /// (mean, std) everywhere. The default clones + conditions per view;
+    /// the native models override it (GP: rank-one posterior algebra over
+    /// precomputed cross-solves; trees: fused-grid single rebuild).
+    fn fantasy_surface(
+        &self,
+        grid: &[Feat],
+        m_joint: usize,
+    ) -> Box<dyn FantasySurface> {
+        assert!(m_joint <= grid.len());
+        Box::new(CloneFantasy {
+            base: self.clone_box(),
+            grid: grid.to_vec(),
+            m_joint,
+        })
+    }
 
     /// Number of observations currently fitted.
     fn n_obs(&self) -> usize;

@@ -7,7 +7,9 @@
 //! candidate feature and keep the best by variance reduction. The ensemble's
 //! per-point mean/std define a Gaussian predictive distribution.
 
-use super::surrogate::{Feat, FitOptions, Posterior, Surrogate};
+use super::surrogate::{
+    FantasySurface, FantasyView, Feat, FitOptions, Posterior, Surrogate,
+};
 use crate::space::D_IN;
 use crate::util::Rng;
 
@@ -227,6 +229,52 @@ impl ExtraTrees {
             })
             .collect();
     }
+
+    /// [`Surrogate::condition`] without cloning the stale tree array (the
+    /// rebuild overwrites it anyway) — the fantasy hot path's variant.
+    fn conditioned(&self, x: &Feat, y: f64) -> ExtraTrees {
+        let mut xs = Vec::with_capacity(self.xs.len() + 1);
+        xs.extend_from_slice(&self.xs);
+        xs.push(*x);
+        let mut ys = Vec::with_capacity(self.ys.len() + 1);
+        ys.extend_from_slice(&self.ys);
+        ys.push(y);
+        let mut t = ExtraTrees {
+            opts: self.opts,
+            trees: Vec::new(),
+            xs,
+            ys,
+            seed: self.seed,
+        };
+        t.rebuild();
+        t
+    }
+}
+
+/// Fantasy surface for tree ensembles. There is no closed-form conditioned
+/// posterior for a seeded ensemble rebuild, so each view still rebuilds
+/// once — but on a single fused query grid (one tree-major pass instead of
+/// separate shortlist and representer sweeps), without cloning the stale
+/// ensemble, and with the joint prefix reusing the grid predictions
+/// directly. Bit-identical to clone-and-condition.
+struct TreesFantasy {
+    base: ExtraTrees,
+    grid: Vec<Feat>,
+    m_joint: usize,
+}
+
+impl FantasySurface for TreesFantasy {
+    fn view(&self, x: &Feat) -> FantasyView {
+        let (y, _) = self.base.predict(x);
+        let cond = self.base.conditioned(x, y);
+        let grid = cond.predict_many(&self.grid);
+        let joint = (self.m_joint > 0).then(|| {
+            let (mean, std): (Vec<f64>, Vec<f64>) =
+                grid[..self.m_joint].iter().copied().unzip();
+            Posterior::diagonal(mean, std)
+        });
+        FantasyView { grid, joint }
+    }
 }
 
 impl Surrogate for ExtraTrees {
@@ -291,11 +339,7 @@ impl Surrogate for ExtraTrees {
     }
 
     fn condition(&self, x: &Feat, y: f64) -> Box<dyn Surrogate> {
-        let mut t = self.clone();
-        t.xs.push(*x);
-        t.ys.push(y);
-        t.rebuild();
-        Box::new(t)
+        Box::new(self.conditioned(x, y))
     }
 
     fn n_obs(&self) -> usize {
@@ -304,6 +348,19 @@ impl Surrogate for ExtraTrees {
 
     fn clone_box(&self) -> Box<dyn Surrogate> {
         Box::new(self.clone())
+    }
+
+    fn fantasy_surface(
+        &self,
+        grid: &[Feat],
+        m_joint: usize,
+    ) -> Box<dyn FantasySurface> {
+        assert!(m_joint <= grid.len());
+        Box::new(TreesFantasy {
+            base: self.clone(),
+            grid: grid.to_vec(),
+            m_joint,
+        })
     }
 }
 
@@ -412,6 +469,44 @@ mod tests {
             let (m, s) = et.predict(p);
             assert_eq!(m.to_bits(), bm.to_bits());
             assert_eq!(s.to_bits(), bs.to_bits());
+        }
+    }
+
+    #[test]
+    fn fantasy_view_bit_identical_to_clone_path() {
+        let mut rng = Rng::new(13);
+        let (xs, ys) = toy(40, &mut rng);
+        let mut et = ExtraTrees::new(TreesOptions::default());
+        et.fit(&xs, &ys, FitOptions::default());
+        let rand_feat = |rng: &mut Rng| {
+            let mut f = [0.0; D_IN];
+            for v in f.iter_mut() {
+                *v = rng.f64();
+            }
+            f
+        };
+        let grid: Vec<Feat> = (0..12).map(|_| rand_feat(&mut rng)).collect();
+        let m_joint = 5;
+        let surf = et.fantasy_surface(&grid, m_joint);
+        for _ in 0..3 {
+            let x = rand_feat(&mut rng);
+            let view = surf.view(&x);
+            let (y, _) = et.predict(&x);
+            let cond = et.condition(&x, y);
+            let want = cond.predict_many(&grid);
+            for ((vm, vs), (wm, ws)) in view.grid.iter().zip(&want) {
+                assert_eq!(vm.to_bits(), wm.to_bits());
+                assert_eq!(vs.to_bits(), ws.to_bits());
+            }
+            let post_f = view.joint.expect("joint prefix");
+            let post_c = cond.posterior(&grid[..m_joint]);
+            let z: Vec<f64> = (0..m_joint).map(|_| rng.normal()).collect();
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            post_f.sample_with(&z, &mut a);
+            post_c.sample_with(&z, &mut b);
+            for (va, vb) in a.iter().zip(&b) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
         }
     }
 

@@ -12,3 +12,46 @@ pub mod stats;
 pub mod timer;
 
 pub use rng::Rng;
+
+/// Worker count for slate-parallel acquisition evaluation:
+/// `TRIMTUNER_SLATE_THREADS` if set, otherwise the machine's available
+/// parallelism. Shared by `AlphaCache::eval_slate` and `acq::AlphaSlate`.
+pub fn slate_threads() -> usize {
+    if let Ok(v) = std::env::var("TRIMTUNER_SLATE_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `xs`, sharded across up to `threads` scoped workers.
+/// The chunk layout and per-item call order are independent of the worker
+/// count and every result is written into its own slot, so the output is
+/// bit-identical to the sequential map for any `threads`. The single
+/// sharding implementation behind `AlphaCache::eval_slate` and
+/// `acq::AlphaSlate::eval_feats` — their cross-path bit-stability
+/// contracts depend on these two never diverging.
+pub fn shard_map<T, F>(xs: &[T], threads: usize, f: F) -> Vec<f64>
+where
+    T: Sync,
+    F: Fn(&T) -> f64 + Sync,
+{
+    let workers = threads.min(xs.len());
+    if workers <= 1 {
+        return xs.iter().map(&f).collect();
+    }
+    let mut out = vec![0.0f64; xs.len()];
+    let chunk = (xs.len() + workers - 1) / workers;
+    let fr = &f;
+    std::thread::scope(|s| {
+        for (cx, co) in xs.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            s.spawn(move || {
+                for (slot, x) in co.iter_mut().zip(cx) {
+                    *slot = fr(x);
+                }
+            });
+        }
+    });
+    out
+}
