@@ -10,7 +10,9 @@
 mod common;
 
 use trimtuner::coordinator::{Job, SimLauncher, WorkerPool};
-use trimtuner::engine::{self, EngineConfig, EvalBackend, LiveEval, OptimizerKind};
+use trimtuner::engine::{
+    self, BatchMode, EngineConfig, EvalBackend, LiveEval, OptimizerKind,
+};
 use trimtuner::models::ModelKind;
 use trimtuner::sim::NetKind;
 use trimtuner::space::{Config, Constraint, N_CONFIGS, S_INIT};
@@ -55,9 +57,9 @@ fn main() {
         all.push(stats);
     }
 
-    // Live Algorithm-1 runs through the pool (the engine's probe path is
-    // sequential, so this measures per-iteration coordinator overhead, not
-    // scaling).
+    // Live Algorithm-1 runs through the pool (with the default q = 1 the
+    // engine's probe path is sequential, so the workers=1 vs 4 pair
+    // measures per-iteration coordinator overhead, not scaling).
     for workers in [1usize, 4] {
         let stats = bench(
             &format!("live trimtuner-dt 6-iter run workers={workers}"),
@@ -84,6 +86,60 @@ fn main() {
         );
         println!("{}", stats.report());
         all.push(stats);
+    }
+
+    // Batched-slate sweep (q × workers): the same 8-observation budget
+    // spent in rounds of q concurrent deployments. With latency-
+    // proportional launches, wall time per observation must drop at q > 1
+    // when workers >= q — both from overlapping deployments and from
+    // paying the selection + refit cost once per round instead of once per
+    // observation. This is the regret-vs-wall-clock trade-off axis the
+    // ISSUE's batched-probe work targets; `cum$`/regret stays comparable
+    // because the probe budget (max_iters) is fixed across cells.
+    const BATCH_ITERS: usize = 8;
+    for q in [1usize, 2, 4] {
+        for workers in [1usize, 4] {
+            let stats = bench(
+                &format!(
+                    "live trimtuner-dt {BATCH_ITERS}-obs batch q={q} \
+                     workers={workers}"
+                ),
+                0,
+                3,
+                || {
+                    let mut cfg = EngineConfig::paper_default(
+                        OptimizerKind::TrimTuner(ModelKind::Trees),
+                        5,
+                    );
+                    cfg.max_iters = BATCH_ITERS;
+                    cfg.batch_size = q;
+                    // pin the slate strategy: an ambient TRIMTUNER_BATCH
+                    // must not silently change what the JSON rows measure
+                    cfg.batch_mode = BatchMode::Fantasy;
+                    let launcher = SimLauncher::with_options(
+                        NetKind::Rnn,
+                        5,
+                        1.0,
+                        LATENCY,
+                    );
+                    let mut backend = EvalBackend::Live(LiveEval::new(
+                        Box::new(launcher),
+                        workers,
+                    ));
+                    let caps = [Constraint::cost_max(
+                        NetKind::Rnn.paper_cost_cap(),
+                    )];
+                    let run = engine::run_backend(&mut backend, &caps, &cfg)
+                        .expect("live run failed");
+                    // (observations, rounds, cumulative cost): black-boxed
+                    // so the whole engine round — selection, deployment,
+                    // accounting — stays live under optimization
+                    (run.records.len(), run.n_rounds(), run.total_cost())
+                },
+            );
+            println!("{}", stats.report());
+            all.push(stats);
+        }
     }
 
     let path = std::env::var("BENCH_JSON")

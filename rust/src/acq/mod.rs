@@ -1,6 +1,17 @@
 //! Acquisition functions (paper §II–III): EI, constrained EI (CherryPick),
 //! EIc/USD (Lynceus), Entropy-Search machinery (p_opt / information gain),
 //! FABOLAS, and TrimTuner's constrained sub-sampling-aware α_T.
+//!
+//! The per-candidate reference path is [`trimtuner_alpha`]; the hot path
+//! is [`AlphaSlate`], which scores a whole candidate slate off one shared
+//! per-round precompute of rank-one *fantasy posteriors*
+//! (`Surrogate::fantasy_surface`) — bit-exact for tree surrogates, ≤ 1e-9
+//! relative for GPs, with `TRIMTUNER_ALPHA=clone` as the escape hatch
+//! back to clone-conditioning. [`Models`] also exposes the conditioning
+//! entry points the engine's batched probe slates build on:
+//! [`Models::condition`] (kriging-believer fantasy observation at the
+//! predictive mean) and [`Models::condition_with_acc`] (constant-liar
+//! value supplied by the caller).
 
 mod ei;
 mod entropy;

@@ -140,6 +140,17 @@ impl Models {
     /// (rank-1 Cholesky extension is O(n²)).
     pub fn condition(&self, x: &Feat) -> Models {
         let (a_hat, _) = self.acc.predict(x);
+        self.condition_with_acc(x, a_hat)
+    }
+
+    /// [`Models::condition`] with the simulated *accuracy* outcome supplied
+    /// by the caller instead of the predictive mean — the constant-liar
+    /// batch-selection strategy conditions every pending slate pick on a
+    /// fixed lie (e.g. the best observed accuracy) so that the next pick is
+    /// repelled from the pending ones. Cost/time surrogates are conditioned
+    /// exactly as in `condition` (they have no sensible lie: the deployment
+    /// bill does not depend on how optimistic the batch strategy is).
+    pub fn condition_with_acc(&self, x: &Feat, acc_value: f64) -> Models {
         let (cost, time) = match self.kind {
             ModelKind::Gp => {
                 let (c_hat, _) = self.cost.predict(x);
@@ -154,7 +165,7 @@ impl Models {
             }
         };
         Models {
-            acc: self.acc.condition(x, a_hat),
+            acc: self.acc.condition(x, acc_value),
             cost,
             time,
             kind: self.kind,
@@ -389,6 +400,25 @@ mod tests {
         let loose = [Constraint::cost_max(1e9)];
         let inc2 = select_incumbent(&m, &loose, &full_feats);
         assert!(inc2.feas_prob >= 0.89, "{inc2:?}");
+    }
+
+    #[test]
+    fn condition_with_acc_honors_the_lie() {
+        let (m, pts, _) = fitted_models(ModelKind::Gp, 16);
+        let x = encode(&pts[1]);
+        let (mu, s1) = m.acc.predict(&x);
+        // an optimistic lie must pull the local mean up, and still shrink
+        // the local uncertainty like any conditioning does
+        let lied = m.condition_with_acc(&x, mu + 0.5);
+        let (mu2, s2) = lied.acc.predict(&x);
+        assert!(mu2 > mu + 1e-6, "lie ignored: {mu} -> {mu2}");
+        assert!(s2 <= s1 + 1e-9);
+        // the predictive-mean lie is exactly `condition`
+        let a = m.condition(&x);
+        let b = m.condition_with_acc(&x, mu);
+        let q = encode(&pts[2]);
+        assert_eq!(a.acc.predict(&q), b.acc.predict(&q));
+        assert_eq!(a.cost.predict(&q), b.cost.predict(&q));
     }
 
     #[test]

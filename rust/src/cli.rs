@@ -1,4 +1,28 @@
 //! Hand-rolled CLI argument parsing (offline registry has no `clap`).
+//!
+//! The parser is generic (`--key value` / bare `--flag` switches); the
+//! flags each subcommand actually reads live next to their `cmd_*`
+//! handlers. For reference, the `optimize` subcommand — the one users hit
+//! first — understands (see `main.rs` and `docs/ARCHITECTURE.md`, which
+//! must stay in agreement with this table):
+//!
+//! | flag | default | meaning |
+//! |------|---------|---------|
+//! | `--net rnn\|mlp\|cnn\|multilayer` | `rnn` | workload / dataset |
+//! | `--optimizer <name>` | `trimtuner-dt` | `trimtuner-dt`, `trimtuner-gp`, `eic`, `eic-usd`, `fabolas`, `random` |
+//! | `--filter cea\|random\|nofilter\|direct\|cmaes` | per-optimizer | acquisition filtering heuristic |
+//! | `--beta 0.1` | 0.1 | filtering level β (fraction of untested points scored) |
+//! | `--iters 44` | 44 | total probe budget (observations, not rounds) |
+//! | `--seed 0` | 0 | RNG seed (runs are deterministic per seed) |
+//! | `--cost-cap <usd>` | per-net | QoS constraint: max training cost |
+//! | `--pareto` | off | also report the predicted (cost, accuracy) frontier |
+//! | `--live` | off | deploy probes through the worker-pool coordinator instead of trace replay |
+//! | `--workers 4` | 4 | worker threads of the live coordinator pool |
+//! | `--batch-size 1` | 1 | probes launched concurrently per selection round (q); 1 = the paper's sequential loop |
+//! | `--launcher-noise 1.0` | 1.0 | observation-noise scale of the simulated launcher (0 = ground truth) |
+//! | `--launcher-seed <seed>` | derived | seed of the launcher's per-job noise stream |
+//!
+//! `optimize --help` prints the same synopsis at the terminal.
 
 use std::collections::HashMap;
 

@@ -11,12 +11,15 @@
 //! requeues the exact probe that failed, and every submission / completion
 //! / failure / incumbent update lands in an [`EventLog`].
 //!
-//! The BO loop itself is sequential (each acquisition depends on the last
-//! observation), but the coordinator parallelizes what the paper's testbed
-//! parallelized: the initialization batch (independent LHS deployments),
-//! and an optional *batched evaluation* extension that would submit the
-//! top-q acquisition points per round — one of the paper's natural
-//! follow-ups.
+//! The classic BO loop is sequential (each acquisition depends on the
+//! last observation), but the coordinator parallelizes what the paper's
+//! testbed parallelized — the initialization batch (independent LHS
+//! deployments) — and, since the batched-probe extension landed, the main
+//! loop itself: `optimize --live --batch-size q` submits the top-q
+//! acquisition slate per round as concurrent jobs (points sharing a
+//! configuration ride one snapshot deployment), drains results in
+//! submission order for determinism, and refits once per round. See
+//! `engine::EvalBackend::probe_slate` and `engine::BatchMode`.
 
 mod events;
 mod launcher;

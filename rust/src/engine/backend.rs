@@ -171,6 +171,26 @@ impl<'a> LiveEval<'a> {
     }
 }
 
+/// Replay-side snapshot accounting, shared by [`EvalBackend::snapshot`]
+/// and the grouped slates of [`EvalBackend::probe_slate`]: look up each
+/// level's measured outcome and charge the one training run that would
+/// have produced every snapshot — the largest (last, levels ascending)
+/// level's cost and time. This is the single place the replay charging
+/// rule lives; the live side's equivalent is the launcher's own
+/// accounting ([`crate::coordinator::SimLauncher`]).
+fn replay_snapshot(
+    d: &Dataset,
+    config: Config,
+    levels: &[usize],
+) -> (Vec<(usize, Outcome)>, f64, f64) {
+    let outcomes: Vec<(usize, Outcome)> = levels
+        .iter()
+        .map(|&s| (s, d.outcome(&Point { config, s_idx: s })))
+        .collect();
+    let (_, largest) = *outcomes.last().expect("nonempty levels");
+    (outcomes, largest.cost_usd, largest.time_s)
+}
+
 /// The engine's evaluation substrate: trace replay or live deployments.
 pub enum EvalBackend<'a> {
     /// The paper's methodology: every probe is a lookup in a
@@ -235,6 +255,86 @@ impl<'a> EvalBackend<'a> {
         }
     }
 
+    /// Evaluate one acquisition slate (a round's probes). Points sharing a
+    /// configuration ride a single snapshot deployment (ascending levels,
+    /// charged once at the largest — paper §III snapshot semantics), while
+    /// distinct configurations launch as independent jobs, concurrent
+    /// across the worker pool under `Live`. Results come back in slate
+    /// order regardless of completion order. Within a config group the
+    /// group's charge and duration are attributed to its largest-level
+    /// point and the remaining points cost 0, mirroring the init batch's
+    /// accounting. A slate of one point is exactly [`EvalBackend::probe`].
+    pub fn probe_slate(&mut self, points: &[Point]) -> Result<Vec<Probe>> {
+        anyhow::ensure!(!points.is_empty(), "empty probe slate");
+        // group slate indices by config, preserving first-appearance order
+        let mut group_of: HashMap<usize, usize> = HashMap::new();
+        let mut groups: Vec<(Config, Vec<usize>)> = Vec::new();
+        for (i, p) in points.iter().enumerate() {
+            let g = *group_of.entry(p.config.id()).or_insert_with(|| {
+                groups.push((p.config, Vec::new()));
+                groups.len() - 1
+            });
+            groups[g].1.push(i);
+        }
+        if groups.len() == points.len() {
+            // every config distinct: plain independent probes
+            return self.probe_batch(points);
+        }
+        let specs: Vec<(Config, Vec<usize>)> = groups
+            .iter()
+            .map(|(config, idxs)| {
+                let mut levels: Vec<usize> =
+                    idxs.iter().map(|&i| points[i].s_idx).collect();
+                levels.sort_unstable();
+                levels.dedup();
+                (*config, levels)
+            })
+            .collect();
+        // (outcomes per level, charged cost, duration) per group — replay
+        // emulates the launcher's snapshot accounting on the lookup table
+        let results = match self {
+            EvalBackend::Replay(d) => specs
+                .iter()
+                .map(|(config, levels)| replay_snapshot(d, *config, levels))
+                .collect::<Vec<_>>(),
+            EvalBackend::Live(live) => live
+                .run_jobs(&specs)?
+                .into_iter()
+                .map(|r| (r.outcomes, r.charged_cost, r.duration_s))
+                .collect(),
+        };
+        // redistribute to slate order with snapshot accounting per group
+        let mut probes: Vec<Option<Probe>> = vec![None; points.len()];
+        for ((_, idxs), (outcomes, charged, duration)) in
+            groups.iter().zip(&results)
+        {
+            // the group's largest-level point carries the whole charge
+            let payer = *idxs
+                .iter()
+                .max_by_key(|&&i| points[i].s_idx)
+                .expect("nonempty group");
+            for &i in idxs {
+                let s = points[i].s_idx;
+                let o = outcomes
+                    .iter()
+                    .find(|(lvl, _)| *lvl == s)
+                    .map(|(_, o)| *o)
+                    .ok_or_else(|| {
+                        anyhow!("launcher returned no snapshot at level {s}")
+                    })?;
+                probes[i] = Some(Probe {
+                    outcome: o,
+                    charged_cost: if i == payer { *charged } else { 0.0 },
+                    duration_s: if i == payer { *duration } else { 0.0 },
+                });
+            }
+        }
+        Ok(probes
+            .into_iter()
+            .map(|p| p.expect("all slate slots filled"))
+            .collect())
+    }
+
     /// Snapshot deployment of one config at several *ascending*
     /// sub-sampling levels, charged once at the largest level (paper §III).
     /// Replay emulates the same accounting on the lookup table: the charge
@@ -252,16 +352,9 @@ impl<'a> EvalBackend<'a> {
         );
         match self {
             EvalBackend::Replay(d) => {
-                let outcomes: Vec<(usize, Outcome)> = s_levels
-                    .iter()
-                    .map(|&s| (s, d.outcome(&Point { config, s_idx: s })))
-                    .collect();
-                let (_, largest) = *outcomes.last().expect("nonempty");
-                Ok(Snapshot {
-                    outcomes,
-                    charged_cost: largest.cost_usd,
-                    duration_s: largest.time_s,
-                })
+                let (outcomes, charged_cost, duration_s) =
+                    replay_snapshot(d, config, s_levels);
+                Ok(Snapshot { outcomes, charged_cost, duration_s })
             }
             EvalBackend::Live(live) => {
                 let results =
@@ -420,6 +513,61 @@ mod tests {
             log.count(|k| matches!(k, EventKind::JobFailed { .. })),
             2
         );
+    }
+
+    #[test]
+    fn probe_slate_groups_shared_configs_into_one_snapshot() {
+        let (truth, live) = backend_pair(NetKind::Rnn);
+        let mut replay = EvalBackend::Replay(&truth);
+        let mut live = EvalBackend::Live(live);
+        // two picks share config 7 (levels 1 and 3, deliberately not in
+        // slate order), one pick is a distinct config
+        let shared = Config::from_id(7);
+        let slate = [
+            Point { config: shared, s_idx: 3 },
+            Point { config: Config::from_id(100), s_idx: 4 },
+            Point { config: shared, s_idx: 1 },
+        ];
+        let a = replay.probe_slate(&slate).unwrap();
+        let b = live.probe_slate(&slate).unwrap();
+        assert_eq!(a.len(), 3);
+        for ((p, ra), rb) in slate.iter().zip(&a).zip(&b) {
+            assert_eq!(ra.outcome, truth.outcome(p));
+            assert_eq!(ra.outcome, rb.outcome);
+            assert_eq!(ra.charged_cost, rb.charged_cost);
+            assert_eq!(ra.duration_s, rb.duration_s);
+        }
+        // snapshot accounting: the s=3 pick (largest level of its group)
+        // pays the one training run, the s=1 rider is free
+        assert_eq!(
+            a[0].charged_cost,
+            truth.outcome(&Point { config: shared, s_idx: 3 }).cost_usd
+        );
+        assert_eq!(a[2].charged_cost, 0.0);
+        assert_eq!(a[2].duration_s, 0.0);
+        assert_eq!(
+            a[1].charged_cost,
+            truth.outcome(&slate[1]).cost_usd,
+            "independent config pays its own probe"
+        );
+        // only two jobs were deployed for the three observations
+        let log = live.event_log().unwrap();
+        assert_eq!(
+            log.count(|k| matches!(k, EventKind::JobSubmitted { .. })),
+            2
+        );
+    }
+
+    #[test]
+    fn probe_slate_of_one_matches_probe_exactly() {
+        let truth = Dataset::ground_truth(NetKind::Mlp);
+        let mut replay = EvalBackend::Replay(&truth);
+        let p = Point::from_id(777);
+        let a = replay.probe(p).unwrap();
+        let b = replay.probe_slate(&[p]).unwrap();
+        assert_eq!(a.outcome, b[0].outcome);
+        assert_eq!(a.charged_cost, b[0].charged_cost);
+        assert_eq!(a.duration_s, b[0].duration_s);
     }
 
     #[test]

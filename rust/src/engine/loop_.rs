@@ -12,7 +12,9 @@ use crate::acq::{
     AlphaSlate, EntropyEstimator, Models, TrimTunerAcq,
 };
 use crate::coordinator::EventKind;
-use crate::heuristics::{cea_scores_feats, select_next, AlphaCache, FilterKind};
+use crate::heuristics::{
+    cea_scores_feats, select_slate, AlphaCache, FilterKind,
+};
 use crate::models::{Feat, FitOptions, ModelKind};
 use crate::opt::latin_hypercube;
 use crate::sim::{Dataset, Outcome};
@@ -100,17 +102,28 @@ pub struct EngineConfig {
     pub n_rep: usize,
     /// Monte-Carlo samples for p_opt
     pub n_popt_samples: usize,
-    /// re-optimize GP hyper-parameters every k iterations
+    /// re-optimize GP hyper-parameters every k refits — one refit per
+    /// selection round, so with `batch_size` = 1 this is every k
+    /// iterations (the paper's cadence)
     pub hyperopt_every: usize,
     /// GP hyper-parameter posterior samples (FABOLAS-style marginalization;
     /// 1 = plain ML-II as used by the EIc baselines)
     pub gp_hyper_samples: usize,
-    /// adaptive stop condition evaluated after every iteration, in
+    /// adaptive stop condition evaluated after every selection round, in
     /// addition to `max_iters` (paper §III extension)
     pub stop: super::stop::StopCondition,
     /// also compute the predicted (cost, accuracy) Pareto frontier under
     /// the final models (`RunResult::pareto`, paper §V future work)
     pub pareto: bool,
+    /// probes submitted concurrently per selection round (q). 1 — the
+    /// default — reproduces the paper's strictly sequential Algorithm 1
+    /// bit-exactly; q > 1 selects the top-q acquisition slate (diversified
+    /// per [`BatchMode`]), launches it through the worker pool in one
+    /// batch, absorbs the results in submission order and refits once.
+    pub batch_size: usize,
+    /// how picks 2..q of a round's slate are diversified (defaults to the
+    /// `TRIMTUNER_BATCH` environment variable, see [`BatchMode::from_env`])
+    pub batch_mode: BatchMode,
 }
 
 impl EngineConfig {
@@ -137,18 +150,67 @@ impl EngineConfig {
             },
             stop: super::stop::StopCondition::Never,
             pareto: false,
+            batch_size: 1,
+            batch_mode: BatchMode::from_env(),
         }
     }
 }
 
-/// Per-iteration acquisition context that is valid as long as the fitted
+/// How a round's pending slate picks condition the next pick (batched
+/// Bayesian optimization needs the q-th pick to know about the q−1 probes
+/// already in flight, or the slate degenerates into q near-duplicates of
+/// the α-argmax).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchMode {
+    /// Kriging-believer fantasy conditioning (the default): each pending
+    /// pick is absorbed as a simulated observation at the surrogate's own
+    /// predictive mean ([`Models::condition`] — the same single-root
+    /// Gauss–Hermite collapse α_T's simulated refit uses), and the next
+    /// pick maximizes α under the conditioned bundle.
+    Fantasy,
+    /// Constant liar: pending picks are absorbed at a fixed lie — the best
+    /// *observed* accuracy so far (CL-max) — via
+    /// [`Models::condition_with_acc`]. Cheaper-to-reason-about fallback
+    /// when fantasy conditioning misbehaves.
+    ConstantLiar,
+    /// No conditioning: the slate is the ranked top-q of one α sweep
+    /// ([`crate::heuristics::select_slate`]). Cheapest, but the picks may
+    /// cluster; kept for A/B runs and benches.
+    TopQ,
+}
+
+impl BatchMode {
+    /// `TRIMTUNER_BATCH=liar` selects [`BatchMode::ConstantLiar`],
+    /// `TRIMTUNER_BATCH=topq` the unconditioned ranked slate; anything
+    /// else (or unset) is the fantasy default.
+    pub fn from_env() -> BatchMode {
+        match std::env::var("TRIMTUNER_BATCH") {
+            Ok(v) if v.eq_ignore_ascii_case("liar") => {
+                BatchMode::ConstantLiar
+            }
+            Ok(v) if v.eq_ignore_ascii_case("topq") => BatchMode::TopQ,
+            _ => BatchMode::Fantasy,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchMode::Fantasy => "fantasy",
+            BatchMode::ConstantLiar => "liar",
+            BatchMode::TopQ => "topq",
+        }
+    }
+}
+
+/// Per-round acquisition context that is valid as long as the fitted
 /// models are unchanged (`Models::generation`): the CEA config ordering,
 /// the entropy estimator (representer set + CRN z-matrix) and the
-/// current-model p_opt baseline. Algorithm 1 refits after every
-/// observation, so the standard loop rebuilds it every iteration — the
-/// cache pays off when selection is re-entered without a refit (repeated
-/// selection rounds, batched probe slates, external callers driving
-/// `choose_next` directly).
+/// current-model p_opt baseline. With q = 1 Algorithm 1 refits after every
+/// observation, so the loop rebuilds it every round; with batched probe
+/// slates (q > 1) the round's pending-conditioned picks re-enter selection
+/// *without* a refit and reuse this context — rebuilding only the cheap
+/// derived quantities (conditioned p_opt baseline, conditioned CEA
+/// shortlist) per pick.
 struct AcqContext {
     generation: u64,
     /// built for the constraint-free (FABOLAS) estimator
@@ -186,17 +248,6 @@ struct State {
 }
 
 impl State {
-    /// Evaluate one probe through the backend and record the observation.
-    fn observe(
-        &mut self,
-        backend: &mut EvalBackend,
-        p: Point,
-    ) -> Result<Probe> {
-        let probe = backend.probe(p)?;
-        self.push_observation(p, probe.outcome);
-        Ok(probe)
-    }
-
     fn push_observation(&mut self, p: Point, o: Outcome) {
         self.tested.push(p);
         self.outcomes.push(o);
@@ -260,12 +311,23 @@ pub fn run_backend(
 
     initialize(backend, constraints, cfg, &mut st, &mut rng, &full_feats)?;
 
-    // Acquisition context persisted across iterations; rebuilt only when
-    // the models were refitted in between.
+    // Acquisition context persisted across selection rounds; rebuilt only
+    // when the models were refitted in between. With q = 1 Algorithm 1
+    // refits after every observation, so the cache rebuilds every round;
+    // with q > 1 the round's q − 1 pending-conditioned picks reuse the
+    // round context (representer set, CRN z-matrix, CEA ordering) built by
+    // the first pick — the batched-probe payoff the cache was designed for.
     let mut acq_cache: Option<AcqContext> = None;
 
     // ---------------- main optimization loop (Alg. 1 lines 11-20) --------
-    for iter in 0..cfg.max_iters {
+    // One *round* selects a slate of up to `batch_size` probes, launches
+    // them through the backend in a single batch (concurrent across the
+    // worker pool under `Live`), absorbs the results in submission order,
+    // refits once, and records one IterRecord per observation. q = 1 is
+    // the paper's sequential loop, reproduced bit-exactly.
+    let mut iter = 0;
+    let mut round = 1; // round 0 is the init batch
+    while iter < cfg.max_iters {
         let timer = Timer::start();
         let untested = untested_points(cfg.optimizer, &st.tested_ids);
         if untested.is_empty() {
@@ -273,34 +335,65 @@ pub fn run_backend(
         }
         let budget =
             ((cfg.beta * untested.len() as f64).ceil() as usize).max(1);
+        let q = cfg
+            .batch_size
+            .max(1)
+            .min(cfg.max_iters - iter)
+            .min(untested.len());
 
-        let (chosen, n_evals) = choose_next(
+        let (slate, n_evals) = choose_slate(
             cfg, constraints, &st, &untested, &full_feats, &grid_feats,
-            budget, &mut rng, &mut acq_cache,
+            budget, &mut rng, &mut acq_cache, q,
         );
 
-        let probe = st.observe(backend, chosen)?;
-        st.cum_cost += probe.charged_cost;
-        st.cum_time += probe.duration_s;
-
-        refit(cfg, &mut st, iter);
+        let probes: Vec<Probe> = backend.probe_slate(&slate)?;
+        // absorb in submission order, tracking the running totals each
+        // observation sees (records stay per-observation even when the
+        // whole slate was deployed concurrently)
+        let mut cums = Vec::with_capacity(slate.len());
+        for (p, pr) in slate.iter().zip(&probes) {
+            st.push_observation(*p, pr.outcome);
+            st.cum_cost += pr.charged_cost;
+            st.cum_time += pr.duration_s;
+            cums.push((st.cum_cost, st.cum_time));
+        }
+        // One refit + one recommendation per round (not per observation).
+        // The hyperopt cadence counts *refits* (rounds), not observations:
+        // gating on the observation index would dilute the configured
+        // cadence by the batch factor at q > 1. At q = 1 the round index
+        // equals the observation index, preserving the sequential traces.
+        refit(cfg, &mut st, round - 1);
         let rec = recommend(cfg.optimizer, &mut st, constraints, &full_feats);
         let rec_wall_s = timer.elapsed_s();
 
-        push_record(
-            &mut st,
-            backend,
-            constraints,
-            iter,
-            false,
-            chosen,
-            probe.outcome,
-            probe.charged_cost,
-            probe.duration_s,
-            rec_wall_s,
-            rec,
-            n_evals,
-        );
+        let n = slate.len();
+        for (j, ((p, pr), (cc, ct))) in
+            slate.iter().zip(&probes).zip(&cums).enumerate()
+        {
+            let is_last = j + 1 == n;
+            push_record(
+                &mut st,
+                backend,
+                constraints,
+                RecordArgs {
+                    iter,
+                    is_init: false,
+                    round,
+                    tested: *p,
+                    outcome: pr.outcome,
+                    explore_cost: pr.charged_cost,
+                    duration_s: pr.duration_s,
+                    cum_cost: *cc,
+                    cum_time: *ct,
+                    rec_wall_s: if is_last { rec_wall_s } else { 0.0 },
+                    rec,
+                    n_alpha_evals: if is_last { n_evals } else { 0 },
+                    log_events: is_last,
+                },
+            );
+            iter += 1;
+        }
+        round += 1;
         if cfg.stop.should_stop(&st.records) {
             break;
         }
@@ -370,7 +463,7 @@ fn initialize(
         st.cum_cost += charge;
         st.cum_time += duration;
         let is_last = i + 1 == n;
-        if is_last {
+        let (rec, wall) = if is_last {
             let t = Timer::start();
             st.models.fit(
                 &st.tested,
@@ -378,20 +471,33 @@ fn initialize(
                 FitOptions { hyperopt: true, restarts: 1 },
             );
             let rec = recommend(cfg.optimizer, st, constraints, full_feats);
-            let wall = t.elapsed_s();
-            push_record(
-                st, backend, constraints, i, true, *p, *o, *charge,
-                *duration, wall, rec, 0,
-            );
+            (rec, t.elapsed_s())
         } else {
             // record without a model-based incumbent yet: report the best
             // observed config (full-data-set observations preferred)
-            let rec = best_observed(st, constraints);
-            push_record(
-                st, backend, constraints, i, true, *p, *o, *charge,
-                *duration, 0.0, rec, 0,
-            );
-        }
+            (best_observed(st, constraints), 0.0)
+        };
+        let (cum_cost, cum_time) = (st.cum_cost, st.cum_time);
+        push_record(
+            st,
+            backend,
+            constraints,
+            RecordArgs {
+                iter: i,
+                is_init: true,
+                round: 0,
+                tested: *p,
+                outcome: *o,
+                explore_cost: *charge,
+                duration_s: *duration,
+                cum_cost,
+                cum_time,
+                rec_wall_s: wall,
+                rec,
+                n_alpha_evals: 0,
+                log_events: true,
+            },
+        );
     }
     Ok(())
 }
@@ -411,14 +517,15 @@ fn untested_points(
     }
 }
 
-/// Pick the next point to test (one iteration's acquisition maximization).
-///
-/// Every α closure is a pure `Fn + Sync` over precomputed per-iteration
-/// context ([`AlphaCache::shared`]), so the slate heuristics can shard the
-/// candidate sweep across threads while staying bit-identical to the
-/// sequential path.
+/// Pick the round's probe slate: the α-argmax first pick, plus q − 1
+/// follow-up picks conditioned on the pending ones (per
+/// [`EngineConfig::batch_mode`]) so the slate spreads over the space
+/// instead of clustering around one maximum. Returns the slate in pick
+/// order and the total unique α evaluations spent. With q = 1 this is
+/// exactly one [`choose_ranked`] call — the sequential Algorithm 1 path,
+/// consuming identical RNG draws.
 #[allow(clippy::too_many_arguments)]
-fn choose_next(
+fn choose_slate(
     cfg: &EngineConfig,
     constraints: &[Constraint],
     st: &State,
@@ -428,108 +535,352 @@ fn choose_next(
     budget: usize,
     rng: &mut Rng,
     acq_cache: &mut Option<AcqContext>,
-) -> (Point, usize) {
-    match cfg.optimizer {
+    q: usize,
+) -> (Vec<Point>, usize) {
+    if q > 1 {
+        // random search needs no conditioning: q distinct uniform picks
+        if cfg.optimizer == OptimizerKind::RandomSearch {
+            let idx = rng.sample_indices(untested.len(), q);
+            return (idx.into_iter().map(|i| untested[i]).collect(), 0);
+        }
+        // unconditioned ranked slate: one α sweep, top-q prefix
+        if cfg.batch_mode == BatchMode::TopQ {
+            return choose_ranked(
+                cfg, constraints, st, untested, full_feats, grid_feats,
+                budget, rng, acq_cache, q,
+            );
+        }
+    }
+    let (mut slate, mut evals) = choose_ranked(
+        cfg, constraints, st, untested, full_feats, grid_feats, budget, rng,
+        acq_cache, 1,
+    );
+    if q <= 1 {
+        return (slate, evals);
+    }
+    // constant-liar value: the best *observed* accuracy so far (CL-max)
+    let lie = st
+        .outcomes
+        .iter()
+        .map(|o| o.acc)
+        .fold(f64::NEG_INFINITY, f64::max);
+    // pending-conditioned picks: absorb each pending pick into a fantasy
+    // clone of the bundle, then re-maximize α under it over the remaining
+    // candidates. The round context (representer set, CRN z-matrix) built
+    // by the first pick is reused across all picks of the round.
+    let mut cond: Option<Models> = None;
+    while slate.len() < q {
+        let x = &grid_feats[slate.last().expect("nonempty slate").id()];
+        let next_models = {
+            let base = cond.as_ref().unwrap_or(&st.models);
+            match cfg.batch_mode {
+                BatchMode::Fantasy => base.condition(x),
+                BatchMode::ConstantLiar => base.condition_with_acc(x, lie),
+                BatchMode::TopQ => unreachable!("handled above"),
+            }
+        };
+        cond = Some(next_models);
+        let models = cond.as_ref().expect("conditioned bundle");
+        let taken: HashSet<usize> = slate.iter().map(|p| p.id()).collect();
+        let remaining: Vec<Point> = untested
+            .iter()
+            .filter(|p| !taken.contains(&p.id()))
+            .copied()
+            .collect();
+        if remaining.is_empty() {
+            break;
+        }
+        let (next, e) = choose_pending(
+            cfg,
+            constraints,
+            models,
+            st,
+            acq_cache.as_ref(),
+            &remaining,
+            full_feats,
+            grid_feats,
+            budget.min(remaining.len()),
+            rng,
+        );
+        evals += e;
+        slate.push(next);
+    }
+    (slate, evals)
+}
+
+/// One acquisition maximization over `untested`, returning the ranked
+/// top-`q` slate (q = 1: exactly the point the sequential loop would test).
+///
+/// Every α closure is a pure `Fn + Sync` over precomputed per-round
+/// context ([`AlphaCache::shared`] / [`AlphaCache::batch`]), so the slate
+/// heuristics can shard the candidate sweep across threads while staying
+/// bit-identical to the sequential path. The per-optimizer selection
+/// bodies live in `select_*_slate` helpers shared with [`choose_pending`],
+/// so the first pick and the pending-conditioned picks cannot drift apart.
+#[allow(clippy::too_many_arguments)]
+fn choose_ranked(
+    cfg: &EngineConfig,
+    constraints: &[Constraint],
+    st: &State,
+    untested: &[Point],
+    full_feats: &[Feat],
+    grid_feats: &[Feat],
+    budget: usize,
+    rng: &mut Rng,
+    acq_cache: &mut Option<AcqContext>,
+    q: usize,
+) -> (Vec<Point>, usize) {
+    let (ranked, evals) = match cfg.optimizer {
         OptimizerKind::RandomSearch => {
-            (untested[rng.below(untested.len())], 0)
+            return (vec![untested[rng.below(untested.len())]], 0);
         }
         OptimizerKind::Eic | OptimizerKind::EicUsd => {
             let eta = incumbent_eta(st, constraints);
-            let models = &st.models;
             let use_usd = cfg.optimizer == OptimizerKind::EicUsd;
-            let mut alpha = AlphaCache::shared(move |p: &Point| {
-                let x = &grid_feats[p.id()];
-                if use_usd {
-                    eic_usd(models, constraints, x, eta)
-                } else {
-                    eic(models, constraints, x, eta)
-                }
-            });
-            select_next(
-                FilterKind::NoFilter,
-                &st.models,
-                constraints,
-                untested,
-                untested.len(),
-                &mut alpha,
-                rng,
+            select_eic_slate(
+                &st.models, constraints, use_usd, eta, untested, grid_feats,
+                rng, q,
             )
         }
         OptimizerKind::Fabolas => {
             let actx =
                 acq_context(cfg, st, &[], full_feats, rng, acq_cache);
-            let models = &st.models;
-            let est_ref = &actx.est;
-            let baseline = actx.baseline;
-            let mut alpha = AlphaCache::shared(move |p: &Point| {
-                fabolas_alpha(models, est_ref, baseline, &grid_feats[p.id()])
-            });
-            select_next(
-                cfg.filter,
+            select_fabolas_slate(
+                cfg,
                 &st.models,
-                &[], // FABOLAS ignores constraints
+                &actx.est,
+                actx.baseline,
                 untested,
+                grid_feats,
                 budget,
-                &mut alpha,
                 rng,
+                q,
             )
         }
         OptimizerKind::TrimTuner(_) => {
             let actx =
                 acq_context(cfg, st, constraints, full_feats, rng, acq_cache);
-            // incumbent shortlist: top configs by CEA under current
-            // models, with the feature rows gathered once per iteration
-            let shortlist: Vec<usize> =
-                actx.cea_order.iter().take(INC_SHORTLIST).copied().collect();
-            let shortlist_feats: Vec<Feat> =
-                shortlist.iter().map(|&id| full_feats[id]).collect();
-            // When conditioning leaves the constraint models untouched
-            // (trees — see Models::constraints_fixed_under_condition), the
-            // shortlist feasibility scanned inside every α_T call is
-            // iteration-constant — compute it once here instead of
-            // 2 × |shortlist| surrogate predictions per candidate. GP
-            // conditioning shifts the constraint posteriors; their
-            // conditioned feasibility comes from the slate evaluator's
-            // rank-one metric surfaces.
-            let shortlist_feas: Option<Vec<f64>> =
-                if st.models.constraints_fixed_under_condition() {
-                    Some(joint_feasibility_many(
-                        &st.models,
-                        constraints,
-                        &shortlist_feats,
-                    ))
-                } else {
-                    None
-                };
-            let ctx = TrimTunerAcq {
-                models: &st.models,
-                est: &actx.est,
+            select_trimtuner_slate(
+                cfg,
                 constraints,
-                inc_shortlist: &shortlist,
-                inc_shortlist_feats: &shortlist_feats,
-                inc_feas: shortlist_feas.as_deref(),
-                baseline: actx.baseline,
-            };
-            // Slate-wide α_T: one shared fantasy-posterior precompute per
-            // iteration, then a rank-one conditioned view per candidate
-            // (`TRIMTUNER_ALPHA=clone` reverts to per-candidate cloning).
-            let slate = AlphaSlate::new(&ctx);
-            let mut alpha = AlphaCache::batch(|pts: &[Point]| {
-                let feats: Vec<Feat> =
-                    pts.iter().map(|p| grid_feats[p.id()]).collect();
-                slate.eval_feats(&feats)
-            });
-            select_next(
-                cfg.filter,
                 &st.models,
-                constraints,
+                &actx.est,
+                actx.baseline,
+                &actx.cea_order,
                 untested,
+                full_feats,
+                grid_feats,
                 budget,
-                &mut alpha,
                 rng,
+                q,
             )
         }
-    }
+    };
+    (ranked.into_iter().map(|(p, _)| p).collect(), evals)
+}
+
+/// One pending-conditioned acquisition maximization for pick 2..q of a
+/// round's slate: the same `select_*_slate` bodies as [`choose_ranked`],
+/// but evaluated under the fantasy/liar-conditioned `models` instead of
+/// `st.models`. The entropy estimator (representer set + CRN z-matrix) is
+/// reused from the round context; only its cheap derived quantities
+/// (p_opt baseline, CEA shortlist ordering) are re-derived under the
+/// conditioned bundle.
+#[allow(clippy::too_many_arguments)]
+fn choose_pending(
+    cfg: &EngineConfig,
+    constraints: &[Constraint],
+    models: &Models,
+    st: &State,
+    actx: Option<&AcqContext>,
+    untested: &[Point],
+    full_feats: &[Feat],
+    grid_feats: &[Feat],
+    budget: usize,
+    rng: &mut Rng,
+) -> (Point, usize) {
+    let (ranked, evals) = match cfg.optimizer {
+        OptimizerKind::RandomSearch => {
+            return (untested[rng.below(untested.len())], 0);
+        }
+        OptimizerKind::Eic | OptimizerKind::EicUsd => {
+            // η stays observation-based: pending picks have no outcome yet
+            let eta = incumbent_eta(st, constraints);
+            let use_usd = cfg.optimizer == OptimizerKind::EicUsd;
+            select_eic_slate(
+                models, constraints, use_usd, eta, untested, grid_feats,
+                rng, 1,
+            )
+        }
+        OptimizerKind::Fabolas => {
+            let actx = actx.expect("round context built by the first pick");
+            let baseline = EntropyEstimator::kl_from_uniform(
+                &actx.est.p_opt(models.acc.as_ref()),
+            );
+            select_fabolas_slate(
+                cfg, models, &actx.est, baseline, untested, grid_feats,
+                budget, rng, 1,
+            )
+        }
+        OptimizerKind::TrimTuner(_) => {
+            let actx = actx.expect("round context built by the first pick");
+            let baseline = EntropyEstimator::kl_from_uniform(
+                &actx.est.p_opt(models.acc.as_ref()),
+            );
+            // re-rank the incumbent shortlist under the conditioned bundle
+            let scores = cea_scores_feats(models, constraints, full_feats);
+            let mut order: Vec<usize> = (0..full_feats.len()).collect();
+            order.sort_by(|&a, &b| cmp_nan_low(scores[b], scores[a]));
+            select_trimtuner_slate(
+                cfg,
+                constraints,
+                models,
+                &actx.est,
+                baseline,
+                &order,
+                untested,
+                full_feats,
+                grid_feats,
+                budget,
+                rng,
+                1,
+            )
+        }
+    };
+    (ranked[0].0, evals)
+}
+
+/// Constrained-EI selection body (CherryPick / Lynceus), shared by the
+/// first pick and the pending-conditioned picks.
+#[allow(clippy::too_many_arguments)]
+fn select_eic_slate(
+    models: &Models,
+    constraints: &[Constraint],
+    use_usd: bool,
+    eta: f64,
+    untested: &[Point],
+    grid_feats: &[Feat],
+    rng: &mut Rng,
+    q: usize,
+) -> (Vec<(Point, f64)>, usize) {
+    let mut alpha = AlphaCache::shared(move |p: &Point| {
+        let x = &grid_feats[p.id()];
+        if use_usd {
+            eic_usd(models, constraints, x, eta)
+        } else {
+            eic(models, constraints, x, eta)
+        }
+    });
+    select_slate(
+        FilterKind::NoFilter,
+        models,
+        constraints,
+        untested,
+        untested.len(),
+        &mut alpha,
+        rng,
+        q,
+    )
+}
+
+/// FABOLAS selection body (constraint-oblivious information gain per
+/// dollar), shared by the first pick and the pending-conditioned picks.
+#[allow(clippy::too_many_arguments)]
+fn select_fabolas_slate(
+    cfg: &EngineConfig,
+    models: &Models,
+    est: &EntropyEstimator,
+    baseline: f64,
+    untested: &[Point],
+    grid_feats: &[Feat],
+    budget: usize,
+    rng: &mut Rng,
+    q: usize,
+) -> (Vec<(Point, f64)>, usize) {
+    let mut alpha = AlphaCache::shared(move |p: &Point| {
+        fabolas_alpha(models, est, baseline, &grid_feats[p.id()])
+    });
+    select_slate(
+        cfg.filter,
+        models,
+        &[], // FABOLAS ignores constraints
+        untested,
+        budget,
+        &mut alpha,
+        rng,
+        q,
+    )
+}
+
+/// TrimTuner α_T selection body, shared by the first pick (round context's
+/// CEA order + baseline) and the pending-conditioned picks (order +
+/// baseline re-derived under the conditioned bundle).
+#[allow(clippy::too_many_arguments)]
+fn select_trimtuner_slate(
+    cfg: &EngineConfig,
+    constraints: &[Constraint],
+    models: &Models,
+    est: &EntropyEstimator,
+    baseline: f64,
+    cea_order: &[usize],
+    untested: &[Point],
+    full_feats: &[Feat],
+    grid_feats: &[Feat],
+    budget: usize,
+    rng: &mut Rng,
+    q: usize,
+) -> (Vec<(Point, f64)>, usize) {
+    // incumbent shortlist: top configs by CEA under `models`, with the
+    // feature rows gathered once per selection pass
+    let shortlist: Vec<usize> =
+        cea_order.iter().take(INC_SHORTLIST).copied().collect();
+    let shortlist_feats: Vec<Feat> =
+        shortlist.iter().map(|&id| full_feats[id]).collect();
+    // When conditioning leaves the constraint models untouched (trees —
+    // see Models::constraints_fixed_under_condition), the shortlist
+    // feasibility scanned inside every α_T call is pass-constant —
+    // compute it once here instead of 2 × |shortlist| surrogate
+    // predictions per candidate. GP conditioning shifts the constraint
+    // posteriors; their conditioned feasibility comes from the slate
+    // evaluator's rank-one metric surfaces.
+    let shortlist_feas: Option<Vec<f64>> =
+        if models.constraints_fixed_under_condition() {
+            Some(joint_feasibility_many(
+                models,
+                constraints,
+                &shortlist_feats,
+            ))
+        } else {
+            None
+        };
+    let ctx = TrimTunerAcq {
+        models,
+        est,
+        constraints,
+        inc_shortlist: &shortlist,
+        inc_shortlist_feats: &shortlist_feats,
+        inc_feas: shortlist_feas.as_deref(),
+        baseline,
+    };
+    // Slate-wide α_T: one shared fantasy-posterior precompute per pass,
+    // then a rank-one conditioned view per candidate
+    // (`TRIMTUNER_ALPHA=clone` reverts to per-candidate cloning).
+    let slate = AlphaSlate::new(&ctx);
+    let mut alpha = AlphaCache::batch(|pts: &[Point]| {
+        let feats: Vec<Feat> =
+            pts.iter().map(|p| grid_feats[p.id()]).collect();
+        slate.eval_feats(&feats)
+    });
+    select_slate(
+        cfg.filter,
+        models,
+        constraints,
+        untested,
+        budget,
+        &mut alpha,
+        rng,
+        q,
+    )
 }
 
 /// Size of the CEA-ranked incumbent shortlist scanned inside α_T
@@ -623,8 +974,12 @@ fn incumbent_eta(st: &State, constraints: &[Constraint]) -> f64 {
     }
 }
 
-fn refit(cfg: &EngineConfig, st: &mut State, iter: usize) {
-    let hyperopt = cfg.hyperopt_every > 0 && iter % cfg.hyperopt_every == 0;
+/// Refit the surrogates after a round, re-optimizing hyper-parameters
+/// every `hyperopt_every`-th refit (`round_idx` is the 0-based main-loop
+/// round index — with q = 1 that is exactly the observation index).
+fn refit(cfg: &EngineConfig, st: &mut State, round_idx: usize) {
+    let hyperopt =
+        cfg.hyperopt_every > 0 && round_idx % cfg.hyperopt_every == 0;
     st.models.fit(
         &st.tested,
         &st.outcomes,
@@ -751,55 +1106,74 @@ fn recommend(
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn push_record(
-    st: &mut State,
-    backend: &EvalBackend,
-    constraints: &[Constraint],
+/// Everything one [`IterRecord`] needs beyond the shared run state. The
+/// cumulative totals are passed explicitly because a batched round absorbs
+/// its whole slate before recording, yet each record reports the totals
+/// *as of its own observation*.
+struct RecordArgs {
     iter: usize,
     is_init: bool,
+    round: usize,
     tested: Point,
     outcome: Outcome,
     explore_cost: f64,
     duration_s: f64,
+    cum_cost: f64,
+    cum_time: f64,
     rec_wall_s: f64,
     rec: Recommendation,
     n_alpha_evals: usize,
+    /// record the round-level `IncumbentUpdated`/`IterationDone` events —
+    /// once per round (the last record of a slate; every init record)
+    log_events: bool,
+}
+
+fn push_record(
+    st: &mut State,
+    backend: &EvalBackend,
+    constraints: &[Constraint],
+    a: RecordArgs,
 ) {
     // Evaluation-only ground truth: never consumed by the optimizer or its
     // stop conditions. Present under replay; under live only when an
     // offline oracle was attached.
     let (inc_acc, inc_feasible, acc_c) = match backend.eval_dataset() {
         Some(d) => (
-            d.outcome(&rec.point).acc,
-            d.is_feasible(&rec.point, constraints),
-            accuracy_c(d, &rec.point, constraints),
+            d.outcome(&a.rec.point).acc,
+            d.is_feasible(&a.rec.point, constraints),
+            accuracy_c(d, &a.rec.point, constraints),
         ),
         None => (f64::NAN, false, f64::NAN),
     };
-    if let Some(log) = backend.event_log() {
-        log.record(EventKind::IncumbentUpdated {
-            config_id: rec.point.config.id(),
-            pred_acc: rec.acc_estimate,
-        });
-        log.record(EventKind::IterationDone { iter, cum_cost: st.cum_cost });
+    if a.log_events {
+        if let Some(log) = backend.event_log() {
+            log.record(EventKind::IncumbentUpdated {
+                config_id: a.rec.point.config.id(),
+                pred_acc: a.rec.acc_estimate,
+            });
+            log.record(EventKind::IterationDone {
+                iter: a.iter,
+                cum_cost: a.cum_cost,
+            });
+        }
     }
     st.records.push(IterRecord {
-        iter,
-        is_init,
-        tested,
-        outcome,
-        explore_cost,
-        cum_cost: st.cum_cost,
-        cum_time: st.cum_time,
-        duration_s,
-        rec_wall_s,
-        incumbent: rec.point,
-        inc_pred_acc: rec.acc_estimate,
-        inc_from_subsample: rec.from_subsample,
+        iter: a.iter,
+        is_init: a.is_init,
+        round: a.round,
+        tested: a.tested,
+        outcome: a.outcome,
+        explore_cost: a.explore_cost,
+        cum_cost: a.cum_cost,
+        cum_time: a.cum_time,
+        duration_s: a.duration_s,
+        rec_wall_s: a.rec_wall_s,
+        incumbent: a.rec.point,
+        inc_pred_acc: a.rec.acc_estimate,
+        inc_from_subsample: a.rec.from_subsample,
         inc_acc,
         inc_feasible,
         accuracy_c: acc_c,
-        n_alpha_evals,
+        n_alpha_evals: a.n_alpha_evals,
     });
 }

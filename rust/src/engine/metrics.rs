@@ -29,6 +29,14 @@ pub struct IterRecord {
     /// 0-based iteration (init tests get negative-phase flag instead)
     pub iter: usize,
     pub is_init: bool,
+    /// 0-based selection *round* this observation belongs to. The init
+    /// batch is round 0; each main-loop round selects a slate of up to
+    /// `EngineConfig::batch_size` probes, launches them concurrently and
+    /// refits once — so with q = 1 every main record is its own round and
+    /// with q > 1 consecutive records share a round id. Round-level
+    /// quantities (`rec_wall_s`, `n_alpha_evals`) are attributed to the
+    /// round's last record.
+    pub round: usize,
     pub tested: Point,
     pub outcome: Outcome,
     /// exploration cost charged for this test (USD)
@@ -90,15 +98,35 @@ impl RunResult {
         self.records.last().map_or(0.0, |r| r.cum_time)
     }
 
-    /// Mean wall-clock recommendation latency over main-loop iterations.
+    /// Mean wall-clock recommendation latency per main-loop *round*.
+    /// `rec_wall_s` is recorded once per round (on the round's last
+    /// record), so the average divides by the number of rounds, not
+    /// records — a per-record mean would dilute the latency by the batch
+    /// factor at `batch_size` > 1. Identical to the per-record mean when
+    /// every round holds one observation (q = 1).
     pub fn mean_rec_wall_s(&self) -> f64 {
-        let xs: Vec<f64> = self
-            .records
-            .iter()
-            .filter(|r| !r.is_init)
-            .map(|r| r.rec_wall_s)
-            .collect();
-        crate::util::stats::mean(&xs)
+        let main: Vec<&IterRecord> =
+            self.records.iter().filter(|r| !r.is_init).collect();
+        match (main.first(), main.last()) {
+            (Some(first), Some(last)) => {
+                let n_rounds = (last.round - first.round + 1) as f64;
+                main.iter().map(|r| r.rec_wall_s).sum::<f64>() / n_rounds
+            }
+            _ => f64::NAN,
+        }
+    }
+
+    /// Number of selection rounds, including the init batch (round 0).
+    pub fn n_rounds(&self) -> usize {
+        self.records.last().map_or(0, |r| r.round + 1)
+    }
+
+    /// Total measured wall-clock across all rounds (selection + slate
+    /// deployment + refit; `rec_wall_s` is recorded once per round) — the
+    /// denominator of the batched-probe regret-vs-wall-clock trade-off
+    /// that `bench_coordinator`'s q × workers sweep quantifies.
+    pub fn total_wall_s(&self) -> f64 {
+        self.records.iter().map(|r| r.rec_wall_s).sum()
     }
 }
 
@@ -152,6 +180,7 @@ mod tests {
         let mk = |acc_c: f64, cum: f64| IterRecord {
             iter: 0,
             is_init: false,
+            round: 0,
             tested: p,
             outcome: d.outcome(&p),
             explore_cost: 0.0,

@@ -2,6 +2,17 @@
 //! optimizers, driven through an [`EvalBackend`] — trace replay over a
 //! measured [`crate::sim::Dataset`] (the paper's evaluation methodology) or
 //! live job deployments through the threaded coordinator.
+//!
+//! The loop is organized in selection *rounds*: each round maximizes the
+//! acquisition function, launches the chosen probe slate through the
+//! backend, absorbs the results in submission order and refits the
+//! surrogates once. With [`EngineConfig`]'s `batch_size` = 1 (the default)
+//! a round is exactly one iteration of the paper's sequential Algorithm 1;
+//! with q > 1 the engine submits the top-q slate concurrently through the
+//! worker pool, diversifying picks 2..q by conditioning on the pending
+//! ones ([`BatchMode`]: kriging-believer fantasy by default, constant-liar
+//! or plain top-q via `TRIMTUNER_BATCH`). Stop conditions
+//! ([`StopCondition`]) are evaluated at round boundaries.
 
 mod backend;
 mod loop_;
@@ -10,7 +21,7 @@ mod pareto;
 mod stop;
 
 pub use backend::{EvalBackend, LiveEval, Probe, Snapshot};
-pub use loop_::{run, run_backend, EngineConfig, OptimizerKind};
+pub use loop_::{run, run_backend, BatchMode, EngineConfig, OptimizerKind};
 pub use metrics::{accuracy_c, cost_to_quality, IterRecord, RunResult};
 pub use pareto::{
     frontier_quality, hypervolume, pareto_front, recommend_pareto,

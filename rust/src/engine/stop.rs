@@ -71,6 +71,7 @@ mod tests {
         IterRecord {
             iter: 0,
             is_init,
+            round: 0,
             tested: p,
             outcome: Outcome { acc: 0.5, time_s: 1.0, cost_usd: 0.01 },
             explore_cost: 0.0,
@@ -125,6 +126,33 @@ mod tests {
         // init records are ignored
         let rs: Vec<IterRecord> =
             (0..10).map(|i| rec(true, i as f64, 0.0, 0.8)).collect();
+        assert!(!cond.should_stop(&rs));
+    }
+
+    #[test]
+    fn no_improvement_sees_every_observation_of_batched_rounds() {
+        // Batched rounds (q > 1) record one observation per record but a
+        // single recommendation per round, so consecutive records share
+        // inc_pred_acc. The window is counted in *observations*: two
+        // plateaued q=3 rounds must trip a window-3 condition.
+        let cond = StopCondition::NoImprovement { window: 3, min_delta: 0.01 };
+        let mut rs: Vec<IterRecord> = Vec::new();
+        for _ in 0..3 {
+            rs.push(rec(false, 0.0, 0.0, 0.8));
+        }
+        assert!(!cond.should_stop(&rs), "window not exceeded yet");
+        for _ in 0..3 {
+            rs.push(rec(false, 0.0, 0.0, 0.8));
+        }
+        assert!(cond.should_stop(&rs), "plateaued batched rounds must stop");
+        // an improving second round keeps the run alive
+        let mut rs: Vec<IterRecord> = Vec::new();
+        for _ in 0..3 {
+            rs.push(rec(false, 0.0, 0.0, 0.8));
+        }
+        for _ in 0..3 {
+            rs.push(rec(false, 0.0, 0.0, 0.9));
+        }
         assert!(!cond.should_stop(&rs));
     }
 

@@ -122,6 +122,7 @@ mod tests {
                 .map(|&(c, a, is_init)| IterRecord {
                     iter: 0,
                     is_init,
+                    round: 0,
                     tested: p,
                     outcome: d.outcome(&p),
                     explore_cost: 0.0,

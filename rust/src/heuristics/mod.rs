@@ -208,6 +208,20 @@ impl<'a> AlphaCache<'a> {
             })
             .map(|(&id, &v)| (Point::from_id(id), v))
     }
+
+    /// Ranked top-`k` cached entries: α-descending with the same
+    /// deterministic ordering as [`AlphaCache::best`] (ties break towards
+    /// the lowest point id, NaN α ranks below every real value), so
+    /// `top_k(1)` and `best()` always agree. This is the batched-probe
+    /// entry point: one filter pass scores a slate, and the engine submits
+    /// the whole ranked prefix through the worker pool.
+    pub fn top_k(&self, k: usize) -> Vec<(Point, f64)> {
+        let mut v: Vec<(usize, f64)> =
+            self.cache.iter().map(|(&id, &a)| (id, a)).collect();
+        v.sort_by(|a, b| cmp_nan_low(b.1, a.1).then_with(|| a.0.cmp(&b.0)));
+        v.truncate(k);
+        v.into_iter().map(|(id, a)| (Point::from_id(id), a)).collect()
+    }
 }
 
 /// Run one candidate-selection round: pick the untested point maximizing α,
@@ -228,6 +242,43 @@ pub fn select_next(
     alpha: &mut AlphaCache<'_>,
     rng: &mut Rng,
 ) -> (Point, usize) {
+    run_filter(kind, models, constraints, untested, budget, alpha, rng);
+    let (p, _) = alpha.best().expect("at least one alpha evaluation");
+    (p, alpha.unique_evals())
+}
+
+/// [`select_next`] generalized to a ranked slate: one filter pass, then the
+/// top-`q` scored points in α-descending order (deterministic tie-break as
+/// in [`AlphaCache::best`]). `select_slate(.., 1)` picks exactly the point
+/// `select_next` would, consuming the same RNG draws — the engine's
+/// batched-probe rounds rely on that equivalence for `q = 1` parity. The
+/// slate may be shorter than `q` when the filter evaluated fewer points.
+#[allow(clippy::too_many_arguments)]
+pub fn select_slate(
+    kind: FilterKind,
+    models: &Models,
+    constraints: &[Constraint],
+    untested: &[Point],
+    budget: usize,
+    alpha: &mut AlphaCache<'_>,
+    rng: &mut Rng,
+    q: usize,
+) -> (Vec<(Point, f64)>, usize) {
+    run_filter(kind, models, constraints, untested, budget, alpha, rng);
+    (alpha.top_k(q.max(1)), alpha.unique_evals())
+}
+
+/// One filter pass: populate `alpha`'s cache with at most `budget` unique
+/// evaluations over `untested`, per the heuristic's selection policy.
+fn run_filter(
+    kind: FilterKind,
+    models: &Models,
+    constraints: &[Constraint],
+    untested: &[Point],
+    budget: usize,
+    alpha: &mut AlphaCache<'_>,
+    rng: &mut Rng,
+) {
     assert!(!untested.is_empty(), "nothing left to test");
     let budget = budget.clamp(1, untested.len());
     match kind {
@@ -261,8 +312,6 @@ pub fn select_next(
                 .run(untested, &feats, budget, alpha);
         }
     }
-    let (p, _) = alpha.best().expect("at least one alpha evaluation");
-    (p, alpha.unique_evals())
 }
 
 /// Snap a continuous feature vector to the nearest *untested* grid point.
@@ -407,6 +456,94 @@ mod tests {
         cache.eval_slate(&slate);
         assert_eq!(cache.unique_evals(), 4);
         assert_eq!(calls.load(std::sync::atomic::Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn top_k_ranks_descending_and_agrees_with_best() {
+        let mut cache = AlphaCache::new(|p: &Point| {
+            // deliberate ties (id % 7) and one NaN to exercise ordering
+            if p.id() == 5 {
+                f64::NAN
+            } else {
+                (p.id() % 7) as f64
+            }
+        });
+        for id in 0..20 {
+            cache.eval(&Point::from_id(id));
+        }
+        let ranked = cache.top_k(20);
+        assert_eq!(ranked.len(), 20);
+        let (bp, bv) = cache.best().unwrap();
+        assert_eq!(ranked[0].0.id(), bp.id());
+        assert_eq!(ranked[0].1.to_bits(), bv.to_bits());
+        // α-descending; ties towards the lower id; NaN last
+        for w in ranked.windows(2) {
+            let ((pa, va), (pb, vb)) = (w[0], w[1]);
+            assert!(
+                cmp_nan_low(va, vb).is_ge(),
+                "{va} before {vb} is not descending"
+            );
+            if va == vb {
+                assert!(pa.id() < pb.id(), "tie broke towards higher id");
+            }
+        }
+        assert!(ranked[19].1.is_nan(), "NaN must rank last");
+        // truncation keeps the prefix
+        let top3 = cache.top_k(3);
+        assert_eq!(top3.len(), 3);
+        for (a, b) in top3.iter().zip(&ranked) {
+            assert_eq!(a.0.id(), b.0.id());
+        }
+    }
+
+    #[test]
+    fn select_slate_q1_matches_select_next() {
+        let (m, cs, untested) = fixture();
+        for kind in [
+            FilterKind::Cea,
+            FilterKind::RandomFilter,
+            FilterKind::NoFilter,
+            FilterKind::Direct,
+            FilterKind::Cmaes,
+        ] {
+            let objective =
+                |p: &Point| m.acc.predict(&encode(p)).0 + (p.id() % 3) as f64;
+            let small: Vec<Point> =
+                untested.iter().take(120).copied().collect();
+            let mut rng_a = Rng::new(11);
+            let mut alpha_a = AlphaCache::new(objective);
+            let (next, evals_a) = select_next(
+                kind, &m, &cs, &small, 30, &mut alpha_a, &mut rng_a,
+            );
+            let mut rng_b = Rng::new(11);
+            let mut alpha_b = AlphaCache::new(objective);
+            let (slate, evals_b) = select_slate(
+                kind, &m, &cs, &small, 30, &mut alpha_b, &mut rng_b, 1,
+            );
+            assert_eq!(evals_a, evals_b, "{kind:?}: eval count");
+            assert_eq!(slate.len(), 1);
+            assert_eq!(slate[0].0.id(), next.id(), "{kind:?}: chosen point");
+            // and both RNGs advanced identically
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "{kind:?}: rng");
+        }
+    }
+
+    #[test]
+    fn select_slate_returns_distinct_ranked_points() {
+        let (m, cs, untested) = fixture();
+        let mut rng = Rng::new(13);
+        let mut alpha = AlphaCache::new(|p: &Point| (p.id() % 11) as f64);
+        let (slate, evals) = select_slate(
+            FilterKind::Cea, &m, &cs, &untested, 40, &mut alpha, &mut rng, 6,
+        );
+        assert_eq!(slate.len(), 6);
+        assert!(evals <= 40);
+        let ids: std::collections::HashSet<usize> =
+            slate.iter().map(|(p, _)| p.id()).collect();
+        assert_eq!(ids.len(), 6, "slate points must be distinct");
+        for w in slate.windows(2) {
+            assert!(cmp_nan_low(w[0].1, w[1].1).is_ge());
+        }
     }
 
     #[test]

@@ -26,6 +26,34 @@
 //! off-by-default `xla` cargo feature: the default build is fully offline
 //! and self-contained, while `--features xla` (with the `xla` crate
 //! vendored) re-enables the accelerated backend.
+//!
+//! ## Subsystem map
+//!
+//! Four subsystems carry the optimizer (see `docs/ARCHITECTURE.md` in the
+//! repository for the full data-flow walkthrough):
+//!
+//! - [`models`] + [`acq`] — surrogates (GP / extra-trees) with batched
+//!   prediction, joint posteriors and rank-one *fantasy surfaces*; the
+//!   acquisition functions up to TrimTuner's α_T and its slate evaluator
+//!   [`acq::AlphaSlate`].
+//! - [`heuristics`] — acquisition filtering (CEA, random, DIRECT,
+//!   CMA-ES) over a memoizing [`heuristics::AlphaCache`], ending in the
+//!   α-argmax or a ranked top-q slate ([`heuristics::select_slate`]).
+//! - [`engine`] — Algorithm 1 organized in selection rounds over an
+//!   [`engine::EvalBackend`]: trace replay or live deployments, with
+//!   batched probe slates (`EngineConfig::batch_size`), per-round
+//!   refits, metrics and adaptive stop conditions.
+//! - [`coordinator`] — the threaded execution spine: worker pool,
+//!   launcher abstraction, job-id-attributed failures, event log.
+//!
+//! ## Runtime escape hatches
+//!
+//! Three environment variables tune the hot path without recompiling:
+//! `TRIMTUNER_ALPHA=clone` (reference per-candidate clone-conditioning
+//! for α_T), `TRIMTUNER_BATCH=fantasy|liar|topq` (batched-slate
+//! diversification strategy, see [`engine::BatchMode`]), and
+//! `TRIMTUNER_SLATE_THREADS=n` (α-sweep sharding width; results are
+//! bit-stable in this knob by construction).
 
 pub mod cli;
 pub mod util;

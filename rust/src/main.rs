@@ -3,7 +3,9 @@
 //! Subcommands:
 //!   optimize           run one optimizer on one network and print the trace
 //!                      (--live drives real simulated deployments through
-//!                      the threaded coordinator instead of trace replay)
+//!                      the threaded coordinator instead of trace replay;
+//!                      --batch-size q launches the top-q acquisition slate
+//!                      per round as concurrent jobs)
 //!   generate-datasets  materialize the 3 measurement campaigns as CSV
 //!   repro <exp>        regenerate a paper table/figure (table1..4, fig1..4, all)
 //!   runtime-check      load the AOT artifacts via PJRT and verify numerics
@@ -26,8 +28,8 @@ USAGE:
                      [--optimizer trimtuner-dt|trimtuner-gp|eic|eic-usd|fabolas|random]
                      [--beta 0.1] [--filter cea|random|nofilter|direct|cmaes]
                      [--iters 44] [--seed 0] [--cost-cap <usd>] [--pareto]
-                     [--live] [--workers 4] [--launcher-noise 1.0]
-                     [--launcher-seed <seed>]
+                     [--live] [--workers 4] [--batch-size 1]
+                     [--launcher-noise 1.0] [--launcher-seed <seed>]
   trimtuner generate-datasets [--out data] [--seed 42]
   trimtuner repro <table1|table2|table3|table4|fig1|fig2|fig3|fig4|all>
                   [--out results] [--seeds 5] [--full] [--iters 44]
@@ -35,17 +37,40 @@ USAGE:
   trimtuner serve [--net mlp] [--jobs 16] [--workers 4]
 
   --live submits every probe as a snapshot job through the worker pool
-  (coordinator::WorkerPool over a noisy SimLauncher) instead of replaying
-  the pre-materialized dataset; the dataset is still generated and attached
+  (coordinator::WorkerPool over a SimLauncher) instead of replaying the
+  pre-materialized dataset; the dataset is still generated and attached
   as an evaluation-only oracle so Accuracy_C stays comparable.
+
+  --workers N sizes the live pool. With the default --batch-size 1 it only
+  parallelizes the LHS init batch; raise --batch-size to keep the pool busy
+  during the main loop too.
+
+  --batch-size q submits the top-q acquisition slate per selection round as
+  concurrent deployments, conditioning each pick on the pending ones so the
+  slate stays diverse (TRIMTUNER_BATCH=liar|topq selects the constant-liar
+  or unconditioned strategy). q = 1 reproduces the paper's sequential
+  Algorithm 1 bit-exactly. Points of the slate that share a configuration
+  ride one snapshot deployment, charged once at the largest level.
+
+  --launcher-noise X scales the simulated launcher's observation noise
+  (1.0 = calibrated, 0 = exact ground truth — live runs then replay
+  bit-identically); --launcher-seed pins its per-job noise stream.
 
   --pareto additionally reports the predicted (cost, accuracy) Pareto
   frontier under the final surrogates; in replay mode it is scored against
   the dataset's measured frontier (hypervolume ratio, 1.0 = recovered).
+
+  Env knobs: TRIMTUNER_SLATE_THREADS (α-sweep worker count),
+  TRIMTUNER_ALPHA=clone (per-candidate clone-conditioning escape hatch),
+  TRIMTUNER_BATCH=fantasy|liar|topq (batched-slate strategy).
 ";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    if args.get_bool("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
     match args.positional.first().map(|s| s.as_str()) {
         Some("optimize") => cmd_optimize(&args),
         Some("generate-datasets") => cmd_generate(&args),
@@ -84,15 +109,18 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     let constraints = vec![Constraint::cost_max(cap)];
     let live = args.get_bool("live");
     cfg.pareto = args.get_bool("pareto");
+    cfg.batch_size = args.get_usize("batch-size", cfg.batch_size).max(1);
 
     eprintln!(
-        "optimize: net={} optimizer={} filter={} beta={} iters={} cap=${cap} mode={}",
+        "optimize: net={} optimizer={} filter={} beta={} iters={} cap=${cap} mode={} q={} batch={}",
         net.name(),
         optimizer.name(),
         cfg.filter.name(),
         cfg.beta,
         cfg.max_iters,
         if live { "live" } else { "replay" },
+        cfg.batch_size,
+        cfg.batch_mode.name(),
     );
     let dataset = Dataset::generate(net, args.get_u64("dataset-seed", 42));
     let run = if live {
@@ -126,14 +154,15 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     };
 
     println!(
-        "{:>4} {:>5} {:>30} {:>8} {:>9} {:>9} {:>9} {:>8} {:>9} {:>6}",
-        "iter", "phase", "tested", "acc", "cost$", "cum$", "dur_s", "accC",
-        "rec_ms", "evals"
+        "{:>4} {:>4} {:>5} {:>30} {:>8} {:>9} {:>9} {:>9} {:>8} {:>9} {:>6}",
+        "iter", "rnd", "phase", "tested", "acc", "cost$", "cum$", "dur_s",
+        "accC", "rec_ms", "evals"
     );
     for r in &run.records {
         println!(
-            "{:>4} {:>5} {:>30} {:>8.4} {:>9.5} {:>9.4} {:>9.2} {:>8.4} {:>9.1} {:>6}",
+            "{:>4} {:>4} {:>5} {:>30} {:>8.4} {:>9.5} {:>9.4} {:>9.2} {:>8.4} {:>9.1} {:>6}",
             r.iter,
+            r.round,
             if r.is_init { "init" } else { "opt" },
             format!("{} s={:.3}", r.tested.config.describe(), r.tested.s()),
             r.outcome.acc,
@@ -146,11 +175,13 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         );
     }
     println!(
-        "optimum_acc={:.4} final_accuracy_c={:.4} total_cost=${:.4} mean_rec={:.1}ms",
+        "optimum_acc={:.4} final_accuracy_c={:.4} total_cost=${:.4} rounds={} mean_rec={:.1}ms wall={:.2}s",
         run.optimum_acc,
         run.final_accuracy_c(),
         run.total_cost(),
-        run.mean_rec_wall_s() * 1e3
+        run.n_rounds(),
+        run.mean_rec_wall_s() * 1e3,
+        run.total_wall_s(),
     );
     if let Some(front) = &run.pareto {
         println!(

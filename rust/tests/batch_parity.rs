@@ -1,0 +1,322 @@
+//! Batched-probe parity: `--batch-size 1` must reproduce the sequential
+//! Algorithm 1 exactly (replay and zero-noise live), batched rounds must be
+//! deterministic in the worker count, and the round bookkeeping (record
+//! grouping, per-round events, round-boundary stop checks) must hold for
+//! every optimizer and batch mode.
+
+use trimtuner::coordinator::{EventKind, SimLauncher};
+use trimtuner::engine::{
+    self, BatchMode, EngineConfig, EvalBackend, LiveEval, OptimizerKind,
+    RunResult, StopCondition,
+};
+use trimtuner::models::ModelKind;
+use trimtuner::sim::{Dataset, NetKind};
+use trimtuner::space::Constraint;
+
+fn caps(net: NetKind) -> Vec<Constraint> {
+    vec![Constraint::cost_max(net.paper_cost_cap())]
+}
+
+/// Paper defaults shrunk like `live_parity`'s so the GP variants stay fast.
+fn small_cfg(optimizer: OptimizerKind, seed: u64, iters: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::paper_default(optimizer, seed);
+    cfg.max_iters = iters;
+    cfg.n_rep = 10;
+    cfg.n_popt_samples = 40;
+    cfg.gp_hyper_samples = cfg.gp_hyper_samples.min(2);
+    // pin the batch mode: an ambient TRIMTUNER_BATCH must not change what
+    // these tests exercise
+    cfg.batch_mode = BatchMode::Fantasy;
+    cfg
+}
+
+fn live_run(
+    launcher: SimLauncher,
+    workers: usize,
+    eval: &Dataset,
+    constraints: &[Constraint],
+    cfg: &EngineConfig,
+) -> RunResult {
+    let mut backend = EvalBackend::Live(
+        LiveEval::new(Box::new(launcher), workers).with_eval(eval),
+    );
+    let run = engine::run_backend(&mut backend, constraints, cfg)
+        .expect("live run failed");
+    backend.shutdown();
+    run
+}
+
+fn assert_same_trajectory(a: &RunResult, b: &RunResult, label: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{label}: record count");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.tested.id(), rb.tested.id(), "{label}: tested point");
+        assert_eq!(ra.round, rb.round, "{label}: round id");
+        assert_eq!(
+            ra.outcome.acc.to_bits(),
+            rb.outcome.acc.to_bits(),
+            "{label}: observed accuracy"
+        );
+        assert_eq!(
+            ra.explore_cost.to_bits(),
+            rb.explore_cost.to_bits(),
+            "{label}: charged cost"
+        );
+        assert_eq!(
+            ra.cum_cost.to_bits(),
+            rb.cum_cost.to_bits(),
+            "{label}: cumulative cost"
+        );
+        assert_eq!(
+            ra.incumbent.id(),
+            rb.incumbent.id(),
+            "{label}: incumbent"
+        );
+    }
+}
+
+/// ISSUE acceptance: with `batch_size = 1` a zero-noise live run is
+/// bit-identical to the replay trace for both TrimTuner model kinds — the
+/// round-based loop is an exact refactoring of the sequential one.
+#[test]
+fn batch_size_one_is_bit_identical_to_replay() {
+    let net = NetKind::Rnn;
+    let truth = Dataset::ground_truth(net);
+    let constraints = caps(net);
+    for (optimizer, iters) in [
+        (OptimizerKind::TrimTuner(ModelKind::Gp), 3),
+        (OptimizerKind::TrimTuner(ModelKind::Trees), 6),
+    ] {
+        let mut cfg = small_cfg(optimizer, 5, iters);
+        cfg.batch_size = 1;
+        let replay = engine::run(&truth, &constraints, &cfg);
+        let live = live_run(
+            SimLauncher::noiseless(net),
+            2,
+            &truth,
+            &constraints,
+            &cfg,
+        );
+        assert_same_trajectory(&replay, &live, &optimizer.name());
+        // q = 1: every main record is its own round
+        for r in replay.records.iter().filter(|r| !r.is_init) {
+            assert_eq!(r.round, r.iter + 1, "round ids drifted at q=1");
+        }
+    }
+}
+
+/// ISSUE acceptance: zero-noise live runs with q = 4 are deterministic
+/// across worker counts, and agree with the replay backend's batched
+/// rounds observation for observation.
+#[test]
+fn zero_noise_q4_is_deterministic_across_worker_counts() {
+    let net = NetKind::Rnn;
+    let truth = Dataset::ground_truth(net);
+    let constraints = caps(net);
+    let mut cfg =
+        small_cfg(OptimizerKind::TrimTuner(ModelKind::Trees), 7, 8);
+    cfg.batch_size = 4;
+    let replay = engine::run(&truth, &constraints, &cfg);
+    let one = live_run(
+        SimLauncher::noiseless(net),
+        1,
+        &truth,
+        &constraints,
+        &cfg,
+    );
+    let four = live_run(
+        SimLauncher::noiseless(net),
+        4,
+        &truth,
+        &constraints,
+        &cfg,
+    );
+    assert_same_trajectory(&one, &four, "workers 1 vs 4");
+    assert_same_trajectory(&replay, &one, "replay vs live q=4");
+    assert!(replay.n_rounds() >= 3, "init round + at least 2 main rounds");
+}
+
+/// Round bookkeeping: records of one round share a round id, the round
+/// ids are contiguous, per-round quantities land on the round's last
+/// record, nothing is retested and the accounting stays monotone.
+#[test]
+fn batched_round_records_group_and_account_correctly() {
+    let truth = Dataset::ground_truth(NetKind::Mlp);
+    let mut cfg =
+        small_cfg(OptimizerKind::TrimTuner(ModelKind::Trees), 3, 12);
+    cfg.batch_size = 3;
+    let run = engine::run(&truth, &caps(NetKind::Mlp), &cfg);
+    assert_eq!(run.records.len(), 4 + 12, "record count");
+    assert_eq!(run.n_rounds(), 1 + 4, "init round + 12/3 main rounds");
+    let mut seen = std::collections::HashSet::new();
+    let mut last_cost = 0.0;
+    for r in &run.records {
+        assert!(seen.insert(r.tested.id()), "retested {}", r.tested.id());
+        assert!(r.cum_cost >= last_cost - 1e-12, "cost regressed");
+        last_cost = r.cum_cost;
+    }
+    for round in 1..=4usize {
+        let members: Vec<_> = run
+            .records
+            .iter()
+            .filter(|r| !r.is_init && r.round == round)
+            .collect();
+        assert_eq!(members.len(), 3, "round {round} size");
+        // selection wall-clock and α-eval accounting attributed once,
+        // on the round's last record
+        for r in &members[..2] {
+            assert_eq!(r.rec_wall_s, 0.0);
+            assert_eq!(r.n_alpha_evals, 0);
+        }
+        assert!(members[2].n_alpha_evals > 0, "round {round} spent no α");
+        // consecutive iters within the round
+        assert_eq!(members[2].iter - members[0].iter, 2);
+    }
+}
+
+/// Every optimizer survives batched rounds (this drives the
+/// pending-conditioned selection path for each acquisition family).
+#[test]
+fn all_optimizers_run_batched_rounds() {
+    let truth = Dataset::ground_truth(NetKind::Rnn);
+    let constraints = caps(NetKind::Rnn);
+    for optimizer in [
+        OptimizerKind::TrimTuner(ModelKind::Trees),
+        OptimizerKind::TrimTuner(ModelKind::Gp),
+        OptimizerKind::Eic,
+        OptimizerKind::EicUsd,
+        OptimizerKind::Fabolas,
+        OptimizerKind::RandomSearch,
+    ] {
+        let mut cfg = small_cfg(optimizer, 11, 4);
+        cfg.batch_size = 2;
+        let run = engine::run(&truth, &constraints, &cfg);
+        assert_eq!(
+            run.records.len(),
+            4 + 4,
+            "{}: record count",
+            optimizer.name()
+        );
+        let mut seen = std::collections::HashSet::new();
+        for r in &run.records {
+            assert!(
+                seen.insert(r.tested.id()),
+                "{}: retested a point",
+                optimizer.name()
+            );
+            assert!(r.incumbent.is_full());
+        }
+    }
+}
+
+/// The constant-liar and top-q escape hatches produce valid, distinct
+/// slates too (`TRIMTUNER_BATCH` is modelled by `EngineConfig::batch_mode`
+/// so the test needs no process-global env mutation).
+#[test]
+fn liar_and_topq_batch_modes_run_clean() {
+    let truth = Dataset::ground_truth(NetKind::Mlp);
+    let constraints = caps(NetKind::Mlp);
+    for mode in [BatchMode::ConstantLiar, BatchMode::TopQ] {
+        let mut cfg =
+            small_cfg(OptimizerKind::TrimTuner(ModelKind::Trees), 13, 6);
+        cfg.batch_size = 3;
+        cfg.batch_mode = mode;
+        let run = engine::run(&truth, &constraints, &cfg);
+        assert_eq!(run.records.len(), 4 + 6, "{mode:?}: record count");
+        let mut seen = std::collections::HashSet::new();
+        for r in &run.records {
+            assert!(
+                seen.insert(r.tested.id()),
+                "{mode:?}: duplicate probe in slate"
+            );
+        }
+    }
+}
+
+/// ISSUE satellite: `EventLog` ordering under q > 1 — submissions are
+/// recorded in slate (= submission) order, every job completes, and the
+/// engine-level `IncumbentUpdated`/`IterationDone` events fire once per
+/// round, after the round's deployments.
+#[test]
+fn event_log_records_batched_rounds_in_submission_order() {
+    let net = NetKind::Rnn;
+    let truth = Dataset::ground_truth(net);
+    let mut cfg =
+        small_cfg(OptimizerKind::TrimTuner(ModelKind::Trees), 17, 12);
+    cfg.batch_size = 4;
+    let mut backend = EvalBackend::Live(
+        LiveEval::new(Box::new(SimLauncher::noiseless(net)), 1)
+            .with_eval(&truth),
+    );
+    let run = engine::run_backend(&mut backend, &caps(net), &cfg)
+        .expect("live run failed");
+    let events = backend.event_log().unwrap().snapshot();
+    backend.shutdown();
+
+    // submissions appear in submission order (ids are assigned
+    // sequentially at submit time; no failures -> no retry ids)
+    let submitted: Vec<u64> = events
+        .iter()
+        .filter_map(|e| match e.kind {
+            EventKind::JobSubmitted { job } => Some(job),
+            _ => None,
+        })
+        .collect();
+    assert!(
+        submitted.windows(2).all(|w| w[0] < w[1]),
+        "submission ids out of order: {submitted:?}"
+    );
+    let completed = events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::JobCompleted { .. }))
+        .count();
+    assert_eq!(submitted.len(), completed, "every job completes");
+    assert_eq!(
+        events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::JobFailed { .. }))
+            .count(),
+        0
+    );
+    // engine-level round events: once per init record, once per main round
+    let n_main_rounds = run.n_rounds() - 1;
+    let iteration_done = events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::IterationDone { .. }))
+        .count();
+    assert_eq!(iteration_done, 4 + n_main_rounds, "one per round");
+    // with a single worker, completions drain in submission order too
+    let completed_ids: Vec<u64> = events
+        .iter()
+        .filter_map(|e| match e.kind {
+            EventKind::JobCompleted { job, .. } => Some(job),
+            _ => None,
+        })
+        .collect();
+    assert!(
+        completed_ids.windows(2).all(|w| w[0] < w[1]),
+        "single-worker completions out of order: {completed_ids:?}"
+    );
+}
+
+/// ISSUE satellite: `NoImprovement` with multiple observations landing in
+/// one round — the stop check runs at round boundaries only, so a batched
+/// run terminates with complete rounds.
+#[test]
+fn no_improvement_stops_at_round_boundaries() {
+    let truth = Dataset::ground_truth(NetKind::Rnn);
+    let mut cfg =
+        small_cfg(OptimizerKind::TrimTuner(ModelKind::Trees), 19, 12);
+    cfg.batch_size = 3;
+    // an impossible improvement bar: stop fires at the first check whose
+    // window is full — i.e. after the second round (6 > window 4)
+    cfg.stop = StopCondition::NoImprovement { window: 4, min_delta: 10.0 };
+    let run = engine::run(&truth, &caps(NetKind::Rnn), &cfg);
+    assert_eq!(
+        run.records.len(),
+        4 + 6,
+        "must stop after exactly two complete rounds"
+    );
+    let main: Vec<_> = run.records.iter().filter(|r| !r.is_init).collect();
+    let rounds: Vec<usize> = main.iter().map(|r| r.round).collect();
+    assert_eq!(rounds, vec![1, 1, 1, 2, 2, 2], "partial round recorded");
+}
