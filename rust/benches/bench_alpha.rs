@@ -13,11 +13,18 @@
 //! - `fantasy threads=N` — the same, sharded across all cores (what the
 //!   engine actually runs).
 //!
+//! The fantasy path is slate-batched end to end (PR 5): the per-candidate
+//! `w = L⁻¹k(X, x)` triangular solves ride one multi-RHS pass per GP
+//! hyper-sample, the trees ensemble conditions incrementally off one
+//! cached structure instead of a seeded rebuild per candidate, and the
+//! per-candidate p_opt scratch is reused across the slate.
+//!
 //! The `speedup` rows store the threads=1 fantasy-vs-clone ratio in
 //! `mean_s`. Results land in `BENCH_alpha.json` (override with
 //! `BENCH_JSON`); CI runs the sweep with `BENCH_ALPHA_SMOKE=1` (smaller
-//! fixture) and this harness exits non-zero if the hyper-marginalized GP
-//! variant's best-of-run smoke speedup drops below 2x.
+//! fixture) and this harness exits non-zero if the best-of-run smoke
+//! speedup drops below 2.5x for the hyper-marginalized GP variant or
+//! below 2x for the trees variant.
 mod common;
 
 use trimtuner::acq::{
@@ -161,7 +168,7 @@ fn main() {
         // must not flip a pass into a failure
         let speedup_best = t_clone.1 / t_fan.1.max(1e-12);
         println!(
-            "{:<44} {speedup:.2f}x (threads=1), {speedup_par:.2f}x \
+            "{:<44} {speedup:.2}x (threads=1), {speedup_par:.2}x \
              (threads={workers})",
             format!("{label} fantasy-vs-clone speedup"),
         );
@@ -174,12 +181,22 @@ fn main() {
             min_s: speedup,
             max_s: speedup_par,
         });
-        // the gate arms only on the hyper-marginalized default (the
-        // variant with the widest fantasy-vs-clone margin): a small smoke
-        // fixture on a noisy shared runner must not fail a correct build
-        if smoke && label == "gp-mcmc8" && speedup_best < 2.0 {
+        // smoke gates on best-of-run times (shared-runner jitter must not
+        // flip a pass into a failure): the hyper-marginalized GP default
+        // must clear 2.5x (nudged up from the PR 3-era 2x by the batched
+        // multi-RHS solves), and the trees variant — whose per-candidate
+        // rebuild the incremental conditioning eliminated — must clear
+        // 2x. Both thresholds are deliberately conservative: no authoring
+        // container has had a toolchain yet, so ratchet them to match the
+        // first measured numbers CI prints, not the other way around.
+        let gate = match label {
+            "gp-mcmc8" => 2.5,
+            "dt" => 2.0,
+            _ => 0.0,
+        };
+        if smoke && speedup_best < gate {
             gate_failures.push(format!(
-                "{label}: best-of {speedup_best:.2f}x < 2x smoke gate"
+                "{label}: best-of {speedup_best:.2}x < {gate}x smoke gate"
             ));
         }
     }

@@ -1,52 +1,257 @@
 //! Surrogate-model micro-benchmarks: GP (ML-II and marginalized) vs
 //! Extra-Trees fit / predict / condition — the primitives whose cost ratio
-//! drives paper Table III.
+//! drives paper Table III — plus the batched-vs-per-candidate slate
+//! comparisons this crate's α_T sweep is built on:
+//!
+//! - `predict_many` vs a scalar `predict` loop (GP: one multi-RHS solve
+//!   per hyper-sample; trees: tree-major traversal);
+//! - the fantasy-slate conditioning paths: GP slate-primed rank-one views
+//!   vs per-candidate priming, and trees incremental leaf-statistics
+//!   conditioning vs the per-candidate seeded rebuild
+//!   (`TRIMTUNER_TREES=rebuild`'s reference).
+//!
+//! Results land in `BENCH_models.json` (override with `BENCH_JSON`). With
+//! `BENCH_MODELS_SMOKE=1` (CI) the fixture shrinks and the harness exits
+//! non-zero if either batched slate-conditioning path fails to beat its
+//! per-candidate counterpart by >= 2x (best-of-run, so shared-runner
+//! jitter cannot flip a correct build).
 mod common;
 
 use trimtuner::models::{
-    Basis, ExtraTrees, FitOptions, Gp, Surrogate, TreesOptions,
+    Basis, ExtraTrees, FantasyScratch, FantasySurface, Feat, FitOptions, Gp,
+    Surrogate, TreesMode, TreesOptions,
 };
 use trimtuner::space::encode;
-use trimtuner::util::timer::bench;
+use trimtuner::util::timer::{bench, BenchStats};
+
+/// `speedup` rows store the mean-over-mean ratio in mean_s/p50_s/p99_s and
+/// the best-of-run ratio (the gated quantity) in min_s/max_s.
+fn speedup_row(
+    name: String,
+    iters: usize,
+    base: (f64, f64),
+    fast: (f64, f64),
+) -> (BenchStats, f64) {
+    let mean = base.0 / fast.0.max(1e-12);
+    let best = base.1 / fast.1.max(1e-12);
+    println!("{name:<44} {mean:.2}x (best-of {best:.2}x)");
+    (
+        BenchStats {
+            name,
+            iters,
+            mean_s: mean,
+            p50_s: mean,
+            p99_s: mean,
+            min_s: best,
+            max_s: best,
+        },
+        best,
+    )
+}
 
 fn main() {
-    common::print_header("models");
-    let (pts, outs) = common::observations(48, 7);
-    let xs: Vec<_> = pts.iter().map(encode).collect();
+    let smoke = std::env::var("BENCH_MODELS_SMOKE").is_ok();
+    common::print_header(if smoke { "models (smoke)" } else { "models" });
+    let (n_obs, slate_n, grid_n, iters) =
+        if smoke { (36, 48, 20, 3) } else { (48, 96, 32, 10) };
+    let (pts, outs) = common::observations(n_obs, 7);
+    let xs: Vec<Feat> = pts.iter().map(encode).collect();
     let ys: Vec<f64> = outs.iter().map(|o| o.acc).collect();
-    let probe = encode(&pts[0]);
+    let probe = xs[0];
+    // disjoint candidate slate + fused query grid, engine-sized
+    let (slate_pts, _) = common::observations(slate_n, 83);
+    let slate: Vec<Feat> = slate_pts.iter().map(encode).collect();
+    let (grid_pts, _) = common::observations(grid_n, 19);
+    let grid: Vec<Feat> = grid_pts.iter().map(encode).collect();
+    let m_joint = grid_n / 2;
+
+    let mut all: Vec<BenchStats> = Vec::new();
+    let mut gate_failures: Vec<String> = Vec::new();
 
     for (label, k) in [("gp-ml2", 1usize), ("gp-mcmc8", 8)] {
         let mut gp = Gp::with_hyper_samples(Basis::Acc, 3, k);
-        let stats = bench(&format!("{label} fit(48) w/ hyperopt"), 1, 5, || {
-            gp.fit(&xs, &ys, FitOptions { hyperopt: true, restarts: 1 });
-        });
+        let stats =
+            bench(&format!("{label} fit({n_obs}) w/ hyperopt"), 1, 3, || {
+                gp.fit(&xs, &ys, FitOptions { hyperopt: true, restarts: 1 });
+            });
         println!("{}", stats.report());
-        let stats = bench(&format!("{label} predict x288"), 2, 20, || {
-            (0..288)
-                .map(|i| gp.predict(&xs[i % xs.len()]).0)
-                .sum::<f64>()
-        });
+        all.push(stats);
+
+        let stats = bench(
+            &format!("{label} predict x{slate_n} scalar"),
+            2,
+            iters,
+            || slate.iter().map(|x| gp.predict(x).0).sum::<f64>(),
+        );
         println!("{}", stats.report());
-        let stats = bench(&format!("{label} condition+predict"), 2, 20, || {
-            let g = gp.condition(&probe, 0.9);
-            g.predict(&probe).0
-        });
+        let t_scalar = (stats.mean_s, stats.min_s);
+        all.push(stats);
+        let stats = bench(
+            &format!("{label} predict x{slate_n} batched"),
+            2,
+            iters,
+            || {
+                gp.predict_many(&slate)
+                    .into_iter()
+                    .map(|(mu, _)| mu)
+                    .sum::<f64>()
+            },
+        );
         println!("{}", stats.report());
+        let t_batch = (stats.mean_s, stats.min_s);
+        all.push(stats);
+        let (row, _) = speedup_row(
+            format!("{label} predict batched-vs-scalar speedup"),
+            iters,
+            t_scalar,
+            t_batch,
+        );
+        all.push(row);
+
+        let stats =
+            bench(&format!("{label} condition+predict"), 2, iters, || {
+                let g = gp.condition(&probe, 0.9);
+                g.predict(&probe).0
+            });
+        println!("{}", stats.report());
+        all.push(stats);
+
+        // fantasy-slate conditioning: slate-primed rank-one views (one
+        // multi-RHS w solve per hyper-sample for the whole slate) vs
+        // per-candidate views (each priming its own single-column solve)
+        let surf = gp.fantasy_surface(&grid, m_joint);
+        let stats = bench(
+            &format!("{label} fantasy slate x{slate_n} per-candidate"),
+            1,
+            iters,
+            || slate.iter().map(|x| surf.view(x).grid[0].0).sum::<f64>(),
+        );
+        println!("{}", stats.report());
+        let t_per = (stats.mean_s, stats.min_s);
+        all.push(stats);
+        let stats = bench(
+            &format!("{label} fantasy slate x{slate_n} primed"),
+            1,
+            iters,
+            || {
+                let primed = surf.prime(&slate);
+                let mut scratch = FantasyScratch::new();
+                (0..slate.len())
+                    .map(|i| primed.view_at(i, &mut scratch).grid[0].0)
+                    .sum::<f64>()
+            },
+        );
+        println!("{}", stats.report());
+        let t_primed = (stats.mean_s, stats.min_s);
+        all.push(stats);
+        let (row, best) = speedup_row(
+            format!("{label} fantasy primed-vs-per-candidate speedup"),
+            iters,
+            t_per,
+            t_primed,
+        );
+        all.push(row);
+        if smoke && label == "gp-mcmc8" && best < 2.0 {
+            gate_failures.push(format!(
+                "{label}: primed fantasy slate best-of {best:.2}x < 2x"
+            ));
+        }
     }
 
     let mut et = ExtraTrees::new(TreesOptions::default());
-    let stats = bench("extra-trees fit(48, 30 trees)", 1, 20, || {
-        et.fit(&xs, &ys, FitOptions::default());
-    });
+    let stats =
+        bench(&format!("extra-trees fit({n_obs}, 30 trees)"), 1, iters, || {
+            et.fit(&xs, &ys, FitOptions::default());
+        });
     println!("{}", stats.report());
-    let stats = bench("extra-trees predict x288", 2, 50, || {
-        (0..288).map(|i| et.predict(&xs[i % xs.len()]).0).sum::<f64>()
-    });
+    all.push(stats);
+
+    let stats = bench(
+        &format!("extra-trees predict x{slate_n} scalar"),
+        2,
+        iters,
+        || slate.iter().map(|x| et.predict(x).0).sum::<f64>(),
+    );
     println!("{}", stats.report());
-    let stats = bench("extra-trees condition+predict", 2, 20, || {
+    let t_scalar = (stats.mean_s, stats.min_s);
+    all.push(stats);
+    let stats = bench(
+        &format!("extra-trees predict x{slate_n} batched"),
+        2,
+        iters,
+        || {
+            et.predict_many(&slate)
+                .into_iter()
+                .map(|(mu, _)| mu)
+                .sum::<f64>()
+        },
+    );
+    println!("{}", stats.report());
+    let t_batch = (stats.mean_s, stats.min_s);
+    all.push(stats);
+    let (row, _) = speedup_row(
+        "extra-trees predict batched-vs-scalar speedup".to_string(),
+        iters,
+        t_scalar,
+        t_batch,
+    );
+    all.push(row);
+
+    let stats = bench("extra-trees condition+predict", 2, iters, || {
         let t = et.condition(&probe, 0.9);
         t.predict(&probe).0
     });
     println!("{}", stats.report());
+    all.push(stats);
+
+    // trees fantasy-slate conditioning: the incremental leaf-statistics
+    // path (structure + grid routes cached once per slate) vs the
+    // per-candidate seeded rebuild reference
+    let inc = et.fantasy_surface_mode(&grid, m_joint, TreesMode::Incremental);
+    let reb = et.fantasy_surface_mode(&grid, m_joint, TreesMode::Rebuild);
+    let stats = bench(
+        &format!("extra-trees fantasy slate x{slate_n} rebuild"),
+        1,
+        iters,
+        || slate.iter().map(|x| reb.view(x).grid[0].0).sum::<f64>(),
+    );
+    println!("{}", stats.report());
+    let t_reb = (stats.mean_s, stats.min_s);
+    all.push(stats);
+    let stats = bench(
+        &format!("extra-trees fantasy slate x{slate_n} incremental"),
+        1,
+        iters,
+        || {
+            let primed = inc.prime(&slate);
+            let mut scratch = FantasyScratch::new();
+            (0..slate.len())
+                .map(|i| primed.view_at(i, &mut scratch).grid[0].0)
+                .sum::<f64>()
+        },
+    );
+    println!("{}", stats.report());
+    let t_inc = (stats.mean_s, stats.min_s);
+    all.push(stats);
+    let (row, best) = speedup_row(
+        "extra-trees fantasy incremental-vs-rebuild speedup".to_string(),
+        iters,
+        t_reb,
+        t_inc,
+    );
+    all.push(row);
+    if smoke && best < 2.0 {
+        gate_failures.push(format!(
+            "extra-trees: incremental fantasy slate best-of {best:.2}x < 2x"
+        ));
+    }
+
+    let path = std::env::var("BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_models.json".to_string());
+    common::write_bench_json("models", &path, &all);
+
+    if !gate_failures.is_empty() {
+        eprintln!("MODELS PERF GATE FAILED: {}", gate_failures.join("; "));
+        std::process::exit(1);
+    }
 }

@@ -12,6 +12,24 @@
 use crate::models::{Feat, Posterior, Surrogate};
 use crate::util::Rng;
 
+/// Reusable buffers for the p_opt Monte-Carlo sweep. The α_T slate
+/// evaluator scores hundreds of candidates per iteration, each needing a
+/// counts vector and a draw vector — one scratch per worker (reset on
+/// every use) replaces two heap allocations per candidate.
+#[derive(Default)]
+pub struct EntropyScratch {
+    /// arg-max counts, normalized in place into p_opt
+    counts: Vec<f64>,
+    /// one joint posterior draw
+    draw: Vec<f64>,
+}
+
+impl EntropyScratch {
+    pub fn new() -> EntropyScratch {
+        EntropyScratch::default()
+    }
+}
+
 pub struct EntropyEstimator {
     /// representative full-data-set feature vectors
     pub rep_feats: Vec<Feat>,
@@ -49,12 +67,23 @@ impl EntropyEstimator {
     /// posterior by rank-one algebra and hands it in directly, without
     /// materializing a conditioned surrogate.
     pub fn p_opt_from(&self, post: &Posterior) -> Vec<f64> {
+        let mut scratch = EntropyScratch::new();
+        self.p_opt_into(post, &mut scratch);
+        scratch.counts
+    }
+
+    /// [`EntropyEstimator::p_opt_from`] into reusable scratch: after the
+    /// call `scratch.counts` holds p_opt. Both buffers are reset here, so
+    /// a scratch can be shared across an arbitrary candidate sweep.
+    fn p_opt_into(&self, post: &Posterior, scratch: &mut EntropyScratch) {
         let m = self.rep_feats.len();
         assert_eq!(post.len(), m, "posterior not over the representative set");
-        let mut counts = vec![self.laplace; m];
-        let mut draw = Vec::with_capacity(m);
+        let counts = &mut scratch.counts;
+        counts.clear();
+        counts.resize(m, self.laplace);
+        let draw = &mut scratch.draw;
         for z in &self.z {
-            post.sample_with(z, &mut draw);
+            post.sample_with(z, draw);
             let mut arg = 0;
             let mut best = f64::NEG_INFINITY;
             for (i, &v) in draw.iter().enumerate() {
@@ -67,7 +96,6 @@ impl EntropyEstimator {
         }
         let total: f64 = counts.iter().sum();
         counts.iter_mut().for_each(|c| *c /= total);
-        counts
     }
 
     /// KL(p_opt ‖ uniform) = log m − H(p_opt)  (≥ 0, 0 iff uniform).
@@ -90,8 +118,20 @@ impl EntropyEstimator {
     /// [`EntropyEstimator::info_gain`] from a precomputed conditioned
     /// posterior over the representative set.
     pub fn info_gain_from(&self, post: &Posterior, baseline: f64) -> f64 {
-        let p = self.p_opt_from(post);
-        (Self::kl_from_uniform(&p) - baseline).max(0.0)
+        self.info_gain_from_with(post, baseline, &mut EntropyScratch::new())
+    }
+
+    /// [`EntropyEstimator::info_gain_from`] with caller-provided scratch —
+    /// the slate sweep's allocation-free entry point (bit-identical to the
+    /// allocating call; the scratch is reset on every use).
+    pub fn info_gain_from_with(
+        &self,
+        post: &Posterior,
+        baseline: f64,
+        scratch: &mut EntropyScratch,
+    ) -> f64 {
+        self.p_opt_into(post, scratch);
+        (Self::kl_from_uniform(&scratch.counts) - baseline).max(0.0)
     }
 }
 
@@ -173,6 +213,32 @@ mod tests {
         let p = est.p_opt(&stub);
         for pi in &p {
             assert!((pi - 0.25).abs() < 0.05, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn scratch_info_gain_matches_allocating_path_across_reuse() {
+        // a single dirty scratch reused across posteriors of DIFFERENT
+        // sizes must reproduce the allocating path bit for bit — the
+        // grow-and-shrink alternation exercises the clear+resize reset
+        // (stale counts/draw entries from the larger posterior must never
+        // leak into the smaller one)
+        let mut rng = Rng::new(9);
+        let est_big = EntropyEstimator::new(feats(7), 250, &mut rng);
+        let est_small = EntropyEstimator::new(feats(3), 250, &mut rng);
+        let mut scratch = EntropyScratch::new();
+        for round in 0..4 {
+            let (est, m) =
+                if round % 2 == 0 { (&est_big, 7) } else { (&est_small, 3) };
+            let mean: Vec<f64> =
+                (0..m).map(|i| (i as f64) * 0.1 + round as f64).collect();
+            let post = Posterior::diagonal(mean, vec![0.4; m]);
+            let want = est.info_gain_from(&post, 0.01);
+            // cursor state differs between the two calls only if the
+            // posterior were a mixture; diagonal posteriors have one
+            // component, so the comparison is exact
+            let got = est.info_gain_from_with(&post, 0.01, &mut scratch);
+            assert_eq!(want.to_bits(), got.to_bits(), "round {round}");
         }
     }
 

@@ -5,9 +5,13 @@
 //! The per-candidate reference path is [`trimtuner_alpha`]; the hot path
 //! is [`AlphaSlate`], which scores a whole candidate slate off one shared
 //! per-round precompute of rank-one *fantasy posteriors*
-//! (`Surrogate::fantasy_surface`) — bit-exact for tree surrogates, ≤ 1e-9
-//! relative for GPs, with `TRIMTUNER_ALPHA=clone` as the escape hatch
-//! back to clone-conditioning. [`Models`] also exposes the conditioning
+//! (`Surrogate::fantasy_surface`), primed per slate
+//! (`FantasySurface::prime`: one multi-RHS `w = L⁻¹k(X, x)` solve per GP
+//! hyper-sample, one cached conditioned tree structure) — bit-exact for
+//! tree surrogates, ≤ 1e-9 relative for GPs, with `TRIMTUNER_ALPHA=clone`
+//! (per-candidate clone-conditioning) and `TRIMTUNER_TREES=rebuild`
+//! (per-candidate seeded tree rebuilds) as escape hatches.
+//! [`Models`] also exposes the conditioning
 //! entry points the engine's batched probe slates build on:
 //! [`Models::condition`] (kriging-believer fantasy observation at the
 //! predictive mean) and [`Models::condition_with_acc`] (constant-liar
@@ -20,7 +24,7 @@ mod models;
 mod trimtuner;
 
 pub use ei::{ei, eic, eic_usd};
-pub use entropy::EntropyEstimator;
+pub use entropy::{EntropyEstimator, EntropyScratch};
 pub use fabolas::fabolas_alpha;
 pub use models::{
     feasibility_prob, feasibility_probs, joint_feasibility,

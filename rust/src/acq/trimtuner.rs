@@ -3,12 +3,12 @@
 //! that the incumbent recommended *after* the simulated observation
 //! satisfies every QoS constraint.
 
-use super::entropy::EntropyEstimator;
+use super::entropy::{EntropyEstimator, EntropyScratch};
 use super::models::{
     incumbent_scan, joint_feasibility_many, select_incumbent_over,
     select_incumbent_over_with_feas, Models,
 };
-use crate::models::{FantasySurface, Feat};
+use crate::models::{FantasyScratch, FantasySurface, Feat, PrimedSlate};
 use crate::space::{encode, Constraint, Point};
 use crate::util::stats::normal_cdf;
 
@@ -182,8 +182,45 @@ impl<'a> AlphaSlate<'a> {
 
     /// α_T for every candidate of the slate, in slate order. Bit-stable
     /// for any worker count.
+    ///
+    /// The fantasy path is slate-batched top to bottom: the candidates'
+    /// probe costs come from one batched cost prediction, and every
+    /// fantasy surface is primed for the whole slate up front
+    /// ([`FantasySurface::prime`] — for GPs one multi-RHS `w = L⁻¹k(X, x)`
+    /// solve per hyper-sample replaces a triangular solve per candidate).
+    /// Per-worker scratch buffers are reused across candidates, so the
+    /// per-candidate sweep allocates only its output.
     pub fn eval_feats(&self, xs: &[Feat]) -> Vec<f64> {
-        crate::util::shard_map(xs, self.threads, |x| self.eval_one(x))
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        match self.mode {
+            AlphaMode::Clone => crate::util::shard_map(xs, self.threads, |x| {
+                trimtuner_alpha(self.ctx, x)
+            }),
+            AlphaMode::Fantasy => {
+                let acc = self.acc.as_ref().expect("fantasy surfaces built");
+                let acc_primed = acc.prime(xs);
+                let metric_primed: Vec<Box<dyn PrimedSlate + '_>> =
+                    self.metrics.iter().map(|m| m.prime(xs)).collect();
+                let costs = self.ctx.models.predicted_cost_many(xs);
+                let idx: Vec<usize> = (0..xs.len()).collect();
+                crate::util::shard_map_with(
+                    &idx,
+                    self.threads,
+                    SweepScratch::default,
+                    |scratch, &i| {
+                        self.eval_primed(
+                            i,
+                            &*acc_primed,
+                            &metric_primed,
+                            costs[i],
+                            scratch,
+                        )
+                    },
+                )
+            }
+        }
     }
 
     /// [`AlphaSlate::eval_feats`] over grid points.
@@ -192,18 +229,26 @@ impl<'a> AlphaSlate<'a> {
         self.eval_feats(&xs)
     }
 
-    /// α_T of one candidate under the configured mode.
+    /// α_T of one candidate under the configured mode (a one-candidate
+    /// slate: single-column priming is bit-identical to the scalar path).
     pub fn eval_one(&self, x: &Feat) -> f64 {
         match self.mode {
             AlphaMode::Clone => trimtuner_alpha(self.ctx, x),
-            AlphaMode::Fantasy => self.eval_fantasy(x),
+            AlphaMode::Fantasy => self.eval_feats(std::slice::from_ref(x))[0],
         }
     }
 
-    fn eval_fantasy(&self, x: &Feat) -> f64 {
+    fn eval_primed(
+        &self,
+        i: usize,
+        acc_primed: &dyn PrimedSlate,
+        metric_primed: &[Box<dyn PrimedSlate + '_>],
+        cost: f64,
+        scratch: &mut SweepScratch,
+    ) -> f64 {
         let ctx = self.ctx;
         let m = ctx.est.rep_feats.len();
-        let av = self.acc.as_ref().expect("fantasy surfaces built").view(x);
+        let av = acc_primed.view_at(i, &mut scratch.fantasy);
         // steps 2-3: incumbent under the conditioned models, and its
         // feasibility — conditioned accuracy comes from the shortlist
         // suffix of the fused grid
@@ -211,23 +256,36 @@ impl<'a> AlphaSlate<'a> {
         let inc = match ctx.inc_feas.or(self.fixed_feas.as_deref()) {
             Some(feas) => incumbent_scan(ctx.inc_shortlist, feas, accs),
             None => {
-                let mut feas = vec![1.0; ctx.inc_shortlist.len()];
-                for (c, surf) in ctx.constraints.iter().zip(&self.metrics) {
-                    let mv = surf.view(x);
+                let feas = &mut scratch.feas;
+                feas.clear();
+                feas.resize(ctx.inc_shortlist.len(), 1.0);
+                for (c, surf) in ctx.constraints.iter().zip(metric_primed) {
+                    let mv = surf.view_at(i, &mut scratch.fantasy);
                     let lim = c.max.max(1e-12).ln();
                     for (f, &(mu, std)) in feas.iter_mut().zip(&mv.grid) {
                         *f *= normal_cdf((lim - mu) / std.max(1e-9));
                     }
                 }
-                incumbent_scan(ctx.inc_shortlist, &feas, accs)
+                incumbent_scan(ctx.inc_shortlist, feas, accs)
             }
         };
         // step 4: information gain per dollar, from the conditioned joint
         // posterior over the representer prefix
         let joint = av.joint.as_ref().expect("joint prefix present");
-        let gain = ctx.est.info_gain_from(joint, ctx.baseline);
-        inc.feas_prob * gain / ctx.models.predicted_cost(x)
+        let gain =
+            ctx.est
+                .info_gain_from_with(joint, ctx.baseline, &mut scratch.entropy);
+        inc.feas_prob * gain / cost
     }
+}
+
+/// Per-worker scratch for one slate sweep: fantasy-view buffers, p_opt
+/// Monte-Carlo buffers, and the conditioned shortlist feasibility.
+#[derive(Default)]
+struct SweepScratch {
+    fantasy: FantasyScratch,
+    entropy: EntropyScratch,
+    feas: Vec<f64>,
 }
 
 /// Batched α_T over a candidate slate: one shared per-iteration

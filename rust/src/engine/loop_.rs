@@ -13,7 +13,8 @@ use crate::acq::{
 };
 use crate::coordinator::EventKind;
 use crate::heuristics::{
-    cea_scores_feats, select_slate, AlphaCache, FilterKind,
+    cea_scores_feats, cea_scores_feats_with_feas, select_slate, AlphaCache,
+    FilterKind,
 };
 use crate::models::{Feat, FitOptions, ModelKind};
 use crate::opt::latin_hypercube;
@@ -220,6 +221,14 @@ struct AcqContext {
     est: EntropyEstimator,
     /// KL(p_opt ‖ u) of the current accuracy model
     baseline: f64,
+    /// joint feasibility of every full-data-set config under the current
+    /// constraint models — cached only when conditioning cannot move them
+    /// ([`Models::constraints_fixed_under_condition`], tree surrogates).
+    /// Pending-conditioned picks in batched rounds then derive their CEA
+    /// re-ranking and incumbent-shortlist feasibility from this one
+    /// per-refit pass instead of re-predicting the constraint surrogates
+    /// over the whole grid per pick.
+    full_feas: Option<Vec<f64>>,
 }
 
 /// A post-iteration incumbent recommendation. `acc_estimate` is the
@@ -667,6 +676,7 @@ fn choose_ranked(
                 &actx.est,
                 actx.baseline,
                 &actx.cea_order,
+                actx.full_feas.as_deref(),
                 untested,
                 full_feats,
                 grid_feats,
@@ -727,8 +737,16 @@ fn choose_pending(
             let baseline = EntropyEstimator::kl_from_uniform(
                 &actx.est.p_opt(models.acc.as_ref()),
             );
-            // re-rank the incumbent shortlist under the conditioned bundle
-            let scores = cea_scores_feats(models, constraints, full_feats);
+            // re-rank the incumbent shortlist under the conditioned
+            // bundle. Tree conditioning shares the constraint models, so
+            // the round context's full-grid feasibility is reused here —
+            // only the conditioned accuracy is re-predicted per pick.
+            let scores = match &actx.full_feas {
+                Some(feas) => {
+                    cea_scores_feats_with_feas(models, full_feats, feas)
+                }
+                None => cea_scores_feats(models, constraints, full_feats),
+            };
             let mut order: Vec<usize> = (0..full_feats.len()).collect();
             order.sort_by(|&a, &b| cmp_nan_low(scores[b], scores[a]));
             select_trimtuner_slate(
@@ -738,6 +756,7 @@ fn choose_pending(
                 &actx.est,
                 baseline,
                 &order,
+                actx.full_feas.as_deref(),
                 untested,
                 full_feats,
                 grid_feats,
@@ -814,7 +833,9 @@ fn select_fabolas_slate(
 
 /// TrimTuner α_T selection body, shared by the first pick (round context's
 /// CEA order + baseline) and the pending-conditioned picks (order +
-/// baseline re-derived under the conditioned bundle).
+/// baseline re-derived under the conditioned bundle; `full_feas` — the
+/// round context's cached full-grid feasibility — reused verbatim, since
+/// tree conditioning shares the constraint models).
 #[allow(clippy::too_many_arguments)]
 fn select_trimtuner_slate(
     cfg: &EngineConfig,
@@ -823,6 +844,7 @@ fn select_trimtuner_slate(
     est: &EntropyEstimator,
     baseline: f64,
     cea_order: &[usize],
+    full_feas: Option<&[f64]>,
     untested: &[Point],
     full_feats: &[Feat],
     grid_feats: &[Feat],
@@ -839,17 +861,22 @@ fn select_trimtuner_slate(
     // When conditioning leaves the constraint models untouched (trees —
     // see Models::constraints_fixed_under_condition), the shortlist
     // feasibility scanned inside every α_T call is pass-constant —
-    // compute it once here instead of 2 × |shortlist| surrogate
-    // predictions per candidate. GP conditioning shifts the constraint
+    // gathered from the round's cached full-grid pass when available,
+    // computed once here otherwise. GP conditioning shifts the constraint
     // posteriors; their conditioned feasibility comes from the slate
     // evaluator's rank-one metric surfaces.
     let shortlist_feas: Option<Vec<f64>> =
         if models.constraints_fixed_under_condition() {
-            Some(joint_feasibility_many(
-                models,
-                constraints,
-                &shortlist_feats,
-            ))
+            Some(match full_feas {
+                Some(feas) => {
+                    shortlist.iter().map(|&id| feas[id]).collect()
+                }
+                None => joint_feasibility_many(
+                    models,
+                    constraints,
+                    &shortlist_feats,
+                ),
+            })
         } else {
             None
         };
@@ -889,17 +916,29 @@ const INC_SHORTLIST: usize = 32;
 
 /// Representative set for p_opt: the top-n_rep full-data-set configs by CEA
 /// under the current models (constraint-free CEA == predicted accuracy).
-/// Also returns the full CEA-descending config ordering for shortlist reuse.
+/// Also returns the full CEA-descending config ordering for shortlist
+/// reuse, and — when conditioning cannot move the constraint models — the
+/// full-grid joint feasibility that ordering was derived from (one batched
+/// pass, shared with every pending-conditioned pick of the round).
+#[allow(clippy::type_complexity)]
 fn build_estimator(
     cfg: &EngineConfig,
     st: &State,
     constraints: &[Constraint],
     full_feats: &[Feat],
     rng: &mut Rng,
-) -> (EntropyEstimator, Vec<usize>) {
+) -> (EntropyEstimator, Vec<usize>, Option<Vec<f64>>) {
     // full_feats[i] == encode(config_i at s=1), precomputed by run() — no
     // per-iteration re-encoding of the 288-config grid
-    let scores = cea_scores_feats(&st.models, constraints, full_feats);
+    let full_feas = (!constraints.is_empty()
+        && st.models.constraints_fixed_under_condition())
+    .then(|| joint_feasibility_many(&st.models, constraints, full_feats));
+    let scores = match &full_feas {
+        Some(feas) => {
+            cea_scores_feats_with_feas(&st.models, full_feats, feas)
+        }
+        None => cea_scores_feats(&st.models, constraints, full_feats),
+    };
     let mut order: Vec<usize> = (0..full_feats.len()).collect();
     order.sort_by(|&a, &b| cmp_nan_low(scores[b], scores[a]));
     let rep: Vec<Feat> = order
@@ -907,7 +946,7 @@ fn build_estimator(
         .take(cfg.n_rep.max(2))
         .map(|&i| full_feats[i])
         .collect();
-    (EntropyEstimator::new(rep, cfg.n_popt_samples, rng), order)
+    (EntropyEstimator::new(rep, cfg.n_popt_samples, rng), order, full_feas)
 }
 
 /// The cached [`AcqContext`] for the current models, rebuilt when stale.
@@ -928,7 +967,7 @@ fn acq_context<'c>(
         c.generation != generation || c.constraint_free != constraint_free
     });
     if stale {
-        let (est, cea_order) =
+        let (est, cea_order, full_feas) =
             build_estimator(cfg, st, constraints, full_feats, rng);
         let baseline = EntropyEstimator::kl_from_uniform(
             &est.p_opt(st.models.acc.as_ref()),
@@ -939,6 +978,7 @@ fn acq_context<'c>(
             cea_order,
             est,
             baseline,
+            full_feas,
         });
     }
     cache.as_ref().expect("acquisition context built")

@@ -27,11 +27,29 @@ pub fn cea_scores_feats(
     constraints: &[Constraint],
     xs: &[Feat],
 ) -> Vec<f64> {
-    let accs = models.acc.predict_many(xs);
     let feas = joint_feasibility_many(models, constraints, xs);
+    cea_scores_feats_with_feas(models, xs, &feas)
+}
+
+/// [`cea_scores_feats`] with the joint feasibility supplied by the caller.
+/// Valid whenever the caller's cached feasibility was computed under
+/// constraint models identical to `models`' — in particular, pending-
+/// conditioned re-selection in batched rounds: tree-surrogate conditioning
+/// shares the constraint models
+/// ([`Models::constraints_fixed_under_condition`]), so the engine computes
+/// the full-grid feasibility once per refit and every conditioned CEA
+/// re-ranking reuses it instead of re-predicting two surrogates over the
+/// whole config grid per pick.
+pub fn cea_scores_feats_with_feas(
+    models: &Models,
+    xs: &[Feat],
+    feas: &[f64],
+) -> Vec<f64> {
+    assert_eq!(xs.len(), feas.len());
+    let accs = models.acc.predict_many(xs);
     accs.into_iter()
         .zip(feas)
-        .map(|((acc, _), pfeas)| acc.max(0.0) * pfeas)
+        .map(|((acc, _), &pfeas)| acc.max(0.0) * pfeas)
         .collect()
 }
 
@@ -53,6 +71,24 @@ mod tests {
         let tight_scores = cea_scores(&m, &tight, &untested);
         for (a, b) in scores.iter().zip(&tight_scores) {
             assert!(b <= a, "tightening raised CEA: {a} -> {b}");
+        }
+    }
+
+    #[test]
+    fn cached_feasibility_path_is_bitwise_identical() {
+        // the engine's full-grid feasibility cache must reproduce the
+        // recompute-inside path exactly, including under a conditioned
+        // accuracy model (trees share constraint models when conditioned)
+        let (m, cs, untested) = fixture();
+        let xs: Vec<Feat> = untested.iter().take(60).map(encode).collect();
+        let feas = joint_feasibility_many(&m, &cs, &xs);
+        let cond = m.condition(&xs[0]);
+        for models in [&m, &cond] {
+            let want = cea_scores_feats(models, &cs, &xs);
+            let got = cea_scores_feats_with_feas(models, &xs, &feas);
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
         }
     }
 

@@ -17,7 +17,7 @@ mod cea;
 mod cmaes;
 mod direct;
 
-pub use cea::{cea_scores, cea_scores_feats};
+pub use cea::{cea_scores, cea_scores_feats, cea_scores_feats_with_feas};
 pub use cmaes::CmaesSearch;
 pub use direct::DirectSearch;
 

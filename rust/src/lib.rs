@@ -48,11 +48,13 @@
 //!
 //! ## Runtime escape hatches
 //!
-//! Three environment variables tune the hot path without recompiling:
+//! Four environment variables tune the hot path without recompiling:
 //! `TRIMTUNER_ALPHA=clone` (reference per-candidate clone-conditioning
-//! for α_T), `TRIMTUNER_BATCH=fantasy|liar|topq` (batched-slate
-//! diversification strategy, see [`engine::BatchMode`]), and
-//! `TRIMTUNER_SLATE_THREADS=n` (α-sweep sharding width; results are
+//! for α_T), `TRIMTUNER_TREES=rebuild` (per-candidate seeded tree
+//! rebuilds instead of the incremental leaf-statistics conditioning, see
+//! [`models::TreesMode`]), `TRIMTUNER_BATCH=fantasy|liar|topq`
+//! (batched-slate diversification strategy, see [`engine::BatchMode`]),
+//! and `TRIMTUNER_SLATE_THREADS=n` (α-sweep sharding width; results are
 //! bit-stable in this knob by construction).
 
 pub mod cli;

@@ -57,11 +57,25 @@ impl Cholesky {
         &self.l
     }
 
+    /// Row-block size for the blocked triangular solves: a block of
+    /// solution rows stays cache-resident while every finalized row is
+    /// streamed through it exactly once.
+    const SOLVE_BLOCK: usize = 32;
+
     /// Solve `L x = b` (forward substitution).
     pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = Vec::new();
+        self.solve_lower_into(b, &mut x);
+        x
+    }
+
+    /// [`Cholesky::solve_lower`] into a caller-provided buffer (cleared
+    /// and refilled; reuses its allocation across calls).
+    pub fn solve_lower_into(&self, b: &[f64], x: &mut Vec<f64>) {
         let n = self.n();
         assert_eq!(b.len(), n);
-        let mut x = b.to_vec();
+        x.clear();
+        x.extend_from_slice(b);
         for i in 0..n {
             let row = self.l.row(i);
             let mut s = x[i];
@@ -70,52 +84,101 @@ impl Cholesky {
             }
             x[i] = s / row[i];
         }
-        x
     }
 
     /// Solve `L X = B` for every column of `B` in one pass (multi-RHS
-    /// forward substitution). Row `i` of `L` is loaded once and applied to
-    /// all right-hand sides with contiguous axpy updates, so the batched
-    /// acquisition path pays one cache-friendly sweep over the factor
-    /// instead of a strided O(n²) solve per query point. Column `c` of the
-    /// result is bit-identical to `solve_lower(column c of B)` — the
-    /// per-column operation order is unchanged.
+    /// forward substitution), cache-blocked: solution rows are processed in
+    /// blocks of [`Cholesky::SOLVE_BLOCK`]; each finalized row above the
+    /// block is loaded once and applied to *every* row of the block with
+    /// contiguous axpy updates before the small in-block triangle is
+    /// solved. Column `c` of the result is bit-identical to
+    /// `solve_lower(column c of B)` — per column, each row still subtracts
+    /// its `j < i` contributions in ascending-`j` order, merely regrouped.
     pub fn solve_lower_multi(&self, b: &Mat) -> Mat {
-        let n = self.n();
-        assert_eq!(b.rows, n);
-        let m = b.cols;
-        let mut data: Vec<f64> = b.as_slice().to_vec();
-        for i in 0..n {
-            let lrow = self.l.row(i);
-            let (above, below) = data.split_at_mut(i * m);
-            let cur = &mut below[..m];
-            for (j, &c) in lrow[..i].iter().enumerate() {
-                let xrow = &above[j * m..(j + 1) * m];
-                for (x, &v) in cur.iter_mut().zip(xrow) {
-                    *x -= c * v;
-                }
-            }
-            let d = lrow[i];
-            for x in cur.iter_mut() {
-                *x /= d;
-            }
-        }
-        Mat::from_flat(n, m, data)
+        let mut x = b.clone();
+        self.solve_lower_multi_in_place(&mut x);
+        x
     }
 
-    /// Solve `Lᵀ x = b` (back substitution).
+    /// [`Cholesky::solve_lower_multi`] into a caller-provided output
+    /// (overwritten with the solution; reuses its allocation). The batched
+    /// slate sweep calls this once per hyper-sample with a scratch matrix
+    /// instead of allocating a fresh solution per solve.
+    pub fn solve_lower_multi_into(&self, b: &Mat, out: &mut Mat) {
+        out.copy_from(b);
+        self.solve_lower_multi_in_place(out);
+    }
+
+    fn solve_lower_multi_in_place(&self, x: &mut Mat) {
+        let n = self.n();
+        assert_eq!(x.rows, n);
+        let m = x.cols;
+        if m == 0 {
+            return;
+        }
+        let data = x.as_mut_slice();
+        let mut kb = 0;
+        while kb < n {
+            let hi = (kb + Self::SOLVE_BLOCK).min(n);
+            let (done, rest) = data.split_at_mut(kb * m);
+            // finalized rows feed the whole block; row j of the partial
+            // solution is loaded once per block instead of once per row
+            for j in 0..kb {
+                let xj = &done[j * m..(j + 1) * m];
+                for i in kb..hi {
+                    let c = self.l[(i, j)];
+                    let xi = &mut rest[(i - kb) * m..(i - kb + 1) * m];
+                    for (x, &v) in xi.iter_mut().zip(xj) {
+                        *x -= c * v;
+                    }
+                }
+            }
+            // in-block forward substitution
+            for i in kb..hi {
+                let (above, cur) = rest.split_at_mut((i - kb) * m);
+                let xi = &mut cur[..m];
+                let lrow = self.l.row(i);
+                for (j, xj) in (kb..i).zip(above.chunks_exact(m)) {
+                    let c = lrow[j];
+                    for (x, &v) in xi.iter_mut().zip(xj) {
+                        *x -= c * v;
+                    }
+                }
+                let d = lrow[i];
+                for x in xi.iter_mut() {
+                    *x /= d;
+                }
+            }
+            kb = hi;
+        }
+    }
+
+    /// Solve `Lᵀ x = b` (back substitution), in the outer-product ("saxpy")
+    /// form: once `x[j]` is final, row `j` of `L` — a contiguous slice —
+    /// scatters its contribution to every remaining unknown, instead of
+    /// each unknown gathering down a strided column of `L`. Same solution
+    /// up to summation order (each `x[i]` now accumulates its `j > i`
+    /// terms in descending-`j` order).
     pub fn solve_lower_t(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = Vec::new();
+        self.solve_lower_t_into(b, &mut x);
+        x
+    }
+
+    /// [`Cholesky::solve_lower_t`] into a caller-provided buffer.
+    pub fn solve_lower_t_into(&self, b: &[f64], x: &mut Vec<f64>) {
         let n = self.n();
         assert_eq!(b.len(), n);
-        let mut x = b.to_vec();
-        for i in (0..n).rev() {
-            let mut s = x[i];
-            for j in i + 1..n {
-                s -= self.l[(j, i)] * x[j];
+        x.clear();
+        x.extend_from_slice(b);
+        for j in (0..n).rev() {
+            let row = self.l.row(j);
+            let xj = x[j] / row[j];
+            x[j] = xj;
+            for (xi, &c) in x[..j].iter_mut().zip(row) {
+                *xi -= c * xj;
             }
-            x[i] = s / self.l[(i, i)];
         }
-        x
     }
 
     /// Solve `K x = b` via the factor.
@@ -128,15 +191,35 @@ impl Cholesky {
         (0..self.n()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
     }
 
+    /// An empty factor usable as the overwrite target of the `*_into`
+    /// scratch APIs ([`Cholesky::update_into`] / [`Cholesky::downdate_into`]
+    /// resize it on first use and then reuse its allocation).
+    pub fn scratch() -> Cholesky {
+        Cholesky { l: Mat::zeros(0, 0) }
+    }
+
     /// Rank-one *update* in O(n²): the factor of `K + u uᵀ` from the factor
     /// of `K` (LINPACK `dchud`-style Givens sweep). Never loses positive
     /// definiteness for finite input, since `K + u uᵀ` is PD whenever `K`
     /// is.
     pub fn update(&self, u: &[f64]) -> Cholesky {
+        let mut out = Cholesky::scratch();
+        self.update_into(u, &mut out, &mut Vec::new());
+        out
+    }
+
+    /// [`Cholesky::update`] into caller-provided scratch: `out` is
+    /// overwritten with the updated factor and `w` is the sweep's working
+    /// vector — both reuse their allocations across calls, so a hot loop
+    /// (the slate sweep conditions one factor per candidate) performs no
+    /// per-call heap allocation beyond what it keeps.
+    pub fn update_into(&self, u: &[f64], out: &mut Cholesky, w: &mut Vec<f64>) {
         let n = self.n();
         assert_eq!(u.len(), n);
-        let mut l = self.l.clone();
-        let mut w = u.to_vec();
+        out.l.copy_from(&self.l);
+        let l = &mut out.l;
+        w.clear();
+        w.extend_from_slice(u);
         for k in 0..n {
             let lkk = l[(k, k)];
             let r = (lkk * lkk + w[k] * w[k]).sqrt();
@@ -148,7 +231,6 @@ impl Cholesky {
                 w[i] = c * w[i] - s * l[(i, k)];
             }
         }
-        Cholesky { l }
     }
 
     /// Rank-one *downdate* in O(n²): the factor of `K − u uᵀ` from the
@@ -163,10 +245,26 @@ impl Cholesky {
     /// conditioned covariance factor is one O(m²) downdate of the shared
     /// per-iteration factor instead of an O(m³) refactorization.
     pub fn downdate(&self, u: &[f64]) -> Result<Cholesky> {
+        let mut out = Cholesky::scratch();
+        self.downdate_into(u, &mut out, &mut Vec::new())?;
+        Ok(out)
+    }
+
+    /// [`Cholesky::downdate`] into caller-provided scratch (see
+    /// [`Cholesky::update_into`]). On failure `out` holds a partially
+    /// swept factor and must not be used.
+    pub fn downdate_into(
+        &self,
+        u: &[f64],
+        out: &mut Cholesky,
+        w: &mut Vec<f64>,
+    ) -> Result<()> {
         let n = self.n();
         assert_eq!(u.len(), n);
-        let mut l = self.l.clone();
-        let mut w = u.to_vec();
+        out.l.copy_from(&self.l);
+        let l = &mut out.l;
+        w.clear();
+        w.extend_from_slice(u);
         for k in 0..n {
             let lkk = l[(k, k)];
             let r2 = lkk * lkk - w[k] * w[k];
@@ -185,7 +283,7 @@ impl Cholesky {
                 w[i] = c * w[i] - s * l[(i, k)];
             }
         }
-        Ok(Cholesky { l })
+        Ok(())
     }
 
     /// Extend the factor with one extra row/column of K in O(n²):
@@ -314,6 +412,82 @@ mod tests {
         });
     }
 
+    #[test]
+    fn solve_lower_multi_blocked_shapes_match_columnwise() {
+        // sizes straddling SOLVE_BLOCK (1 … ~3 row blocks) — the blocked
+        // path's regrouped axpy order must stay bit-identical per column
+        check("blocked multi-RHS forward solve", 8, |rng| {
+            let n = 33 + rng.below(60);
+            let m = 1 + rng.below(12);
+            let k = random_spd(rng, n);
+            let c = Cholesky::factor(&k).map_err(|e| e.to_string())?;
+            let b = Mat::from_fn(n, m, |_, _| rng.normal());
+            let x = c.solve_lower_multi(&b);
+            for col in 0..m {
+                let bcol: Vec<f64> = (0..n).map(|i| b[(i, col)]).collect();
+                let xcol = c.solve_lower(&bcol);
+                for i in 0..n {
+                    if x[(i, col)].to_bits() != xcol[i].to_bits() {
+                        return Err(format!(
+                            "n={n} col {col} row {i}: {} != {}",
+                            x[(i, col)],
+                            xcol[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn solve_lower_multi_one_by_one_and_empty_rhs() {
+        // 1×1 factor: a single divide, no block machinery in the way
+        let k = Mat::from_rows(&[vec![4.0]]);
+        let c = Cholesky::factor(&k).unwrap();
+        let b = Mat::from_rows(&[vec![6.0, -2.0, 0.5]]);
+        let x = c.solve_lower_multi(&b);
+        for (col, want) in [3.0, -1.0, 0.25].iter().enumerate() {
+            assert_eq!(x[(0, col)].to_bits(), want.to_bits());
+        }
+        // empty right-hand side: n×0 in, n×0 out, no work, no panic
+        let mut rng = Rng::new(3);
+        let k = random_spd(&mut rng, 5);
+        let c = Cholesky::factor(&k).unwrap();
+        let empty = Mat::zeros(5, 0);
+        let x = c.solve_lower_multi(&empty);
+        assert_eq!((x.rows, x.cols), (5, 0));
+        // and the scratch entry point reuses whatever shape it is handed
+        let mut out = Mat::zeros(2, 9);
+        c.solve_lower_multi_into(&empty, &mut out);
+        assert_eq!((out.rows, out.cols), (5, 0));
+    }
+
+    #[test]
+    fn scratch_solve_buffers_match_allocating_calls() {
+        check("solve_*_into == solve_*", 16, |rng| {
+            let n = 1 + rng.below(40);
+            let k = random_spd(rng, n);
+            let c = Cholesky::factor(&k).map_err(|e| e.to_string())?;
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            // deliberately dirty, wrongly-sized scratch
+            let mut fwd = vec![7.0; 3];
+            let mut bwd = vec![-1.0; 77];
+            c.solve_lower_into(&b, &mut fwd);
+            c.solve_lower_t_into(&b, &mut bwd);
+            let want_f = c.solve_lower(&b);
+            let want_b = c.solve_lower_t(&b);
+            for i in 0..n {
+                if fwd[i].to_bits() != want_f[i].to_bits()
+                    || bwd[i].to_bits() != want_b[i].to_bits()
+                {
+                    return Err(format!("row {i} diverged"));
+                }
+            }
+            Ok(())
+        });
+    }
+
     /// Random vector scaled so that `uᵀ K⁻¹ u == target` — the downdated
     /// matrix `K − u uᵀ` is PD iff that quadratic form is < 1.
     fn scaled_downdate_vec(
@@ -392,6 +566,35 @@ mod tests {
             } else {
                 Err(format!("round-trip drift {err}"))
             }
+        });
+    }
+
+    #[test]
+    fn update_then_downdate_roundtrips_under_scratch_api() {
+        // same contract as above, driven through the `*_into` entry points
+        // with scratch reused (dirty and wrongly sized) across iterations —
+        // the hot-loop usage pattern
+        let mut up = Cholesky::scratch();
+        let mut down = Cholesky::scratch();
+        let mut w = vec![9.0; 5];
+        check("update_into ∘ downdate_into == identity", 32, |rng| {
+            let n = 2 + rng.below(10);
+            let k = random_spd(rng, n);
+            let c = Cholesky::factor(&k).map_err(|e| e.to_string())?;
+            let u: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            c.update_into(&u, &mut up, &mut w);
+            up.downdate_into(&u, &mut down, &mut w)
+                .map_err(|e| e.to_string())?;
+            let err = down.l().max_abs_diff(c.l());
+            if err >= 1e-9 {
+                return Err(format!("round-trip drift {err}"));
+            }
+            // and the scratch results are bitwise the allocating results
+            let want = c.update(&u).downdate(&u).map_err(|e| e.to_string())?;
+            if down.l().max_abs_diff(want.l()) != 0.0 {
+                return Err("scratch path diverged from allocating path".into());
+            }
+            Ok(())
         });
     }
 

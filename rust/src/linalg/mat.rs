@@ -65,6 +65,20 @@ impl Mat {
         &self.data
     }
 
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Overwrite `self` with `other`, reusing the existing allocation when
+    /// it is large enough (the scratch-buffer entry points of the hot
+    /// slate sweep rely on this to avoid per-call heap traffic).
+    pub fn copy_from(&mut self, other: &Mat) {
+        self.rows = other.rows;
+        self.cols = other.cols;
+        self.data.clear();
+        self.data.extend_from_slice(&other.data);
+    }
+
     /// Matrix-vector product.
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(v.len(), self.cols);
@@ -79,24 +93,47 @@ impl Mat {
             .collect()
     }
 
-    /// Matrix product (naive; matrices here are <= a few hundred square).
+    /// Inner-dimension tile for the blocked [`Mat::matmul`]: a tile of
+    /// `other`'s rows (`MM_BLOCK × cols` f64s) stays resident in cache
+    /// across every row of `self` instead of being re-streamed per row.
+    const MM_BLOCK: usize = 32;
+
+    /// Matrix product, cache-blocked over the inner dimension. For every
+    /// output element the inner-index accumulation order is ascending —
+    /// exactly the naive triple loop's order — so results are bitwise
+    /// identical to the unblocked product.
     pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows);
         let mut out = Mat::zeros(self.rows, other.cols);
-        for i in 0..self.rows {
-            for k in 0..self.cols {
-                let a = self[(i, k)];
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = other.row(k);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// [`Mat::matmul`] into a caller-provided output (resized as needed;
+    /// reuses its allocation). `out` must not alias either operand.
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, other.rows);
+        out.rows = self.rows;
+        out.cols = other.cols;
+        out.data.clear();
+        out.data.resize(self.rows * other.cols, 0.0);
+        let mut k0 = 0;
+        while k0 < self.cols {
+            let k1 = (k0 + Self::MM_BLOCK).min(self.cols);
+            for i in 0..self.rows {
+                let arow = &self.row(i)[k0..k1];
                 let out_row = out.row_mut(i);
-                for j in 0..other.cols {
-                    out_row[j] += a * orow[j];
+                for (k, &a) in (k0..k1).zip(arow) {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let orow = other.row(k);
+                    for (o, &b) in out_row.iter_mut().zip(orow) {
+                        *o += a * b;
+                    }
                 }
             }
+            k0 = k1;
         }
-        out
     }
 
     pub fn transpose(&self) -> Mat {
@@ -179,5 +216,62 @@ mod tests {
         let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
         let i = Mat::eye(2);
         assert_eq!(a.matmul(&i), a);
+    }
+
+    /// Reference naive product with ascending-k accumulation — the op
+    /// order the blocked matmul promises to preserve bit for bit.
+    fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+        assert_eq!(a.cols, b.rows);
+        Mat::from_fn(a.rows, b.cols, |i, j| {
+            let mut acc = 0.0;
+            for k in 0..a.cols {
+                let v = a[(i, k)];
+                if v == 0.0 {
+                    continue;
+                }
+                acc += v * b[(k, j)];
+            }
+            acc
+        })
+    }
+
+    #[test]
+    fn blocked_matmul_bitwise_matches_naive_across_block_boundaries() {
+        use crate::util::proptest::check;
+        use crate::util::Rng;
+        check("blocked matmul == naive", 16, |rng| {
+            // shapes straddle the 32-wide inner block (1 … ~3 blocks)
+            let m = 1 + rng.below(70);
+            let k = 1 + rng.below(70);
+            let n = 1 + rng.below(40);
+            let a = Mat::from_fn(m, k, |_, _| rng.normal());
+            let b = Mat::from_fn(k, n, |_, _| rng.normal());
+            let got = a.matmul(&b);
+            let want = matmul_naive(&a, &b);
+            for i in 0..m {
+                for j in 0..n {
+                    if got[(i, j)].to_bits() != want[(i, j)].to_bits() {
+                        return Err(format!(
+                            "({i},{j}): {} != {}",
+                            got[(i, j)],
+                            want[(i, j)]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matmul_into_reuses_allocation_and_copy_from_resizes() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        let mut out = Mat::zeros(5, 7); // wrong shape on purpose
+        a.matmul_into(&b, &mut out);
+        assert_eq!(out, a.matmul(&b));
+        let mut c = Mat::zeros(1, 1);
+        c.copy_from(&a);
+        assert_eq!(c, a);
     }
 }

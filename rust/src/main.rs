@@ -62,6 +62,8 @@ USAGE:
 
   Env knobs: TRIMTUNER_SLATE_THREADS (α-sweep worker count),
   TRIMTUNER_ALPHA=clone (per-candidate clone-conditioning escape hatch),
+  TRIMTUNER_TREES=rebuild (per-candidate seeded tree rebuilds instead of
+  incremental leaf-statistics conditioning),
   TRIMTUNER_BATCH=fantasy|liar|topq (batched-slate strategy).
 ";
 

@@ -7,7 +7,8 @@
 
 use super::kernel::{Basis, KernelParams};
 use super::surrogate::{
-    FantasySurface, FantasyView, Feat, FitOptions, Posterior, Surrogate,
+    FantasyScratch, FantasySurface, FantasyView, Feat, FitOptions, Posterior,
+    PrimedSlate, Surrogate,
 };
 use crate::linalg::{Cholesky, Mat};
 use crate::opt::{nelder_mead, NmOptions};
@@ -249,7 +250,10 @@ struct GpFantasyComp {
 /// `(x, ŷ(x))` then reduces to closed-form rank-one algebra per candidate:
 ///
 /// - posterior cross-covariance `c(q) = k(x, q) − wᵀ V[:, q]` with
-///   `w = L⁻¹ k(X, x)` — O(n·|Q|);
+///   `w = L⁻¹ k(X, x)` — O(n·|Q|). When the surface is primed for a slate
+///   ([`FantasySurface::prime`]), the `w` vectors of *all* candidates are
+///   produced by one multi-RHS solve per hyper-sample up front, so each
+///   view degrades from a triangular solve to this dot-product sweep;
 /// - conditioned mean `μ(q) + c(q)·(ŷ − μ(x))/v` and variance
 ///   `σ²(q) − c(q)²/v`, with `v = σ²(x) + noise` (exactly the `l22²` pivot
 ///   the clone path's `Cholesky::extend` produces, guard included);
@@ -344,41 +348,65 @@ impl GpFantasyComp {
     }
 }
 
-impl FantasySurface for GpFantasy {
-    fn view(&self, x: &Feat) -> FantasyView {
-        let gp = &self.gp;
-        let nq = self.grid.len();
-        let m = self.m_joint;
-        // simulated outcome: the mixture predictive mean, standardized —
-        // the same value Models::condition feeds the clone path
-        let y_tilde = (gp.predict(x).0 - gp.y_mean) / gp.y_std;
+/// One hyper-sample's batched candidate solves for a primed slate: the
+/// cross-kernel vectors of *every* slate candidate collected into one
+/// matrix and pushed through a single [`Cholesky::solve_lower_multi`] pass,
+/// so each `view_at` pays a contiguous dot-product sweep instead of its own
+/// O(n²) triangular solve.
+struct GpPrimedComp {
+    /// kernel hyper-parameters of this component (copied so `view_at`
+    /// needs no per-call `hyper_comps` round trip)
+    params: KernelParams,
+    /// candidate-major cross-solves: row c is `w_c = L⁻¹ k(X, x_c)`
+    w: Mat,
+    /// standardized predictive mean at every candidate
+    mu_x: Vec<f64>,
+    /// conditioning pivot per candidate — the clone path's `l22²`, guard
+    /// included
+    v_eff: Vec<f64>,
+}
 
-        let mut comp_mus: Vec<Vec<f64>> = Vec::with_capacity(self.comps.len());
-        let mut comp_vars: Vec<Vec<f64>> = Vec::with_capacity(self.comps.len());
+/// A [`GpFantasy`] surface primed for one candidate slate.
+struct GpPrimed<'s> {
+    surf: &'s GpFantasy,
+    xs: &'s [Feat],
+    /// standardized simulated outcomes ỹ(x_c), batched via `predict_many`
+    y_tilde: Vec<f64>,
+    comps: Vec<GpPrimedComp>,
+}
+
+impl PrimedSlate for GpPrimed<'_> {
+    fn view_at(&self, ci: usize, scratch: &mut FantasyScratch) -> FantasyView {
+        let surf = self.surf;
+        let gp = &surf.gp;
+        let x = &self.xs[ci];
+        let nq = surf.grid.len();
+        let m = surf.m_joint;
+        let y_tilde = self.y_tilde[ci];
+
+        let mut comp_mus: Vec<Vec<f64>> = Vec::with_capacity(surf.comps.len());
+        let mut comp_vars: Vec<Vec<f64>> =
+            Vec::with_capacity(surf.comps.len());
         // (mean, cov factor, diag-fallback std) per component, the exact
         // triple Posterior::mixture consumes
-        let mut joint_comps = Vec::with_capacity(self.comps.len());
-        for (fc, (params, chol, alpha)) in
-            self.comps.iter().zip(gp.hyper_comps())
-        {
-            let k12 = params.cov_vec(gp.basis, &gp.xs, x);
-            let w = chol.solve_lower(&k12);
-            let mu_x: f64 = k12.iter().zip(alpha).map(|(k, a)| k * a).sum();
-            let k22 = params.k_diag(gp.basis, x) + params.noise;
-            let rem = k22 - w.iter().map(|v| v * v).sum::<f64>();
-            // mirror Cholesky::extend's pivot guard: v is the clone path's
-            // l22² (1e-6² when the remainder degenerates)
-            let v_eff = if rem > 1e-12 { rem } else { 1e-12 };
-            let r = y_tilde - mu_x;
-            // posterior cross-covariances candidate → grid
-            let mut c = vec![0.0; nq];
+        let mut joint_comps = Vec::with_capacity(surf.comps.len());
+        for (fc, pc) in surf.comps.iter().zip(&self.comps) {
+            let params = &pc.params;
+            let w = pc.w.row(ci);
+            let v_eff = pc.v_eff[ci];
+            let r = y_tilde - pc.mu_x[ci];
+            // posterior cross-covariances candidate → grid, into the
+            // per-worker scratch (no per-candidate allocation)
+            let c = &mut scratch.cross;
+            c.clear();
+            c.resize(nq, 0.0);
             for (q, cq) in c.iter_mut().enumerate() {
                 let dot: f64 = w
                     .iter()
                     .zip(fc.vt_grid.row(q))
                     .map(|(a, b)| a * b)
                     .sum();
-                *cq = params.k(gp.basis, x, &self.grid[q]) - dot;
+                *cq = params.k(gp.basis, x, &surf.grid[q]) - dot;
             }
             let mus: Vec<f64> = (0..nq)
                 .map(|q| fc.mu_grid[q] + c[q] * r / v_eff)
@@ -392,12 +420,15 @@ impl FantasySurface for GpFantasy {
                     .map(|mu| mu * gp.y_std + gp.y_mean)
                     .collect();
                 let scale = gp.y_std / v_eff.sqrt();
-                let u: Vec<f64> =
-                    c[..m].iter().map(|ci| ci * scale).collect();
-                let down = fc
-                    .joint_l
-                    .as_ref()
-                    .and_then(|l| l.downdate(&u).ok());
+                let u = &mut scratch.rank1;
+                u.clear();
+                u.extend(c[..m].iter().map(|ci| ci * scale));
+                let down = fc.joint_l.as_ref().and_then(|l| {
+                    let mut out = Cholesky::scratch();
+                    l.downdate_into(u, &mut out, &mut scratch.sweep)
+                        .ok()
+                        .map(|()| out)
+                });
                 match down {
                     Some(l) => joint_comps.push((mean, Some(l), None)),
                     None => {
@@ -460,6 +491,78 @@ impl FantasySurface for GpFantasy {
         };
         let joint = (m > 0).then(|| Posterior::mixture(joint_comps));
         FantasyView { grid: grid_pred, joint }
+    }
+}
+
+impl FantasySurface for GpFantasy {
+    fn view(&self, x: &Feat) -> FantasyView {
+        // one-candidate slate through the batched path: a single-column
+        // multi-RHS solve and a one-point `predict_many` are bit-identical
+        // to the scalar solves, so this cannot drift from `view_at`
+        self.prime(std::slice::from_ref(x))
+            .view_at(0, &mut FantasyScratch::new())
+    }
+
+    fn prime<'s>(&'s self, xs: &'s [Feat]) -> Box<dyn PrimedSlate + 's> {
+        let gp = &self.gp;
+        let n = gp.xs.len();
+        let nc = xs.len();
+        let comps: Vec<GpPrimedComp> = gp
+            .hyper_comps()
+            .into_iter()
+            .map(|(params, chol, alpha)| {
+                // K(X, slate) with one column per candidate (shared with
+                // the predictive means below), then ONE multi-RHS forward
+                // solve instead of a triangular solve per candidate
+                let (ks, mu_x) = gp.cross_cov_mus(params, alpha, xs);
+                let wcol = chol.solve_lower_multi(&ks);
+                // candidate-major layout: each view's dot-product sweep
+                // walks one contiguous row per candidate
+                let mut w = Mat::zeros(nc, n);
+                for c in 0..nc {
+                    let row = w.row_mut(c);
+                    for (i, slot) in row.iter_mut().enumerate() {
+                        *slot = wcol[(i, c)];
+                    }
+                }
+                // mirror Cholesky::extend's pivot guard: v is the clone
+                // path's l22² (1e-6² when the remainder degenerates)
+                let v_eff: Vec<f64> = xs
+                    .iter()
+                    .enumerate()
+                    .map(|(c, x)| {
+                        let k22 = params.k_diag(gp.basis, x) + params.noise;
+                        let rem = k22
+                            - w.row(c).iter().map(|v| v * v).sum::<f64>();
+                        if rem > 1e-12 {
+                            rem
+                        } else {
+                            1e-12
+                        }
+                    })
+                    .collect();
+                GpPrimedComp { params: *params, w, mu_x, v_eff }
+            })
+            .collect();
+        // simulated outcomes ŷ(x_c): the mixture predictive mean, reusing
+        // the per-component means computed above instead of a second
+        // kernel-matrix build + solve inside `predict_many`. The value is
+        // destandardized and re-standardized on purpose — that exact
+        // round trip is what `Models::condition` feeds the clone path
+        // (and what `predict`/`predict_many` emit), bit for bit.
+        let kf = comps.len() as f64;
+        let y_tilde: Vec<f64> = (0..nc)
+            .map(|c| {
+                let mean = if comps.len() == 1 {
+                    comps[0].mu_x[c]
+                } else {
+                    comps.iter().map(|pc| pc.mu_x[c]).sum::<f64>() / kf
+                };
+                let destd = mean * gp.y_std + gp.y_mean;
+                (destd - gp.y_mean) / gp.y_std
+            })
+            .collect();
+        Box::new(GpPrimed { surf: self, xs, y_tilde, comps })
     }
 }
 
@@ -907,6 +1010,52 @@ mod tests {
                             (a - b).abs() <= 2e-7 * b.abs().max(1.0),
                             "k={k} comp={comp} draw {a} vs {b}"
                         );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn primed_slate_views_bitwise_match_per_candidate_views() {
+        // The batched multi-RHS priming must reproduce the per-candidate
+        // path bit for bit (single-column solves are bit-identical, so any
+        // divergence is a layout/order bug). ML-II and mixture GPs.
+        for k in [1usize, 3] {
+            let mut rng = Rng::new(31 + k as u64);
+            let (xs, ys) = toy(22, &mut rng);
+            let mut gp = Gp::with_hyper_samples(Basis::Acc, 9, k);
+            gp.fit(&xs, &ys, FitOptions { hyperopt: true, restarts: 1 });
+            let rand_feat = |rng: &mut Rng| {
+                let mut f = [0.0; D_IN];
+                for v in f.iter_mut() {
+                    *v = rng.f64();
+                }
+                f
+            };
+            let grid: Vec<Feat> =
+                (0..10).map(|_| rand_feat(&mut rng)).collect();
+            let surf = gp.fantasy_surface(&grid, 6);
+            let slate: Vec<Feat> =
+                (0..9).map(|_| rand_feat(&mut rng)).collect();
+            let primed = surf.prime(&slate);
+            let mut scratch = FantasyScratch::new();
+            for (i, x) in slate.iter().enumerate() {
+                let a = surf.view(x);
+                let b = primed.view_at(i, &mut scratch);
+                for ((am, astd), (bm, bstd)) in a.grid.iter().zip(&b.grid) {
+                    assert_eq!(am.to_bits(), bm.to_bits(), "k={k} i={i}");
+                    assert_eq!(astd.to_bits(), bstd.to_bits(), "k={k} i={i}");
+                }
+                let (pa, pb) = (a.joint.unwrap(), b.joint.unwrap());
+                assert_eq!(pa.n_components(), pb.n_components());
+                let z: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+                let (mut da, mut db) = (Vec::new(), Vec::new());
+                for comp in 0..pa.n_components() {
+                    pa.sample_component_with(comp, &z, &mut da);
+                    pb.sample_component_with(comp, &z, &mut db);
+                    for (va, vb) in da.iter().zip(&db) {
+                        assert_eq!(va.to_bits(), vb.to_bits(), "k={k} i={i}");
                     }
                 }
             }

@@ -10,7 +10,7 @@ mod trees;
 pub use gp::{Gp, GpHyp};
 pub use kernel::{Basis, KernelParams};
 pub use surrogate::{
-    FantasySurface, FantasyView, Feat, FitOptions, ModelKind, Posterior,
-    Surrogate,
+    FantasyScratch, FantasySurface, FantasyView, Feat, FitOptions, ModelKind,
+    Posterior, PrimedSlate, Surrogate,
 };
-pub use trees::{ExtraTrees, TreesOptions};
+pub use trees::{ExtraTrees, TreesMode, TreesOptions};

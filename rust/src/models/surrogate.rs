@@ -166,14 +166,63 @@ pub struct FantasyView {
     pub joint: Option<Posterior>,
 }
 
+/// Reusable per-worker scratch for the slate sweep's conditioned views —
+/// the hot per-candidate loops borrow these buffers instead of allocating
+/// fresh vectors per view (each buffer is cleared/overwritten on use, so a
+/// dirty scratch can never leak state between candidates).
+#[derive(Default)]
+pub struct FantasyScratch {
+    /// posterior cross-covariance buffer (candidate → grid)
+    pub cross: Vec<f64>,
+    /// rank-one direction buffer for the joint-factor downdate
+    pub rank1: Vec<f64>,
+    /// hyperbolic-rotation working vector for `Cholesky::downdate_into`
+    pub sweep: Vec<f64>,
+    /// per-tree slate accumulators (trees incremental conditioning)
+    pub acc: Vec<f64>,
+    pub acc2: Vec<f64>,
+}
+
+impl FantasyScratch {
+    pub fn new() -> FantasyScratch {
+        FantasyScratch::default()
+    }
+}
+
+/// A fantasy surface primed for one specific candidate slate: every
+/// per-candidate quantity that can be batched across the slate (GP: the
+/// cross-kernel solves `w = L⁻¹k(X, x_c)` collected into one multi-RHS
+/// triangular solve per hyper-sample, plus the simulated outcomes ŷ(x_c);
+/// trees: one tree-major ŷ sweep) is computed once at
+/// [`FantasySurface::prime`] time, so `view_at(c)` pays only the
+/// dot-product sweep of candidate `c`.
+pub trait PrimedSlate: Send + Sync {
+    /// The conditioned view of slate candidate `i` — identical (bit for
+    /// bit) to `view(&slate[i])` on the surface that primed this slate.
+    fn view_at(&self, i: usize, scratch: &mut FantasyScratch) -> FantasyView;
+}
+
+/// Fallback primer for surfaces without a batched implementation: defers
+/// every candidate to [`FantasySurface::view`].
+struct MapPrimed<'s, S: ?Sized> {
+    surf: &'s S,
+    xs: &'s [Feat],
+}
+
+impl<S: FantasySurface + ?Sized> PrimedSlate for MapPrimed<'_, S> {
+    fn view_at(&self, i: usize, _scratch: &mut FantasyScratch) -> FantasyView {
+        self.surf.view(&self.xs[i])
+    }
+}
+
 /// Per-iteration fantasy-conditioning surface over a fixed query grid.
 ///
 /// Built once per acquisition round via [`Surrogate::fantasy_surface`];
 /// every [`FantasySurface::view`] call then yields the grid under the
 /// surrogate conditioned on one simulated observation `(x, ŷ(x))` — for
 /// GPs via closed-form rank-one posterior algebra (no surrogate clone, no
-/// Cholesky re-factorization), for tree ensembles via a single fused-grid
-/// pass over one conditioned rebuild.
+/// Cholesky re-factorization), for tree ensembles via the incremental
+/// leaf-statistics path over one cached conditioned structure.
 ///
 /// `Send + Sync` so the slate evaluator can shard candidate views across
 /// `std::thread::scope` workers.
@@ -182,6 +231,14 @@ pub trait FantasySurface: Send + Sync {
     /// the surrogate's own predictive mean at `x` — the single-root
     /// Gauss–Hermite collapse `Models::condition` uses.
     fn view(&self, x: &Feat) -> FantasyView;
+
+    /// Prime the surface for a whole candidate slate (see [`PrimedSlate`]).
+    /// The default defers to per-candidate [`FantasySurface::view`] calls;
+    /// the native models override it with genuinely batched precomputation
+    /// that stays bit-identical to the per-candidate path.
+    fn prime<'s>(&'s self, xs: &'s [Feat]) -> Box<dyn PrimedSlate + 's> {
+        Box::new(MapPrimed { surf: self, xs })
+    }
 }
 
 /// Reference fantasy surface for surrogates without a specialized
@@ -208,7 +265,9 @@ impl FantasySurface for CloneFantasy {
 ///
 /// The acquisition hot path relies on [`Surrogate::condition`]: a cheap
 /// clone extended with one hypothetical observation while hyper-parameters
-/// stay frozen (GP: O(n²) Cholesky extension; trees: rebuild on n+1 points).
+/// stay frozen (GP: O(n²) Cholesky extension; trees: a fresh seeded
+/// bootstrap whose structure is built from the existing observations, with
+/// the new observation folded into the leaf statistics it lands in).
 ///
 /// `Send + Sync` because the slate evaluator shares fitted surrogates
 /// (read-only) across `std::thread::scope` workers.
@@ -240,7 +299,8 @@ pub trait Surrogate: Send + Sync {
     /// `m_joint` grid points (for p_opt sampling) and conditioned
     /// (mean, std) everywhere. The default clones + conditions per view;
     /// the native models override it (GP: rank-one posterior algebra over
-    /// precomputed cross-solves; trees: fused-grid single rebuild).
+    /// precomputed cross-solves; trees: incremental leaf-statistics
+    /// conditioning over one cached fused-grid structure).
     fn fantasy_surface(
         &self,
         grid: &[Feat],

@@ -6,9 +6,22 @@
 //! split rule: at each node, draw one *uniformly random* cut-point per
 //! candidate feature and keep the best by variance reduction. The ensemble's
 //! per-point mean/std define a Gaussian predictive distribution.
+//!
+//! **Conditioning** (the α_T "simulate one observation" step) draws a fresh
+//! seeded bootstrap over the n + 1 observations, builds each tree's
+//! *structure* from the resample's existing observations only, and folds
+//! the new observation into the leaf statistics it lands in (weighted by
+//! its bootstrap multiplicity). A single self-predicted fantasy point
+//! carries no split information — keeping it out of the structure is what
+//! lets the slate evaluator cache the conditioned structure once per
+//! round and pay one root-to-leaf traversal per tree per candidate
+//! ([`TreesMode::Incremental`]) instead of a full per-candidate rebuild
+//! (`TRIMTUNER_TREES=rebuild` re-derives it from scratch per candidate —
+//! the bit-exact reference path).
 
 use super::surrogate::{
-    FantasySurface, FantasyView, Feat, FitOptions, Posterior, Surrogate,
+    FantasyScratch, FantasySurface, FantasyView, Feat, FitOptions, Posterior,
+    PrimedSlate, Surrogate,
 };
 use crate::space::D_IN;
 use crate::util::Rng;
@@ -33,12 +46,41 @@ impl Default for TreesOptions {
     }
 }
 
+/// Which conditioning strategy [`Surrogate::fantasy_surface`] uses for
+/// tree ensembles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TreesMode {
+    /// Cache the conditioned structure (and the query grid's per-tree leaf
+    /// routes) once per slate; each candidate then costs one root-to-leaf
+    /// traversal per tree plus a table-lookup grid sweep. The default.
+    Incremental,
+    /// Re-derive the conditioned ensemble from scratch for every candidate
+    /// — the seeded-rebuild reference the incremental path is verified
+    /// bit-exact against (`TRIMTUNER_TREES=rebuild`).
+    Rebuild,
+}
+
+impl TreesMode {
+    /// `TRIMTUNER_TREES=rebuild` is the escape hatch back to per-candidate
+    /// seeded rebuilds; anything else (or unset) is the incremental path.
+    pub fn from_env() -> TreesMode {
+        match std::env::var("TRIMTUNER_TREES") {
+            Ok(v) if v.eq_ignore_ascii_case("rebuild") => TreesMode::Rebuild,
+            _ => TreesMode::Incremental,
+        }
+    }
+}
+
 /// Flat-array binary regression tree.
 #[derive(Debug, Clone)]
 struct Tree {
     /// (feature, threshold, left, right) per internal node; leaf when
     /// feature == usize::MAX, then threshold stores the leaf mean.
     nodes: Vec<(usize, f64, u32, u32)>,
+    /// per-node (Σy, count) over the training rows that reached it —
+    /// recorded for leaves ((0, 0) on internal nodes). Conditioning folds
+    /// a fantasy observation into exactly one leaf's statistic per tree.
+    stats: Vec<(f64, u32)>,
 }
 
 const LEAF: usize = usize::MAX;
@@ -51,12 +93,21 @@ impl Tree {
         opts: &TreesOptions,
         rng: &mut Rng,
     ) -> Tree {
-        let mut nodes = Vec::with_capacity(idx.len() * 2);
+        let mut t = Tree {
+            nodes: Vec::with_capacity(idx.len() * 2),
+            stats: Vec::with_capacity(idx.len() * 2),
+        };
         let len = idx.len();
-        let mut t = Tree { nodes };
         t.build_node(xs, ys, idx, 0, len, opts, rng);
-        nodes = std::mem::take(&mut t.nodes);
-        Tree { nodes }
+        t
+    }
+
+    /// A degenerate single-leaf tree over zero training rows — the
+    /// conditioned-bootstrap edge case where every resample draw hit the
+    /// new observation (its multiplicity is then >= 1, so the conditioned
+    /// leaf value is always well defined).
+    fn solo_leaf() -> Tree {
+        Tree { nodes: vec![(LEAF, 0.0, 0, 0)], stats: vec![(0.0, 0)] }
     }
 
     /// Recursively build over idx[lo..hi]; returns node index.
@@ -71,8 +122,8 @@ impl Tree {
         rng: &mut Rng,
     ) -> u32 {
         let n = hi - lo;
-        let mean: f64 =
-            idx[lo..hi].iter().map(|&i| ys[i]).sum::<f64>() / n as f64;
+        let sum: f64 = idx[lo..hi].iter().map(|&i| ys[i]).sum();
+        let mean = sum / n as f64;
         // leaf conditions: small node or zero variance
         let var: f64 = idx[lo..hi]
             .iter()
@@ -81,6 +132,7 @@ impl Tree {
         if n < opts.min_samples_split || var < 1e-18 {
             let id = self.nodes.len() as u32;
             self.nodes.push((LEAF, mean, 0, 0));
+            self.stats.push((sum, n as u32));
             return id;
         }
 
@@ -154,6 +206,7 @@ impl Tree {
             // all candidate features constant -> leaf
             let id = self.nodes.len() as u32;
             self.nodes.push((LEAF, mean, 0, 0));
+            self.stats.push((sum, n as u32));
             return id;
         };
 
@@ -169,6 +222,7 @@ impl Tree {
 
         let id = self.nodes.len() as u32;
         self.nodes.push((f, thr, 0, 0));
+        self.stats.push((0.0, 0));
         let left = self.build_node(xs, ys, idx, lo, mid, opts, rng);
         let right = self.build_node(xs, ys, idx, mid, hi, opts, rng);
         self.nodes[id as usize].2 = left;
@@ -178,14 +232,33 @@ impl Tree {
 
     #[inline]
     fn predict(&self, x: &Feat) -> f64 {
+        self.nodes[self.leaf_of(x) as usize].1
+    }
+
+    /// Index of the leaf node `x` routes to.
+    #[inline]
+    fn leaf_of(&self, x: &Feat) -> u32 {
         let mut node = 0usize;
         loop {
             let (f, thr, l, r) = self.nodes[node];
             if f == LEAF {
-                return thr;
+                return node as u32;
             }
             node = if x[f] <= thr { l as usize } else { r as usize };
         }
+    }
+
+    /// The value of `leaf` after absorbing `mult` bootstrap copies of an
+    /// observation with target `y`: (Σy + mult·y) / (count + mult). The
+    /// single shared implementation keeps the incremental path and the
+    /// per-candidate rebuild reference bit-identical by construction.
+    #[inline]
+    fn conditioned_leaf_value(&self, leaf: u32, mult: u32, y: f64) -> f64 {
+        if mult == 0 {
+            return self.nodes[leaf as usize].1;
+        }
+        let (sum, cnt) = self.stats[leaf as usize];
+        (sum + mult as f64 * y) / (cnt + mult) as f64
     }
 }
 
@@ -230,50 +303,220 @@ impl ExtraTrees {
             .collect();
     }
 
-    /// [`Surrogate::condition`] without cloning the stale tree array (the
-    /// rebuild overwrites it anyway) — the fantasy hot path's variant.
+    /// Candidate-independent template for conditioning the ensemble on one
+    /// extra observation: for each tree, a seeded bootstrap over the n + 1
+    /// indices, the tree built from the resample's *existing* rows, and the
+    /// multiplicity with which the new index was drawn. Structure and
+    /// multiplicities depend only on (seed, n, existing data), so the slate
+    /// evaluator computes this once and shares it across every candidate.
+    fn cond_template(&self) -> CondTemplate {
+        let n_new = self.xs.len() + 1;
+        // Seed depends on data size only -> deterministic runs, fresh
+        // conditioned trees after every observation.
+        let mut rng = Rng::new(self.seed ^ ((n_new as u64) << 20));
+        let mut trees = Vec::with_capacity(self.opts.n_trees);
+        let mut mult = Vec::with_capacity(self.opts.n_trees);
+        for _ in 0..self.opts.n_trees {
+            let (mut idx, c) = if self.opts.bootstrap {
+                let mut old = Vec::with_capacity(n_new);
+                let mut c = 0u32;
+                for _ in 0..n_new {
+                    let i = rng.below(n_new);
+                    if i + 1 == n_new {
+                        c += 1;
+                    } else {
+                        old.push(i);
+                    }
+                }
+                (old, c)
+            } else {
+                ((0..self.xs.len()).collect::<Vec<usize>>(), 1)
+            };
+            let tree = if idx.is_empty() {
+                Tree::solo_leaf()
+            } else {
+                Tree::build(&self.xs, &self.ys, &mut idx, &self.opts, &mut rng)
+            };
+            trees.push(tree);
+            mult.push(c);
+        }
+        CondTemplate { trees, mult }
+    }
+
+    /// [`Surrogate::condition`] for tree ensembles (see the module docs):
+    /// the conditioned structure from [`ExtraTrees::cond_template`], with
+    /// the new observation folded into the one leaf per tree it routes to.
     fn conditioned(&self, x: &Feat, y: f64) -> ExtraTrees {
+        let CondTemplate { mut trees, mult } = self.cond_template();
+        for (t, &c) in trees.iter_mut().zip(&mult) {
+            if c == 0 {
+                continue;
+            }
+            let leaf = t.leaf_of(x) as usize;
+            let v = t.conditioned_leaf_value(leaf as u32, c, y);
+            t.nodes[leaf].1 = v;
+            let (sum, cnt) = t.stats[leaf];
+            t.stats[leaf] = (sum + c as f64 * y, cnt + c);
+        }
         let mut xs = Vec::with_capacity(self.xs.len() + 1);
         xs.extend_from_slice(&self.xs);
         xs.push(*x);
         let mut ys = Vec::with_capacity(self.ys.len() + 1);
         ys.extend_from_slice(&self.ys);
         ys.push(y);
-        let mut t = ExtraTrees {
-            opts: self.opts,
-            trees: Vec::new(),
-            xs,
-            ys,
-            seed: self.seed,
+        ExtraTrees { opts: self.opts, trees, xs, ys, seed: self.seed }
+    }
+
+    /// [`Surrogate::fantasy_surface`] with the conditioning strategy
+    /// pinned explicitly (tests and benches compare the two modes without
+    /// touching the process environment).
+    pub fn fantasy_surface_mode(
+        &self,
+        grid: &[Feat],
+        m_joint: usize,
+        mode: TreesMode,
+    ) -> Box<dyn FantasySurface> {
+        assert!(m_joint <= grid.len());
+        let (tpl, routes) = match mode {
+            TreesMode::Rebuild => (None, Vec::new()),
+            TreesMode::Incremental => {
+                let tpl = self.cond_template();
+                // every grid point's (leaf, value) per template tree: the
+                // per-candidate grid sweep becomes table lookups
+                let routes: Vec<Vec<(u32, f64)>> = tpl
+                    .trees
+                    .iter()
+                    .map(|t| {
+                        grid.iter()
+                            .map(|q| {
+                                let leaf = t.leaf_of(q);
+                                (leaf, t.nodes[leaf as usize].1)
+                            })
+                            .collect()
+                    })
+                    .collect();
+                (Some(tpl), routes)
+            }
         };
-        t.rebuild();
-        t
+        Box::new(TreesFantasy {
+            base: self.clone(),
+            grid: grid.to_vec(),
+            m_joint,
+            tpl,
+            routes,
+        })
     }
 }
 
-/// Fantasy surface for tree ensembles. There is no closed-form conditioned
-/// posterior for a seeded ensemble rebuild, so each view still rebuilds
-/// once — but on a single fused query grid (one tree-major pass instead of
-/// separate shortlist and representer sweeps), without cloning the stale
-/// ensemble, and with the joint prefix reusing the grid predictions
-/// directly. Bit-identical to clone-and-condition.
+/// The shared conditioned structure: one bootstrap-resampled tree per
+/// ensemble member, built from the existing observations, plus the
+/// bootstrap multiplicity of the (yet unknown) new observation.
+struct CondTemplate {
+    trees: Vec<Tree>,
+    mult: Vec<u32>,
+}
+
+/// Fantasy surface for tree ensembles. The conditioned structure never
+/// depends on the candidate (module docs), so the incremental default
+/// builds it once per slate together with the query grid's per-tree leaf
+/// routes; each view then routes the candidate down every tree, adjusts
+/// the one leaf statistic its fantasy observation lands in, and sweeps the
+/// grid via lookups. `TRIMTUNER_TREES=rebuild` re-derives the conditioned
+/// ensemble from scratch per candidate instead — bit-identical, and also
+/// exactly what clone-and-condition (`TRIMTUNER_ALPHA=clone`) does.
 struct TreesFantasy {
     base: ExtraTrees,
     grid: Vec<Feat>,
     m_joint: usize,
+    /// `Some` in incremental mode: the cached conditioned structure
+    tpl: Option<CondTemplate>,
+    /// incremental mode: per tree, each grid point's (leaf, value)
+    routes: Vec<Vec<(u32, f64)>>,
 }
 
-impl FantasySurface for TreesFantasy {
-    fn view(&self, x: &Feat) -> FantasyView {
-        let (y, _) = self.base.predict(x);
-        let cond = self.base.conditioned(x, y);
-        let grid = cond.predict_many(&self.grid);
+impl TreesFantasy {
+    /// The conditioned view for candidate `x` with simulated outcome `y`.
+    fn view_for(
+        &self,
+        x: &Feat,
+        y: f64,
+        scratch: &mut FantasyScratch,
+    ) -> FantasyView {
+        let grid: Vec<(f64, f64)> = match &self.tpl {
+            Some(tpl) => {
+                let nq = self.grid.len();
+                let sum = &mut scratch.acc;
+                sum.clear();
+                sum.resize(nq, 0.0);
+                let sumsq = &mut scratch.acc2;
+                sumsq.clear();
+                sumsq.resize(nq, 0.0);
+                // tree-major accumulation, same order as `predict_many`
+                // over a materialized conditioned ensemble
+                for ((tree, &c), routes) in
+                    tpl.trees.iter().zip(&tpl.mult).zip(&self.routes)
+                {
+                    let leaf = tree.leaf_of(x);
+                    let v_new = tree.conditioned_leaf_value(leaf, c, y);
+                    for ((&(l, v), s), ss) in
+                        routes.iter().zip(sum.iter_mut()).zip(sumsq.iter_mut())
+                    {
+                        let p = if l == leaf { v_new } else { v };
+                        *s += p;
+                        *ss += p * p;
+                    }
+                }
+                let n = tpl.trees.len() as f64;
+                sum.iter()
+                    .zip(sumsq.iter())
+                    .map(|(&s, &ss)| {
+                        let mean = s / n;
+                        let var = (ss / n - mean * mean).max(0.0);
+                        (mean, var.sqrt().max(1e-4))
+                    })
+                    .collect()
+            }
+            // rebuild hatch: per-candidate seeded rebuild, the reference
+            None => self.base.conditioned(x, y).predict_many(&self.grid),
+        };
         let joint = (self.m_joint > 0).then(|| {
             let (mean, std): (Vec<f64>, Vec<f64>) =
                 grid[..self.m_joint].iter().copied().unzip();
             Posterior::diagonal(mean, std)
         });
         FantasyView { grid, joint }
+    }
+}
+
+/// A [`TreesFantasy`] surface primed for one candidate slate: the
+/// simulated outcomes ŷ(x_c) come from one tree-major `predict_many` pass
+/// instead of a scalar prediction per candidate.
+struct TreesPrimed<'s> {
+    surf: &'s TreesFantasy,
+    xs: &'s [Feat],
+    y_hat: Vec<f64>,
+}
+
+impl PrimedSlate for TreesPrimed<'_> {
+    fn view_at(&self, i: usize, scratch: &mut FantasyScratch) -> FantasyView {
+        self.surf.view_for(&self.xs[i], self.y_hat[i], scratch)
+    }
+}
+
+impl FantasySurface for TreesFantasy {
+    fn view(&self, x: &Feat) -> FantasyView {
+        let (y, _) = self.base.predict(x);
+        self.view_for(x, y, &mut FantasyScratch::new())
+    }
+
+    fn prime<'s>(&'s self, xs: &'s [Feat]) -> Box<dyn PrimedSlate + 's> {
+        let y_hat: Vec<f64> = self
+            .base
+            .predict_many(xs)
+            .into_iter()
+            .map(|(mu, _)| mu)
+            .collect();
+        Box::new(TreesPrimed { surf: self, xs, y_hat })
     }
 }
 
@@ -355,12 +598,7 @@ impl Surrogate for ExtraTrees {
         grid: &[Feat],
         m_joint: usize,
     ) -> Box<dyn FantasySurface> {
-        assert!(m_joint <= grid.len());
-        Box::new(TreesFantasy {
-            base: self.clone(),
-            grid: grid.to_vec(),
-            m_joint,
-        })
+        self.fantasy_surface_mode(grid, m_joint, TreesMode::from_env())
     }
 }
 
@@ -472,22 +710,27 @@ mod tests {
         }
     }
 
+    fn rand_feat(rng: &mut Rng) -> Feat {
+        let mut f = [0.0; D_IN];
+        for v in f.iter_mut() {
+            *v = rng.f64();
+        }
+        f
+    }
+
     #[test]
     fn fantasy_view_bit_identical_to_clone_path() {
+        // incremental conditioning (the default surface) vs the clone
+        // path (`condition` + `predict_many`, which rebuilds the
+        // conditioned ensemble from scratch): bit-exact.
         let mut rng = Rng::new(13);
         let (xs, ys) = toy(40, &mut rng);
         let mut et = ExtraTrees::new(TreesOptions::default());
         et.fit(&xs, &ys, FitOptions::default());
-        let rand_feat = |rng: &mut Rng| {
-            let mut f = [0.0; D_IN];
-            for v in f.iter_mut() {
-                *v = rng.f64();
-            }
-            f
-        };
         let grid: Vec<Feat> = (0..12).map(|_| rand_feat(&mut rng)).collect();
         let m_joint = 5;
-        let surf = et.fantasy_surface(&grid, m_joint);
+        let surf =
+            et.fantasy_surface_mode(&grid, m_joint, TreesMode::Incremental);
         for _ in 0..3 {
             let x = rand_feat(&mut rng);
             let view = surf.view(&x);
@@ -507,6 +750,61 @@ mod tests {
             for (va, vb) in a.iter().zip(&b) {
                 assert_eq!(va.to_bits(), vb.to_bits());
             }
+        }
+    }
+
+    #[test]
+    fn incremental_and_rebuild_surfaces_bit_identical() {
+        // the TRIMTUNER_TREES=rebuild reference (per-candidate seeded
+        // rebuild) vs the cached-structure incremental default, including
+        // the primed batched-ŷ entry point
+        let mut rng = Rng::new(29);
+        let (xs, ys) = toy(35, &mut rng);
+        let mut et = ExtraTrees::new(TreesOptions::default());
+        et.fit(&xs, &ys, FitOptions::default());
+        let grid: Vec<Feat> = (0..14).map(|_| rand_feat(&mut rng)).collect();
+        let inc = et.fantasy_surface_mode(&grid, 6, TreesMode::Incremental);
+        let reb = et.fantasy_surface_mode(&grid, 6, TreesMode::Rebuild);
+        let slate: Vec<Feat> = (0..5).map(|_| rand_feat(&mut rng)).collect();
+        let primed = inc.prime(&slate);
+        let mut scratch = FantasyScratch::new();
+        for (i, x) in slate.iter().enumerate() {
+            let a = inc.view(x);
+            let b = reb.view(x);
+            let c = primed.view_at(i, &mut scratch);
+            for (((am, astd), (bm, bstd)), (cm, cstd)) in
+                a.grid.iter().zip(&b.grid).zip(&c.grid)
+            {
+                assert_eq!(am.to_bits(), bm.to_bits(), "inc vs rebuild");
+                assert_eq!(astd.to_bits(), bstd.to_bits(), "inc vs rebuild");
+                assert_eq!(am.to_bits(), cm.to_bits(), "inc vs primed");
+                assert_eq!(astd.to_bits(), cstd.to_bits(), "inc vs primed");
+            }
+        }
+    }
+
+    #[test]
+    fn conditioning_on_tiny_datasets_is_well_defined() {
+        // with n = 1 the conditioned bootstrap can resample the new index
+        // exclusively (Tree::solo_leaf): predictions must stay finite and
+        // the incremental/rebuild modes must still agree bit for bit
+        let xs = vec![[0.4; D_IN]];
+        let ys = vec![1.0];
+        let mut et = ExtraTrees::new(TreesOptions::default());
+        et.fit(&xs, &ys, FitOptions::default());
+        let cond = et.conditioned(&[0.6; D_IN], 3.0);
+        let (mu, std) = cond.predict(&[0.5; D_IN]);
+        assert!(mu.is_finite() && std.is_finite(), "{mu} {std}");
+        let grid = vec![[0.2; D_IN], [0.8; D_IN]];
+        let inc = et.fantasy_surface_mode(&grid, 2, TreesMode::Incremental);
+        let reb = et.fantasy_surface_mode(&grid, 2, TreesMode::Rebuild);
+        let x = [0.6; D_IN];
+        for ((am, astd), (bm, bstd)) in
+            inc.view(&x).grid.iter().zip(&reb.view(&x).grid)
+        {
+            assert!(am.is_finite() && astd.is_finite());
+            assert_eq!(am.to_bits(), bm.to_bits());
+            assert_eq!(astd.to_bits(), bstd.to_bits());
         }
     }
 

@@ -37,18 +37,41 @@ where
     T: Sync,
     F: Fn(&T) -> f64 + Sync,
 {
+    shard_map_with(xs, threads, || (), |_, x| f(x))
+}
+
+/// [`shard_map`] with per-worker mutable state: `init` builds one fresh
+/// state per worker (one total on the sequential path) and `f` receives it
+/// mutably alongside each item. This is how the slate sweep reuses scratch
+/// buffers across candidates without any cross-worker sharing; results
+/// must not depend on the state's history (every scratch consumer resets
+/// its buffers on use), which keeps the output bit-identical for any
+/// worker count.
+pub fn shard_map_with<T, S, I, F>(
+    xs: &[T],
+    threads: usize,
+    init: I,
+    f: F,
+) -> Vec<f64>
+where
+    T: Sync,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, &T) -> f64 + Sync,
+{
     let workers = threads.min(xs.len());
     if workers <= 1 {
-        return xs.iter().map(&f).collect();
+        let mut state = init();
+        return xs.iter().map(|x| f(&mut state, x)).collect();
     }
     let mut out = vec![0.0f64; xs.len()];
     let chunk = (xs.len() + workers - 1) / workers;
-    let fr = &f;
+    let (fr, ir) = (&f, &init);
     std::thread::scope(|s| {
         for (cx, co) in xs.chunks(chunk).zip(out.chunks_mut(chunk)) {
             s.spawn(move || {
+                let mut state = ir();
                 for (slot, x) in co.iter_mut().zip(cx) {
-                    *slot = fr(x);
+                    *slot = fr(&mut state, x);
                 }
             });
         }

@@ -4,13 +4,25 @@
 //! tree surrogates, within 1e-9 relative for GPs (hyper-sample mixtures
 //! included) — and drive every filtering heuristic to the same selection
 //! at the default β budget.
+//!
+//! For trees the clone path *is* the per-candidate seeded rebuild of the
+//! conditioned ensemble, so the bit-exactness contract here is exactly
+//! "incremental conditioning ≡ seeded rebuild"; the explicit
+//! incremental-vs-rebuild surface comparison lives alongside
+//! (`trees_incremental_alpha_bit_identical_to_rebuild_surfaces`), and the
+//! `TRIMTUNER_ALPHA` / `TRIMTUNER_TREES` env hatches are exercised in
+//! `tests/env_hatches.rs` (its own process, so the env mutation cannot
+//! race these tests).
 
 use trimtuner::acq::{
     joint_feasibility_many, trimtuner_alpha, AlphaMode, AlphaSlate,
     EntropyEstimator, Models, TrimTunerAcq,
 };
 use trimtuner::heuristics::{select_next, AlphaCache, FilterKind};
-use trimtuner::models::{Feat, FitOptions, ModelKind};
+use trimtuner::models::{
+    ExtraTrees, FantasyScratch, FantasySurface, Feat, FitOptions, ModelKind,
+    PrimedSlate, Surrogate, TreesMode, TreesOptions,
+};
 use trimtuner::sim::{CloudSim, NetKind};
 use trimtuner::space::{all_points, encode, Config, Constraint, Point};
 use trimtuner::util::Rng;
@@ -117,6 +129,94 @@ fn fantasy_bit_identical_to_clone_for_trees() {
                 a.to_bits(),
                 b.to_bits(),
                 "with_feas={with_feas}: clone {a} vs fantasy {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn trees_incremental_alpha_bit_identical_to_rebuild_surfaces() {
+    // The two fantasy-surface modes, compared at view granularity over an
+    // α-sized fused grid (representer set ++ shortlist) and a real slate:
+    // cached-structure incremental conditioning must reproduce the
+    // per-candidate seeded rebuild bit for bit, through both the scalar
+    // view and the primed (batched-ŷ) entry point.
+    let sim = CloudSim::new(NetKind::Mlp);
+    let mut rng = Rng::new(47);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for _ in 0..24 {
+        let p = Point {
+            config: Config::from_id(rng.below(288)),
+            s_idx: rng.below(5),
+        };
+        let o = sim.observe(&p, &mut rng);
+        xs.push(encode(&p));
+        ys.push(o.acc);
+    }
+    let mut et = ExtraTrees::new(TreesOptions::default());
+    et.fit(&xs, &ys, FitOptions::default());
+    let grid: Vec<Feat> = (0..288)
+        .step_by(9)
+        .map(|id| encode(&Point { config: Config::from_id(id), s_idx: 4 }))
+        .collect();
+    let m_joint = 12;
+    let inc = et.fantasy_surface_mode(&grid, m_joint, TreesMode::Incremental);
+    let reb = et.fantasy_surface_mode(&grid, m_joint, TreesMode::Rebuild);
+    let slate: Vec<Feat> = (0..10)
+        .map(|_| {
+            encode(&Point {
+                config: Config::from_id(rng.below(288)),
+                s_idx: rng.below(5),
+            })
+        })
+        .collect();
+    let primed = inc.prime(&slate);
+    let mut scratch = FantasyScratch::new();
+    for (i, x) in slate.iter().enumerate() {
+        let a = inc.view(x);
+        let b = reb.view(x);
+        let c = primed.view_at(i, &mut scratch);
+        for (((am, astd), (bm, bstd)), (cm, cstd)) in
+            a.grid.iter().zip(&b.grid).zip(&c.grid)
+        {
+            assert_eq!(am.to_bits(), bm.to_bits(), "view {i}: inc vs rebuild");
+            assert_eq!(astd.to_bits(), bstd.to_bits(), "view {i}");
+            assert_eq!(am.to_bits(), cm.to_bits(), "view {i}: inc vs primed");
+            assert_eq!(astd.to_bits(), cstd.to_bits(), "view {i}");
+        }
+        // joint prefix: identical CRN draws must agree exactly
+        let (pa, pb) = (a.joint.unwrap(), b.joint.unwrap());
+        let z: Vec<f64> = (0..m_joint).map(|_| rng.normal()).collect();
+        let (mut da, mut db) = (Vec::new(), Vec::new());
+        pa.sample_with(&z, &mut da);
+        pb.sample_with(&z, &mut db);
+        for (va, vb) in da.iter().zip(&db) {
+            assert_eq!(va.to_bits(), vb.to_bits(), "joint draw {i}");
+        }
+    }
+}
+
+#[test]
+fn gp_primed_slate_alpha_bit_identical_to_per_candidate_eval() {
+    // The batched multi-RHS w priming at α granularity: one whole-slate
+    // eval_feats (slate-primed) vs one eval_one per candidate (primed on a
+    // single-column slate) must be bitwise identical — any divergence
+    // would be a layout or accumulation-order bug in the batched solves.
+    for gp_k in [1usize, 3] {
+        let f = fixture(ModelKind::Gp, gp_k);
+        let c = ctx(&f, None);
+        let slate: Vec<Point> =
+            f.untested.iter().step_by(11).copied().collect();
+        let feats: Vec<Feat> = slate.iter().map(encode).collect();
+        let evaluator = AlphaSlate::with_mode(&c, AlphaMode::Fantasy);
+        let batch = evaluator.eval_feats(&feats);
+        for (x, b) in feats.iter().zip(&batch) {
+            let a = evaluator.eval_one(x);
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "gp_k={gp_k}: per-candidate {a} vs slate {b}"
             );
         }
     }

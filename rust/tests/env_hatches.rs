@@ -1,0 +1,121 @@
+//! The acquisition escape hatches, exercised through the real process
+//! environment: `TRIMTUNER_ALPHA=clone` (per-candidate clone-conditioning)
+//! and `TRIMTUNER_TREES=rebuild` (per-candidate seeded tree rebuilds).
+//!
+//! Environment mutation is process-global, so everything lives in ONE test
+//! function of its own integration binary — the parallel test threads of
+//! `alpha_parity` / the unit suites never see these variables.
+
+use trimtuner::acq::{
+    trimtuner_alpha, AlphaMode, AlphaSlate, EntropyEstimator, Models,
+    TrimTunerAcq,
+};
+use trimtuner::models::{
+    ExtraTrees, FantasySurface, Feat, FitOptions, ModelKind, Surrogate,
+    TreesMode, TreesOptions,
+};
+use trimtuner::sim::{CloudSim, NetKind};
+use trimtuner::space::{encode, Config, Constraint, Point};
+use trimtuner::util::Rng;
+
+fn observations(n: usize, seed: u64) -> (Vec<Feat>, Vec<f64>) {
+    let sim = CloudSim::new(NetKind::Mlp);
+    let mut rng = Rng::new(seed);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for _ in 0..n {
+        let p = Point {
+            config: Config::from_id(rng.below(288)),
+            s_idx: rng.below(5),
+        };
+        let o = sim.observe(&p, &mut rng);
+        xs.push(encode(&p));
+        ys.push(o.acc);
+    }
+    (xs, ys)
+}
+
+#[test]
+fn env_hatches_select_the_reference_paths() {
+    // default environment: both hatches off
+    std::env::remove_var("TRIMTUNER_ALPHA");
+    std::env::remove_var("TRIMTUNER_TREES");
+    assert_eq!(AlphaMode::from_env(), AlphaMode::Fantasy);
+    assert_eq!(TreesMode::from_env(), TreesMode::Incremental);
+
+    // --- TRIMTUNER_TREES=rebuild: the per-candidate seeded rebuild -----
+    let (xs, ys) = observations(22, 7);
+    let mut et = ExtraTrees::new(TreesOptions::default());
+    et.fit(&xs, &ys, FitOptions::default());
+    let grid: Vec<Feat> = (0..288)
+        .step_by(24)
+        .map(|id| encode(&Point { config: Config::from_id(id), s_idx: 4 }))
+        .collect();
+    let x = encode(&Point { config: Config::from_id(33), s_idx: 1 });
+    let default_view = et.fantasy_surface(&grid, 4).view(&x);
+
+    std::env::set_var("TRIMTUNER_TREES", "rebuild");
+    assert_eq!(TreesMode::from_env(), TreesMode::Rebuild);
+    let rebuild_view = et.fantasy_surface(&grid, 4).view(&x);
+    std::env::remove_var("TRIMTUNER_TREES");
+
+    for ((am, astd), (bm, bstd)) in
+        default_view.grid.iter().zip(&rebuild_view.grid)
+    {
+        assert_eq!(am.to_bits(), bm.to_bits(), "rebuild hatch diverged");
+        assert_eq!(astd.to_bits(), bstd.to_bits(), "rebuild hatch diverged");
+    }
+
+    // --- TRIMTUNER_ALPHA=clone: per-candidate clone-conditioning -------
+    let mut rng = Rng::new(11);
+    let mut pts = Vec::new();
+    let mut outs = Vec::new();
+    let sim = CloudSim::new(NetKind::Mlp);
+    for _ in 0..20 {
+        let p = Point {
+            config: Config::from_id(rng.below(288)),
+            s_idx: rng.below(5),
+        };
+        pts.push(p);
+        outs.push(sim.observe(&p, &mut rng));
+    }
+    let mut models = Models::new(ModelKind::Trees, 3);
+    models.fit(&pts, &outs, FitOptions { hyperopt: true, restarts: 1 });
+    let full_feats: Vec<Feat> = (0..288)
+        .map(|id| encode(&Point { config: Config::from_id(id), s_idx: 4 }))
+        .collect();
+    let rep: Vec<Feat> = (0..10).map(|i| full_feats[i * 28]).collect();
+    let est = EntropyEstimator::new(rep, 40, &mut rng);
+    let baseline =
+        EntropyEstimator::kl_from_uniform(&est.p_opt(models.acc.as_ref()));
+    let shortlist: Vec<usize> = (0..288).step_by(18).collect();
+    let shortlist_feats: Vec<Feat> =
+        shortlist.iter().map(|&id| full_feats[id]).collect();
+    let constraints = vec![Constraint::cost_max(0.06)];
+    let ctx = TrimTunerAcq {
+        models: &models,
+        est: &est,
+        constraints: &constraints,
+        inc_shortlist: &shortlist,
+        inc_shortlist_feats: &shortlist_feats,
+        inc_feas: None,
+        baseline,
+    };
+    let slate: Vec<Point> = (0..8)
+        .map(|_| Point {
+            config: Config::from_id(rng.below(288)),
+            s_idx: rng.below(5),
+        })
+        .collect();
+
+    std::env::set_var("TRIMTUNER_ALPHA", "clone");
+    assert_eq!(AlphaMode::from_env(), AlphaMode::Clone);
+    // AlphaSlate::new must honor the hatch and reproduce the reference
+    // per-candidate path bit for bit
+    let hatch = AlphaSlate::new(&ctx).eval_points(&slate);
+    std::env::remove_var("TRIMTUNER_ALPHA");
+    for (p, b) in slate.iter().zip(&hatch) {
+        let a = trimtuner_alpha(&ctx, &encode(p));
+        assert_eq!(a.to_bits(), b.to_bits(), "clone hatch diverged");
+    }
+}
