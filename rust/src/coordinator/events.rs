@@ -1,7 +1,16 @@
 //! Append-only event log + counters for the coordinator (observability).
+//!
+//! Locking tolerates poisoning (`unwrap_or_else(PoisonError::into_inner)`,
+//! detlint rule R4): every critical section here is a single atomic Vec
+//! operation — append, len, clone, filter-count — so a recorder that
+//! panicked mid-call cannot have left the log in a torn state, and
+//! observability must keep working while the run unwinds. Timestamps come
+//! from [`crate::util::timer::Timer`], the sanctioned clock route (R3):
+//! they are log-relative offsets that nothing on the optimization path
+//! reads.
 
-use std::sync::Mutex;
-use std::time::Instant;
+use crate::util::timer::Timer;
+use std::sync::{Mutex, PoisonError};
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum EventKind {
@@ -21,23 +30,26 @@ pub struct Event {
 
 /// Thread-safe append-only event log.
 pub struct EventLog {
-    start: Instant,
+    start: Timer,
     events: Mutex<Vec<Event>>,
 }
 
 impl EventLog {
     #[allow(clippy::new_without_default)]
     pub fn new() -> EventLog {
-        EventLog { start: Instant::now(), events: Mutex::new(Vec::new()) }
+        EventLog { start: Timer::start(), events: Mutex::new(Vec::new()) }
     }
 
     pub fn record(&self, kind: EventKind) {
-        let t = self.start.elapsed().as_secs_f64();
-        self.events.lock().unwrap().push(Event { t, kind });
+        let t = self.start.elapsed_s();
+        self.events
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push(Event { t, kind });
     }
 
     pub fn len(&self) -> usize {
-        self.events.lock().unwrap().len()
+        self.events.lock().unwrap_or_else(PoisonError::into_inner).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -45,14 +57,14 @@ impl EventLog {
     }
 
     pub fn snapshot(&self) -> Vec<Event> {
-        self.events.lock().unwrap().clone()
+        self.events.lock().unwrap_or_else(PoisonError::into_inner).clone()
     }
 
     /// Count events matching a predicate.
     pub fn count(&self, pred: impl Fn(&EventKind) -> bool) -> usize {
         self.events
             .lock()
-            .unwrap()
+            .unwrap_or_else(PoisonError::into_inner)
             .iter()
             .filter(|e| pred(&e.kind))
             .count()

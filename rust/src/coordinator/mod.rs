@@ -24,6 +24,7 @@
 mod events;
 mod launcher;
 mod pool;
+mod sync;
 
 pub use events::{Event, EventKind, EventLog};
 pub use launcher::{Job, JobLauncher, JobResult, SimLauncher};
@@ -32,6 +33,7 @@ pub use pool::{JobError, WorkerPool};
 use crate::cli::Args;
 use crate::sim::NetKind;
 use crate::space::{Config, N_CONFIGS, S_INIT};
+use crate::util::timer::Timer;
 use crate::util::Rng;
 use anyhow::Result;
 
@@ -49,7 +51,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let log = EventLog::new();
     let mut rng = Rng::new(seed);
 
-    let t0 = std::time::Instant::now();
+    let t0 = Timer::start();
     for i in 0..n_jobs {
         let config = Config::from_id(rng.below(N_CONFIGS));
         let job = Job { id: i as u64, config, s_levels: S_INIT.to_vec() };
@@ -68,7 +70,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         });
     }
     pool.shutdown();
-    let wall = t0.elapsed().as_secs_f64();
+    let wall = t0.elapsed_s();
 
     println!(
         "serve: {n_jobs} jobs x {} snapshots on {workers} workers in {wall:.3}s ({:.1} jobs/s)",

@@ -1,6 +1,9 @@
 //! Worker pool over std threads + channels (the offline registry has no
 //! tokio; the coordinator's work units are coarse training jobs, for which
-//! OS threads are the right granularity anyway).
+//! OS threads are the right granularity anyway). Channels come through
+//! [`super::sync`], the shim `tools/loom-models` rebuilds under
+//! `--cfg loom` so the shutdown protocol below is model-checked across
+//! interleavings, not just tested on lucky schedules.
 //!
 //! Shutdown contract: `shutdown()`/`Drop` first close the submit queue and
 //! *drop the result receiver*, then join the workers. Dropping the receiver
@@ -8,11 +11,12 @@
 //! can only observe shutdown through the channel disconnecting; joining
 //! while still holding the receiver would deadlock forever (each worker
 //! waiting for a `recv` that never comes, the join waiting for the worker).
+//! detlint rule R5 flags any regression to the bad ordering.
 
 use super::launcher::{Job, JobLauncher, JobResult};
+use super::sync::{bounded, Receiver, Sender};
 use anyhow::{anyhow, Result};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
 
 /// A launcher failure with the job attached, so a live engine can requeue
@@ -52,7 +56,7 @@ const RESULT_QUEUE_CAP: usize = 1024;
 /// Fixed-size worker pool executing [`Job`]s through a shared launcher.
 /// The bounded submit queue (2× workers) provides natural backpressure.
 pub struct WorkerPool {
-    submit_tx: Option<SyncSender<Job>>,
+    submit_tx: Option<Sender<Job>>,
     result_rx: Option<Receiver<Result<JobResult, JobError>>>,
     handles: Vec<JoinHandle<()>>,
 }
@@ -72,10 +76,10 @@ impl WorkerPool {
         assert!(workers > 0);
         assert!(result_cap > 0);
         let launcher: Arc<dyn JobLauncher> = Arc::from(launcher);
-        let (submit_tx, submit_rx) = sync_channel::<Job>(workers * 2);
+        let (submit_tx, submit_rx) = bounded::<Job>(workers * 2);
         let submit_rx = Arc::new(Mutex::new(submit_rx));
         let (result_tx, result_rx) =
-            sync_channel::<Result<JobResult, JobError>>(result_cap);
+            bounded::<Result<JobResult, JobError>>(result_cap);
 
         let handles = (0..workers)
             .map(|_| {
@@ -83,8 +87,15 @@ impl WorkerPool {
                 let tx = result_tx.clone();
                 let launcher = launcher.clone();
                 std::thread::spawn(move || loop {
-                    // take one job while holding the lock, then release
-                    let job = match rx.lock().unwrap().recv() {
+                    // take one job while holding the lock, then release.
+                    // Poisoning is survivable: the guard only covers a
+                    // `recv` on the submit queue — there is no multi-step
+                    // invariant a panicking worker could have torn.
+                    let job = match rx
+                        .lock()
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .recv()
+                    {
                         Ok(j) => j,
                         Err(_) => break, // queue closed -> shut down
                     };

@@ -1,0 +1,263 @@
+//! Channel shim for the coordinator: `std::sync::mpsc` in production
+//! builds, a hand-rolled loom-modelable bounded channel under
+//! `--cfg loom`.
+//!
+//! `tools/loom-models` compiles this exact file (by `#[path]` include)
+//! with `--cfg loom` and model-checks the worker pool's shutdown protocol
+//! over it: the bounded [`queue`] below has the same blocking/disconnect
+//! semantics as `std::sync::mpsc::sync_channel` — `send` blocks while
+//! full and unblocks with an error when the receiver drops, `recv` drains
+//! buffered values then errors once every sender is gone — which is
+//! precisely the surface the PR 2 `WorkerPool` join deadlock lived on.
+//! Production code keeps the battle-tested std channel; the queue is
+//! still compiled and unit-tested under `cfg(test)` so the loom model
+//! can never drift from a stale copy of the semantics.
+#![allow(unknown_lints)]
+// `--cfg loom` is set only by the tools/loom-models build
+#![allow(unexpected_cfgs)]
+
+#[cfg(loom)]
+pub(crate) use queue::{bounded, Receiver, Sender};
+#[cfg(not(loom))]
+pub(crate) use std_mpsc::{bounded, Receiver, Sender};
+
+/// Thin aliases over `std::sync::mpsc` — the production channel.
+#[cfg(not(loom))]
+mod std_mpsc {
+    pub use std::sync::mpsc::{Receiver, SyncSender as Sender};
+
+    /// Bounded MPSC channel (`std::sync::mpsc::sync_channel`).
+    pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+        std::sync::mpsc::sync_channel(cap)
+    }
+}
+
+/// Hand-rolled bounded MPSC channel over `Mutex` + `Condvar`, with
+/// `sync_channel` semantics. Exists because loom models its own `Mutex`/
+/// `Condvar`/`Arc` but has no bounded mpsc; building the channel from
+/// primitives loom *does* model lets the interleaving checker drive every
+/// blocking edge the pool's shutdown protocol depends on.
+#[cfg(any(loom, test))]
+pub(crate) mod queue {
+    #[cfg(loom)]
+    use loom::sync::{Arc, Condvar, Mutex};
+    #[cfg(not(loom))]
+    use std::sync::{Arc, Condvar, Mutex};
+
+    use std::collections::VecDeque;
+    use std::sync::PoisonError;
+
+    /// The receiver disconnected; the unsent value comes back.
+    #[derive(Debug)]
+    pub struct SendError<T>(pub T);
+
+    impl<T> std::fmt::Display for SendError<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "sending on a closed channel")
+        }
+    }
+
+    /// Every sender disconnected and the buffer is drained.
+    #[derive(Debug, PartialEq, Eq)]
+    pub struct RecvError;
+
+    impl std::fmt::Display for RecvError {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "receiving on a closed channel")
+        }
+    }
+
+    struct State<T> {
+        buf: VecDeque<T>,
+        cap: usize,
+        senders: usize,
+        rx_alive: bool,
+    }
+
+    struct Shared<T> {
+        state: Mutex<State<T>>,
+        cond: Condvar,
+    }
+
+    pub struct Sender<T> {
+        shared: Arc<Shared<T>>,
+    }
+
+    pub struct Receiver<T> {
+        shared: Arc<Shared<T>>,
+    }
+
+    /// Bounded MPSC channel with `sync_channel` semantics.
+    pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+        assert!(cap > 0, "bounded channel needs capacity");
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                buf: VecDeque::new(),
+                cap,
+                senders: 1,
+                rx_alive: true,
+            }),
+            cond: Condvar::new(),
+        });
+        (Sender { shared: shared.clone() }, Receiver { shared })
+    }
+
+    impl<T> Sender<T> {
+        /// Blocks while the buffer is full; errors (returning the value)
+        /// once the receiver is gone — which is exactly how a worker
+        /// blocked mid-`send` observes pool shutdown.
+        pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+            let mut value = Some(value);
+            let mut st = self
+                .shared
+                .state
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            loop {
+                if !st.rx_alive {
+                    return Err(SendError(value.take().expect("unsent")));
+                }
+                if st.buf.len() < st.cap {
+                    st.buf.push_back(value.take().expect("unsent"));
+                    self.shared.cond.notify_all();
+                    return Ok(());
+                }
+                st = self
+                    .shared
+                    .cond
+                    .wait(st)
+                    .unwrap_or_else(PoisonError::into_inner);
+            }
+        }
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Sender<T> {
+            let mut st = self
+                .shared
+                .state
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            st.senders += 1;
+            drop(st);
+            Sender { shared: self.shared.clone() }
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            let mut st = self
+                .shared
+                .state
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            st.senders -= 1;
+            let last = st.senders == 0;
+            drop(st);
+            if last {
+                // wake a receiver blocked in recv so it can disconnect
+                self.shared.cond.notify_all();
+            }
+        }
+    }
+
+    impl<T> Receiver<T> {
+        /// Blocks while the buffer is empty and senders remain; drains
+        /// buffered values even after every sender dropped.
+        pub fn recv(&self) -> Result<T, RecvError> {
+            let mut st = self
+                .shared
+                .state
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            loop {
+                if let Some(v) = st.buf.pop_front() {
+                    // a slot freed: wake senders blocked on the bound
+                    self.shared.cond.notify_all();
+                    return Ok(v);
+                }
+                if st.senders == 0 {
+                    return Err(RecvError);
+                }
+                st = self
+                    .shared
+                    .cond
+                    .wait(st)
+                    .unwrap_or_else(PoisonError::into_inner);
+            }
+        }
+    }
+
+    impl<T> Drop for Receiver<T> {
+        fn drop(&mut self) {
+            let mut st = self
+                .shared
+                .state
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            st.rx_alive = false;
+            drop(st);
+            // unblock every sender waiting on a full buffer — the
+            // deadlock-critical property the pool's shutdown order
+            // depends on (see WorkerPool::close and detlint rule R5)
+            self.shared.cond.notify_all();
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::queue::{bounded, RecvError};
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_and_drain_after_sender_drop() {
+        let (tx, rx) = bounded::<u32>(4);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Ok(2));
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn send_blocks_at_capacity_until_recv() {
+        let (tx, rx) = bounded::<u32>(1);
+        tx.send(1).unwrap();
+        let h = std::thread::spawn(move || {
+            tx.send(2).unwrap(); // blocks until the 1 is received
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Ok(2));
+        h.join().unwrap();
+    }
+
+    /// The property the pool's shutdown protocol rests on: a sender
+    /// blocked on a full buffer unblocks with an error when the receiver
+    /// drops, instead of deadlocking.
+    #[test]
+    fn receiver_drop_unblocks_a_full_send() {
+        let (tx, rx) = bounded::<u32>(1);
+        tx.send(1).unwrap();
+        let h = std::thread::spawn(move || tx.send(2));
+        std::thread::sleep(Duration::from_millis(50));
+        drop(rx);
+        match h.join().unwrap() {
+            Err(e) => assert_eq!(e.0, 2, "the unsent value comes back"),
+            Ok(()) => panic!("send must fail once the receiver is gone"),
+        }
+    }
+
+    #[test]
+    fn cloned_senders_keep_the_channel_open() {
+        let (tx, rx) = bounded::<u32>(4);
+        let tx2 = tx.clone();
+        drop(tx);
+        tx2.send(9).unwrap();
+        drop(tx2);
+        assert_eq!(rx.recv(), Ok(9));
+        assert_eq!(rx.recv(), Err(RecvError));
+    }
+}

@@ -28,7 +28,10 @@ use crate::coordinator::{
 use crate::sim::{Dataset, Outcome};
 use crate::space::{Config, Point};
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
+// BTreeMap, not HashMap: the engine is a deterministic module (detlint
+// R1) — even though today's access is keyed-only, an ordered container
+// keeps any future drain of these books reproducible by construction.
+use std::collections::BTreeMap;
 
 /// One evaluated probe: the observation the optimizer sees, plus the
 /// accounting of the deployment that produced it.
@@ -119,7 +122,7 @@ impl<'a> LiveEval<'a> {
         &mut self,
         specs: &[(Config, Vec<usize>)],
     ) -> Result<Vec<JobResult>> {
-        let mut slot_of: HashMap<u64, usize> = HashMap::new();
+        let mut slot_of: BTreeMap<u64, usize> = BTreeMap::new();
         let mut attempts = vec![0usize; specs.len()];
         let mut primary = vec![0u64; specs.len()];
         for (slot, (config, levels)) in specs.iter().enumerate() {
@@ -267,7 +270,7 @@ impl<'a> EvalBackend<'a> {
     pub fn probe_slate(&mut self, points: &[Point]) -> Result<Vec<Probe>> {
         anyhow::ensure!(!points.is_empty(), "empty probe slate");
         // group slate indices by config, preserving first-appearance order
-        let mut group_of: HashMap<usize, usize> = HashMap::new();
+        let mut group_of: BTreeMap<usize, usize> = BTreeMap::new();
         let mut groups: Vec<(Config, Vec<usize>)> = Vec::new();
         for (i, p) in points.iter().enumerate() {
             let g = *group_of.entry(p.config.id()).or_insert_with(|| {

@@ -26,7 +26,11 @@ use crate::models::Feat;
 use crate::space::{encode, Constraint, Point};
 use crate::util::stats::{argmax, cmp_nan_low};
 use crate::util::Rng;
-use std::collections::{HashMap, HashSet};
+// BTreeMap, not HashMap: the α cache is drained in ranking (`best`,
+// `top_k`, `entries`), and an ordered container makes those drains
+// reproducible by construction (detlint R1). HashSet stays — `seen` is
+// insert/contains-only, never iterated.
+use std::collections::{BTreeMap, HashSet};
 
 /// Which heuristic an optimizer uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -77,7 +81,7 @@ impl FilterKind {
 ///   and do its own sharding.
 pub struct AlphaCache<'a> {
     f: AlphaFn<'a>,
-    cache: HashMap<usize, f64>,
+    cache: BTreeMap<usize, f64>,
     threads: usize,
 }
 
@@ -92,7 +96,7 @@ impl<'a> AlphaCache<'a> {
     pub fn new(f: impl FnMut(&Point) -> f64 + 'a) -> Self {
         AlphaCache {
             f: AlphaFn::Serial(Box::new(f)),
-            cache: HashMap::new(),
+            cache: BTreeMap::new(),
             threads: 1,
         }
     }
@@ -103,7 +107,7 @@ impl<'a> AlphaCache<'a> {
     pub fn shared(f: impl Fn(&Point) -> f64 + Sync + 'a) -> Self {
         AlphaCache {
             f: AlphaFn::Shared(Box::new(f)),
-            cache: HashMap::new(),
+            cache: BTreeMap::new(),
             threads: crate::util::slate_threads(),
         }
     }
@@ -115,7 +119,7 @@ impl<'a> AlphaCache<'a> {
     pub fn batch(f: impl Fn(&[Point]) -> Vec<f64> + 'a) -> Self {
         AlphaCache {
             f: AlphaFn::Batch(Box::new(f)),
-            cache: HashMap::new(),
+            cache: BTreeMap::new(),
             threads: 1,
         }
     }
@@ -187,20 +191,19 @@ impl<'a> AlphaCache<'a> {
         self.cache.len()
     }
 
-    /// Cached (point id, α) pairs sorted by id — parity-test introspection.
+    /// Cached (point id, α) pairs sorted by id — parity-test
+    /// introspection. The `BTreeMap` already iterates id-ascending, so
+    /// this is a plain drain.
     pub fn entries(&self) -> Vec<(usize, f64)> {
-        let mut v: Vec<(usize, f64)> =
-            self.cache.iter().map(|(&id, &a)| (id, a)).collect();
-        v.sort_by_key(|e| e.0);
-        v
+        self.cache.iter().map(|(&id, &a)| (id, a)).collect()
     }
 
     pub fn best(&self) -> Option<(Point, f64)> {
-        // deterministic argmax: ties break towards the lowest point id
-        // (HashMap iteration order is seeded per instance — without an
-        // explicit tie-break, equal-α candidates would make runs
-        // non-reproducible); NaN α ranks below every real value instead of
-        // panicking
+        // deterministic argmax: ties break towards the lowest point id,
+        // and the BTreeMap's id-ascending iteration keeps the scan order
+        // itself reproducible (detlint R1 — a seeded-order map here would
+        // make equal-α runs non-reproducible); NaN α ranks below every
+        // real value instead of panicking
         self.cache
             .iter()
             .max_by(|a, b| {

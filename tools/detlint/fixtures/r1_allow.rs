@@ -1,0 +1,16 @@
+// R1 allow: an ordered container for the drain, keyed lookups on the
+// hash map, and one justified pragma for an order-insensitive fold.
+use std::collections::{BTreeMap, HashMap};
+
+fn sum_costs(ordered: &BTreeMap<usize, f64>) -> f64 {
+    ordered.values().sum()
+}
+
+fn lookup(by_id: &HashMap<usize, f64>, id: usize) -> f64 {
+    by_id.get(&id).copied().unwrap_or(0.0)
+}
+
+fn count_entries(tally: &HashMap<usize, f64>) -> usize {
+    // detlint: allow(R1, reason="count is independent of iteration order")
+    tally.keys().count()
+}

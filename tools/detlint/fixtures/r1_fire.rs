@@ -1,0 +1,16 @@
+// R1 fire: ordered drains of seeded-order hash containers in a
+// deterministic module. FP accumulation order follows the map's
+// per-instance iteration seed, so the total differs run to run.
+use std::collections::HashMap;
+
+fn sum_costs(costs: &HashMap<usize, f64>) -> f64 {
+    let mut total = 0.0;
+    for (_, c) in costs {
+        total += c;
+    }
+    total
+}
+
+fn first_ids(costs: &HashMap<usize, f64>) -> Vec<usize> {
+    costs.keys().take(3).copied().collect()
+}

@@ -1,0 +1,12 @@
+// R2 allow: the NaN-total comparators from util, plus one pragma'd site
+// whose inputs are proven finite by the caller.
+use crate::util::stats::cmp_nan_high;
+
+fn rank(xs: &mut [(usize, f64)]) {
+    xs.sort_by(|a, b| cmp_nan_high(a.1, b.1));
+}
+
+fn ordering(a: f64, b: f64) -> std::cmp::Ordering {
+    // detlint: allow(R2, reason="caller guarantees finite inputs")
+    a.partial_cmp(&b).unwrap()
+}

@@ -1,0 +1,5 @@
+// R2 fire: NaN-unsafe ranking — one NaN alpha value and this panics
+// (or, with a silent fallback, misorders the slate).
+fn rank(xs: &mut [(usize, f64)]) {
+    xs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+}

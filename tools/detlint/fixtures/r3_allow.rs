@@ -1,0 +1,21 @@
+// R3 allow: timing routed through util::timer, randomness through the
+// run's seeded RNG, and one pragma'd log-only clock read.
+use crate::util::timer::Timer;
+use crate::util::Rng;
+
+fn stamp_s() -> f64 {
+    let t0 = Timer::start();
+    t0.elapsed_s()
+}
+
+fn draw(rng: &mut Rng) -> u64 {
+    rng.next_u64()
+}
+
+fn wall_clock_s() -> u64 {
+    // detlint: allow(R3, reason="log-only timestamp, never read by the optimizer")
+    match std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH) {
+        Ok(d) => d.as_secs(),
+        Err(_) => 0,
+    }
+}

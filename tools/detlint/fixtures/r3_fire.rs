@@ -1,0 +1,6 @@
+// R3 fire: ambient wall-clock in a seeded module — replaying the same
+// seed can no longer reproduce the run.
+fn stamp_s() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

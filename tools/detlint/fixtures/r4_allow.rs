@@ -1,0 +1,13 @@
+// R4 allow: poisoning tolerated where continuing is sound (a Vec append
+// cannot be torn by a panicking appender), pragma'd where crashing is the
+// deliberate response.
+use std::sync::{Mutex, PoisonError};
+
+fn record(events: &Mutex<Vec<u64>>, e: u64) {
+    events.lock().unwrap_or_else(PoisonError::into_inner).push(e);
+}
+
+fn must_len(events: &Mutex<Vec<u64>>) -> usize {
+    // detlint: allow(R4, reason="a poisoned log already lost events; crash loudly")
+    events.lock().expect("event log poisoned").len()
+}

@@ -1,0 +1,11 @@
+// R4 fire: lock poisoning propagated as a panic from library code — one
+// panicking worker takes every later caller down with it.
+use std::sync::Mutex;
+
+fn record(events: &Mutex<Vec<u64>>, e: u64) {
+    events.lock().unwrap().push(e);
+}
+
+fn len(events: &Mutex<Vec<u64>>) -> usize {
+    events.lock().expect("poisoned").len()
+}

@@ -1,0 +1,21 @@
+// R5 allow: the fixed shutdown protocol — close the submit queue and
+// release the result receiver *before* joining, so workers blocked in
+// `send` unblock on the disconnect and the join terminates.
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::thread::JoinHandle;
+
+struct Pool {
+    submit_tx: Option<SyncSender<u64>>,
+    result_rx: Option<Receiver<u64>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    fn close(&mut self) {
+        self.submit_tx.take();
+        self.result_rx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,24 @@
+// R5 fire: the exact WorkerPool shutdown deadlock fixed in PR 2 —
+// joining the workers while the bounded result receiver is still alive
+// in the same scope. A worker blocked in `send` on the full result
+// channel only observes shutdown through the channel disconnecting, so
+// the join below waits forever.
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::thread::JoinHandle;
+
+struct Pool {
+    submit_tx: Option<SyncSender<u64>>,
+    result_rx: Option<Receiver<u64>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    fn close(&mut self) {
+        self.submit_tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        // too late: workers blocked in `send` never saw the disconnect
+        self.result_rx.take();
+    }
+}

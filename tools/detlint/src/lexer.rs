@@ -1,0 +1,399 @@
+//! A minimal Rust lexer: identifiers, punctuation and literals with
+//! line/column positions, comments stripped, `// detlint:` pragmas
+//! collected.
+//!
+//! The offline crate registry for this build carries no `syn`, so detlint
+//! scans token streams with this small self-contained lexer instead of a
+//! full-fidelity AST (the same constraint that left the main crate
+//! hand-rolling its RNG and CSV I/O — see `rust/src/util/mod.rs`). The
+//! rules in [`crate::rules`] are written against these token sequences;
+//! the crate README documents the approximations that implies.
+
+/// One source token. Whitespace and comments never produce tokens.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident(String),
+    /// Single punctuation character (`::` is two `:` tokens).
+    Punct(char),
+    /// Any literal — string, raw string, byte string, char, number.
+    /// Contents are irrelevant to every rule; only the position matters.
+    Lit,
+}
+
+/// A token with its 1-based source position.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// A parsed `// detlint: allow(R1, reason="…")` suppression comment.
+#[derive(Debug, Clone)]
+pub struct Pragma {
+    pub line: u32,
+    /// Upper-cased rule ids, or `ALL`.
+    pub rules: Vec<String>,
+    /// `allow-file(..)` suppresses across the whole file.
+    pub file_level: bool,
+}
+
+/// Lexer output: tokens, well-formed pragmas, and malformed pragmas. The
+/// malformed ones are surfaced as unsuppressible `P0` findings — a
+/// suppression that silently failed to parse would otherwise *hide*
+/// whatever violation it sat next to.
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub pragmas: Vec<Pragma>,
+    pub malformed: Vec<(u32, String)>,
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    // per-position line/col lookup so the scanner can move freely
+    let mut pos_line = Vec::with_capacity(chars.len() + 1);
+    let mut pos_col = Vec::with_capacity(chars.len() + 1);
+    {
+        let (mut l, mut c) = (1u32, 1u32);
+        for &ch in &chars {
+            pos_line.push(l);
+            pos_col.push(c);
+            if ch == '\n' {
+                l += 1;
+                c = 1;
+            } else {
+                c += 1;
+            }
+        }
+        pos_line.push(l);
+        pos_col.push(c);
+    }
+
+    let mut toks = Vec::new();
+    let mut pragmas = Vec::new();
+    let mut malformed = Vec::new();
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comments (the only place pragmas live)
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            let start = i;
+            while i < chars.len() && chars[i] != '\n' {
+                i += 1;
+            }
+            let text: String = chars[start..i].iter().collect();
+            scan_pragma(&text, pos_line[start], &mut pragmas, &mut malformed);
+            continue;
+        }
+        // block comments, nesting included
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            i += 2;
+            while i < chars.len() && depth > 0 {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // string-ish literals: plain, raw (r"", r#""#), byte (b"", br"")
+        if let Some(end) = string_end(&chars, i) {
+            toks.push(Tok { kind: TokKind::Lit, line: pos_line[i], col: pos_col[i] });
+            i = end;
+            continue;
+        }
+        // lifetimes vs char literals
+        if c == '\'' {
+            let next = chars.get(i + 1).copied().unwrap_or(' ');
+            let after = chars.get(i + 2).copied().unwrap_or(' ');
+            if (next.is_alphabetic() || next == '_') && after != '\'' {
+                // lifetime: `'a`, `'static`, `'_` — no token
+                i += 1;
+                while i < chars.len()
+                    && (chars[i].is_alphanumeric() || chars[i] == '_')
+                {
+                    i += 1;
+                }
+            } else {
+                // char literal, escapes included
+                toks.push(Tok {
+                    kind: TokKind::Lit,
+                    line: pos_line[i],
+                    col: pos_col[i],
+                });
+                i += 1; // opening quote
+                if chars.get(i) == Some(&'\\') {
+                    i += 1; // escape head, so `'\''` cannot end early
+                }
+                i += 1;
+                while i < chars.len() && chars[i] != '\'' {
+                    i += 1;
+                }
+                i += 1; // closing quote
+            }
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < chars.len()
+                && (chars[i].is_ascii_alphanumeric()
+                    || chars[i] == '_'
+                    || chars[i] == '.')
+            {
+                // `0..10`: a `.` followed by `.` is a range, not a float
+                if chars[i] == '.' && chars.get(i + 1) == Some(&'.') {
+                    break;
+                }
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Lit,
+                line: pos_line[start],
+                col: pos_col[start],
+            });
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < chars.len()
+                && (chars[i].is_alphanumeric() || chars[i] == '_')
+            {
+                i += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident(chars[start..i].iter().collect()),
+                line: pos_line[start],
+                col: pos_col[start],
+            });
+            continue;
+        }
+        toks.push(Tok {
+            kind: TokKind::Punct(c),
+            line: pos_line[i],
+            col: pos_col[i],
+        });
+        i += 1;
+    }
+    Lexed { toks, pragmas, malformed }
+}
+
+/// If position `i` starts a string literal (plain/raw/byte), return the
+/// index one past its end.
+fn string_end(chars: &[char], i: usize) -> Option<usize> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    let raw = chars.get(j) == Some(&'r');
+    if raw {
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    if raw {
+        while chars.get(j) == Some(&'#') {
+            hashes += 1;
+            j += 1;
+        }
+    }
+    if chars.get(j) != Some(&'"') {
+        return None;
+    }
+    j += 1;
+    if raw {
+        loop {
+            if j >= chars.len() {
+                return Some(j);
+            }
+            if chars[j] == '"' {
+                let mut k = 0usize;
+                while k < hashes && chars.get(j + 1 + k) == Some(&'#') {
+                    k += 1;
+                }
+                if k == hashes {
+                    return Some(j + 1 + hashes);
+                }
+            }
+            j += 1;
+        }
+    }
+    loop {
+        if j >= chars.len() {
+            return Some(j);
+        }
+        match chars[j] {
+            '\\' => j += 2,
+            '"' => return Some(j + 1),
+            _ => j += 1,
+        }
+    }
+}
+
+/// Parse a line comment for the pragma grammar:
+///   `// detlint: allow(R1 [, R2…], reason="…")`
+///   `// detlint: allow-file(R3, reason="…")`
+fn scan_pragma(
+    text: &str,
+    line: u32,
+    pragmas: &mut Vec<Pragma>,
+    malformed: &mut Vec<(u32, String)>,
+) {
+    let t = text.trim_start_matches('/').trim_start_matches('!').trim();
+    let Some(rest) = t.strip_prefix("detlint:") else {
+        return;
+    };
+    let rest = rest.trim();
+    // `allow-file` first: `allow` is its prefix
+    let (file_level, args) = if let Some(a) = rest.strip_prefix("allow-file") {
+        (true, a)
+    } else if let Some(a) = rest.strip_prefix("allow") {
+        (false, a)
+    } else {
+        malformed.push((
+            line,
+            format!("unknown pragma `{rest}` (expected allow(...) or allow-file(...))"),
+        ));
+        return;
+    };
+    let args = args.trim();
+    let inner = match args.strip_prefix('(').and_then(|a| a.strip_suffix(')')) {
+        Some(x) => x,
+        None => {
+            malformed
+                .push((line, "pragma arguments must be parenthesized".into()));
+            return;
+        }
+    };
+    let (rule_part, reason_ok) = match inner.find("reason=") {
+        Some(k) => {
+            let v = inner[k + "reason=".len()..].trim();
+            let quoted =
+                v.len() >= 2 && v.starts_with('"') && v.ends_with('"');
+            (&inner[..k], quoted)
+        }
+        None => (inner, false),
+    };
+    if !reason_ok {
+        malformed.push((
+            line,
+            "pragma requires a quoted reason: allow(R?, reason=\"…\")".into(),
+        ));
+        return;
+    }
+    let rules: Vec<String> = rule_part
+        .split(|ch: char| ch == ',' || ch.is_whitespace())
+        .filter(|s| !s.is_empty())
+        .map(|s| s.to_ascii_uppercase())
+        .collect();
+    let valid = !rules.is_empty()
+        && rules.iter().all(|r| {
+            r == "ALL"
+                || (r.len() > 1
+                    && r.starts_with('R')
+                    && r[1..].chars().all(|c| c.is_ascii_digit()))
+        });
+    if !valid {
+        malformed.push((
+            line,
+            format!("pragma names no valid rules: `{}`", rule_part.trim()),
+        ));
+        return;
+    }
+    pragmas.push(Pragma { line, rules, file_level });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                TokKind::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_emit_no_idents() {
+        let src = r##"
+            let a = "HashMap in a string"; // HashMap in a comment
+            /* HashMap /* nested */ still a comment */
+            let b = r#"raw "HashMap" here"#;
+            let c = b"bytes";
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"HashMap".to_string()), "{ids:?}");
+        assert_eq!(ids, vec!["let", "a", "let", "b", "let", "c"]);
+    }
+
+    #[test]
+    fn lifetimes_do_not_eat_the_following_tokens() {
+        let ids = idents("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert_eq!(ids, vec!["fn", "f", "x", "str", "str", "x"]);
+    }
+
+    #[test]
+    fn char_literals_with_escaped_quote() {
+        let ids = idents(r"let q = '\''; let n = '\n'; next");
+        assert_eq!(ids, vec!["let", "q", "let", "n", "next"]);
+    }
+
+    #[test]
+    fn positions_are_one_based_line_and_col() {
+        let lexed = lex("a\n  bc");
+        assert_eq!(lexed.toks[0].line, 1);
+        assert_eq!(lexed.toks[0].col, 1);
+        assert_eq!(lexed.toks[1].line, 2);
+        assert_eq!(lexed.toks[1].col, 3);
+    }
+
+    #[test]
+    fn pragma_roundtrip() {
+        let lexed = lex(
+            "// detlint: allow(R1, R3, reason=\"seeded by test\")\nlet x = 1;",
+        );
+        assert_eq!(lexed.pragmas.len(), 1);
+        let p = &lexed.pragmas[0];
+        assert_eq!(p.rules, vec!["R1", "R3"]);
+        assert!(!p.file_level);
+        assert_eq!(p.line, 1);
+        assert!(lexed.malformed.is_empty());
+    }
+
+    #[test]
+    fn file_level_pragma_and_case_normalization() {
+        let lexed =
+            lex("// detlint: allow-file(r2, reason=\"finite by input\")");
+        assert_eq!(lexed.pragmas.len(), 1);
+        assert!(lexed.pragmas[0].file_level);
+        assert_eq!(lexed.pragmas[0].rules, vec!["R2"]);
+    }
+
+    #[test]
+    fn pragma_without_reason_is_malformed() {
+        let lexed = lex("// detlint: allow(R1)");
+        assert!(lexed.pragmas.is_empty());
+        assert_eq!(lexed.malformed.len(), 1);
+    }
+
+    #[test]
+    fn non_pragma_comments_are_ignored() {
+        let lexed = lex("// just a note about detlint rules\nfn f() {}");
+        assert!(lexed.pragmas.is_empty());
+        assert!(lexed.malformed.is_empty());
+    }
+}

@@ -1,0 +1,177 @@
+//! detlint — the repo's determinism & concurrency contracts (rules R1–R5)
+//! as a source-level lint over `rust/src/**`.
+//!
+//! The engine's value rests on invariants the compiler cannot see:
+//! bit-exact parity between sequential and sharded slate sweeps,
+//! submission-order determinism across worker counts, and seeded RNG
+//! streams that make live runs replayable. detlint encodes those as
+//! named, individually-suppressible rules; `docs/ARCHITECTURE.md`
+//! ("Determinism contracts") maps each invariant to its rule, and this
+//! crate's README documents every rule with fire/allow examples.
+//!
+//! Suppression, most local first:
+//! - `// detlint: allow(R1, reason="…")` on the finding's line or the
+//!   line above;
+//! - `// detlint: allow-file(R3, reason="…")` anywhere in the file;
+//! - an entry in `tools/detlint/detlint.allow` (`<rule> <path> <reason>`).
+//!
+//! Malformed pragmas are themselves findings (`P0`) and cannot be
+//! suppressed.
+
+pub mod lexer;
+pub mod rules;
+
+use rules::{Finding, RuleSet};
+use std::path::{Path, PathBuf};
+
+/// Tree-scan result.
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub suppressed: usize,
+    pub files: usize,
+}
+
+/// One `detlint.allow` entry: suppress `rule` everywhere in `path`.
+pub struct AllowEntry {
+    pub rule: String,
+    pub path: String,
+}
+
+/// Parse the allowlist file: `<rule> <path> <reason…>` per line, `#`
+/// comments and blank lines ignored. The reason column is mandatory for
+/// the same reason pragmas require one.
+pub fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>, String> {
+    let mut out = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let rule = parts.next().unwrap_or_default();
+        let path = parts.next().unwrap_or_default();
+        let reason = parts.next();
+        if path.is_empty() || reason.is_none() {
+            return Err(format!(
+                "detlint.allow:{}: expected `<rule> <path> <reason…>`, got `{line}`",
+                idx + 1
+            ));
+        }
+        out.push(AllowEntry { rule: rule.to_string(), path: path.to_string() });
+    }
+    Ok(out)
+}
+
+/// Recursively collect `*.rs` files, sorted for deterministic output.
+pub fn collect_rs_files(
+    dir: &Path,
+    out: &mut Vec<PathBuf>,
+) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<Result<_, _>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs_files(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn normalize(p: &Path) -> String {
+    let s = p.to_string_lossy().replace('\\', "/");
+    s.strip_prefix("./").unwrap_or(&s).to_string()
+}
+
+/// Lint every `.rs` file under `paths` (files or directories), applying
+/// path-scoped rules and the allowlist.
+pub fn scan_tree(
+    paths: &[PathBuf],
+    allow: &[AllowEntry],
+) -> std::io::Result<Report> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for p in paths {
+        if p.is_dir() {
+            collect_rs_files(p, &mut files)?;
+        } else {
+            files.push(p.clone());
+        }
+    }
+    files.sort();
+    files.dedup();
+    let mut findings = Vec::new();
+    let mut suppressed = 0usize;
+    for f in &files {
+        let src = std::fs::read_to_string(f)?;
+        let rel = normalize(f);
+        let mut out = rules::scan_source(&rel, &src, RuleSet::for_path(&rel));
+        suppressed += out.suppressed;
+        out.findings.retain(|fi| {
+            let hit = allow.iter().any(|a| {
+                a.rule.eq_ignore_ascii_case(fi.rule)
+                    && (a.path == fi.file || fi.file.ends_with(&a.path))
+            });
+            if hit {
+                suppressed += 1;
+            }
+            !hit
+        });
+        findings.append(&mut out.findings);
+    }
+    Ok(Report { findings, suppressed, files: files.len() })
+}
+
+/// Rustc-style rendering: `file:line:col: [rule] message`.
+pub fn fmt_finding(f: &Finding) -> String {
+    format!("{}:{}:{}: [{}] {}", f.file, f.line, f.col, f.rule, f.msg)
+}
+
+/// Run the fixture self-test: every rule R1–R5 must fire on its `*_fire.rs`
+/// fixture and stay silent on its `*_allow.rs` variant (which contains
+/// both a compliant rewrite and a pragma-suppressed violation, proving the
+/// suppression machinery too). Returns one human-readable line per check.
+pub fn self_test(fixtures: &Path) -> Result<Vec<String>, String> {
+    let mut lines = Vec::new();
+    for n in 1..=5u32 {
+        let rule = format!("R{n}");
+        for (suffix, expect_fire) in [("fire", true), ("allow", false)] {
+            let name = format!("r{n}_{suffix}.rs");
+            let path = fixtures.join(&name);
+            let src = std::fs::read_to_string(&path)
+                .map_err(|e| format!("{}: {e}", path.display()))?;
+            let out = rules::scan_source(
+                &format!("fixtures/{name}"),
+                &src,
+                RuleSet::all(),
+            );
+            if expect_fire {
+                let hits =
+                    out.findings.iter().filter(|f| f.rule == rule).count();
+                if hits == 0 {
+                    return Err(format!(
+                        "{name}: expected {rule} to fire, got: {:?}",
+                        out.findings
+                            .iter()
+                            .map(fmt_finding)
+                            .collect::<Vec<_>>()
+                    ));
+                }
+                lines.push(format!("{rule} fires on {name} ({hits}x)"));
+            } else if let Some(f) = out.findings.first() {
+                return Err(format!(
+                    "{name}: expected a clean pass, got: {}",
+                    fmt_finding(f)
+                ));
+            } else {
+                lines.push(format!(
+                    "{rule} passes {name} ({} pragma-suppressed)",
+                    out.suppressed
+                ));
+            }
+        }
+    }
+    Ok(lines)
+}

@@ -1,0 +1,130 @@
+//! detlint CLI. Exit codes: 0 clean, 1 findings, 2 usage/IO error.
+//!
+//! Argument parsing is hand-rolled like the main crate's `cli.rs` — the
+//! offline registry has no clap.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "\
+detlint — determinism & concurrency contract linter (rules R1–R5)
+
+USAGE:
+    cargo run -p detlint [-- OPTIONS] [PATH...]
+
+    PATH         files or directories to lint (default: <root>/rust/src)
+
+OPTIONS:
+    --root DIR   repo root the default scan paths and allowlist resolve
+                 against (default: .)
+    --allow FILE allowlist file (default: <root>/tools/detlint/detlint.allow)
+    --self-test  verify every rule against its fire/allow fixtures and exit
+    --rules      print the rule catalog and exit
+    -h, --help   this text";
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut allow_path: Option<PathBuf> = None;
+    let mut selftest = false;
+    let mut list_rules = false;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = Some(PathBuf::from(v)),
+                None => return usage_err("--root needs a value"),
+            },
+            "--allow" => match args.next() {
+                Some(v) => allow_path = Some(PathBuf::from(v)),
+                None => return usage_err("--allow needs a value"),
+            },
+            "--self-test" => selftest = true,
+            "--rules" => list_rules = true,
+            "-h" | "--help" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            p if !p.starts_with('-') => paths.push(PathBuf::from(p)),
+            other => {
+                return usage_err(&format!("unknown flag `{other}`"));
+            }
+        }
+    }
+
+    if list_rules {
+        for (id, contract) in detlint::rules::RULES {
+            println!("{id}  {contract}");
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    if selftest {
+        // fixtures live next to this crate's manifest, wherever the
+        // working directory is
+        let fixtures =
+            PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/fixtures"));
+        return match detlint::self_test(&fixtures) {
+            Ok(lines) => {
+                for l in lines {
+                    println!("detlint self-test: {l}");
+                }
+                println!("detlint self-test: all rules verified");
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("detlint self-test FAILED: {e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+
+    let root = root.unwrap_or_else(|| PathBuf::from("."));
+    let scan: Vec<PathBuf> =
+        if paths.is_empty() { vec![root.join("rust/src")] } else { paths };
+    let allow_file = allow_path.or_else(|| {
+        let p = root.join("tools/detlint/detlint.allow");
+        p.exists().then_some(p)
+    });
+    let allow = match &allow_file {
+        Some(p) => {
+            let text = match std::fs::read_to_string(p) {
+                Ok(t) => t,
+                Err(e) => return usage_err(&format!("{}: {e}", p.display())),
+            };
+            match detlint::parse_allowlist(&text) {
+                Ok(a) => a,
+                Err(e) => return usage_err(&e),
+            }
+        }
+        None => Vec::new(),
+    };
+
+    match detlint::scan_tree(&scan, &allow) {
+        Err(e) => {
+            eprintln!("detlint: {e}");
+            ExitCode::from(2)
+        }
+        Ok(rep) => {
+            for f in &rep.findings {
+                println!("{}", detlint::fmt_finding(f));
+            }
+            println!(
+                "detlint: {} unsuppressed finding(s), {} suppressed, {} file(s) scanned",
+                rep.findings.len(),
+                rep.suppressed,
+                rep.files
+            );
+            if rep.findings.is_empty() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+    }
+}
+
+fn usage_err(msg: &str) -> ExitCode {
+    eprintln!("detlint: {msg}\n\n{USAGE}");
+    ExitCode::from(2)
+}

@@ -1,0 +1,687 @@
+//! The determinism & concurrency contracts, rules R1–R5, matched over the
+//! token stream produced by [`crate::lexer`].
+//!
+//! Every rule reports rustc-style `file:line:col` findings with a rule id,
+//! and every finding is suppressible by an inline pragma
+//! (`// detlint: allow(R?, reason="…")` on the same or previous line, or
+//! `allow-file` for the whole file) or by the allowlist file. Malformed
+//! pragmas surface as `P0` findings, which nothing can suppress.
+
+use crate::lexer::{lex, Pragma, Tok, TokKind};
+
+/// Modules whose runs must be bit-reproducible from the seed (R1/R3).
+pub const DET_MODULES: &[&str] =
+    &["engine", "acq", "heuristics", "models", "opt", "linalg"];
+
+/// Modules with real cross-thread state (R4/R5).
+pub const CONCURRENT_MODULES: &[&str] = &["coordinator", "engine"];
+
+/// Rule id → one-line contract, as printed by `detlint --rules`.
+pub const RULES: &[(&str, &str)] = &[
+    (
+        "R1",
+        "no iteration over HashMap/HashSet in deterministic modules \
+         (engine, acq, heuristics, models, opt, linalg); keyed lookups are \
+         fine, ordered drains take a BTreeMap or an explicit sort",
+    ),
+    (
+        "R2",
+        "no partial_cmp ranking (NaN-unsafe); route comparisons through \
+         util::stats::cmp_nan_low / cmp_nan_high",
+    ),
+    (
+        "R3",
+        "no ambient clock or entropy (Instant, SystemTime, RandomState, \
+         thread_rng) in seeded modules; route timing through util::timer \
+         and randomness through the run's seeded util::Rng",
+    ),
+    (
+        "R4",
+        "no .lock().unwrap()/.expect() in coordinator/engine library code; \
+         tolerate poisoning (PoisonError::into_inner) or allow with a \
+         reason",
+    ),
+    (
+        "R5",
+        "no JoinHandle::join while a result receiver is live in the same \
+         scope; drop/take the receiver first (the WorkerPool shutdown \
+         deadlock shape)",
+    ),
+    ("P0", "malformed `// detlint:` pragma (cannot be suppressed)"),
+];
+
+/// One reported violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// Which rules apply to one file.
+#[derive(Debug, Clone, Copy)]
+pub struct RuleSet {
+    pub r1: bool,
+    pub r2: bool,
+    pub r3: bool,
+    pub r4: bool,
+    pub r5: bool,
+}
+
+impl RuleSet {
+    /// Every rule on — fixture/self-test mode.
+    pub fn all() -> RuleSet {
+        RuleSet { r1: true, r2: true, r3: true, r4: true, r5: true }
+    }
+
+    /// Scope rules by module path: R2 is tree-wide, R1/R3 cover the
+    /// deterministic modules, R4/R5 the concurrent ones.
+    pub fn for_path(rel: &str) -> RuleSet {
+        let p = rel.replace('\\', "/");
+        let in_any = |mods: &[&str]| {
+            mods.iter().any(|m| {
+                p.contains(&format!("src/{m}/"))
+                    || p.ends_with(&format!("src/{m}.rs"))
+            })
+        };
+        RuleSet {
+            r1: in_any(DET_MODULES),
+            r2: true,
+            r3: in_any(DET_MODULES),
+            r4: in_any(CONCURRENT_MODULES),
+            r5: in_any(CONCURRENT_MODULES),
+        }
+    }
+}
+
+/// Scan result for one file: surviving findings plus the count of
+/// pragma-suppressed ones.
+pub struct ScanOutcome {
+    pub findings: Vec<Finding>,
+    pub suppressed: usize,
+}
+
+/// Lint one file's source under the given rule scope.
+pub fn scan_source(rel: &str, src: &str, rules: RuleSet) -> ScanOutcome {
+    let lexed = lex(src);
+    let toks = &lexed.toks;
+    let excl = excluded_ranges(toks);
+    let mut raw: Vec<Finding> = Vec::new();
+    for (line, msg) in &lexed.malformed {
+        raw.push(Finding {
+            file: rel.to_string(),
+            line: *line,
+            col: 1,
+            rule: "P0",
+            msg: msg.clone(),
+        });
+    }
+    if rules.r1 {
+        r1_hash_iteration(rel, toks, &excl, &mut raw);
+    }
+    if rules.r2 {
+        r2_partial_cmp(rel, toks, &excl, &mut raw);
+    }
+    if rules.r3 {
+        r3_ambient_entropy(rel, toks, &excl, &mut raw);
+    }
+    if rules.r4 {
+        r4_lock_unwrap(rel, toks, &excl, &mut raw);
+    }
+    if rules.r5 {
+        r5_join_order(rel, toks, &excl, &mut raw);
+    }
+    let mut findings = Vec::new();
+    let mut suppressed = 0usize;
+    for f in raw {
+        if f.rule != "P0" && pragma_suppresses(&lexed.pragmas, &f) {
+            suppressed += 1;
+        } else {
+            findings.push(f);
+        }
+    }
+    findings.sort_by(|a, b| {
+        (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule))
+    });
+    findings
+        .dedup_by(|a, b| a.line == b.line && a.col == b.col && a.rule == b.rule);
+    ScanOutcome { findings, suppressed }
+}
+
+fn pragma_suppresses(ps: &[Pragma], f: &Finding) -> bool {
+    ps.iter().any(|p| {
+        let rule_hit = p.rules.iter().any(|r| r == "ALL" || r == f.rule);
+        rule_hit && (p.file_level || f.line == p.line || f.line == p.line + 1)
+    })
+}
+
+// ---- token-stream helpers -------------------------------------------------
+
+fn ident_at<'t>(toks: &'t [Tok], i: usize) -> Option<&'t str> {
+    match toks.get(i).map(|t| &t.kind) {
+        Some(TokKind::Ident(s)) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn is_ident(toks: &[Tok], i: usize, s: &str) -> bool {
+    ident_at(toks, i) == Some(s)
+}
+
+fn is_punct(toks: &[Tok], i: usize, c: char) -> bool {
+    matches!(toks.get(i).map(|t| &t.kind), Some(TokKind::Punct(p)) if *p == c)
+}
+
+/// Scan forward up to `limit` tokens for any of `targets`, stopping at
+/// punctuation that ends a type or initializer position.
+fn scan_for(toks: &[Tok], start: usize, limit: usize, targets: &[&str]) -> bool {
+    for j in start..(start + limit).min(toks.len()) {
+        match &toks[j].kind {
+            TokKind::Ident(s) if targets.iter().any(|t| t == s) => {
+                return true;
+            }
+            TokKind::Punct(';')
+            | TokKind::Punct('{')
+            | TokKind::Punct(',')
+            | TokKind::Punct(')') => return false,
+            _ => {}
+        }
+    }
+    false
+}
+
+fn push(
+    out: &mut Vec<Finding>,
+    rel: &str,
+    t: &Tok,
+    rule: &'static str,
+    msg: String,
+) {
+    out.push(Finding {
+        file: rel.to_string(),
+        line: t.line,
+        col: t.col,
+        rule,
+        msg,
+    });
+}
+
+/// Token ranges under a `#[cfg(...)]` whose arguments mention `test`
+/// (covers `cfg(test)` and combinations like `cfg(all(test, not(loom)))`).
+/// Test-only code is exempt from every rule: tests may iterate maps, take
+/// wall-clock timestamps and join freely.
+fn excluded_ranges(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(is_punct(toks, i, '#')
+            && is_punct(toks, i + 1, '[')
+            && is_ident(toks, i + 2, "cfg")
+            && is_punct(toks, i + 3, '('))
+        {
+            i += 1;
+            continue;
+        }
+        let mut depth = 1usize;
+        let mut j = i + 4;
+        let mut has_test = false;
+        while j < toks.len() && depth > 0 {
+            if is_punct(toks, j, '(') {
+                depth += 1;
+            } else if is_punct(toks, j, ')') {
+                depth -= 1;
+            } else if is_ident(toks, j, "test") {
+                has_test = true;
+            }
+            j += 1;
+        }
+        if !has_test || !is_punct(toks, j, ']') {
+            i = j;
+            continue;
+        }
+        // skip any further attributes on the same item
+        let mut k = j + 1;
+        while is_punct(toks, k, '#') && is_punct(toks, k + 1, '[') {
+            let mut d = 1usize;
+            k += 2;
+            while k < toks.len() && d > 0 {
+                if is_punct(toks, k, '[') {
+                    d += 1;
+                } else if is_punct(toks, k, ']') {
+                    d -= 1;
+                }
+                k += 1;
+            }
+        }
+        // the item body: through the matching `}` of its first `{`, or to
+        // a top-level `;` for brace-less items
+        let mut d = 0usize;
+        let end = loop {
+            if k >= toks.len() {
+                break toks.len();
+            }
+            if is_punct(toks, k, '{') {
+                d += 1;
+            } else if is_punct(toks, k, '}') {
+                d = d.saturating_sub(1);
+                if d == 0 {
+                    break k + 1;
+                }
+            } else if is_punct(toks, k, ';') && d == 0 {
+                break k + 1;
+            }
+            k += 1;
+        };
+        out.push((i, end));
+        i = end;
+    }
+    out
+}
+
+fn in_excluded(excl: &[(usize, usize)], i: usize) -> bool {
+    excl.iter().any(|&(a, b)| i >= a && i < b)
+}
+
+// ---- R1: seeded-order iteration -------------------------------------------
+
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_keys",
+    "into_values",
+    "retain",
+];
+
+fn note_name(names: &mut Vec<String>, n: &str) {
+    if !names.iter().any(|x| x == n) {
+        names.push(n.to_string());
+    }
+}
+
+fn r1_hash_iteration(
+    rel: &str,
+    toks: &[Tok],
+    excl: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    let hash = &["HashMap", "HashSet"];
+    // pass 1: names whose declared type or initializer is a hash container
+    // (`name: HashMap<..>` in params/fields/lets, `let name = HashMap::..`)
+    let mut names: Vec<String> = Vec::new();
+    for i in 0..toks.len() {
+        if let Some(name) = ident_at(toks, i) {
+            let path_pos = i > 0
+                && (is_punct(toks, i - 1, ':') || is_punct(toks, i - 1, '.'));
+            if !path_pos
+                && is_punct(toks, i + 1, ':')
+                && !is_punct(toks, i + 2, ':')
+                && scan_for(toks, i + 2, 10, hash)
+            {
+                note_name(&mut names, name);
+            }
+        }
+        if is_ident(toks, i, "let") {
+            let mut k = i + 1;
+            if is_ident(toks, k, "mut") {
+                k += 1;
+            }
+            if let Some(name) = ident_at(toks, k) {
+                if is_punct(toks, k + 1, '=') && scan_for(toks, k + 2, 10, hash)
+                {
+                    note_name(&mut names, name);
+                }
+            }
+        }
+    }
+    // pass 2: order-sensitive drains of those names
+    for i in 0..toks.len() {
+        if in_excluded(excl, i) {
+            continue;
+        }
+        if let Some(name) = ident_at(toks, i) {
+            if names.iter().any(|n| n == name)
+                && is_punct(toks, i + 1, '.')
+                && ident_at(toks, i + 2)
+                    .is_some_and(|m| ITER_METHODS.contains(&m))
+                && is_punct(toks, i + 3, '(')
+            {
+                let m = ident_at(toks, i + 2).unwrap_or("iter");
+                push(
+                    out,
+                    rel,
+                    &toks[i + 2],
+                    "R1",
+                    format!(
+                        "`{name}.{m}()` iterates a HashMap/HashSet in a \
+                         deterministic module; its order is seeded per \
+                         instance — use a BTreeMap/BTreeSet, sort the drain \
+                         explicitly, or keep access keyed"
+                    ),
+                );
+            }
+        }
+        if is_ident(toks, i, "for") {
+            if let Some((j, name)) = for_loop_target(toks, i) {
+                if names.iter().any(|n| n == name) {
+                    push(
+                        out,
+                        rel,
+                        &toks[j],
+                        "R1",
+                        format!(
+                            "`for … in {name}` iterates a HashMap/HashSet in \
+                             a deterministic module; its order is seeded per \
+                             instance — use a BTreeMap/BTreeSet or an \
+                             explicit sort"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// For `for <pat> in <expr> {`, return the last identifier of a plain
+/// path/field expression (`xs`, `self.cache`) and its token index — only
+/// when the loop body opens immediately after, so iterator-adaptor chains
+/// (`xs.iter().map(…)`) are left to the method matcher.
+fn for_loop_target<'t>(
+    toks: &'t [Tok],
+    i: usize,
+) -> Option<(usize, &'t str)> {
+    let mut j = i + 1;
+    let limit = (i + 16).min(toks.len());
+    while j < limit && !is_ident(toks, j, "in") {
+        j += 1;
+    }
+    if j >= limit {
+        return None;
+    }
+    j += 1;
+    while is_punct(toks, j, '&') || is_ident(toks, j, "mut") {
+        j += 1;
+    }
+    let mut last: Option<(usize, &str)> = None;
+    while let Some(s) = ident_at(toks, j) {
+        last = Some((j, s));
+        if is_punct(toks, j + 1, '.') && ident_at(toks, j + 2).is_some() {
+            j += 2;
+        } else {
+            j += 1;
+            break;
+        }
+    }
+    if !is_punct(toks, j, '{') {
+        return None;
+    }
+    last
+}
+
+// ---- R2: NaN-unsafe ranking -----------------------------------------------
+
+fn r2_partial_cmp(
+    rel: &str,
+    toks: &[Tok],
+    excl: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    for i in 0..toks.len() {
+        if in_excluded(excl, i) {
+            continue;
+        }
+        if is_ident(toks, i, "partial_cmp") {
+            push(
+                out,
+                rel,
+                &toks[i],
+                "R2",
+                "`partial_cmp` ranking is NaN-unsafe (panics or silently \
+                 misorders); route through util::stats::cmp_nan_low / \
+                 cmp_nan_high"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+// ---- R3: ambient clock / entropy ------------------------------------------
+
+const AMBIENT: &[&str] = &[
+    "Instant",
+    "SystemTime",
+    "UNIX_EPOCH",
+    "RandomState",
+    "thread_rng",
+    "from_entropy",
+];
+
+fn r3_ambient_entropy(
+    rel: &str,
+    toks: &[Tok],
+    excl: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    for i in 0..toks.len() {
+        if in_excluded(excl, i) {
+            continue;
+        }
+        if let Some(name) = ident_at(toks, i) {
+            if AMBIENT.contains(&name) {
+                push(
+                    out,
+                    rel,
+                    &toks[i],
+                    "R3",
+                    format!(
+                        "ambient clock/entropy `{name}` in a seeded module \
+                         breaks replayability; route timing through \
+                         util::timer::Timer and randomness through the \
+                         run's seeded util::Rng"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// ---- R4: unhandled lock poisoning -----------------------------------------
+
+fn r4_lock_unwrap(
+    rel: &str,
+    toks: &[Tok],
+    excl: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    for i in 0..toks.len() {
+        if in_excluded(excl, i) {
+            continue;
+        }
+        if is_punct(toks, i, '.')
+            && is_ident(toks, i + 1, "lock")
+            && is_punct(toks, i + 2, '(')
+            && is_punct(toks, i + 3, ')')
+            && is_punct(toks, i + 4, '.')
+        {
+            if let Some(m) = ident_at(toks, i + 5) {
+                if (m == "unwrap" || m == "expect")
+                    && is_punct(toks, i + 6, '(')
+                {
+                    push(
+                        out,
+                        rel,
+                        &toks[i + 5],
+                        "R4",
+                        format!(
+                            "`.lock().{m}(…)` propagates lock poisoning as \
+                             a panic in library code; use \
+                             `.unwrap_or_else(PoisonError::into_inner)` \
+                             where continuing is sound, or allow with a \
+                             reason pragma where crashing is the right \
+                             response"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---- R5: join while a result receiver is live ------------------------------
+
+fn r5_join_order(
+    rel: &str,
+    toks: &[Tok],
+    excl: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !is_ident(toks, i, "fn") {
+            i += 1;
+            continue;
+        }
+        // find the body's opening brace (or `;` for bare signatures)
+        let mut j = i + 1;
+        let mut open = None;
+        while j < toks.len() {
+            if is_punct(toks, j, ';') {
+                break;
+            }
+            if is_punct(toks, j, '{') {
+                open = Some(j);
+                break;
+            }
+            j += 1;
+        }
+        let Some(open) = open else {
+            i = j + 1;
+            continue;
+        };
+        let mut d = 0usize;
+        let mut k = open;
+        let mut close = toks.len();
+        while k < toks.len() {
+            if is_punct(toks, k, '{') {
+                d += 1;
+            } else if is_punct(toks, k, '}') {
+                d -= 1;
+                if d == 0 {
+                    close = k;
+                    break;
+                }
+            }
+            k += 1;
+        }
+        check_join_body(rel, toks, excl, open, close, out);
+        // step inside so nested fns are scanned too (duplicate findings
+        // from overlapping scopes are deduped in scan_source)
+        i = open + 1;
+    }
+}
+
+fn check_join_body(
+    rel: &str,
+    toks: &[Tok],
+    excl: &[(usize, usize)],
+    start: usize,
+    end: usize,
+    out: &mut Vec<Finding>,
+) {
+    // `.join()` with no arguments — JoinHandle::join, not str/Path join
+    let mut first_join = None;
+    for t in start..end {
+        if in_excluded(excl, t) {
+            continue;
+        }
+        if is_punct(toks, t, '.')
+            && is_ident(toks, t + 1, "join")
+            && is_punct(toks, t + 2, '(')
+            && is_punct(toks, t + 3, ')')
+        {
+            first_join = Some(t + 1);
+            break;
+        }
+    }
+    let Some(join_at) = first_join else {
+        return;
+    };
+    // receiver-like bindings in scope: `rx`, `*_rx`, `receiver`, or any
+    // name annotated with a `Receiver<…>` type
+    let mut rxs: Vec<&str> = Vec::new();
+    for t in start..end {
+        if let Some(s) = ident_at(toks, t) {
+            let rx_like = s == "rx"
+                || s == "receiver"
+                || s.ends_with("_rx")
+                || (is_punct(toks, t + 1, ':')
+                    && !is_punct(toks, t + 2, ':')
+                    && scan_for(toks, t + 2, 10, &["Receiver"]));
+            if rx_like && !rxs.contains(&s) {
+                rxs.push(s);
+            }
+        }
+    }
+    for name in rxs {
+        if released_before(toks, start, join_at, name) {
+            continue;
+        }
+        push(
+            out,
+            rel,
+            &toks[join_at],
+            "R5",
+            format!(
+                "`join()` is reached while result receiver `{name}` is \
+                 still live in this scope — drop/take the receiver before \
+                 joining: a worker blocked in `send` on a full bounded \
+                 channel only observes shutdown through the channel \
+                 disconnecting (the PR 2 WorkerPool deadlock)"
+            ),
+        );
+    }
+}
+
+/// Was `name` released (`name.take(…)`, `name = None`, `drop(… name …)`)
+/// anywhere before the join?
+fn released_before(
+    toks: &[Tok],
+    start: usize,
+    before: usize,
+    name: &str,
+) -> bool {
+    for t in start..before {
+        if ident_at(toks, t) == Some(name) {
+            if is_punct(toks, t + 1, '.')
+                && is_ident(toks, t + 2, "take")
+                && is_punct(toks, t + 3, '(')
+            {
+                return true;
+            }
+            if is_punct(toks, t + 1, '=') && is_ident(toks, t + 2, "None") {
+                return true;
+            }
+        }
+        if is_ident(toks, t, "drop") && is_punct(toks, t + 1, '(') {
+            let mut d = 1usize;
+            let mut k = t + 2;
+            while k < before && d > 0 {
+                if is_punct(toks, k, '(') {
+                    d += 1;
+                } else if is_punct(toks, k, ')') {
+                    d -= 1;
+                } else if ident_at(toks, k) == Some(name) {
+                    return true;
+                }
+                k += 1;
+            }
+        }
+    }
+    false
+}

@@ -1,0 +1,150 @@
+//! The fixture self-test as a tier-1 test (`cargo test -p detlint`) —
+//! the same checks `cargo run -p detlint -- --self-test` performs in the
+//! CI lint job, plus targeted assertions on the suppression machinery,
+//! rule scoping, and the R5 pre-fix pattern.
+
+use detlint::rules::{scan_source, RuleSet};
+use std::path::PathBuf;
+
+fn fixtures() -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/fixtures"))
+}
+
+fn fixture_src(name: &str) -> String {
+    std::fs::read_to_string(fixtures().join(name)).expect(name)
+}
+
+#[test]
+fn every_rule_fires_and_every_allow_variant_passes() {
+    let lines = detlint::self_test(&fixtures()).expect("self-test");
+    // five rules x (fire + allow)
+    assert_eq!(lines.len(), 10, "{lines:?}");
+}
+
+/// The tentpole regression tie-in: R5 must fire on PR 2's pre-fix
+/// `WorkerPool::close` shape (join while the bounded result receiver is
+/// still live), under the real module scoping for `coordinator/pool.rs`.
+#[test]
+fn r5_fires_on_the_pre_fix_worker_pool_shutdown_shape() {
+    let rel = "rust/src/coordinator/pool.rs";
+    let out = scan_source(rel, &fixture_src("r5_fire.rs"), RuleSet::for_path(rel));
+    let r5: Vec<_> = out.findings.iter().filter(|f| f.rule == "R5").collect();
+    assert_eq!(r5.len(), 1, "{:?}", out.findings);
+    assert!(r5[0].msg.contains("result_rx"), "{}", r5[0].msg);
+}
+
+#[test]
+fn the_fixed_pool_shutdown_passes_r5() {
+    let rel = "rust/src/coordinator/pool.rs";
+    let out = scan_source(rel, &fixture_src("r5_allow.rs"), RuleSet::for_path(rel));
+    assert!(
+        out.findings.is_empty(),
+        "{:?}",
+        out.findings.iter().map(detlint::fmt_finding).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn rule_scoping_follows_module_paths() {
+    // HashMap iteration: flagged in a deterministic module ...
+    let src = "fn f(m: &std::collections::HashMap<u64, u64>) -> u64 {\n\
+               let mut s = 0;\n\
+               for (_, v) in m {\n    s += v;\n}\ns\n}\n";
+    let det = scan_source("rust/src/engine/x.rs", src, RuleSet::for_path("rust/src/engine/x.rs"));
+    assert_eq!(det.findings.len(), 1, "{:?}", det.findings);
+    assert_eq!(det.findings[0].rule, "R1");
+    // ... but not in, say, the experiments harness (R1 out of scope there)
+    let exp = scan_source(
+        "rust/src/experiments/x.rs",
+        src,
+        RuleSet::for_path("rust/src/experiments/x.rs"),
+    );
+    assert!(exp.findings.is_empty(), "{:?}", exp.findings);
+    // R2 is tree-wide
+    let r2 = scan_source(
+        "rust/src/experiments/x.rs",
+        "fn g(a: f64, b: f64) { a.partial_cmp(&b); }",
+        RuleSet::for_path("rust/src/experiments/x.rs"),
+    );
+    assert_eq!(r2.findings.len(), 1);
+    assert_eq!(r2.findings[0].rule, "R2");
+}
+
+#[test]
+fn cfg_test_regions_are_exempt() {
+    let src = "\
+        pub fn lib_code() {}\n\
+        #[cfg(test)]\n\
+        mod tests {\n\
+            fn stamp() -> std::time::Instant {\n\
+                std::time::Instant::now()\n\
+            }\n\
+        }\n";
+    let out = scan_source("rust/src/engine/x.rs", src, RuleSet::all());
+    assert!(out.findings.is_empty(), "{:?}", out.findings);
+    // combinations like cfg(all(test, not(loom))) count as test regions too
+    let src2 = "\
+        #[cfg(all(test, not(loom)))]\n\
+        mod tests {\n\
+            fn t() { let m: std::collections::HashMap<u8, u8> = Default::default(); for _ in m.keys() {} }\n\
+        }\n";
+    let out2 = scan_source("rust/src/engine/x.rs", src2, RuleSet::all());
+    assert!(out2.findings.is_empty(), "{:?}", out2.findings);
+}
+
+#[test]
+fn pragmas_suppress_only_named_rules_on_adjacent_lines() {
+    // same-line suppression
+    let same = "fn f(a: f64, b: f64) { a.partial_cmp(&b); } // detlint: allow(R2, reason=\"test\")";
+    let out = scan_source("rust/src/engine/x.rs", same, RuleSet::all());
+    assert!(out.findings.is_empty(), "{:?}", out.findings);
+    assert_eq!(out.suppressed, 1);
+    // a pragma for a different rule does not suppress
+    let wrong = "fn f(a: f64, b: f64) { a.partial_cmp(&b); } // detlint: allow(R1, reason=\"test\")";
+    let out = scan_source("rust/src/engine/x.rs", wrong, RuleSet::all());
+    assert_eq!(out.findings.len(), 1);
+    // and a pragma two lines above is out of range
+    let far = "// detlint: allow(R2, reason=\"test\")\n\n\
+               fn f(a: f64, b: f64) { a.partial_cmp(&b); }";
+    let out = scan_source("rust/src/engine/x.rs", far, RuleSet::all());
+    assert_eq!(out.findings.len(), 1);
+    // allow-file reaches everywhere
+    let file = "// detlint: allow-file(R2, reason=\"test\")\n\n\
+                fn f(a: f64, b: f64) { a.partial_cmp(&b); }";
+    let out = scan_source("rust/src/engine/x.rs", file, RuleSet::all());
+    assert!(out.findings.is_empty());
+    assert_eq!(out.suppressed, 1);
+}
+
+#[test]
+fn malformed_pragmas_are_unsuppressible_findings() {
+    let src = "// detlint: allow(R2)\n\
+               fn f(a: f64, b: f64) { a.partial_cmp(&b); }";
+    let out = scan_source("rust/src/engine/x.rs", src, RuleSet::all());
+    let rules: Vec<&str> = out.findings.iter().map(|f| f.rule).collect();
+    // the reason-less pragma is a P0 *and* fails to suppress the R2
+    assert!(rules.contains(&"P0"), "{rules:?}");
+    assert!(rules.contains(&"R2"), "{rules:?}");
+}
+
+#[test]
+fn allowlist_parses_and_rejects_reasonless_lines() {
+    let ok = "# comment\nR3 rust/src/engine/x.rs diagnostics only\n";
+    let entries = detlint::parse_allowlist(ok).expect("parses");
+    assert_eq!(entries.len(), 1);
+    assert_eq!(entries[0].rule, "R3");
+    assert!(detlint::parse_allowlist("R3 rust/src/engine/x.rs\n").is_err());
+}
+
+#[test]
+fn keyed_hash_access_is_not_flagged() {
+    let src = "\
+        use std::collections::HashMap;\n\
+        fn f(m: &mut HashMap<u64, u64>) -> Option<u64> {\n\
+            m.insert(1, 2);\n\
+            m.remove(&3);\n\
+            m.get(&1).copied()\n\
+        }\n";
+    let out = scan_source("rust/src/engine/x.rs", src, RuleSet::all());
+    assert!(out.findings.is_empty(), "{:?}", out.findings);
+}

@@ -1,0 +1,3 @@
+//! Placeholder library target; the loom models live in
+//! `tests/pool_model.rs` and only compile with `RUSTFLAGS="--cfg loom"`.
+//! See Cargo.toml for why this crate sits outside the workspace.

@@ -1,0 +1,120 @@
+//! Loom interleaving models of the `WorkerPool` shutdown protocol
+//! (`rust/src/coordinator/pool.rs::close`) over the shared bounded channel
+//! in `rust/src/coordinator/sync.rs` — included below by `#[path]`, so the
+//! model can never drift from the production shim's source.
+//!
+//! What loom buys over the timing-based regression tests in `pool.rs`:
+//! those tests catch the deadlock only when the scheduler happens to park
+//! a worker in `send` at the wrong moment; loom *enumerates* the
+//! interleavings, so both directions are checked exhaustively —
+//! the fixed ordering (receiver released before join) terminates on every
+//! schedule, and the pre-fix ordering (join with the receiver live) is
+//! positively shown to deadlock rather than merely suspected to.
+//!
+//! Run with: `RUSTFLAGS="--cfg loom" cargo test --release` from this
+//! crate's directory (the scheduled CI job does exactly that; detlint's
+//! R5 is the static half of the same contract).
+#![allow(unknown_lints)]
+#![allow(unexpected_cfgs)]
+#![cfg(loom)]
+
+#[path = "../../../rust/src/coordinator/sync.rs"]
+mod csync;
+
+use csync::queue::bounded;
+use loom::thread;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// The fixed `close()` ordering: drop the result receiver *before*
+/// joining. The worker may be parked in `send` on the full (capacity-1)
+/// result channel at that moment; every interleaving must terminate.
+#[test]
+fn shutdown_drops_receiver_before_join() {
+    loom::model(|| {
+        let (tx, rx) = bounded::<u32>(1);
+        let h = thread::spawn(move || {
+            // worker: push results until shutdown disconnects the channel
+            let mut sent = 0u32;
+            while tx.send(sent).is_ok() {
+                sent += 1;
+                if sent > 2 {
+                    break; // bound the model's state space
+                }
+            }
+        });
+        drop(rx); // release the receiver first ...
+        h.join().unwrap(); // ... then join: terminates on every schedule
+    });
+}
+
+/// The pre-fix ordering join-deadlocks: with the receiver still live and
+/// the capacity-1 result channel full, the worker is parked in `send`
+/// waiting for a `recv` that never comes while `join` waits for the
+/// worker. Loom detects the cycle and panics; the catch_unwind asserts
+/// that at least one interleaving really does deadlock — this is the
+/// dynamic proof behind detlint rule R5 and PR 2's fix.
+#[test]
+fn join_with_live_receiver_deadlocks() {
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        loom::model(|| {
+            let (tx, rx) = bounded::<u32>(1);
+            let h = thread::spawn(move || {
+                let _ = tx.send(1);
+                let _ = tx.send(2); // blocks: capacity 1, nobody receiving
+            });
+            h.join().unwrap(); // joins while `rx` is still alive
+            drop(rx);
+        });
+    }));
+    assert!(
+        result.is_err(),
+        "expected loom to detect the join/send deadlock in the pre-fix \
+         ordering, but every interleaving terminated"
+    );
+}
+
+/// The full pool shape at model scale: a submit channel feeding a worker
+/// loop that forwards into a capacity-1 result channel, shut down exactly
+/// like `WorkerPool::close` (submit sender taken, receiver released, then
+/// join) with jobs still in flight.
+#[test]
+fn pool_loop_shutdown_with_full_result_channel() {
+    loom::model(|| {
+        let (submit_tx, submit_rx) = bounded::<u32>(2);
+        let (result_tx, result_rx) = bounded::<u32>(1);
+        let h = thread::spawn(move || {
+            // the worker loop from pool.rs: recv until the submit queue
+            // closes, forward until the result receiver disappears
+            while let Ok(job) = submit_rx.recv() {
+                if result_tx.send(job).is_err() {
+                    break;
+                }
+            }
+        });
+        submit_tx.send(7).unwrap();
+        submit_tx.send(8).unwrap();
+        // close() ordering: submit queue first, then the result receiver,
+        // then the join — with both jobs potentially still in flight
+        drop(submit_tx);
+        drop(result_rx);
+        h.join().unwrap();
+    });
+}
+
+/// Receiver-side semantics the engine's submission-order draining relies
+/// on: after the sender is gone, buffered values still drain in FIFO
+/// order before the disconnect error surfaces.
+#[test]
+fn receiver_drains_fifo_then_disconnects() {
+    loom::model(|| {
+        let (tx, rx) = bounded::<u32>(2);
+        let h = thread::spawn(move || {
+            tx.send(1).unwrap();
+            tx.send(2).unwrap();
+        });
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(rx.recv().unwrap(), 2);
+        h.join().unwrap();
+        assert!(rx.recv().is_err());
+    });
+}
