@@ -59,7 +59,9 @@ impl EntropyEstimator {
     /// cores (GP: one multi-RHS triangular solve over the representative
     /// set; trees: one tree-major slate pass), not per-point predictions.
     pub fn p_opt(&self, acc_model: &dyn Surrogate) -> Vec<f64> {
-        self.p_opt_from(&acc_model.posterior(&self.rep_feats))
+        let mut scratch = EntropyScratch::new();
+        self.p_opt_into(&acc_model.posterior(&self.rep_feats), &mut scratch);
+        scratch.counts
     }
 
     /// p_opt from a precomputed joint posterior over the representative
@@ -118,7 +120,8 @@ impl EntropyEstimator {
     /// [`EntropyEstimator::info_gain`] from a precomputed conditioned
     /// posterior over the representative set.
     pub fn info_gain_from(&self, post: &Posterior, baseline: f64) -> f64 {
-        self.info_gain_from_with(post, baseline, &mut EntropyScratch::new())
+        let mut scratch = EntropyScratch::new();
+        self.info_gain_from_with(post, baseline, &mut scratch)
     }
 
     /// [`EntropyEstimator::info_gain_from`] with caller-provided scratch —

@@ -8,7 +8,9 @@ use super::models::{
     incumbent_scan, joint_feasibility_many, select_incumbent_over,
     select_incumbent_over_with_feas, Models,
 };
-use crate::models::{FantasyScratch, FantasySurface, Feat, PrimedSlate};
+use crate::models::{
+    FantasyScratch, FantasySurface, FantasyView, Feat, PrimedSlate,
+};
 use crate::space::{encode, Constraint, Point};
 use crate::util::stats::normal_cdf;
 
@@ -238,6 +240,7 @@ impl<'a> AlphaSlate<'a> {
         }
     }
 
+    // detlint: hot
     fn eval_primed(
         &self,
         i: usize,
@@ -248,21 +251,26 @@ impl<'a> AlphaSlate<'a> {
     ) -> f64 {
         let ctx = self.ctx;
         let m = ctx.est.rep_feats.len();
-        let av = acc_primed.view_at(i, &mut scratch.fantasy);
+        // two persistent view buffers: the accuracy view outlives the
+        // per-constraint metric views it is compared against
+        let SweepScratch { fantasy, entropy, feas, acc_view, metric_view } =
+            scratch;
+        acc_primed.view_into(i, fantasy, acc_view);
         // steps 2-3: incumbent under the conditioned models, and its
         // feasibility — conditioned accuracy comes from the shortlist
         // suffix of the fused grid
-        let accs = &av.grid[m..];
+        let accs = &acc_view.grid[m..];
         let inc = match ctx.inc_feas.or(self.fixed_feas.as_deref()) {
             Some(feas) => incumbent_scan(ctx.inc_shortlist, feas, accs),
             None => {
-                let feas = &mut scratch.feas;
                 feas.clear();
                 feas.resize(ctx.inc_shortlist.len(), 1.0);
                 for (c, surf) in ctx.constraints.iter().zip(metric_primed) {
-                    let mv = surf.view_at(i, &mut scratch.fantasy);
+                    surf.view_into(i, fantasy, metric_view);
                     let lim = c.max.max(1e-12).ln();
-                    for (f, &(mu, std)) in feas.iter_mut().zip(&mv.grid) {
+                    for (f, &(mu, std)) in
+                        feas.iter_mut().zip(&metric_view.grid)
+                    {
                         *f *= normal_cdf((lim - mu) / std.max(1e-9));
                     }
                 }
@@ -271,21 +279,22 @@ impl<'a> AlphaSlate<'a> {
         };
         // step 4: information gain per dollar, from the conditioned joint
         // posterior over the representer prefix
-        let joint = av.joint.as_ref().expect("joint prefix present");
-        let gain =
-            ctx.est
-                .info_gain_from_with(joint, ctx.baseline, &mut scratch.entropy);
+        let joint = acc_view.joint.as_ref().expect("joint prefix present");
+        let gain = ctx.est.info_gain_from_with(joint, ctx.baseline, entropy);
         inc.feas_prob * gain / cost
     }
 }
 
 /// Per-worker scratch for one slate sweep: fantasy-view buffers, p_opt
-/// Monte-Carlo buffers, and the conditioned shortlist feasibility.
+/// Monte-Carlo buffers, the conditioned shortlist feasibility, and two
+/// reusable fantasy-view output slots (accuracy + per-constraint metric).
 #[derive(Default)]
 struct SweepScratch {
     fantasy: FantasyScratch,
     entropy: EntropyScratch,
     feas: Vec<f64>,
+    acc_view: FantasyView,
+    metric_view: FantasyView,
 }
 
 /// Batched α_T over a candidate slate: one shared per-iteration

@@ -87,7 +87,16 @@ pub(crate) mod queue {
         shared: Arc<Shared<T>>,
     }
 
-    /// Bounded MPSC channel with `sync_channel` semantics.
+    /// Bounded MPSC channel with `sync_channel` semantics for `cap >= 1`.
+    ///
+    /// **Divergence from std:** `sync_channel(0)` is a rendezvous channel
+    /// (every send blocks for a matching recv); this queue instead
+    /// *rejects* `cap == 0` with a panic. The coordinator never uses
+    /// rendezvous hand-off — its channels carry buffered work/results —
+    /// and a rendezvous mode would add blocking edges the loom model
+    /// would have to check without any production code exercising them.
+    /// The rejection is asserted in the unit tests below so the contract
+    /// can't silently drift.
     pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
         assert!(cap > 0, "bounded channel needs capacity");
         let shared = Arc::new(Shared {
@@ -259,5 +268,48 @@ mod tests {
         drop(tx2);
         assert_eq!(rx.recv(), Ok(9));
         assert_eq!(rx.recv(), Err(RecvError));
+    }
+
+    /// The documented divergence from `std::sync::mpsc::sync_channel`:
+    /// capacity 0 (rendezvous) is rejected, not supported (see
+    /// [`super::queue::bounded`]'s docs for why).
+    #[test]
+    fn zero_capacity_is_rejected() {
+        let r = std::panic::catch_unwind(|| bounded::<u32>(0));
+        assert!(r.is_err(), "cap 0 must panic, not build a rendezvous");
+    }
+
+    /// The production (`std::sync::mpsc`) path drains buffered values in
+    /// FIFO order after every sender dropped, then reports disconnect —
+    /// the same contract `fifo_order_and_drain_after_sender_drop` pins on
+    /// the loom-modelable queue.
+    #[test]
+    fn std_path_drains_fifo_after_sender_drop() {
+        let (tx, rx) = super::bounded::<u32>(4);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(rx.recv().unwrap(), 2);
+        assert!(rx.recv().is_err(), "disconnect after drain");
+    }
+
+    /// Send-after-receiver-drop parity: both implementations fail the
+    /// send and hand the unsent value back through field `.0` of the
+    /// error, so the worker pool's shutdown handling is source-compatible
+    /// with either channel.
+    #[test]
+    fn send_after_receiver_drop_error_parity() {
+        // std::sync::mpsc path (production under cfg(not(loom)))
+        let (tx, rx) = super::bounded::<u32>(1);
+        drop(rx);
+        let std_err = tx.send(7).expect_err("receiver gone");
+        assert_eq!(std_err.0, 7, "std path returns the unsent value");
+
+        // hand-rolled queue (the loom model's channel)
+        let (tx, rx) = bounded::<u32>(1);
+        drop(rx);
+        let q_err = tx.send(7).expect_err("receiver gone");
+        assert_eq!(q_err.0, 7, "queue path returns the unsent value");
     }
 }

@@ -183,7 +183,11 @@ impl Cholesky {
 
     /// Solve `K x = b` via the factor.
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
-        self.solve_lower_t(&self.solve_lower(b))
+        let mut y = Vec::new();
+        self.solve_lower_into(b, &mut y);
+        let mut x = Vec::new();
+        self.solve_lower_t_into(&y, &mut x);
+        x
     }
 
     /// log det K = 2 Σ log L_ii.
@@ -202,9 +206,15 @@ impl Cholesky {
     /// of `K` (LINPACK `dchud`-style Givens sweep). Never loses positive
     /// definiteness for finite input, since `K + u uᵀ` is PD whenever `K`
     /// is.
+    ///
+    /// Allocating convenience over [`Cholesky::update_into`], the
+    /// caller-visible scratch path; per-candidate loops must call the
+    /// `_into` twin with reused scratch (detlint rules A2/A3 enforce this
+    /// in the hot modules).
     pub fn update(&self, u: &[f64]) -> Cholesky {
         let mut out = Cholesky::scratch();
-        self.update_into(u, &mut out, &mut Vec::new());
+        let mut w = Vec::new();
+        self.update_into(u, &mut out, &mut w);
         out
     }
 
@@ -246,7 +256,8 @@ impl Cholesky {
     /// per-iteration factor instead of an O(m³) refactorization.
     pub fn downdate(&self, u: &[f64]) -> Result<Cholesky> {
         let mut out = Cholesky::scratch();
-        self.downdate_into(u, &mut out, &mut Vec::new())?;
+        let mut w = Vec::new();
+        self.downdate_into(u, &mut out, &mut w)?;
         Ok(out)
     }
 
@@ -295,7 +306,8 @@ impl Cholesky {
     pub fn extend(&self, k12: &[f64], k22: f64) -> Result<Cholesky> {
         let n = self.n();
         assert_eq!(k12.len(), n);
-        let l12 = self.solve_lower(k12);
+        let mut l12 = Vec::new();
+        self.solve_lower_into(k12, &mut l12);
         let rem = k22 - l12.iter().map(|v| v * v).sum::<f64>();
         // Guard: padding/jitter keeps this positive in practice.
         let l22 = if rem > 1e-12 { rem.sqrt() } else { 1e-6 };

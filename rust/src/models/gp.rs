@@ -96,7 +96,8 @@ impl Gp {
         let chol = self.chol.as_ref().expect("predict before fit");
         let ks = self.params.cov_vec(self.basis, &self.xs, x);
         let mu: f64 = ks.iter().zip(&self.alpha).map(|(k, a)| k * a).sum();
-        let v = chol.solve_lower(&ks);
+        let mut v = Vec::new();
+        chol.solve_lower_into(&ks, &mut v);
         let var = self.params.k_diag(self.basis, x)
             - v.iter().map(|z| z * z).sum::<f64>();
         (mu, var.max(1e-12).sqrt())
@@ -160,7 +161,8 @@ impl Gp {
         xs: &[Feat],
     ) -> (Vec<f64>, Vec<f64>) {
         let (ks, mus) = self.cross_cov_mus(params, alpha, xs);
-        let v = chol.solve_lower_multi(&ks);
+        let mut v = Mat::zeros(0, 0);
+        chol.solve_lower_multi_into(&ks, &mut v);
         let mut ss = vec![0.0; xs.len()];
         for i in 0..self.xs.len() {
             for (s, &z) in ss.iter_mut().zip(v.row(i)) {
@@ -191,7 +193,8 @@ impl Gp {
         let (ks, mus) = self.cross_cov_mus(params, alpha, xs);
         let mean: Vec<f64> =
             mus.into_iter().map(|mu| mu * self.y_std + self.y_mean).collect();
-        let vmat = chol.solve_lower_multi(&ks);
+        let mut vmat = Mat::zeros(0, 0);
+        chol.solve_lower_multi_into(&ks, &mut vmat);
         let vcols: Vec<Vec<f64>> = (0..m)
             .map(|c| (0..n).map(|i| vmat[(i, c)]).collect())
             .collect();
@@ -299,7 +302,8 @@ impl GpFantasyComp {
         let n = gp.xs.len();
         let nq = grid.len();
         let (ks, mu_grid) = gp.cross_cov_mus(params, alpha, grid);
-        let v = chol.solve_lower_multi(&ks);
+        let mut v = Mat::zeros(0, 0);
+        chol.solve_lower_multi_into(&ks, &mut v);
         // raw variances, same accumulation order as predict_raw_many
         let mut ss = vec![0.0; nq];
         for i in 0..n {
@@ -376,31 +380,45 @@ struct GpPrimed<'s> {
 }
 
 impl PrimedSlate for GpPrimed<'_> {
-    fn view_at(&self, ci: usize, scratch: &mut FantasyScratch) -> FantasyView {
+    // detlint: hot
+    fn view_into(
+        &self,
+        ci: usize,
+        scratch: &mut FantasyScratch,
+        out: &mut FantasyView,
+    ) {
         let surf = self.surf;
         let gp = &surf.gp;
         let x = &self.xs[ci];
         let nq = surf.grid.len();
         let m = surf.m_joint;
+        let k_comps = surf.comps.len();
         let y_tilde = self.y_tilde[ci];
 
-        let mut comp_mus: Vec<Vec<f64>> = Vec::with_capacity(surf.comps.len());
-        let mut comp_vars: Vec<Vec<f64>> =
-            Vec::with_capacity(surf.comps.len());
-        // (mean, cov factor, diag-fallback std) per component, the exact
-        // triple Posterior::mixture consumes
-        let mut joint_comps = Vec::with_capacity(surf.comps.len());
-        for (fc, pc) in surf.comps.iter().zip(&self.comps) {
+        // disjoint borrows of every scratch buffer the sweep threads
+        let FantasyScratch { cross, rank1, sweep, mus, vars, .. } = scratch;
+        // flattened per-component (mean, var) grids: segment k is
+        // component k, exactly the rows comp_mus/comp_vars used to hold
+        mus.clear();
+        mus.resize(k_comps * nq, 0.0);
+        vars.clear();
+        vars.resize(k_comps * nq, 0.0);
+        if m > 0 {
+            let post = out.joint.get_or_insert_with(Posterior::new_empty);
+            post.clear_components();
+        } else {
+            out.joint = None;
+        }
+        for (k, (fc, pc)) in surf.comps.iter().zip(&self.comps).enumerate() {
             let params = &pc.params;
             let w = pc.w.row(ci);
             let v_eff = pc.v_eff[ci];
             let r = y_tilde - pc.mu_x[ci];
             // posterior cross-covariances candidate → grid, into the
             // per-worker scratch (no per-candidate allocation)
-            let c = &mut scratch.cross;
-            c.clear();
-            c.resize(nq, 0.0);
-            for (q, cq) in c.iter_mut().enumerate() {
+            cross.clear();
+            cross.resize(nq, 0.0);
+            for (q, cq) in cross.iter_mut().enumerate() {
                 let dot: f64 = w
                     .iter()
                     .zip(fc.vt_grid.row(q))
@@ -408,99 +426,87 @@ impl PrimedSlate for GpPrimed<'_> {
                     .sum();
                 *cq = params.k(gp.basis, x, &surf.grid[q]) - dot;
             }
-            let mus: Vec<f64> = (0..nq)
-                .map(|q| fc.mu_grid[q] + c[q] * r / v_eff)
-                .collect();
-            let vars: Vec<f64> = (0..nq)
-                .map(|q| fc.var_grid[q] - c[q] * c[q] / v_eff)
-                .collect();
+            let mseg = &mut mus[k * nq..(k + 1) * nq];
+            for (q, mu) in mseg.iter_mut().enumerate() {
+                *mu = fc.mu_grid[q] + cross[q] * r / v_eff;
+            }
+            let vseg = &mut vars[k * nq..(k + 1) * nq];
+            for (q, va) in vseg.iter_mut().enumerate() {
+                *va = fc.var_grid[q] - cross[q] * cross[q] / v_eff;
+            }
             if m > 0 {
-                let mean: Vec<f64> = mus[..m]
-                    .iter()
-                    .map(|mu| mu * gp.y_std + gp.y_mean)
-                    .collect();
+                let post = out.joint.as_mut().expect("joint prefix present");
+                let comp = post.push_component();
+                comp.mean.clear();
+                comp.mean
+                    .extend(mseg[..m].iter().map(|mu| mu * gp.y_std + gp.y_mean));
                 let scale = gp.y_std / v_eff.sqrt();
-                let u = &mut scratch.rank1;
-                u.clear();
-                u.extend(c[..m].iter().map(|ci| ci * scale));
-                let down = fc.joint_l.as_ref().and_then(|l| {
-                    let mut out = Cholesky::scratch();
-                    l.downdate_into(u, &mut out, &mut scratch.sweep)
-                        .ok()
-                        .map(|()| out)
+                rank1.clear();
+                rank1.extend(cross[..m].iter().map(|ci| ci * scale));
+                // downdate straight into the reused component factor; on
+                // failure the component flips to the diagonal fallback,
+                // like posterior_component's failed factorization
+                let down_ok = fc.joint_l.as_ref().is_some_and(|l| {
+                    l.downdate_into(rank1, comp.joint_mut(), sweep).is_ok()
                 });
-                match down {
-                    Some(l) => joint_comps.push((mean, Some(l), None)),
-                    None => {
-                        // numerically degenerate: diagonal fallback, like
-                        // posterior_component's failed factorization
-                        let std = (0..m)
-                            .map(|i| {
-                                (fc.joint_diag[i] - u[i] * u[i])
-                                    .max(0.0)
-                                    .sqrt()
-                            })
-                            .collect();
-                        joint_comps.push((mean, None, Some(std)));
-                    }
+                if !down_ok {
+                    let std = comp.diag_mut();
+                    std.clear();
+                    std.extend((0..m).map(|i| {
+                        (fc.joint_diag[i] - rank1[i] * rank1[i])
+                            .max(0.0)
+                            .sqrt()
+                    }));
                 }
             }
-            comp_mus.push(mus);
-            comp_vars.push(vars);
+        }
+        if m > 0 {
+            out.joint.as_mut().expect("joint prefix present").finish();
         }
 
         // mixture (mean, std) on the grid, op-for-op like Gp::predict_many
-        let grid_pred: Vec<(f64, f64)> = if comp_mus.len() == 1 {
-            comp_mus[0]
-                .iter()
-                .zip(&comp_vars[0])
-                .map(|(&mu, &var)| {
-                    let std = var.max(1e-12).sqrt();
-                    (mu * gp.y_std + gp.y_mean, std * gp.y_std)
-                })
-                .collect()
+        out.grid.clear();
+        if k_comps == 1 {
+            for q in 0..nq {
+                let std = vars[q].max(1e-12).sqrt();
+                out.grid
+                    .push((mus[q] * gp.y_std + gp.y_mean, std * gp.y_std));
+            }
         } else {
-            let kf = comp_mus.len() as f64;
-            (0..nq)
-                .map(|q| {
-                    let mean: f64 =
-                        comp_mus.iter().map(|mu| mu[q]).sum::<f64>() / kf;
-                    let var: f64 = comp_mus
-                        .iter()
-                        .zip(&comp_vars)
-                        .enumerate()
-                        .map(|(k, (mu, va))| {
-                            // the MAP variance round-trips through
-                            // predict_norm's sqrt, the samples clamp raw
-                            let v = if k == 0 {
-                                let std = va[q].max(1e-12).sqrt();
-                                std * std
-                            } else {
-                                va[q].max(1e-12)
-                            };
-                            v + (mu[q] - mean) * (mu[q] - mean)
-                        })
-                        .sum::<f64>()
-                        / kf;
-                    (
-                        mean * gp.y_std + gp.y_mean,
-                        var.max(1e-12).sqrt() * gp.y_std,
-                    )
-                })
-                .collect()
-        };
-        let joint = (m > 0).then(|| Posterior::mixture(joint_comps));
-        FantasyView { grid: grid_pred, joint }
+            let kf = k_comps as f64;
+            for q in 0..nq {
+                let mean: f64 =
+                    (0..k_comps).map(|k| mus[k * nq + q]).sum::<f64>() / kf;
+                let var: f64 = (0..k_comps)
+                    .map(|k| {
+                        // the MAP variance round-trips through
+                        // predict_norm's sqrt, the samples clamp raw
+                        let v = if k == 0 {
+                            let std = vars[q].max(1e-12).sqrt();
+                            std * std
+                        } else {
+                            vars[k * nq + q].max(1e-12)
+                        };
+                        let mu = mus[k * nq + q];
+                        v + (mu - mean) * (mu - mean)
+                    })
+                    .sum::<f64>()
+                    / kf;
+                out.grid.push((
+                    mean * gp.y_std + gp.y_mean,
+                    var.max(1e-12).sqrt() * gp.y_std,
+                ));
+            }
+        }
     }
 }
 
 impl FantasySurface for GpFantasy {
-    fn view(&self, x: &Feat) -> FantasyView {
+    fn view_with(&self, x: &Feat, scratch: &mut FantasyScratch) -> FantasyView {
         // one-candidate slate through the batched path: a single-column
         // multi-RHS solve and a one-point `predict_many` are bit-identical
-        // to the scalar solves, so this cannot drift from `view_at`
-        self.prime(std::slice::from_ref(x))
-            .view_at(0, &mut FantasyScratch::new())
+        // to the scalar solves, so this cannot drift from `view_into`
+        self.prime(std::slice::from_ref(x)).view_at(0, scratch)
     }
 
     fn prime<'s>(&'s self, xs: &'s [Feat]) -> Box<dyn PrimedSlate + 's> {
@@ -515,7 +521,8 @@ impl FantasySurface for GpFantasy {
                 // the predictive means below), then ONE multi-RHS forward
                 // solve instead of a triangular solve per candidate
                 let (ks, mu_x) = gp.cross_cov_mus(params, alpha, xs);
-                let wcol = chol.solve_lower_multi(&ks);
+                let mut wcol = Mat::zeros(0, 0);
+                chol.solve_lower_multi_into(&ks, &mut wcol);
                 // candidate-major layout: each view's dot-product sweep
                 // walks one contiguous row per candidate
                 let mut w = Mat::zeros(nc, n);
@@ -658,10 +665,11 @@ impl Surrogate for Gp {
         let (m0, s0) = self.predict_norm(x);
         mus.push(m0);
         vars.push(s0 * s0);
+        let mut v = Vec::new();
         for (params, chol, alpha) in &self.extra {
             let ks = params.cov_vec(self.basis, &self.xs, x);
             let mu: f64 = ks.iter().zip(alpha).map(|(k, a)| k * a).sum();
-            let v = chol.solve_lower(&ks);
+            chol.solve_lower_into(&ks, &mut v);
             let var = (params.k_diag(self.basis, x)
                 - v.iter().map(|z| z * z).sum::<f64>())
             .max(1e-12);

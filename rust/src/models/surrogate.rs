@@ -39,11 +39,47 @@ impl Default for FitOptions {
     }
 }
 
+/// Which covariance representation a [`PostComp`] currently carries. Both
+/// buffers are retained when a reused component flips form (the slate
+/// sweep's downdate-or-diagonal fallback), so nothing is dropped or
+/// reallocated per candidate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CompForm {
+    Joint,
+    Diag,
+}
+
 /// One mixture component of a joint posterior.
 pub struct PostComp {
     pub mean: Vec<f64>,
     cov_l: Option<Cholesky>,
     diag_std: Option<Vec<f64>>,
+    form: CompForm,
+}
+
+impl PostComp {
+    fn empty() -> PostComp {
+        PostComp {
+            mean: Vec::new(),
+            cov_l: None,
+            diag_std: None,
+            form: CompForm::Diag,
+        }
+    }
+
+    /// Switch this component to joint form and hand out its covariance
+    /// factor for overwriting (allocated on first use, reused after).
+    pub fn joint_mut(&mut self) -> &mut Cholesky {
+        self.form = CompForm::Joint;
+        self.cov_l.get_or_insert_with(Cholesky::scratch)
+    }
+
+    /// Switch this component to diagonal form and hand out its std buffer
+    /// for overwriting (allocated on first use, reused after).
+    pub fn diag_mut(&mut self) -> &mut Vec<f64> {
+        self.form = CompForm::Diag;
+        self.diag_std.get_or_insert_with(Vec::new)
+    }
 }
 
 /// Joint posterior over a set of points, used for Entropy-Search p_opt
@@ -54,6 +90,9 @@ pub struct PostComp {
 /// successive draws rotate across components (a draw from the mixture).
 pub struct Posterior {
     comps: Vec<PostComp>,
+    /// components in use: `comps[..live]` (slots past `live` are retained
+    /// for buffer reuse when the posterior is rebuilt in place)
+    live: usize,
     /// round-robin component cursor for mixture sampling
     cursor: std::cell::Cell<usize>,
     /// mixture mean (averaged across components)
@@ -63,14 +102,60 @@ pub struct Posterior {
 impl Posterior {
     fn from_comps(comps: Vec<PostComp>) -> Posterior {
         assert!(!comps.is_empty());
-        let n = comps[0].mean.len();
-        let mut mean = vec![0.0; n];
-        for c in &comps {
-            for (m, v) in mean.iter_mut().zip(&c.mean) {
-                *m += v / comps.len() as f64;
+        let mut p = Posterior {
+            live: comps.len(),
+            comps,
+            cursor: std::cell::Cell::new(0),
+            mean: Vec::new(),
+        };
+        p.finish();
+        p
+    }
+
+    /// An empty posterior to be filled in place via
+    /// [`Posterior::clear_components`] / [`Posterior::push_component`] /
+    /// [`Posterior::finish`] — the zero-allocation rebuild path the primed
+    /// slate sweep uses once per candidate.
+    pub fn new_empty() -> Posterior {
+        Posterior {
+            comps: Vec::new(),
+            live: 0,
+            cursor: std::cell::Cell::new(0),
+            mean: Vec::new(),
+        }
+    }
+
+    /// Start an in-place rebuild: marks every component slot dead (their
+    /// buffers are retained for reuse) and resets the mixture cursor.
+    pub fn clear_components(&mut self) {
+        self.live = 0;
+        self.cursor.set(0);
+    }
+
+    /// Append one component slot and hand it out for overwriting; reuses a
+    /// dead slot's buffers when one is available. Call
+    /// [`Posterior::finish`] once all components are written.
+    pub fn push_component(&mut self) -> &mut PostComp {
+        if self.live == self.comps.len() {
+            self.comps.push(PostComp::empty());
+        }
+        self.live += 1;
+        &mut self.comps[self.live - 1]
+    }
+
+    /// Recompute the mixture mean from the live components (same
+    /// accumulation order as a fresh construction, so in-place rebuilds
+    /// are bit-identical to allocating ones).
+    pub fn finish(&mut self) {
+        assert!(self.live > 0, "posterior with no live components");
+        let n = self.comps[0].mean.len();
+        self.mean.clear();
+        self.mean.resize(n, 0.0);
+        for c in &self.comps[..self.live] {
+            for (m, v) in self.mean.iter_mut().zip(&c.mean) {
+                *m += v / self.live as f64;
             }
         }
-        Posterior { comps, cursor: std::cell::Cell::new(0), mean }
     }
 
     pub fn joint(mean: Vec<f64>, cov_l: Cholesky) -> Posterior {
@@ -78,6 +163,7 @@ impl Posterior {
             mean,
             cov_l: Some(cov_l),
             diag_std: None,
+            form: CompForm::Joint,
         }])
     }
 
@@ -86,6 +172,7 @@ impl Posterior {
             mean,
             cov_l: None,
             diag_std: Some(std),
+            form: CompForm::Diag,
         }])
     }
 
@@ -93,13 +180,22 @@ impl Posterior {
         Posterior::from_comps(
             comps
                 .into_iter()
-                .map(|(mean, cov_l, diag_std)| PostComp { mean, cov_l, diag_std })
+                .map(|(mean, cov_l, diag_std)| PostComp {
+                    form: if cov_l.is_some() {
+                        CompForm::Joint
+                    } else {
+                        CompForm::Diag
+                    },
+                    mean,
+                    cov_l,
+                    diag_std,
+                })
                 .collect(),
         )
     }
 
     pub fn n_components(&self) -> usize {
-        self.comps.len()
+        self.live
     }
 
     pub fn len(&self) -> usize {
@@ -116,18 +212,19 @@ impl Posterior {
     /// Successive calls rotate round-robin over mixture components.
     pub fn sample_with(&self, z: &[f64], out: &mut Vec<f64>) {
         let k = self.cursor.get();
-        self.cursor.set((k + 1) % self.comps.len());
+        self.cursor.set((k + 1) % self.live);
         self.sample_component_with(k, z, out);
     }
 
     /// Sample a specific mixture component.
     pub fn sample_component_with(&self, k: usize, z: &[f64], out: &mut Vec<f64>) {
-        let comp = &self.comps[k % self.comps.len()];
+        let comp = &self.comps[k % self.live];
         let n = comp.mean.len();
         assert_eq!(z.len(), n);
         out.clear();
-        if let Some(l) = &comp.cov_l {
+        if comp.form == CompForm::Joint {
             // f = mean + L z
+            let l = comp.cov_l.as_ref().expect("joint component without factor");
             let lm: &Mat = l.l();
             for i in 0..n {
                 let row = lm.row(i);
@@ -166,6 +263,21 @@ pub struct FantasyView {
     pub joint: Option<Posterior>,
 }
 
+impl FantasyView {
+    /// An empty view for [`PrimedSlate::view_into`] to overwrite; keep one
+    /// per worker and every buffer inside (grid, posterior components,
+    /// covariance factors) is reused across candidates.
+    pub fn new() -> FantasyView {
+        FantasyView { grid: Vec::new(), joint: None }
+    }
+}
+
+impl Default for FantasyView {
+    fn default() -> Self {
+        FantasyView::new()
+    }
+}
+
 /// Reusable per-worker scratch for the slate sweep's conditioned views —
 /// the hot per-candidate loops borrow these buffers instead of allocating
 /// fresh vectors per view (each buffer is cleared/overwritten on use, so a
@@ -181,6 +293,10 @@ pub struct FantasyScratch {
     /// per-tree slate accumulators (trees incremental conditioning)
     pub acc: Vec<f64>,
     pub acc2: Vec<f64>,
+    /// flattened per-component conditioned means/variances over the grid
+    /// (`k * n_grid` entries), for the hyper-marginalized GP combine
+    pub mus: Vec<f64>,
+    pub vars: Vec<f64>,
 }
 
 impl FantasyScratch {
@@ -197,21 +313,42 @@ impl FantasyScratch {
 /// [`FantasySurface::prime`] time, so `view_at(c)` pays only the
 /// dot-product sweep of candidate `c`.
 pub trait PrimedSlate: Send + Sync {
-    /// The conditioned view of slate candidate `i` — identical (bit for
-    /// bit) to `view(&slate[i])` on the surface that primed this slate.
-    fn view_at(&self, i: usize, scratch: &mut FantasyScratch) -> FantasyView;
+    /// The conditioned view of slate candidate `i`, written into `out` —
+    /// identical (bit for bit) to `view(&slate[i])` on the surface that
+    /// primed this slate. Reusing `out` and `scratch` across candidates
+    /// makes the sweep allocation-free in steady state (enforced
+    /// statically by detlint rule A1 and dynamically by
+    /// `tests/alloc_contracts.rs`).
+    fn view_into(
+        &self,
+        i: usize,
+        scratch: &mut FantasyScratch,
+        out: &mut FantasyView,
+    );
+
+    /// Allocating convenience over [`PrimedSlate::view_into`].
+    fn view_at(&self, i: usize, scratch: &mut FantasyScratch) -> FantasyView {
+        let mut out = FantasyView::new();
+        self.view_into(i, scratch, &mut out);
+        out
+    }
 }
 
 /// Fallback primer for surfaces without a batched implementation: defers
-/// every candidate to [`FantasySurface::view`].
+/// every candidate to [`FantasySurface::view_with`].
 struct MapPrimed<'s, S: ?Sized> {
     surf: &'s S,
     xs: &'s [Feat],
 }
 
 impl<S: FantasySurface + ?Sized> PrimedSlate for MapPrimed<'_, S> {
-    fn view_at(&self, i: usize, _scratch: &mut FantasyScratch) -> FantasyView {
-        self.surf.view(&self.xs[i])
+    fn view_into(
+        &self,
+        i: usize,
+        scratch: &mut FantasyScratch,
+        out: &mut FantasyView,
+    ) {
+        *out = self.surf.view_with(&self.xs[i], scratch);
     }
 }
 
@@ -227,15 +364,24 @@ impl<S: FantasySurface + ?Sized> PrimedSlate for MapPrimed<'_, S> {
 /// `Send + Sync` so the slate evaluator can shard candidate views across
 /// `std::thread::scope` workers.
 pub trait FantasySurface: Send + Sync {
-    /// The conditioned view for one candidate. The simulated outcome is
-    /// the surrogate's own predictive mean at `x` — the single-root
-    /// Gauss–Hermite collapse `Models::condition` uses.
-    fn view(&self, x: &Feat) -> FantasyView;
+    /// The conditioned view for one candidate, borrowing the caller's
+    /// scratch buffers. The simulated outcome is the surrogate's own
+    /// predictive mean at `x` — the single-root Gauss–Hermite collapse
+    /// `Models::condition` uses.
+    fn view_with(&self, x: &Feat, scratch: &mut FantasyScratch)
+        -> FantasyView;
+
+    /// [`FantasySurface::view_with`] with a one-shot local scratch — the
+    /// allocating convenience for cold callers and tests.
+    fn view(&self, x: &Feat) -> FantasyView {
+        let mut scratch = FantasyScratch::new();
+        self.view_with(x, &mut scratch)
+    }
 
     /// Prime the surface for a whole candidate slate (see [`PrimedSlate`]).
-    /// The default defers to per-candidate [`FantasySurface::view`] calls;
-    /// the native models override it with genuinely batched precomputation
-    /// that stays bit-identical to the per-candidate path.
+    /// The default defers to per-candidate [`FantasySurface::view_with`]
+    /// calls; the native models override it with genuinely batched
+    /// precomputation that stays bit-identical to the per-candidate path.
     fn prime<'s>(&'s self, xs: &'s [Feat]) -> Box<dyn PrimedSlate + 's> {
         Box::new(MapPrimed { surf: self, xs })
     }
@@ -251,7 +397,11 @@ struct CloneFantasy {
 }
 
 impl FantasySurface for CloneFantasy {
-    fn view(&self, x: &Feat) -> FantasyView {
+    fn view_with(
+        &self,
+        x: &Feat,
+        _scratch: &mut FantasyScratch,
+    ) -> FantasyView {
         let (y, _) = self.base.predict(x);
         let cond = self.base.condition(x, y);
         let grid = cond.predict_many(&self.grid);
@@ -343,6 +493,53 @@ mod tests {
         assert!((m1 / n + 2.0).abs() < 0.05);
         assert!((v0 / n - 0.25).abs() < 0.02);
         assert!((v1 / n - 4.0).abs() < 0.15);
+    }
+
+    #[test]
+    fn in_place_posterior_rebuild_matches_fresh_construction() {
+        let k = Mat::from_rows(&[vec![1.0, 0.3], vec![0.3, 1.0]]);
+        let l = crate::linalg::Cholesky::factor(&k).unwrap();
+        let fresh = Posterior::mixture(vec![
+            (vec![1.0, 2.0], Some(l.clone()), None),
+            (vec![3.0, -1.0], None, Some(vec![0.5, 0.25])),
+        ]);
+        let mut built = Posterior::new_empty();
+        // several rounds so slot reuse (retained buffers, form flips) is
+        // exercised, not just the first fill
+        for _ in 0..3 {
+            built.clear_components();
+            let c = built.push_component();
+            c.mean.clear();
+            c.mean.extend_from_slice(&[1.0, 2.0]);
+            *c.joint_mut() = l.clone();
+            let c = built.push_component();
+            c.mean.clear();
+            c.mean.extend_from_slice(&[3.0, -1.0]);
+            let d = c.diag_mut();
+            d.clear();
+            d.extend_from_slice(&[0.5, 0.25]);
+            built.finish();
+        }
+        assert_eq!(built.n_components(), fresh.n_components());
+        assert_eq!(built.mean, fresh.mean);
+        let z = [0.7, -1.3];
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for comp in 0..2 {
+            fresh.sample_component_with(comp, &z, &mut a);
+            built.sample_component_with(comp, &z, &mut b);
+            assert_eq!(a, b, "component {comp} diverged");
+        }
+        // a rebuild with fewer components hides the dead slot
+        built.clear_components();
+        let c = built.push_component();
+        c.mean.clear();
+        c.mean.extend_from_slice(&[5.0, 5.0]);
+        let d = c.diag_mut();
+        d.clear();
+        d.extend_from_slice(&[1.0, 1.0]);
+        built.finish();
+        assert_eq!(built.n_components(), 1);
+        assert_eq!(built.mean, vec![5.0, 5.0]);
     }
 
     #[test]

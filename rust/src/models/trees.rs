@@ -435,14 +435,18 @@ struct TreesFantasy {
 }
 
 impl TreesFantasy {
-    /// The conditioned view for candidate `x` with simulated outcome `y`.
-    fn view_for(
+    /// The conditioned view for candidate `x` with simulated outcome `y`,
+    /// written into `out` without per-candidate allocation on the
+    /// incremental path (the rebuild hatch allocates by design).
+    // detlint: hot
+    fn view_for_into(
         &self,
         x: &Feat,
         y: f64,
         scratch: &mut FantasyScratch,
-    ) -> FantasyView {
-        let grid: Vec<(f64, f64)> = match &self.tpl {
+        out: &mut FantasyView,
+    ) {
+        match &self.tpl {
             Some(tpl) => {
                 let nq = self.grid.len();
                 let sum = &mut scratch.acc;
@@ -467,24 +471,40 @@ impl TreesFantasy {
                     }
                 }
                 let n = tpl.trees.len() as f64;
-                sum.iter()
-                    .zip(sumsq.iter())
-                    .map(|(&s, &ss)| {
+                out.grid.clear();
+                out.grid.extend(sum.iter().zip(sumsq.iter()).map(
+                    |(&s, &ss)| {
                         let mean = s / n;
                         let var = (ss / n - mean * mean).max(0.0);
                         (mean, var.sqrt().max(1e-4))
-                    })
-                    .collect()
+                    },
+                ));
             }
             // rebuild hatch: per-candidate seeded rebuild, the reference
-            None => self.base.conditioned(x, y).predict_many(&self.grid),
-        };
-        let joint = (self.m_joint > 0).then(|| {
-            let (mean, std): (Vec<f64>, Vec<f64>) =
-                grid[..self.m_joint].iter().copied().unzip();
-            Posterior::diagonal(mean, std)
-        });
-        FantasyView { grid, joint }
+            None => {
+                out.grid.clear();
+                out.grid.extend(
+                    self.base.conditioned(x, y).predict_many(&self.grid),
+                );
+            }
+        }
+        if self.m_joint > 0 {
+            // rebuild the single diagonal component in place; finish()
+            // recomputes the mixture mean bit-identically to the
+            // Posterior::diagonal constructor
+            let post = out.joint.get_or_insert_with(Posterior::new_empty);
+            post.clear_components();
+            let comp = post.push_component();
+            comp.mean.clear();
+            comp.mean
+                .extend(out.grid[..self.m_joint].iter().map(|&(m, _)| m));
+            let std = comp.diag_mut();
+            std.clear();
+            std.extend(out.grid[..self.m_joint].iter().map(|&(_, s)| s));
+            post.finish();
+        } else {
+            out.joint = None;
+        }
     }
 }
 
@@ -498,15 +518,22 @@ struct TreesPrimed<'s> {
 }
 
 impl PrimedSlate for TreesPrimed<'_> {
-    fn view_at(&self, i: usize, scratch: &mut FantasyScratch) -> FantasyView {
-        self.surf.view_for(&self.xs[i], self.y_hat[i], scratch)
+    fn view_into(
+        &self,
+        i: usize,
+        scratch: &mut FantasyScratch,
+        out: &mut FantasyView,
+    ) {
+        self.surf.view_for_into(&self.xs[i], self.y_hat[i], scratch, out);
     }
 }
 
 impl FantasySurface for TreesFantasy {
-    fn view(&self, x: &Feat) -> FantasyView {
+    fn view_with(&self, x: &Feat, scratch: &mut FantasyScratch) -> FantasyView {
         let (y, _) = self.base.predict(x);
-        self.view_for(x, y, &mut FantasyScratch::new())
+        let mut out = FantasyView::new();
+        self.view_for_into(x, y, scratch, &mut out);
+        out
     }
 
     fn prime<'s>(&'s self, xs: &'s [Feat]) -> Box<dyn PrimedSlate + 's> {

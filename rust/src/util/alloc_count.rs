@@ -1,0 +1,69 @@
+//! Per-thread allocation counting for the dynamic side of the allocation
+//! contracts (detlint's A rules are the static side; see
+//! `docs/ARCHITECTURE.md` § Allocation contracts).
+//!
+//! [`CountingAlloc`] wraps the system allocator and bumps a thread-local
+//! counter on every `alloc`/`alloc_zeroed`/`realloc`. It is **not**
+//! registered here: production binaries keep the plain system allocator.
+//! Only the `alloc_contracts` integration test opts in, via
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static A: trimtuner::util::alloc_count::CountingAlloc = CountingAlloc;
+//! ```
+//!
+//! The counter is per-thread so parallel test threads (and the worker pool
+//! inside a measured region) cannot corrupt each other's deltas; a test
+//! that wants a zero-allocation guarantee measures on its own thread and
+//! runs the measured closure inline.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Allocations observed on the current thread since it started (wrapping).
+/// Diff two readings around a region to count its allocations.
+pub fn thread_allocations() -> u64 {
+    TL_ALLOCS.with(|c| c.get())
+}
+
+#[inline]
+fn bump() {
+    // try_with: the allocator may be called during TLS teardown, when the
+    // counter's slot is already destroyed — counting must never panic.
+    let _ = TL_ALLOCS.try_with(|c| c.set(c.get().wrapping_add(1)));
+}
+
+/// Counting `#[global_allocator]` over [`System`]. Zero overhead beyond a
+/// thread-local increment per allocation; deallocation is not counted (the
+/// contracts bound allocations, frees follow from them).
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+}

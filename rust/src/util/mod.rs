@@ -5,6 +5,7 @@
 //! implementations with unit tests of their own (see DESIGN.md §2,
 //! "Environment deviations").
 
+pub mod alloc_count;
 pub mod csv;
 pub mod proptest;
 pub mod rng;

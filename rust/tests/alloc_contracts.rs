@@ -1,0 +1,218 @@
+//! Dynamic side of the allocation contracts (detlint's A1–A3 are the
+//! static side — see `docs/ARCHITECTURE.md` § Allocation contracts).
+//!
+//! This binary registers the counting `#[global_allocator]` from
+//! `util::alloc_count` — production binaries and every other test target
+//! keep the plain system allocator — and asserts the contracts directly:
+//!
+//! * the primed fantasy sweep (GP and trees) performs **zero** heap
+//!   allocations per candidate once its scratch is warm;
+//! * the `_into` linalg kernels (triangular solves, matmul, rank-one
+//!   update/downdate) allocate nothing once their outputs are sized;
+//! * the p_opt Monte-Carlo (`info_gain_from_with`) allocates nothing per
+//!   candidate with a warm `EntropyScratch`;
+//! * the per-slate `prime` is *allowed* to allocate (it is amortized over
+//!   the whole slate) but its count is tracked against a headroom bound so
+//!   regressions surface here instead of in a profile.
+//!
+//! Warm-up rule: the first pass over a candidate may grow scratch buffers;
+//! the contract is on the steady state, so every measurement below runs
+//! after one full warm pass over the same inputs (determinism makes the
+//! warm and measured passes take identical branches).
+
+use std::hint::black_box;
+
+use trimtuner::acq::{EntropyEstimator, EntropyScratch};
+use trimtuner::linalg::{Cholesky, Mat};
+use trimtuner::models::{
+    Basis, ExtraTrees, FantasyScratch, FantasyView, Feat, FitOptions, Gp,
+    Surrogate, TreesMode, TreesOptions,
+};
+use trimtuner::space::D_IN;
+use trimtuner::util::alloc_count::{thread_allocations, CountingAlloc};
+use trimtuner::util::Rng;
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// Allocations performed by `f` on this thread. The closure runs inline on
+/// the measuring thread — worker pools would count on their own threads,
+/// so the contracts below exercise the single-threaded cores directly.
+fn allocs(f: impl FnOnce()) -> u64 {
+    let before = thread_allocations();
+    f();
+    thread_allocations() - before
+}
+
+fn rand_feat(rng: &mut Rng) -> Feat {
+    let mut f = [0.0; D_IN];
+    for v in f.iter_mut() {
+        *v = rng.f64();
+    }
+    f
+}
+
+fn toy(n: usize, rng: &mut Rng) -> (Vec<Feat>, Vec<f64>) {
+    let xs: Vec<Feat> = (0..n).map(|_| rand_feat(rng)).collect();
+    let ys = xs.iter().map(|x| 2.0 * x[0] - x[3] + 0.5 * x[6]).collect();
+    (xs, ys)
+}
+
+/// Zero allocations per candidate view on a primed hyper-marginalized GP
+/// slate (the α_T inner loop), after one warm pass.
+#[test]
+fn gp_primed_sweep_is_allocation_free_per_candidate() {
+    let mut rng = Rng::new(7);
+    let (xs, ys) = toy(20, &mut rng);
+    let mut gp = Gp::with_hyper_samples(Basis::Acc, 5, 3);
+    gp.fit(&xs, &ys, FitOptions { hyperopt: true, restarts: 1 });
+    let grid: Vec<Feat> = (0..14).map(|_| rand_feat(&mut rng)).collect();
+    let surf = gp.fantasy_surface(&grid, 8);
+    let slate: Vec<Feat> = (0..12).map(|_| rand_feat(&mut rng)).collect();
+    let primed = surf.prime(&slate);
+    let mut scratch = FantasyScratch::new();
+    let mut view = FantasyView::new();
+    for i in 0..slate.len() {
+        primed.view_into(i, &mut scratch, &mut view); // warm
+    }
+    for i in 0..slate.len() {
+        let n = allocs(|| primed.view_into(i, &mut scratch, &mut view));
+        assert_eq!(n, 0, "GP view_into allocated {n}x for candidate {i}");
+    }
+    black_box(&view);
+}
+
+/// Zero allocations per candidate view on a primed incremental trees
+/// slate, after one warm pass.
+#[test]
+fn trees_primed_sweep_is_allocation_free_per_candidate() {
+    let mut rng = Rng::new(11);
+    let (xs, ys) = toy(40, &mut rng);
+    let mut et = ExtraTrees::new(TreesOptions::default());
+    et.fit(&xs, &ys, FitOptions::default());
+    let grid: Vec<Feat> = (0..14).map(|_| rand_feat(&mut rng)).collect();
+    let surf = et.fantasy_surface_mode(&grid, 6, TreesMode::Incremental);
+    let slate: Vec<Feat> = (0..12).map(|_| rand_feat(&mut rng)).collect();
+    let primed = surf.prime(&slate);
+    let mut scratch = FantasyScratch::new();
+    let mut view = FantasyView::new();
+    for i in 0..slate.len() {
+        primed.view_into(i, &mut scratch, &mut view); // warm
+    }
+    for i in 0..slate.len() {
+        let n = allocs(|| primed.view_into(i, &mut scratch, &mut view));
+        assert_eq!(n, 0, "trees view_into allocated {n}x for candidate {i}");
+    }
+    black_box(&view);
+}
+
+/// The p_opt Monte-Carlo sweep allocates nothing per candidate with a warm
+/// scratch — the other half of the α_T inner loop.
+#[test]
+fn info_gain_is_allocation_free_with_warm_scratch() {
+    let mut rng = Rng::new(17);
+    let (xs, ys) = toy(20, &mut rng);
+    let mut gp = Gp::with_hyper_samples(Basis::Acc, 5, 2);
+    gp.fit(&xs, &ys, FitOptions { hyperopt: true, restarts: 1 });
+    let grid: Vec<Feat> = (0..10).map(|_| rand_feat(&mut rng)).collect();
+    let m_joint = 8;
+    let surf = gp.fantasy_surface(&grid, m_joint);
+    let slate: Vec<Feat> = (0..4).map(|_| rand_feat(&mut rng)).collect();
+    let primed = surf.prime(&slate);
+    let mut scratch = FantasyScratch::new();
+    let mut view = FantasyView::new();
+    primed.view_into(0, &mut scratch, &mut view);
+    let joint = view.joint.as_ref().expect("joint prefix present");
+
+    let est = EntropyEstimator::new(grid[..m_joint].to_vec(), 40, &mut rng);
+    let mut escratch = EntropyScratch::new();
+    let warm = est.info_gain_from_with(joint, 0.0, &mut escratch);
+    let mut got = 0.0;
+    let n = allocs(|| {
+        got = est.info_gain_from_with(joint, 0.0, &mut escratch);
+    });
+    assert_eq!(n, 0, "info_gain_from_with allocated {n}x when warm");
+    assert_eq!(warm.to_bits(), got.to_bits(), "warm/measured must agree");
+}
+
+/// The `_into` linalg kernels allocate nothing once their outputs have
+/// reached steady-state capacity.
+#[test]
+fn into_kernels_are_allocation_free_when_warm() {
+    let mut rng = Rng::new(23);
+    let n = 12;
+    let a = Mat::from_fn(n, n, |_, _| rng.f64());
+    let mut k = a.matmul(&a.transpose());
+    for i in 0..n {
+        k.row_mut(i)[i] += n as f64;
+    }
+    let c = Cholesky::factor(&k).expect("SPD factor");
+    let b: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+    let u: Vec<f64> = (0..n).map(|_| 0.1 * rng.f64()).collect();
+
+    let mut x = Vec::new();
+    c.solve_lower_into(&b, &mut x);
+    assert_eq!(allocs(|| c.solve_lower_into(&b, &mut x)), 0, "solve_lower");
+    let mut xt = Vec::new();
+    c.solve_lower_t_into(&b, &mut xt);
+    assert_eq!(
+        allocs(|| c.solve_lower_t_into(&b, &mut xt)),
+        0,
+        "solve_lower_t"
+    );
+
+    let bm = Mat::from_fn(n, 5, |_, _| rng.f64());
+    let mut xm = Mat::zeros(0, 0);
+    c.solve_lower_multi_into(&bm, &mut xm);
+    assert_eq!(
+        allocs(|| c.solve_lower_multi_into(&bm, &mut xm)),
+        0,
+        "solve_lower_multi"
+    );
+
+    let mut prod = Mat::zeros(0, 0);
+    a.matmul_into(&bm, &mut prod);
+    assert_eq!(allocs(|| a.matmul_into(&bm, &mut prod)), 0, "matmul");
+
+    let mut up = Cholesky::scratch();
+    let mut w = Vec::new();
+    c.update_into(&u, &mut up, &mut w);
+    assert_eq!(allocs(|| c.update_into(&u, &mut up, &mut w)), 0, "update");
+
+    let mut down = Cholesky::scratch();
+    let mut sweep = Vec::new();
+    up.downdate_into(&u, &mut down, &mut sweep).expect("downdate");
+    assert_eq!(
+        allocs(|| {
+            up.downdate_into(&u, &mut down, &mut sweep).expect("downdate");
+        }),
+        0,
+        "downdate"
+    );
+    black_box((&x, &xt, &xm, &prod, &down));
+}
+
+/// Per-slate `prime` is the amortized allocation budget: it must allocate
+/// (it materializes the multi-RHS solves) but stay within generous
+/// headroom, so a regression to per-candidate allocation patterns shows up
+/// as a count explosion here.
+#[test]
+fn per_slate_prime_allocates_within_headroom() {
+    let mut rng = Rng::new(31);
+    let (xs, ys) = toy(20, &mut rng);
+    let mut gp = Gp::with_hyper_samples(Basis::Acc, 5, 3);
+    gp.fit(&xs, &ys, FitOptions { hyperopt: true, restarts: 1 });
+    let grid: Vec<Feat> = (0..14).map(|_| rand_feat(&mut rng)).collect();
+    let surf = gp.fantasy_surface(&grid, 8);
+    let slate: Vec<Feat> = (0..32).map(|_| rand_feat(&mut rng)).collect();
+
+    let before = thread_allocations();
+    let primed = surf.prime(&slate);
+    let count = thread_allocations() - before;
+    drop(primed);
+    assert!(count > 0, "prime materializes buffers, must allocate");
+    // ~3 hyper components x a handful of matrices/vectors each, plus the
+    // boxed slate handle: orders of magnitude below per-candidate costs
+    assert!(count < 10_000, "per-slate prime allocated {count}x");
+    println!("per-slate prime allocations: {count}");
+}

@@ -1,0 +1,46 @@
+// A1 allow: the same hot paths threading caller-provided scratch —
+// buffers are cleared and refilled, never reallocated — plus one pragma'd
+// warm-up allocation with a reason.
+
+pub struct View {
+    pub grid: Vec<(f64, f64)>,
+}
+
+pub struct Scratch {
+    pub acc: Vec<f64>,
+}
+
+pub struct Slate {
+    mus: Vec<f64>,
+    vars: Vec<f64>,
+}
+
+impl Slate {
+    // registry-hot via hotpaths.toml (`PrimedSlate::view_at`): writes into
+    // the caller's view, reusing its allocation across candidates
+    fn view_at(&self, i: usize, out: &mut View) {
+        out.grid.clear();
+        for (&m, &v) in self.mus.iter().zip(&self.vars) {
+            out.grid.push((m + i as f64, v.sqrt()));
+        }
+    }
+}
+
+// detlint: hot
+fn score_candidate(slate: &Slate, i: usize, view: &mut View, s: &mut Scratch) -> f64 {
+    slate.view_at(i, view);
+    s.acc.clear();
+    for (m, _) in &view.grid {
+        s.acc.push(*m);
+    }
+    s.acc.iter().fold(f64::MIN, |a, &b| a.max(b))
+}
+
+// detlint: hot
+fn prime(slate: &Slate, s: &mut Scratch) {
+    // detlint: allow(A1, reason="one-time per-slate warm-up, amortized over all candidates")
+    let mut warm = Vec::with_capacity(slate.mus.len());
+    warm.extend(slate.mus.iter().map(|m| m + 1.0));
+    s.acc.clear();
+    s.acc.extend(warm);
+}

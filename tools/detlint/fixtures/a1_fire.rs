@@ -1,0 +1,37 @@
+// A1 fire: allocating calls inside hot functions — a marked per-candidate
+// helper and a registry-listed `view_at` both allocate per call, which is
+// exactly the regression that erodes the fused slate sweep's speedup.
+
+pub struct View {
+    pub grid: Vec<(f64, f64)>,
+}
+
+pub struct Slate {
+    mus: Vec<f64>,
+    vars: Vec<f64>,
+}
+
+impl Slate {
+    // registry-hot via hotpaths.toml (`PrimedSlate::view_at`): collect()
+    // and clone() build fresh buffers for every candidate scored
+    fn view_at(&self, i: usize) -> View {
+        let grid = self
+            .mus
+            .iter()
+            .zip(&self.vars)
+            .map(|(&m, &v)| (m + i as f64, v.sqrt()))
+            .collect();
+        let _stash = self.mus.clone();
+        View { grid }
+    }
+}
+
+// detlint: hot
+fn score_candidate(slate: &Slate, i: usize) -> f64 {
+    let mut acc = Vec::new();
+    for (m, _) in &slate.view_at(i).grid {
+        acc.push(*m);
+    }
+    let top = vec![acc.iter().cloned().fold(f64::MIN, f64::max)];
+    top[0]
+}

@@ -1,0 +1,46 @@
+// A2 allow: the per-candidate loop routed through the scratch twin with a
+// hoisted output buffer, plus one pragma'd wrapper call on a cold path.
+
+pub struct Factor {
+    l: Vec<f64>,
+    n: usize,
+}
+
+impl Factor {
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.solve_lower_in_place(&mut x);
+        x
+    }
+
+    pub fn solve_lower_into(&self, b: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        out.extend_from_slice(b);
+        self.solve_lower_in_place(out);
+    }
+
+    fn solve_lower_in_place(&self, x: &mut [f64]) {
+        for i in 0..self.n {
+            for j in 0..i {
+                x[i] -= self.l[i * self.n + j] * x[j];
+            }
+            x[i] /= self.l[i * self.n + i];
+        }
+    }
+}
+
+pub fn score_slate(factor: &Factor, slate: &[Vec<f64>]) -> f64 {
+    let mut acc = 0.0;
+    let mut v = Vec::new();
+    for rhs in slate {
+        factor.solve_lower_into(rhs, &mut v);
+        acc += v.iter().sum::<f64>();
+    }
+    acc
+}
+
+pub fn spot_check(factor: &Factor, rhs: &[f64]) -> f64 {
+    // detlint: allow(A2, reason="one-shot diagnostic, not on the slate sweep")
+    let v = factor.solve_lower(rhs);
+    v.iter().sum::<f64>()
+}

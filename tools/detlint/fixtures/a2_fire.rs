@@ -1,0 +1,40 @@
+// A2 fire: a per-candidate loop calling the allocating wrapper where the
+// scratch twin exists — every `.solve_lower(…)` call clones the RHS into
+// a fresh buffer the caller immediately throws away.
+
+pub struct Factor {
+    l: Vec<f64>,
+    n: usize,
+}
+
+impl Factor {
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.solve_lower_in_place(&mut x);
+        x
+    }
+
+    pub fn solve_lower_into(&self, b: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        out.extend_from_slice(b);
+        self.solve_lower_in_place(out);
+    }
+
+    fn solve_lower_in_place(&self, x: &mut [f64]) {
+        for i in 0..self.n {
+            for j in 0..i {
+                x[i] -= self.l[i * self.n + j] * x[j];
+            }
+            x[i] /= self.l[i * self.n + i];
+        }
+    }
+}
+
+pub fn score_slate(factor: &Factor, slate: &[Vec<f64>]) -> f64 {
+    let mut acc = 0.0;
+    for rhs in slate {
+        let v = factor.solve_lower(rhs);
+        acc += v.iter().sum::<f64>();
+    }
+    acc
+}

@@ -1,0 +1,50 @@
+// A3 allow: scratch hoisted to bindings that live across the loop — each
+// call reuses the grown buffer — plus one pragma'd temporary on an
+// init-only path.
+
+pub struct Scratch {
+    pub work: Vec<f64>,
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Scratch { work: Vec::new() }
+    }
+}
+
+pub struct Factor {
+    n: usize,
+}
+
+impl Factor {
+    pub fn downdate_into(&self, u: &[f64], out: &mut [f64], work: &mut Vec<f64>) {
+        work.clear();
+        work.extend_from_slice(u);
+        for i in 0..self.n {
+            out[i] -= work[i];
+        }
+    }
+}
+
+pub fn sweep(factor: &Factor, us: &[Vec<f64>], out: &mut [f64]) {
+    let mut work = Vec::new();
+    for u in us {
+        factor.downdate_into(u, out, &mut work);
+    }
+}
+
+pub fn sweep_scored(factor: &Factor, us: &[Vec<f64>], out: &mut [f64], score: fn(&mut Scratch) -> f64) -> f64 {
+    let mut acc = 0.0;
+    let mut work = Vec::new();
+    let mut s = Scratch::default();
+    for u in us {
+        factor.downdate_into(u, out, &mut work);
+        acc += score(&mut s);
+    }
+    acc
+}
+
+pub fn init_check(factor: &Factor, u: &[f64], out: &mut [f64]) {
+    // detlint: allow(A3, reason="init-only path, runs once per campaign")
+    factor.downdate_into(u, out, &mut Vec::new());
+}

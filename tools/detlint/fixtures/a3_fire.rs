@@ -1,0 +1,42 @@
+// A3 fire: fresh scratch temporaries in argument position — the callee's
+// scratch parameter exists precisely so the buffer survives across calls,
+// and `&mut Vec::new()` / `&mut Scratch::default()` throw it away each time.
+
+pub struct Scratch {
+    pub work: Vec<f64>,
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Scratch { work: Vec::new() }
+    }
+}
+
+pub struct Factor {
+    n: usize,
+}
+
+impl Factor {
+    pub fn downdate_into(&self, u: &[f64], out: &mut [f64], work: &mut Vec<f64>) {
+        work.clear();
+        work.extend_from_slice(u);
+        for i in 0..self.n {
+            out[i] -= work[i];
+        }
+    }
+}
+
+pub fn sweep(factor: &Factor, us: &[Vec<f64>], out: &mut [f64]) {
+    for u in us {
+        factor.downdate_into(u, out, &mut Vec::new());
+    }
+}
+
+pub fn sweep_scored(factor: &Factor, us: &[Vec<f64>], out: &mut [f64], score: fn(&mut Scratch) -> f64) -> f64 {
+    let mut acc = 0.0;
+    for u in us {
+        factor.downdate_into(u, out, &mut vec![0.0; u.len()]);
+        acc += score(&mut Scratch::default());
+    }
+    acc
+}

@@ -39,13 +39,16 @@ pub struct Pragma {
     pub file_level: bool,
 }
 
-/// Lexer output: tokens, well-formed pragmas, and malformed pragmas. The
-/// malformed ones are surfaced as unsuppressible `P0` findings — a
-/// suppression that silently failed to parse would otherwise *hide*
-/// whatever violation it sat next to.
+/// Lexer output: tokens, well-formed pragmas, hot-path markers, and
+/// malformed pragmas. The malformed ones are surfaced as unsuppressible
+/// `P0` findings — a suppression that silently failed to parse would
+/// otherwise *hide* whatever violation it sat next to.
 pub struct Lexed {
     pub toks: Vec<Tok>,
     pub pragmas: Vec<Pragma>,
+    /// Lines carrying a `// detlint: hot` marker: the next `fn` (same line
+    /// or the line below) gets the A1 allocation contract.
+    pub hot_marks: Vec<u32>,
     pub malformed: Vec<(u32, String)>,
 }
 
@@ -72,6 +75,7 @@ pub fn lex(src: &str) -> Lexed {
 
     let mut toks = Vec::new();
     let mut pragmas = Vec::new();
+    let mut hot_marks = Vec::new();
     let mut malformed = Vec::new();
     let mut i = 0usize;
     while i < chars.len() {
@@ -87,7 +91,13 @@ pub fn lex(src: &str) -> Lexed {
                 i += 1;
             }
             let text: String = chars[start..i].iter().collect();
-            scan_pragma(&text, pos_line[start], &mut pragmas, &mut malformed);
+            scan_pragma(
+                &text,
+                pos_line[start],
+                &mut pragmas,
+                &mut hot_marks,
+                &mut malformed,
+            );
             continue;
         }
         // block comments, nesting included
@@ -185,7 +195,7 @@ pub fn lex(src: &str) -> Lexed {
         });
         i += 1;
     }
-    Lexed { toks, pragmas, malformed }
+    Lexed { toks, pragmas, hot_marks, malformed }
 }
 
 /// If position `i` starts a string literal (plain/raw/byte), return the
@@ -242,10 +252,12 @@ fn string_end(chars: &[char], i: usize) -> Option<usize> {
 /// Parse a line comment for the pragma grammar:
 ///   `// detlint: allow(R1 [, R2…], reason="…")`
 ///   `// detlint: allow-file(R3, reason="…")`
+///   `// detlint: hot`                (A1 hot-path marker)
 fn scan_pragma(
     text: &str,
     line: u32,
     pragmas: &mut Vec<Pragma>,
+    hot_marks: &mut Vec<u32>,
     malformed: &mut Vec<(u32, String)>,
 ) {
     let t = text.trim_start_matches('/').trim_start_matches('!').trim();
@@ -253,6 +265,11 @@ fn scan_pragma(
         return;
     };
     let rest = rest.trim();
+    // the bare hot marker: no arguments, nothing to validate
+    if rest == "hot" {
+        hot_marks.push(line);
+        return;
+    }
     // `allow-file` first: `allow` is its prefix
     let (file_level, args) = if let Some(a) = rest.strip_prefix("allow-file") {
         (true, a)
@@ -261,7 +278,7 @@ fn scan_pragma(
     } else {
         malformed.push((
             line,
-            format!("unknown pragma `{rest}` (expected allow(...) or allow-file(...))"),
+            format!("unknown pragma `{rest}` (expected allow(...), allow-file(...) or hot)"),
         ));
         return;
     };
@@ -299,7 +316,7 @@ fn scan_pragma(
         && rules.iter().all(|r| {
             r == "ALL"
                 || (r.len() > 1
-                    && r.starts_with('R')
+                    && (r.starts_with('R') || r.starts_with('A'))
                     && r[1..].chars().all(|c| c.is_ascii_digit()))
         });
     if !valid {
@@ -394,6 +411,30 @@ mod tests {
     fn non_pragma_comments_are_ignored() {
         let lexed = lex("// just a note about detlint rules\nfn f() {}");
         assert!(lexed.pragmas.is_empty());
+        assert!(lexed.malformed.is_empty());
+    }
+
+    #[test]
+    fn hot_marker_records_its_line_without_a_pragma() {
+        let lexed = lex("// detlint: hot\nfn sweep() {}\n");
+        assert_eq!(lexed.hot_marks, vec![1]);
+        assert!(lexed.pragmas.is_empty());
+        assert!(lexed.malformed.is_empty());
+        // trailing same-line form
+        let lexed = lex("fn sweep() { // detlint: hot\n}\n");
+        assert_eq!(lexed.hot_marks, vec![1]);
+        // `hot` with arguments is not the marker grammar
+        let lexed = lex("// detlint: hot(sweep)\n");
+        assert!(lexed.hot_marks.is_empty());
+        assert_eq!(lexed.malformed.len(), 1);
+    }
+
+    #[test]
+    fn a_rule_ids_are_valid_in_pragmas() {
+        let lexed =
+            lex("// detlint: allow(A1, a3, reason=\"prime path\")\nlet x;");
+        assert_eq!(lexed.pragmas.len(), 1);
+        assert_eq!(lexed.pragmas[0].rules, vec!["A1", "A3"]);
         assert!(lexed.malformed.is_empty());
     }
 }

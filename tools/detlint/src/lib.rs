@@ -1,13 +1,16 @@
 //! detlint — the repo's determinism & concurrency contracts (rules R1–R5)
-//! as a source-level lint over `rust/src/**`.
+//! and hot-path allocation contracts (rules A1–A3) as a source-level lint
+//! over `rust/src/**`.
 //!
 //! The engine's value rests on invariants the compiler cannot see:
 //! bit-exact parity between sequential and sharded slate sweeps,
-//! submission-order determinism across worker counts, and seeded RNG
-//! streams that make live runs replayable. detlint encodes those as
-//! named, individually-suppressible rules; `docs/ARCHITECTURE.md`
-//! ("Determinism contracts") maps each invariant to its rule, and this
-//! crate's README documents every rule with fire/allow examples.
+//! submission-order determinism across worker counts, seeded RNG
+//! streams that make live runs replayable, and an allocation-free
+//! per-candidate slate sweep (the paper's 65x recommendation speedup).
+//! detlint encodes those as named, individually-suppressible rules;
+//! `docs/ARCHITECTURE.md` ("Determinism contracts", "Allocation
+//! contracts") maps each invariant to its rule, and this crate's README
+//! documents every rule with fire/allow examples.
 //!
 //! Suppression, most local first:
 //! - `// detlint: allow(R1, reason="…")` on the finding's line or the
@@ -24,11 +27,72 @@ pub mod rules;
 use rules::{Finding, RuleSet};
 use std::path::{Path, PathBuf};
 
-/// Tree-scan result.
+/// Tree-scan result. Suppressed findings are retained (pragma- and
+/// allowlist-suppressed alike) so `--json` can emit them with
+/// `"suppressed": true`.
 pub struct Report {
     pub findings: Vec<Finding>,
     pub suppressed: usize,
+    pub suppressed_findings: Vec<Finding>,
     pub files: usize,
+}
+
+/// Parse `tools/detlint/hotpaths.toml`: a single `hot = [...]` array of
+/// quoted `Type::fn` strings, with `#` comments and blank lines ignored.
+/// Hand-rolled on purpose — the lint stays zero-dependency.
+pub fn parse_hotpaths(text: &str) -> Result<Vec<String>, String> {
+    let mut out = Vec::new();
+    let mut in_array = false;
+    for (idx, raw) in text.lines().enumerate() {
+        let line = match raw.find('#') {
+            Some(h) => &raw[..h],
+            None => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if !in_array {
+            if let Some(rest) = line.strip_prefix("hot") {
+                let rest = rest.trim_start();
+                if let Some(rest) = rest.strip_prefix('=') {
+                    let rest = rest.trim_start();
+                    if let Some(rest) = rest.strip_prefix('[') {
+                        in_array = true;
+                        collect_quoted(rest, &mut out);
+                        if rest.contains(']') {
+                            in_array = false;
+                        }
+                        continue;
+                    }
+                }
+            }
+            return Err(format!(
+                "hotpaths.toml:{}: expected `hot = [` or a comment, got \
+                 `{line}`",
+                idx + 1
+            ));
+        }
+        collect_quoted(line, &mut out);
+        if line.contains(']') {
+            in_array = false;
+        }
+    }
+    if in_array {
+        return Err("hotpaths.toml: unterminated `hot = [` array".to_string());
+    }
+    Ok(out)
+}
+
+fn collect_quoted(line: &str, out: &mut Vec<String>) {
+    let mut rest = line;
+    while let Some(a) = rest.find('"') {
+        let Some(b) = rest[a + 1..].find('"') else {
+            return;
+        };
+        out.push(rest[a + 1..a + 1 + b].to_string());
+        rest = &rest[a + 2 + b..];
+    }
 }
 
 /// One `detlint.allow` entry: suppress `rule` everywhere in `path`.
@@ -87,10 +151,12 @@ fn normalize(p: &Path) -> String {
 }
 
 /// Lint every `.rs` file under `paths` (files or directories), applying
-/// path-scoped rules and the allowlist.
+/// path-scoped rules, the allowlist, and the A1 hot-function registry
+/// (`hot`; pass `None` to keep the built-in [`rules::DEFAULT_HOT`]).
 pub fn scan_tree(
     paths: &[PathBuf],
     allow: &[AllowEntry],
+    hot: Option<&[String]>,
 ) -> std::io::Result<Report> {
     let mut files: Vec<PathBuf> = Vec::new();
     for p in paths {
@@ -103,25 +169,34 @@ pub fn scan_tree(
     files.sort();
     files.dedup();
     let mut findings = Vec::new();
-    let mut suppressed = 0usize;
+    let mut suppressed_findings = Vec::new();
     for f in &files {
         let src = std::fs::read_to_string(f)?;
         let rel = normalize(f);
-        let mut out = rules::scan_source(&rel, &src, RuleSet::for_path(&rel));
-        suppressed += out.suppressed;
+        let mut rules_for = RuleSet::for_path(&rel);
+        if let Some(hot) = hot {
+            rules_for = rules_for.with_hot_fns(hot);
+        }
+        let mut out = rules::scan_source(&rel, &src, rules_for);
+        suppressed_findings.append(&mut out.suppressed_findings);
         out.findings.retain(|fi| {
             let hit = allow.iter().any(|a| {
                 a.rule.eq_ignore_ascii_case(fi.rule)
                     && (a.path == fi.file || fi.file.ends_with(&a.path))
             });
             if hit {
-                suppressed += 1;
+                suppressed_findings.push(fi.clone());
             }
             !hit
         });
         findings.append(&mut out.findings);
     }
-    Ok(Report { findings, suppressed, files: files.len() })
+    Ok(Report {
+        findings,
+        suppressed: suppressed_findings.len(),
+        suppressed_findings,
+        files: files.len(),
+    })
 }
 
 /// Rustc-style rendering: `file:line:col: [rule] message`.
@@ -129,16 +204,49 @@ pub fn fmt_finding(f: &Finding) -> String {
     format!("{}:{}:{}: [{}] {}", f.file, f.line, f.col, f.rule, f.msg)
 }
 
-/// Run the fixture self-test: every rule R1–R5 must fire on its `*_fire.rs`
-/// fixture and stay silent on its `*_allow.rs` variant (which contains
-/// both a compliant rewrite and a pragma-suppressed violation, proving the
-/// suppression machinery too). Returns one human-readable line per check.
+/// One finding as a single JSON object line (JSON Lines output mode).
+pub fn fmt_finding_json(f: &Finding, suppressed: bool) -> String {
+    format!(
+        "{{\"file\":\"{}\",\"line\":{},\"col\":{},\"rule\":\"{}\",\
+         \"message\":\"{}\",\"suppressed\":{}}}",
+        json_escape(&f.file),
+        f.line,
+        f.col,
+        f.rule,
+        json_escape(&f.msg),
+        suppressed
+    )
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Run the fixture self-test: every rule R1–R5 and A1–A3 must fire on its
+/// `*_fire.rs` fixture and stay silent on its `*_allow.rs` variant (which
+/// contains both a compliant rewrite and a pragma-suppressed violation,
+/// proving the suppression machinery too). Returns one human-readable line
+/// per check.
 pub fn self_test(fixtures: &Path) -> Result<Vec<String>, String> {
     let mut lines = Vec::new();
-    for n in 1..=5u32 {
-        let rule = format!("R{n}");
+    for rule in ["R1", "R2", "R3", "R4", "R5", "A1", "A2", "A3"] {
         for (suffix, expect_fire) in [("fire", true), ("allow", false)] {
-            let name = format!("r{n}_{suffix}.rs");
+            let name =
+                format!("{}_{suffix}.rs", rule.to_ascii_lowercase());
             let path = fixtures.join(&name);
             let src = std::fs::read_to_string(&path)
                 .map_err(|e| format!("{}: {e}", path.display()))?;

@@ -7,26 +7,36 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 const USAGE: &str = "\
-detlint — determinism & concurrency contract linter (rules R1–R5)
+detlint — determinism, concurrency & allocation contract linter
+(rules R1–R5, A1–A3)
 
 USAGE:
     cargo run -p detlint [-- OPTIONS] [PATH...]
 
-    PATH         files or directories to lint (default: <root>/rust/src)
+    PATH            files or directories to lint (default: <root>/rust/src)
 
 OPTIONS:
-    --root DIR   repo root the default scan paths and allowlist resolve
-                 against (default: .)
-    --allow FILE allowlist file (default: <root>/tools/detlint/detlint.allow)
-    --self-test  verify every rule against its fire/allow fixtures and exit
-    --rules      print the rule catalog and exit
-    -h, --help   this text";
+    --root DIR      repo root the default scan paths, allowlist and hot
+                    registry resolve against (default: .)
+    --allow FILE    allowlist file
+                    (default: <root>/tools/detlint/detlint.allow)
+    --hotpaths FILE A1 hot-function registry
+                    (default: <root>/tools/detlint/hotpaths.toml; the
+                    built-in registry applies when the file is absent)
+    --json          one JSON object per finding (file/line/col/rule/
+                    message/suppressed) instead of the human format
+    --self-test     verify every rule against its fire/allow fixtures
+                    and exit
+    --rules         print the rule catalog and exit
+    -h, --help      this text";
 
 fn main() -> ExitCode {
     let mut root: Option<PathBuf> = None;
     let mut allow_path: Option<PathBuf> = None;
+    let mut hot_path: Option<PathBuf> = None;
     let mut selftest = false;
     let mut list_rules = false;
+    let mut json = false;
     let mut paths: Vec<PathBuf> = Vec::new();
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
@@ -39,8 +49,13 @@ fn main() -> ExitCode {
                 Some(v) => allow_path = Some(PathBuf::from(v)),
                 None => return usage_err("--allow needs a value"),
             },
+            "--hotpaths" => match args.next() {
+                Some(v) => hot_path = Some(PathBuf::from(v)),
+                None => return usage_err("--hotpaths needs a value"),
+            },
             "--self-test" => selftest = true,
             "--rules" => list_rules = true,
+            "--json" => json = true,
             "-h" | "--help" => {
                 println!("{USAGE}");
                 return ExitCode::SUCCESS;
@@ -99,22 +114,50 @@ fn main() -> ExitCode {
         }
         None => Vec::new(),
     };
+    let hot_file = hot_path.or_else(|| {
+        let p = root.join("tools/detlint/hotpaths.toml");
+        p.exists().then_some(p)
+    });
+    let hot = match &hot_file {
+        Some(p) => {
+            let text = match std::fs::read_to_string(p) {
+                Ok(t) => t,
+                Err(e) => return usage_err(&format!("{}: {e}", p.display())),
+            };
+            match detlint::parse_hotpaths(&text) {
+                Ok(h) => Some(h),
+                Err(e) => return usage_err(&e),
+            }
+        }
+        None => None,
+    };
 
-    match detlint::scan_tree(&scan, &allow) {
+    match detlint::scan_tree(&scan, &allow, hot.as_deref()) {
         Err(e) => {
             eprintln!("detlint: {e}");
             ExitCode::from(2)
         }
         Ok(rep) => {
-            for f in &rep.findings {
-                println!("{}", detlint::fmt_finding(f));
+            if json {
+                // machine mode: every finding as one JSON line, suppressed
+                // ones last, no summary trailer
+                for f in &rep.findings {
+                    println!("{}", detlint::fmt_finding_json(f, false));
+                }
+                for f in &rep.suppressed_findings {
+                    println!("{}", detlint::fmt_finding_json(f, true));
+                }
+            } else {
+                for f in &rep.findings {
+                    println!("{}", detlint::fmt_finding(f));
+                }
+                println!(
+                    "detlint: {} unsuppressed finding(s), {} suppressed, {} file(s) scanned",
+                    rep.findings.len(),
+                    rep.suppressed,
+                    rep.files
+                );
             }
-            println!(
-                "detlint: {} unsuppressed finding(s), {} suppressed, {} file(s) scanned",
-                rep.findings.len(),
-                rep.suppressed,
-                rep.files
-            );
             if rep.findings.is_empty() {
                 ExitCode::SUCCESS
             } else {

@@ -1,5 +1,6 @@
-//! The determinism & concurrency contracts, rules R1–R5, matched over the
-//! token stream produced by [`crate::lexer`].
+//! The determinism & concurrency contracts (rules R1–R5) and the hot-path
+//! allocation contracts (rules A1–A3), matched over the token stream
+//! produced by [`crate::lexer`].
 //!
 //! Every rule reports rustc-style `file:line:col` findings with a rule id,
 //! and every finding is suppressible by an inline pragma
@@ -15,6 +16,32 @@ pub const DET_MODULES: &[&str] =
 
 /// Modules with real cross-thread state (R4/R5).
 pub const CONCURRENT_MODULES: &[&str] = &["coordinator", "engine"];
+
+/// Modules carrying the allocation-free slate-sweep machinery (A2/A3):
+/// the blocked linalg kernels, both surrogate backends, and the α_T
+/// acquisition sweep. A1 is marker/registry-gated, so it is on tree-wide
+/// and stays inert wherever nothing is marked hot.
+pub const ALLOC_MODULES: &[&str] = &["linalg", "models", "acq"];
+
+/// Built-in A1 hot-function registry, mirrored by
+/// `tools/detlint/hotpaths.toml` (which overrides it when present). Only
+/// the final `::` segment is matched against `fn` names; the qualifier is
+/// documentation.
+pub const DEFAULT_HOT: &[&str] = &[
+    "PrimedSlate::view_at",
+    "PrimedSlate::view_into",
+    "Cholesky::solve_lower_into",
+    "Cholesky::solve_lower_t_into",
+    "Cholesky::solve_lower_multi_into",
+    "Cholesky::update_into",
+    "Cholesky::downdate_into",
+    "Mat::matmul_into",
+    "AlphaSlate::eval_primed",
+    "EntropyEstimator::info_gain_from_with",
+    "EntropyEstimator::p_opt_into",
+    "Posterior::sample_with",
+    "Posterior::sample_component_with",
+];
 
 /// Rule id → one-line contract, as printed by `detlint --rules`.
 pub const RULES: &[(&str, &str)] = &[
@@ -47,6 +74,28 @@ pub const RULES: &[(&str, &str)] = &[
          scope; drop/take the receiver first (the WorkerPool shutdown \
          deadlock shape)",
     ),
+    (
+        "A1",
+        "no allocating calls (Vec::new, vec![], with_capacity, to_vec, \
+         clone, collect, Box::new, Mat::zeros) inside hot functions — \
+         those marked `// detlint: hot` or listed in \
+         tools/detlint/hotpaths.toml; thread caller-provided scratch \
+         instead",
+    ),
+    (
+        "A2",
+        "no allocating wrappers where a `*_into`/scratch twin exists \
+         (solve_lower → solve_lower_into, matmul → matmul_into, \
+         p_opt_from → p_opt_into, …) in allocation-contract modules \
+         (linalg, models, acq)",
+    ),
+    (
+        "A3",
+        "no fresh scratch temporaries (`&mut Vec::new()`, \
+         `&mut X::default()`, `&mut Cholesky::scratch()`) in argument \
+         position: a throwaway buffer defeats the scratch API — hoist it \
+         to a reused binding",
+    ),
     ("P0", "malformed `// detlint:` pragma (cannot be suppressed)"),
 ];
 
@@ -60,24 +109,48 @@ pub struct Finding {
     pub msg: String,
 }
 
-/// Which rules apply to one file.
-#[derive(Debug, Clone, Copy)]
+/// Which rules apply to one file, plus the A1 hot-function registry.
+#[derive(Debug, Clone)]
 pub struct RuleSet {
     pub r1: bool,
     pub r2: bool,
     pub r3: bool,
     pub r4: bool,
     pub r5: bool,
+    pub a1: bool,
+    pub a2: bool,
+    pub a3: bool,
+    /// Hot-function names for A1 (qualified; only the final `::` segment
+    /// is matched against `fn` names). Defaults to [`DEFAULT_HOT`];
+    /// `tools/detlint/hotpaths.toml` overrides it via
+    /// [`RuleSet::with_hot_fns`].
+    pub hot_fns: Vec<String>,
+}
+
+fn default_hot() -> Vec<String> {
+    DEFAULT_HOT.iter().map(|s| s.to_string()).collect()
 }
 
 impl RuleSet {
     /// Every rule on — fixture/self-test mode.
     pub fn all() -> RuleSet {
-        RuleSet { r1: true, r2: true, r3: true, r4: true, r5: true }
+        RuleSet {
+            r1: true,
+            r2: true,
+            r3: true,
+            r4: true,
+            r5: true,
+            a1: true,
+            a2: true,
+            a3: true,
+            hot_fns: default_hot(),
+        }
     }
 
-    /// Scope rules by module path: R2 is tree-wide, R1/R3 cover the
-    /// deterministic modules, R4/R5 the concurrent ones.
+    /// Scope rules by module path: R2 and A1 are tree-wide (A1 stays
+    /// inert without hot markers or registry hits), R1/R3 cover the
+    /// deterministic modules, R4/R5 the concurrent ones, A2/A3 the
+    /// allocation-contract modules.
     pub fn for_path(rel: &str) -> RuleSet {
         let p = rel.replace('\\', "/");
         let in_any = |mods: &[&str]| {
@@ -92,15 +165,26 @@ impl RuleSet {
             r3: in_any(DET_MODULES),
             r4: in_any(CONCURRENT_MODULES),
             r5: in_any(CONCURRENT_MODULES),
+            a1: true,
+            a2: in_any(ALLOC_MODULES),
+            a3: in_any(ALLOC_MODULES),
+            hot_fns: default_hot(),
         }
+    }
+
+    /// Replace the A1 registry (the parsed `hotpaths.toml` contents).
+    pub fn with_hot_fns(mut self, hot: &[String]) -> RuleSet {
+        self.hot_fns = hot.to_vec();
+        self
     }
 }
 
-/// Scan result for one file: surviving findings plus the count of
-/// pragma-suppressed ones.
+/// Scan result for one file: surviving findings plus the pragma-suppressed
+/// ones (kept so `--json` can report them; `suppressed` is their count).
 pub struct ScanOutcome {
     pub findings: Vec<Finding>,
     pub suppressed: usize,
+    pub suppressed_findings: Vec<Finding>,
 }
 
 /// Lint one file's source under the given rule scope.
@@ -133,21 +217,44 @@ pub fn scan_source(rel: &str, src: &str, rules: RuleSet) -> ScanOutcome {
     if rules.r5 {
         r5_join_order(rel, toks, &excl, &mut raw);
     }
+    if rules.a1 {
+        a1_hot_allocations(
+            rel,
+            toks,
+            &excl,
+            &lexed.hot_marks,
+            &rules.hot_fns,
+            &mut raw,
+        );
+    }
+    if rules.a2 {
+        a2_allocating_wrappers(rel, toks, &excl, &mut raw);
+    }
+    if rules.a3 {
+        a3_fresh_scratch_args(rel, toks, &excl, &mut raw);
+    }
     let mut findings = Vec::new();
-    let mut suppressed = 0usize;
+    let mut suppressed_findings = Vec::new();
     for f in raw {
         if f.rule != "P0" && pragma_suppresses(&lexed.pragmas, &f) {
-            suppressed += 1;
+            suppressed_findings.push(f);
         } else {
             findings.push(f);
         }
     }
-    findings.sort_by(|a, b| {
-        (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule))
-    });
-    findings
-        .dedup_by(|a, b| a.line == b.line && a.col == b.col && a.rule == b.rule);
-    ScanOutcome { findings, suppressed }
+    let order = |v: &mut Vec<Finding>| {
+        v.sort_by(|a, b| (a.line, a.col, a.rule).cmp(&(b.line, b.col, b.rule)));
+        v.dedup_by(|a, b| {
+            a.line == b.line && a.col == b.col && a.rule == b.rule
+        });
+    };
+    order(&mut findings);
+    order(&mut suppressed_findings);
+    ScanOutcome {
+        findings,
+        suppressed: suppressed_findings.len(),
+        suppressed_findings,
+    }
 }
 
 fn pragma_suppresses(ps: &[Pragma], f: &Finding) -> bool {
@@ -645,6 +752,308 @@ fn check_join_body(
                  disconnecting (the PR 2 WorkerPool deadlock)"
             ),
         );
+    }
+}
+
+// ---- A1: allocation inside hot functions -----------------------------------
+
+/// Owner types whose `::` constructors allocate.
+const ALLOC_TYPES: &[&str] = &[
+    "Vec", "VecDeque", "Box", "String", "BTreeMap", "BTreeSet", "HashMap",
+    "HashSet", "Mat",
+];
+/// Allocating constructor names on the types above.
+const ALLOC_CTORS: &[&str] = &["new", "with_capacity", "from", "zeros"];
+/// Allocating method calls banned in hot bodies.
+const ALLOC_METHODS: &[&str] =
+    &["clone", "to_vec", "to_owned", "to_string", "collect"];
+
+/// Does a registry entry's final `::` segment name this `fn`?
+fn hot_name(hot_fns: &[String], name: &str) -> bool {
+    hot_fns.iter().any(|h| h.rsplit("::").next() == Some(name))
+}
+
+/// After a method ident, skip an optional `::<…>` turbofish and report
+/// whether a call's `(` follows (so `.collect::<Vec<_>>()` still matches).
+fn after_generics_is_call(toks: &[Tok], mut k: usize, end: usize) -> bool {
+    if is_punct(toks, k, ':')
+        && is_punct(toks, k + 1, ':')
+        && is_punct(toks, k + 2, '<')
+    {
+        let mut d = 1usize;
+        k += 3;
+        while k < end && d > 0 {
+            if is_punct(toks, k, '<') {
+                d += 1;
+            } else if is_punct(toks, k, '>') {
+                d -= 1;
+            }
+            k += 1;
+        }
+    }
+    is_punct(toks, k, '(')
+}
+
+fn a1_hot_allocations(
+    rel: &str,
+    toks: &[Tok],
+    excl: &[(usize, usize)],
+    hot_marks: &[u32],
+    hot_fns: &[String],
+    out: &mut Vec<Finding>,
+) {
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !is_ident(toks, i, "fn") || in_excluded(excl, i) {
+            i += 1;
+            continue;
+        }
+        let fn_line = toks[i].line;
+        let name = ident_at(toks, i + 1).unwrap_or("").to_string();
+        // `// detlint: hot` on the `fn` line, the line above, or two above
+        // (tolerating one attribute line between marker and signature)
+        let marked =
+            hot_marks.iter().any(|&m| fn_line >= m && fn_line <= m + 2);
+        let registered = hot_name(hot_fns, &name);
+        // body braces, as in r5
+        let mut j = i + 1;
+        let mut open = None;
+        while j < toks.len() {
+            if is_punct(toks, j, ';') {
+                break;
+            }
+            if is_punct(toks, j, '{') {
+                open = Some(j);
+                break;
+            }
+            j += 1;
+        }
+        let Some(open) = open else {
+            i = j + 1;
+            continue;
+        };
+        let mut d = 0usize;
+        let mut k = open;
+        let mut close = toks.len();
+        while k < toks.len() {
+            if is_punct(toks, k, '{') {
+                d += 1;
+            } else if is_punct(toks, k, '}') {
+                d -= 1;
+                if d == 0 {
+                    close = k;
+                    break;
+                }
+            }
+            k += 1;
+        }
+        if marked || registered {
+            scan_hot_body(rel, toks, excl, open + 1, close, &name, out);
+        }
+        // step inside so nested/closure-captured fns are scanned too
+        i = open + 1;
+    }
+}
+
+fn scan_hot_body(
+    rel: &str,
+    toks: &[Tok],
+    excl: &[(usize, usize)],
+    start: usize,
+    end: usize,
+    fn_name: &str,
+    out: &mut Vec<Finding>,
+) {
+    let mut t = start;
+    while t < end {
+        if in_excluded(excl, t) {
+            t += 1;
+            continue;
+        }
+        if let Some(ty) = ident_at(toks, t) {
+            // `Vec::new`, `Vec::with_capacity`, `Box::new`, `Mat::zeros`, …
+            // (also as a bare fn value, e.g. `unwrap_or_else(Vec::new)` —
+            // still one allocation per call on the hot path)
+            if ALLOC_TYPES.contains(&ty)
+                && is_punct(toks, t + 1, ':')
+                && is_punct(toks, t + 2, ':')
+            {
+                if let Some(m) = ident_at(toks, t + 3) {
+                    if ALLOC_CTORS.contains(&m) {
+                        push(
+                            out,
+                            rel,
+                            &toks[t],
+                            "A1",
+                            format!(
+                                "`{ty}::{m}` allocates inside hot function \
+                                 `{fn_name}`; thread a caller-provided \
+                                 scratch buffer instead"
+                            ),
+                        );
+                        t += 4;
+                        continue;
+                    }
+                }
+            }
+            if ty == "vec" && is_punct(toks, t + 1, '!') {
+                push(
+                    out,
+                    rel,
+                    &toks[t],
+                    "A1",
+                    format!(
+                        "`vec![…]` allocates inside hot function \
+                         `{fn_name}`; thread a caller-provided scratch \
+                         buffer instead"
+                    ),
+                );
+                t += 2;
+                continue;
+            }
+        }
+        // `.clone()`, `.to_vec()`, `.collect::<…>()`, …
+        if is_punct(toks, t, '.') {
+            if let Some(m) = ident_at(toks, t + 1) {
+                if ALLOC_METHODS.contains(&m)
+                    && after_generics_is_call(toks, t + 2, end)
+                {
+                    push(
+                        out,
+                        rel,
+                        &toks[t + 1],
+                        "A1",
+                        format!(
+                            "`.{m}()` allocates inside hot function \
+                             `{fn_name}`; reuse a scratch buffer (`clear` + \
+                             `extend`/`copy_from`) instead"
+                        ),
+                    );
+                    t += 2;
+                    continue;
+                }
+            }
+        }
+        t += 1;
+    }
+}
+
+// ---- A2: allocating wrapper where a scratch twin exists ---------------------
+
+/// (allocating wrapper, scratch twin). Call sites of the wrapper inside
+/// allocation-contract modules must use the twin. `update`/`downdate` are
+/// deliberately absent — the bare names are too generic to match safely —
+/// and their throwaway-buffer misuse is caught by A3 at the call site.
+const A2_PAIRS: &[(&str, &str)] = &[
+    ("solve_lower", "solve_lower_into"),
+    ("solve_lower_t", "solve_lower_t_into"),
+    ("solve_lower_multi", "solve_lower_multi_into"),
+    ("matmul", "matmul_into"),
+    ("p_opt_from", "p_opt_into"),
+    ("info_gain_from", "info_gain_from_with"),
+];
+
+fn a2_allocating_wrappers(
+    rel: &str,
+    toks: &[Tok],
+    excl: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    for i in 0..toks.len() {
+        if in_excluded(excl, i) || !is_punct(toks, i, '.') {
+            continue;
+        }
+        let Some(m) = ident_at(toks, i + 1) else {
+            continue;
+        };
+        let Some(&(_, twin)) = A2_PAIRS.iter().find(|(w, _)| *w == m) else {
+            continue;
+        };
+        if !is_punct(toks, i + 2, '(') {
+            continue;
+        }
+        push(
+            out,
+            rel,
+            &toks[i + 1],
+            "A2",
+            format!(
+                "`.{m}(…)` allocates its result on every call; use the \
+                 scratch twin `{twin}` with a reused output buffer"
+            ),
+        );
+    }
+}
+
+// ---- A3: fresh scratch temporaries in argument position ---------------------
+
+/// Constructor names whose empty-argument calls read as throwaway scratch.
+const SCRATCH_CTORS: &[&str] = &["new", "default", "scratch"];
+
+fn a3_fresh_scratch_args(
+    rel: &str,
+    toks: &[Tok],
+    excl: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    for i in 0..toks.len() {
+        if in_excluded(excl, i) {
+            continue;
+        }
+        if !(is_punct(toks, i, '(') || is_punct(toks, i, ',')) {
+            continue;
+        }
+        if !is_punct(toks, i + 1, '&') || !is_ident(toks, i + 2, "mut") {
+            continue;
+        }
+        // `&mut vec![…]`
+        if is_ident(toks, i + 3, "vec") && is_punct(toks, i + 4, '!') {
+            push(
+                out,
+                rel,
+                &toks[i + 3],
+                "A3",
+                "`&mut vec![…]` builds a throwaway buffer in argument \
+                 position, defeating the scratch API; hoist it to a binding \
+                 reused across calls"
+                    .to_string(),
+            );
+            continue;
+        }
+        // `&mut Path::to::{new,default,scratch}()` with an empty argument
+        // list (`Rng::new(seed)`-style seeded constructors don't match)
+        let mut k = i + 3;
+        let mut segs: Vec<&str> = Vec::new();
+        let Some(first) = ident_at(toks, k) else {
+            continue;
+        };
+        segs.push(first);
+        while is_punct(toks, k + 1, ':')
+            && is_punct(toks, k + 2, ':')
+            && ident_at(toks, k + 3).is_some()
+        {
+            k += 3;
+            segs.push(ident_at(toks, k).unwrap_or(""));
+        }
+        let last = *segs.last().unwrap_or(&"");
+        if segs.len() >= 2
+            && SCRATCH_CTORS.contains(&last)
+            && is_punct(toks, k + 1, '(')
+            && is_punct(toks, k + 2, ')')
+        {
+            let path = segs.join("::");
+            push(
+                out,
+                rel,
+                &toks[i + 3],
+                "A3",
+                format!(
+                    "`&mut {path}()` builds a throwaway scratch value in \
+                     argument position, defeating the scratch API; hoist it \
+                     to a binding reused across calls"
+                ),
+            );
+        }
     }
 }
 

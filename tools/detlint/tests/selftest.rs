@@ -17,8 +17,8 @@ fn fixture_src(name: &str) -> String {
 #[test]
 fn every_rule_fires_and_every_allow_variant_passes() {
     let lines = detlint::self_test(&fixtures()).expect("self-test");
-    // five rules x (fire + allow)
-    assert_eq!(lines.len(), 10, "{lines:?}");
+    // eight rules (R1–R5, A1–A3) x (fire + allow)
+    assert_eq!(lines.len(), 16, "{lines:?}");
 }
 
 /// The tentpole regression tie-in: R5 must fire on PR 2's pre-fix
@@ -147,4 +147,137 @@ fn keyed_hash_access_is_not_flagged() {
         }\n";
     let out = scan_source("rust/src/engine/x.rs", src, RuleSet::all());
     assert!(out.findings.is_empty(), "{:?}", out.findings);
+}
+
+// ---- A-rule machinery -------------------------------------------------------
+
+#[test]
+fn a1_fires_only_in_marked_or_registered_functions() {
+    // the same allocating body: cold fn passes, hot-marked fn fires
+    let cold = "fn build(n: usize) -> Vec<f64> { let v = Vec::new(); v }";
+    let out = scan_source("rust/src/models/x.rs", cold, RuleSet::all());
+    assert!(out.findings.is_empty(), "{:?}", out.findings);
+
+    let marked = "// detlint: hot\n\
+                  fn build(n: usize) -> Vec<f64> { let v = Vec::new(); v }";
+    let out = scan_source("rust/src/models/x.rs", marked, RuleSet::all());
+    assert_eq!(out.findings.len(), 1, "{:?}", out.findings);
+    assert_eq!(out.findings[0].rule, "A1");
+
+    // the marker tolerates one attribute line between itself and the fn
+    let attr = "// detlint: hot\n\
+                #[inline]\n\
+                fn build(n: usize) -> Vec<f64> { let v = Vec::new(); v }";
+    let out = scan_source("rust/src/models/x.rs", attr, RuleSet::all());
+    assert_eq!(out.findings.len(), 1, "{:?}", out.findings);
+
+    // registry names match on the final `::` segment
+    let reg = "fn view_at(&self, i: usize) -> Vec<f64> { self.xs.to_vec() }";
+    let out = scan_source(
+        "rust/src/models/x.rs",
+        reg,
+        RuleSet::all()
+            .with_hot_fns(&["PrimedSlate::view_at".to_string()]),
+    );
+    assert_eq!(out.findings.len(), 1, "{:?}", out.findings);
+    assert_eq!(out.findings[0].rule, "A1");
+    assert!(out.findings[0].msg.contains("view_at"), "{}", out.findings[0].msg);
+}
+
+#[test]
+fn a1_matches_collect_through_a_turbofish() {
+    let src = "// detlint: hot\n\
+               fn grid(&self) -> Vec<f64> {\n\
+                   self.xs.iter().map(|x| x + 1.0).collect::<Vec<f64>>()\n\
+               }";
+    let out = scan_source("rust/src/models/x.rs", src, RuleSet::all());
+    let rules: Vec<&str> = out.findings.iter().map(|f| f.rule).collect();
+    assert!(rules.contains(&"A1"), "{rules:?}");
+}
+
+#[test]
+fn a2_requires_the_exact_wrapper_ident() {
+    // the scratch twin itself must not be flagged
+    let ok = "fn f(c: &Cholesky, b: &[f64], v: &mut Vec<f64>) { c.solve_lower_into(b, v); }";
+    let out = scan_source("rust/src/linalg/x.rs", ok, RuleSet::all());
+    assert!(out.findings.is_empty(), "{:?}", out.findings);
+    // the allocating wrapper is
+    let bad = "fn f(c: &Cholesky, b: &[f64]) -> Vec<f64> { c.solve_lower(b) }";
+    let out = scan_source("rust/src/linalg/x.rs", bad, RuleSet::all());
+    assert_eq!(out.findings.len(), 1, "{:?}", out.findings);
+    assert_eq!(out.findings[0].rule, "A2");
+    assert!(
+        out.findings[0].msg.contains("solve_lower_into"),
+        "{}",
+        out.findings[0].msg
+    );
+}
+
+#[test]
+fn a2_is_scoped_to_allocation_contract_modules() {
+    let src = "fn f(c: &Cholesky, b: &[f64]) -> Vec<f64> { c.solve_lower(b) }";
+    let rel = "rust/src/experiments/x.rs";
+    let out = scan_source(rel, src, RuleSet::for_path(rel));
+    assert!(out.findings.is_empty(), "{:?}", out.findings);
+    let rel = "rust/src/acq/x.rs";
+    let out = scan_source(rel, src, RuleSet::for_path(rel));
+    assert_eq!(out.findings.len(), 1, "{:?}", out.findings);
+}
+
+#[test]
+fn a3_flags_only_empty_constructor_temporaries() {
+    // seeded/parameterized constructors in argument position are fine
+    let ok = "fn f(s: &mut State) { step(s, &mut Rng::new(42), &mut self.work); }";
+    let out = scan_source("rust/src/models/x.rs", ok, RuleSet::all());
+    assert!(out.findings.is_empty(), "{:?}", out.findings);
+    // empty ctor calls are throwaway scratch
+    for bad in [
+        "fn f(c: &Cholesky, u: &[f64]) { c.update_into(u, &mut Cholesky::scratch()); }",
+        "fn f(c: &Cholesky, u: &[f64]) { c.update_into(u, &mut Vec::new()); }",
+        "fn f(c: &Cholesky, u: &[f64]) { c.update_into(u, &mut FantasyScratch::default()); }",
+        "fn f(c: &Cholesky, u: &[f64]) { c.update_into(u, &mut vec![]); }",
+    ] {
+        let out = scan_source("rust/src/models/x.rs", bad, RuleSet::all());
+        assert_eq!(out.findings.len(), 1, "{bad}: {:?}", out.findings);
+        assert_eq!(out.findings[0].rule, "A3");
+    }
+}
+
+#[test]
+fn hotpaths_registry_parses_with_comments_and_trailing_commas() {
+    let text = "# registry\nhot = [\n  \"PrimedSlate::view_at\", # sweep\n  \"Mat::matmul_into\",\n]\n";
+    let hot = detlint::parse_hotpaths(text).expect("parses");
+    assert_eq!(hot, vec!["PrimedSlate::view_at", "Mat::matmul_into"]);
+    // the committed registry file itself must stay parseable
+    let committed = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/hotpaths.toml"
+    );
+    let text = std::fs::read_to_string(committed).expect("hotpaths.toml");
+    let hot = detlint::parse_hotpaths(&text).expect("committed registry");
+    assert!(
+        hot.iter().any(|h| h == "PrimedSlate::view_into"),
+        "{hot:?}"
+    );
+    // and stray non-array lines are rejected loudly
+    assert!(detlint::parse_hotpaths("hot = foo\n").is_err());
+    assert!(detlint::parse_hotpaths("hot = [\n\"x\"\n").is_err());
+}
+
+#[test]
+fn json_output_escapes_and_flags_suppression() {
+    let f = detlint::rules::Finding {
+        file: "rust/src/models/x.rs".to_string(),
+        line: 3,
+        col: 7,
+        rule: "A1",
+        msg: "`vec![…]` allocates \"here\"".to_string(),
+    };
+    let line = detlint::fmt_finding_json(&f, true);
+    assert_eq!(
+        line,
+        "{\"file\":\"rust/src/models/x.rs\",\"line\":3,\"col\":7,\
+         \"rule\":\"A1\",\"message\":\"`vec![…]` allocates \\\"here\\\"\",\
+         \"suppressed\":true}"
+    );
 }
