@@ -9,9 +9,10 @@
 //! the simulated training duration, so parallelism is actually observable).
 mod common;
 
-use trimtuner::coordinator::{Job, SimLauncher, WorkerPool};
+use trimtuner::coordinator::{FaultSpec, Job, SimLauncher, WorkerPool};
 use trimtuner::engine::{
     self, BatchMode, EngineConfig, EvalBackend, LiveEval, OptimizerKind,
+    RetryPolicy,
 };
 use trimtuner::models::ModelKind;
 use trimtuner::sim::NetKind;
@@ -140,6 +141,61 @@ fn main() {
             println!("{}", stats.report());
             all.push(stats);
         }
+    }
+
+    // Faulty cells: the same batched run under a spot + straggler + flaky
+    // cocktail with a 2-retry budget. Measures the coordinator's retry /
+    // abandonment overhead (resubmissions, partial-cost accounting) on top
+    // of the clean q=4 cells above — fault decisions are seeded, so every
+    // repetition replays the identical fault trace.
+    for workers in [1usize, 4] {
+        let stats = bench(
+            &format!(
+                "live trimtuner-dt {BATCH_ITERS}-obs batch q=4 \
+                 workers={workers} faults=spot:0.3,straggle:2.0,flaky:0.2"
+            ),
+            0,
+            3,
+            || {
+                let mut cfg = EngineConfig::paper_default(
+                    OptimizerKind::TrimTuner(ModelKind::Trees),
+                    5,
+                );
+                cfg.max_iters = BATCH_ITERS;
+                cfg.batch_size = 4;
+                cfg.batch_mode = BatchMode::Fantasy;
+                let base = Box::new(SimLauncher::with_options(
+                    NetKind::Rnn,
+                    5,
+                    1.0,
+                    LATENCY,
+                ));
+                let spec =
+                    FaultSpec::parse("spot:0.3,straggle:2.0,flaky:0.2")
+                        .expect("static fault spec");
+                let retry = RetryPolicy {
+                    max_retries: 2,
+                    ..RetryPolicy::default()
+                };
+                let mut backend = EvalBackend::Live(
+                    LiveEval::new(spec.wrap(base, 0xFA17), workers)
+                        .with_retry(retry, 5),
+                );
+                let caps = [Constraint::cost_max(
+                    NetKind::Rnn.paper_cost_cap(),
+                )];
+                let run = engine::run_backend(&mut backend, &caps, &cfg)
+                    .expect("faulty live run failed");
+                (
+                    run.records.len(),
+                    run.faults.n_failures,
+                    run.faults.n_abandoned,
+                    run.total_cost(),
+                )
+            },
+        );
+        println!("{}", stats.report());
+        all.push(stats);
     }
 
     let path = std::env::var("BENCH_JSON")

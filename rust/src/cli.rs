@@ -12,7 +12,7 @@
 //! | `--optimizer <name>` | `trimtuner-dt` | `trimtuner-dt`, `trimtuner-gp`, `eic`, `eic-usd`, `fabolas`, `random` |
 //! | `--filter cea\|random\|nofilter\|direct\|cmaes` | per-optimizer | acquisition filtering heuristic |
 //! | `--beta 0.1` | 0.1 | filtering level β (fraction of untested points scored) |
-//! | `--iters 44` | 44 | total probe budget (observations, not rounds) |
+//! | `--iters 44` | 44 | total probe budget (submitted probes; equals observations unless probes are abandoned under faults) |
 //! | `--seed 0` | 0 | RNG seed (runs are deterministic per seed) |
 //! | `--cost-cap <usd>` | per-net | QoS constraint: max training cost |
 //! | `--pareto` | off | also report the predicted (cost, accuracy) frontier |
@@ -21,6 +21,9 @@
 //! | `--batch-size 1` | 1 | probes launched concurrently per selection round (q); 1 = the paper's sequential loop |
 //! | `--launcher-noise 1.0` | 1.0 | observation-noise scale of the simulated launcher (0 = ground truth) |
 //! | `--launcher-seed <seed>` | derived | seed of the launcher's per-job noise stream |
+//! | `--faults <spec>` | none | fault injection into the live launcher stack: `spot:RATE,straggle:SEV,flaky:RATE,timeout:SECS,fallback` (requires `--live`) |
+//! | `--retry <spec>` | `max=3` | retry/abandonment policy: `max=N,base=S,factor=F,cap=S,jitter=J,deadline=S` |
+//! | `--fault-seed <seed>` | derived | seed of the fault decorators' per-job decision streams |
 //!
 //! `optimize --help` prints the same synopsis at the terminal.
 

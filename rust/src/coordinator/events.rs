@@ -17,6 +17,11 @@ pub enum EventKind {
     JobSubmitted { job: u64 },
     JobCompleted { job: u64, cost: f64 },
     JobFailed { job: u64, reason: String },
+    /// a probe gave up after exhausting its retry budget; the campaign
+    /// continues around the hole (docs/ARCHITECTURE.md, "Failure
+    /// semantics"). `job` is the primary (first-attempt) job id;
+    /// `wasted_cost` is the partial cost its interrupted attempts charged.
+    ProbeAbandoned { job: u64, attempts: usize, wasted_cost: f64 },
     IncumbentUpdated { config_id: usize, pred_acc: f64 },
     IterationDone { iter: usize, cum_cost: f64 },
 }

@@ -1,0 +1,529 @@
+//! Fault injection for the live execution spine: stacking [`JobLauncher`]
+//! decorators that reproduce the transient-cloud failure modes TrimTuner's
+//! cost accounting has to survive — spot preemption with partial-cost
+//! charging and bid-driven dynamic pricing (SpotTune, arxiv 2012.03576),
+//! heavy-tailed stragglers (Scavenger, arxiv 2303.06659), transient launch
+//! failures, and per-probe deadlines.
+//!
+//! Every decorator draws its fault decisions from a seeded RNG keyed by
+//! (fault seed, decorator salt, job id) — the same scheme `SimLauncher`'s
+//! observation noise uses — so a fault trace is a pure function of the
+//! submitted job ids, identical across worker counts and replays, and
+//! never a function of thread timing (detlint R3). Retries carry fresh ids
+//! ([`job_ids::retry`]), so each attempt redraws its fate independently.
+//!
+//! Zero-valued parameters are exact pass-throughs: a `PreemptingLauncher`
+//! at rate 0 (or a `StragglerLauncher` at severity 0) forwards the inner
+//! result bit-for-bit, which `tests/fault_parity.rs` pins against the bare
+//! launcher.
+
+use super::launcher::{job_ids, Job, JobLauncher, JobResult};
+use crate::util::Rng;
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// Error payload of a deployment that died *mid-run* (spot preemption,
+/// deadline kill). Unlike a launch that never started, the attempt consumed
+/// real resources before dying, and §III's accounting still charges the
+/// partial snapshot cost: the engine's retry path downcasts launch errors
+/// to this type and books `partial_cost`/`partial_duration_s` against the
+/// probe even when a later attempt (or no attempt) succeeds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Interrupted {
+    pub partial_cost: f64,
+    pub partial_duration_s: f64,
+}
+
+impl std::fmt::Display for Interrupted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "deployment interrupted mid-run after {:.3}s (${:.6} charged)",
+            self.partial_duration_s, self.partial_cost
+        )
+    }
+}
+
+impl std::error::Error for Interrupted {}
+
+// Distinct salts keep each decorator's fault stream independent of its
+// stack-mates and of the launcher's own observation-noise stream.
+const SALT_PREEMPT: u64 = 0x5107_F417;
+const SALT_STRAGGLE: u64 = 0x57A6_61E5;
+const SALT_FLAKY: u64 = 0xF1A4_7A11;
+
+/// Per-(decorator, job) RNG stream: deterministic in the fault seed and the
+/// job id only.
+fn fault_rng(seed: u64, salt: u64, job_id: u64) -> Rng {
+    Rng::new(seed ^ salt ^ job_id.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// A synthetic spot market: per-interval spot prices (as fractions of the
+/// on-demand price, which is what the inner launcher charges) driving
+/// SpotTune-style dynamic cost and bid-based preemption. A deployment walks
+/// the trace from a per-job offset, accruing spot-priced cost interval by
+/// interval; the first interval pricing above the campaign's `bid` kills it
+/// with the cost accrued so far.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpotMarket {
+    /// spot price per interval, relative to on-demand (1.0 = parity)
+    pub prices: Vec<f64>,
+    /// seconds of deployment time each interval covers
+    pub interval_s: f64,
+    /// an interval pricing strictly above this preempts the run
+    pub bid: f64,
+}
+
+impl SpotMarket {
+    /// Deterministic synthetic trace: a diurnal sine plus a faster harmonic
+    /// around `mean`, clipped positive — enough structure that different
+    /// per-job offsets see genuinely different price regimes.
+    pub fn synthetic(
+        len: usize,
+        mean: f64,
+        amplitude: f64,
+        interval_s: f64,
+        bid: f64,
+    ) -> SpotMarket {
+        assert!(len > 0 && interval_s > 0.0);
+        let prices = (0..len)
+            .map(|i| {
+                let t = i as f64 / len as f64 * std::f64::consts::TAU;
+                (mean + amplitude * (t.sin() + 0.4 * (3.0 * t).sin())).max(0.01)
+            })
+            .collect();
+        SpotMarket { prices, interval_s, bid }
+    }
+}
+
+/// Spot preemption: kills a seeded fraction of deployments mid-run, still
+/// charging the pro-rata partial cost ([`Interrupted`]). Two modes:
+///
+/// * **rate mode** (`new`): each attempt is preempted with probability
+///   `rate`, at a uniform fraction of its runtime;
+/// * **market mode** (`with_market`): a [`SpotMarket`] trace drives both
+///   the (discounted) per-interval cost and the preemption point — the
+///   first interval above the bid kills the run.
+///
+/// With `on_demand_fallback` (the SpotTune policy, default in market mode)
+/// retries — recognizable by their [`job_ids`] marker — run on-demand:
+/// full inner price, immune to preemption.
+pub struct PreemptingLauncher {
+    inner: Box<dyn JobLauncher>,
+    seed: u64,
+    rate: f64,
+    market: Option<SpotMarket>,
+    on_demand_fallback: bool,
+}
+
+impl PreemptingLauncher {
+    pub fn new(inner: Box<dyn JobLauncher>, seed: u64, rate: f64) -> PreemptingLauncher {
+        assert!((0.0..=1.0).contains(&rate), "preemption rate must be in [0,1]");
+        PreemptingLauncher { inner, seed, rate, market: None, on_demand_fallback: false }
+    }
+
+    pub fn with_market(
+        inner: Box<dyn JobLauncher>,
+        seed: u64,
+        market: SpotMarket,
+    ) -> PreemptingLauncher {
+        PreemptingLauncher { inner, seed, rate: 0.0, market: Some(market), on_demand_fallback: true }
+    }
+
+    pub fn with_fallback(mut self, on: bool) -> PreemptingLauncher {
+        self.on_demand_fallback = on;
+        self
+    }
+}
+
+impl JobLauncher for PreemptingLauncher {
+    fn launch(&self, job: &Job) -> Result<JobResult> {
+        let r = self.inner.launch(job)?;
+        if self.on_demand_fallback && job_ids::is_retry(job.id) {
+            // fallback: after a spot kill the retry runs on-demand — full
+            // inner price, immune to preemption
+            return Ok(r);
+        }
+        let mut rng = fault_rng(self.seed, SALT_PREEMPT, job.id);
+        match &self.market {
+            None => {
+                if self.rate > 0.0 && rng.f64() < self.rate {
+                    // killed a uniform fraction into the run; the dead
+                    // attempt's pro-rata cost is still charged
+                    let frac = rng.f64();
+                    return Err(anyhow::Error::new(Interrupted {
+                        partial_cost: r.charged_cost * frac,
+                        partial_duration_s: r.duration_s * frac,
+                    }));
+                }
+                Ok(r)
+            }
+            Some(m) => {
+                let start = rng.below(m.prices.len());
+                let rate_per_s =
+                    if r.duration_s > 0.0 { r.charged_cost / r.duration_s } else { 0.0 };
+                let (mut t, mut cost, mut k) = (0.0f64, 0.0f64, 0usize);
+                while t < r.duration_s {
+                    let price = m.prices[(start + k) % m.prices.len()];
+                    if price > m.bid {
+                        return Err(anyhow::Error::new(Interrupted {
+                            partial_cost: cost,
+                            partial_duration_s: t,
+                        }));
+                    }
+                    let span = m.interval_s.min(r.duration_s - t);
+                    cost += rate_per_s * span * price;
+                    t += span;
+                    k += 1;
+                }
+                Ok(JobResult { charged_cost: cost, ..r })
+            }
+        }
+    }
+}
+
+// Straggler tail shape: Pareto(α) with a cap so a single sample cannot
+// dominate an entire campaign's wall-clock.
+const STRAGGLE_ALPHA: f64 = 1.5;
+const STRAGGLE_CAP: f64 = 20.0;
+
+/// Heavy-tailed latency multipliers: each deployment's duration is scaled
+/// by `1 + severity · (P − 1)` where `P` is a capped Pareto(α=1.5) sample —
+/// most jobs are barely slowed, a seeded few take many times longer (the
+/// classic straggler profile). Costs are untouched: the work is the same,
+/// the worker is just slow. It is the interplay with per-probe deadlines
+/// (`RetryPolicy` or [`TimeoutLauncher`]) that turns a straggler into a
+/// charged fault.
+pub struct StragglerLauncher {
+    inner: Box<dyn JobLauncher>,
+    seed: u64,
+    severity: f64,
+}
+
+impl StragglerLauncher {
+    pub fn new(inner: Box<dyn JobLauncher>, seed: u64, severity: f64) -> StragglerLauncher {
+        assert!(severity >= 0.0, "straggler severity must be non-negative");
+        StragglerLauncher { inner, seed, severity }
+    }
+
+    /// The multiplier applied to `job_id`'s duration — exposed so tests can
+    /// assert the exact trace.
+    pub fn multiplier(seed: u64, job_id: u64, severity: f64) -> f64 {
+        if severity <= 0.0 {
+            return 1.0;
+        }
+        let mut rng = fault_rng(seed, SALT_STRAGGLE, job_id);
+        let pareto = (1.0 - rng.f64()).powf(-1.0 / STRAGGLE_ALPHA).min(STRAGGLE_CAP);
+        1.0 + severity * (pareto - 1.0)
+    }
+}
+
+impl JobLauncher for StragglerLauncher {
+    fn launch(&self, job: &Job) -> Result<JobResult> {
+        let mut r = self.inner.launch(job)?;
+        let m = StragglerLauncher::multiplier(self.seed, job.id, self.severity);
+        if m != 1.0 {
+            r.duration_s *= m;
+        }
+        Ok(r)
+    }
+}
+
+/// Transient launch failures: with probability `rate` per attempt —
+/// deterministic per (seed, job id), so a retry's fresh id redraws — the
+/// launch fails *before* any resources are consumed (API error, capacity
+/// shortage). No cost is charged; the engine's `RetryPolicy` absorbs these
+/// unless the budget runs out.
+pub struct FlakyLauncher {
+    inner: Box<dyn JobLauncher>,
+    seed: u64,
+    rate: f64,
+}
+
+impl FlakyLauncher {
+    pub fn new(inner: Box<dyn JobLauncher>, seed: u64, rate: f64) -> FlakyLauncher {
+        assert!((0.0..=1.0).contains(&rate), "flaky rate must be in [0,1]");
+        FlakyLauncher { inner, seed, rate }
+    }
+}
+
+impl JobLauncher for FlakyLauncher {
+    fn launch(&self, job: &Job) -> Result<JobResult> {
+        if self.rate > 0.0 {
+            let mut rng = fault_rng(self.seed, SALT_FLAKY, job.id);
+            if rng.f64() < self.rate {
+                bail!("transient launch failure injected (job {})", job.id);
+            }
+        }
+        self.inner.launch(job)
+    }
+}
+
+/// Launcher-side per-probe deadline: a deployment that would run longer
+/// than `deadline_s` is killed at the deadline with its pro-rata cost
+/// charged ([`Interrupted`]). `RetryPolicy::probe_deadline_s` expresses the
+/// same policy at the engine's retry layer; this decorator exists for
+/// launcher stacks that should time out below the engine (e.g. under a
+/// straggler decorator, before the pool reports a result).
+pub struct TimeoutLauncher {
+    inner: Box<dyn JobLauncher>,
+    deadline_s: f64,
+}
+
+impl TimeoutLauncher {
+    pub fn new(inner: Box<dyn JobLauncher>, deadline_s: f64) -> TimeoutLauncher {
+        assert!(deadline_s > 0.0, "deadline must be positive");
+        TimeoutLauncher { inner, deadline_s }
+    }
+}
+
+impl JobLauncher for TimeoutLauncher {
+    fn launch(&self, job: &Job) -> Result<JobResult> {
+        let r = self.inner.launch(job)?;
+        if r.duration_s > self.deadline_s {
+            let frac = self.deadline_s / r.duration_s;
+            return Err(anyhow::Error::new(Interrupted {
+                partial_cost: r.charged_cost * frac,
+                partial_duration_s: self.deadline_s,
+            }));
+        }
+        Ok(r)
+    }
+}
+
+/// Parsed `--faults` specification: comma-separated `kind:value` tokens
+/// (`spot:RATE`, `straggle:SEVERITY`, `flaky:RATE`, `timeout:SECONDS`) plus
+/// the bare flag `fallback` (retries run on-demand, immune to spot
+/// preemption). [`FaultSpec::wrap`] stacks the corresponding decorators
+/// around a base launcher.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSpec {
+    pub spot: Option<f64>,
+    pub straggle: Option<f64>,
+    pub flaky: Option<f64>,
+    pub timeout: Option<f64>,
+    pub fallback: bool,
+    /// programmatic only (no CLI token): trace-driven spot market;
+    /// overrides `spot`
+    pub market: Option<SpotMarket>,
+}
+
+impl FaultSpec {
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let mut spec = FaultSpec::default();
+        for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            if tok == "fallback" {
+                spec.fallback = true;
+                continue;
+            }
+            let (kind, val) = tok
+                .split_once(':')
+                .ok_or_else(|| anyhow!("fault token `{tok}` is not kind:value"))?;
+            let v: f64 = val
+                .parse()
+                .map_err(|_| anyhow!("fault value `{val}` in `{tok}` is not a number"))?;
+            match kind {
+                "spot" => {
+                    ensure!((0.0..=1.0).contains(&v), "spot rate must be in [0,1]");
+                    spec.spot = Some(v);
+                }
+                "straggle" => {
+                    ensure!(v >= 0.0, "straggle severity must be non-negative");
+                    spec.straggle = Some(v);
+                }
+                "flaky" => {
+                    ensure!((0.0..=1.0).contains(&v), "flaky rate must be in [0,1]");
+                    spec.flaky = Some(v);
+                }
+                "timeout" => {
+                    ensure!(v > 0.0, "timeout must be positive seconds");
+                    spec.timeout = Some(v);
+                }
+                other => bail!(
+                    "unknown fault kind `{other}` (known: spot, straggle, flaky, \
+                     timeout, fallback)"
+                ),
+            }
+        }
+        Ok(spec)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        *self == FaultSpec::default()
+    }
+
+    /// Stack the configured decorators around `inner`. Order, innermost
+    /// first: straggler (shapes the duration every outer layer judges),
+    /// timeout, preemption, flaky outermost (a flaky failure consumes no
+    /// resources, so nothing below it may run). Decorators configured with
+    /// zero-valued parameters are still stacked — they are exact
+    /// pass-throughs, so the zero-fault stack stays bit-identical to the
+    /// bare launcher.
+    pub fn wrap(&self, inner: Box<dyn JobLauncher>, seed: u64) -> Box<dyn JobLauncher> {
+        let mut l = inner;
+        if let Some(sev) = self.straggle {
+            l = Box::new(StragglerLauncher::new(l, seed, sev));
+        }
+        if let Some(d) = self.timeout {
+            l = Box::new(TimeoutLauncher::new(l, d));
+        }
+        if let Some(m) = &self.market {
+            l = Box::new(PreemptingLauncher::with_market(l, seed, m.clone()));
+        } else if let Some(rate) = self.spot {
+            l = Box::new(PreemptingLauncher::new(l, seed, rate).with_fallback(self.fallback));
+        }
+        if let Some(rate) = self.flaky {
+            l = Box::new(FlakyLauncher::new(l, seed, rate));
+        }
+        l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SimLauncher;
+    use crate::sim::NetKind;
+    use crate::space::{Config, S_INIT};
+
+    fn job(id: u64) -> Job {
+        Job { id, config: Config::from_id(40), s_levels: S_INIT.to_vec() }
+    }
+
+    fn sim() -> Box<dyn JobLauncher> {
+        Box::new(SimLauncher::new(NetKind::Mlp, 7))
+    }
+
+    #[test]
+    fn zero_valued_decorators_pass_through_bit_exact() {
+        let bare = SimLauncher::new(NetKind::Mlp, 7);
+        let stack = FaultSpec::parse("spot:0,straggle:0,flaky:0")
+            .unwrap()
+            .wrap(sim(), 0xFA17);
+        for id in 0..6u64 {
+            let a = bare.launch(&job(id)).unwrap();
+            let b = stack.launch(&job(id)).unwrap();
+            assert_eq!(a.charged_cost.to_bits(), b.charged_cost.to_bits());
+            assert_eq!(a.duration_s.to_bits(), b.duration_s.to_bits());
+            for ((sa, oa), (sb, ob)) in a.outcomes.iter().zip(&b.outcomes) {
+                assert_eq!(sa, sb);
+                assert_eq!(oa.acc.to_bits(), ob.acc.to_bits());
+                assert_eq!(oa.cost_usd.to_bits(), ob.cost_usd.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn preemption_charges_partial_cost_and_is_deterministic() {
+        let l = PreemptingLauncher::new(sim(), 3, 1.0);
+        let full = sim().launch(&job(5)).unwrap();
+        let kill = |l: &PreemptingLauncher| {
+            let e = l.launch(&job(5)).expect_err("rate 1.0 must always preempt");
+            *e.downcast_ref::<Interrupted>().expect("Interrupted payload")
+        };
+        let a = kill(&l);
+        let b = kill(&l);
+        assert_eq!(a, b, "preemption must be deterministic per (seed, id)");
+        assert!(a.partial_cost >= 0.0 && a.partial_cost < full.charged_cost);
+        assert!(a.partial_duration_s < full.duration_s);
+    }
+
+    #[test]
+    fn fallback_retries_run_on_demand_and_complete() {
+        let l = PreemptingLauncher::new(sim(), 3, 1.0).with_fallback(true);
+        assert!(l.launch(&job(5)).is_err(), "primary attempt is spot");
+        let retry = Job { id: job_ids::retry(5, 1), ..job(5) };
+        let r = l.launch(&retry).expect("fallback retry must not be preempted");
+        let full = sim().launch(&retry).unwrap();
+        assert_eq!(r.charged_cost.to_bits(), full.charged_cost.to_bits());
+    }
+
+    #[test]
+    fn straggler_slows_duration_only_with_heavy_tail() {
+        let l = StragglerLauncher::new(sim(), 11, 2.0);
+        let mut slowed = 0;
+        for id in 0..32u64 {
+            let base = sim().launch(&job(id)).unwrap();
+            let r = l.launch(&job(id)).unwrap();
+            assert_eq!(r.charged_cost.to_bits(), base.charged_cost.to_bits());
+            assert!(r.duration_s >= base.duration_s);
+            if r.duration_s > base.duration_s * 2.0 {
+                slowed += 1;
+            }
+        }
+        assert!(slowed > 0, "a severity-2 Pareto tail must produce stragglers");
+        assert!(slowed < 32, "not every job may straggle heavily");
+        assert_eq!(
+            StragglerLauncher::multiplier(11, 4, 0.0),
+            1.0,
+            "severity 0 is the identity"
+        );
+    }
+
+    #[test]
+    fn timeout_kills_at_deadline_with_prorata_charge() {
+        let base = sim().launch(&job(2)).unwrap();
+        let l = TimeoutLauncher::new(sim(), base.duration_s * 0.5);
+        let e = l.launch(&job(2)).expect_err("deadline at half the runtime");
+        let i = e.downcast_ref::<Interrupted>().expect("Interrupted payload");
+        assert!((i.partial_duration_s - base.duration_s * 0.5).abs() < 1e-9);
+        assert!((i.partial_cost - base.charged_cost * 0.5).abs() < 1e-9);
+        let ok = TimeoutLauncher::new(sim(), base.duration_s * 2.0);
+        assert!(ok.launch(&job(2)).is_ok(), "deadline above runtime passes");
+    }
+
+    #[test]
+    fn flaky_failures_are_free_and_redrawn_per_attempt() {
+        let l = FlakyLauncher::new(sim(), 5, 1.0);
+        let e = l.launch(&job(3)).expect_err("rate 1.0 always fails");
+        assert!(e.downcast_ref::<Interrupted>().is_none(), "flaky faults are free");
+        // a retry id redraws: at rate < 1 some attempt eventually differs
+        let half = FlakyLauncher::new(sim(), 5, 0.5);
+        let fates: Vec<bool> = (1..=16)
+            .map(|a| half.launch(&Job { id: job_ids::retry(3, a), ..job(3) }).is_ok())
+            .collect();
+        assert!(fates.iter().any(|&ok| ok) && fates.iter().any(|&ok| !ok));
+    }
+
+    #[test]
+    fn market_walk_prices_and_preempts_by_bid() {
+        // trace entirely below the bid: completes at a discount
+        let cheap = SpotMarket { prices: vec![0.4; 8], interval_s: 1e9, bid: 1.0 };
+        let l = PreemptingLauncher::with_market(sim(), 9, cheap);
+        let base = sim().launch(&job(1)).unwrap();
+        let r = l.launch(&job(1)).unwrap();
+        assert!((r.charged_cost - base.charged_cost * 0.4).abs() < 1e-9);
+        assert_eq!(r.duration_s.to_bits(), base.duration_s.to_bits());
+        // trace entirely above the bid: preempted at t = 0 with zero cost
+        let hostile = SpotMarket { prices: vec![2.0; 8], interval_s: 1e9, bid: 1.0 };
+        let l = PreemptingLauncher::with_market(sim(), 9, hostile).with_fallback(false);
+        let e = l.launch(&job(1)).expect_err("bid below every price");
+        let i = e.downcast_ref::<Interrupted>().unwrap();
+        assert_eq!((i.partial_cost, i.partial_duration_s), (0.0, 0.0));
+    }
+
+    #[test]
+    fn spec_parses_round_trip_and_rejects_garbage() {
+        let s = FaultSpec::parse("spot:0.3, straggle:2.0,flaky:0.1,timeout:600,fallback")
+            .unwrap();
+        assert_eq!(s.spot, Some(0.3));
+        assert_eq!(s.straggle, Some(2.0));
+        assert_eq!(s.flaky, Some(0.1));
+        assert_eq!(s.timeout, Some(600.0));
+        assert!(s.fallback && !s.is_empty());
+        assert!(FaultSpec::parse("").unwrap().is_empty());
+        assert!(FaultSpec::parse("spot").is_err());
+        assert!(FaultSpec::parse("spot:1.5").is_err());
+        assert!(FaultSpec::parse("chaos:0.5").is_err());
+        assert!(FaultSpec::parse("straggle:-1").is_err());
+    }
+
+    #[test]
+    fn synthetic_market_is_positive_and_deterministic() {
+        let a = SpotMarket::synthetic(48, 0.4, 0.5, 60.0, 0.8);
+        let b = SpotMarket::synthetic(48, 0.4, 0.5, 60.0, 0.8);
+        assert_eq!(a, b);
+        assert!(a.prices.iter().all(|&p| p > 0.0));
+        assert!(a.prices.iter().any(|&p| p > a.bid), "some interval must preempt");
+        assert!(a.prices.iter().any(|&p| p < a.bid), "some interval must run");
+    }
+}

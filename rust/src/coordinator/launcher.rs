@@ -8,6 +8,35 @@ use crate::space::{Config, Point};
 use crate::util::Rng;
 use anyhow::Result;
 
+/// Deterministic job-id scheme shared by the engine's retry path and the
+/// fault decorators. A retry of job `original` gets an id that is a pure
+/// function of (original id, attempt number) — never of completion order —
+/// so requeued work stays deterministic at any worker count. A high marker
+/// bit keeps retry ids disjoint from the engine's sequential primary ids
+/// and lets launch-side policies recognize a retry (e.g. the spot
+/// launcher's on-demand fallback in [`super::faults`]).
+pub mod job_ids {
+    /// Marker bit distinguishing retry ids from primary ids.
+    pub const RETRY_BIT: u64 = 1 << 63;
+    /// Low bits carrying the original (primary) job id.
+    pub const ORIGINAL_MASK: u64 = 0xFFFF_FFFF_FFFF;
+
+    /// Id of the `attempt`-th retry (attempt ≥ 1) of job `original`.
+    pub fn retry(original: u64, attempt: usize) -> u64 {
+        RETRY_BIT | ((attempt as u64) << 48) | (original & ORIGINAL_MASK)
+    }
+
+    /// Whether `id` names a retry attempt rather than a first launch.
+    pub fn is_retry(id: u64) -> bool {
+        id & RETRY_BIT != 0
+    }
+
+    /// The primary job id behind `id` (identity for primary ids).
+    pub fn original(id: u64) -> u64 {
+        if is_retry(id) { id & ORIGINAL_MASK } else { id }
+    }
+}
+
 /// A deployment request: train `config` once, snapshotting at each of
 /// `s_levels` (indices into S_VALUES, ascending).
 #[derive(Debug, Clone)]

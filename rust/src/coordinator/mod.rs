@@ -21,13 +21,26 @@
 //! submission order for determinism, and refits once per round. See
 //! `engine::EvalBackend::probe_slate` and `engine::BatchMode`.
 
+//!
+//! The spine is hardened against the transient-cloud failure modes of
+//! [`faults`]: stacking launcher decorators inject spot preemption (partial
+//! cost still charged), heavy-tailed stragglers, transient launch failures,
+//! and deadlines — all deterministic per (fault seed, job id) — while the
+//! engine's `RetryPolicy` retries, and ultimately *abandons*, faulted
+//! probes instead of aborting the campaign.
+
 mod events;
+pub mod faults;
 mod launcher;
 mod pool;
 mod sync;
 
 pub use events::{Event, EventKind, EventLog};
-pub use launcher::{Job, JobLauncher, JobResult, SimLauncher};
+pub use faults::{
+    FaultSpec, FlakyLauncher, Interrupted, PreemptingLauncher, SpotMarket,
+    StragglerLauncher, TimeoutLauncher,
+};
+pub use launcher::{job_ids, Job, JobLauncher, JobResult, SimLauncher};
 pub use pool::{JobError, WorkerPool};
 
 use crate::cli::Args;

@@ -100,9 +100,24 @@ impl WorkerPool {
                         Err(_) => break, // queue closed -> shut down
                     };
                     let job_id = job.id;
-                    let result = launcher
-                        .launch(&job)
-                        .map_err(|error| JobError { job_id, error });
+                    // A panicking launcher must not unwind the worker: the
+                    // job's result would never arrive and the engine would
+                    // block on it forever. AssertUnwindSafe is justified —
+                    // the closure borrows only the shared launcher (a Sync
+                    // implementor already accountable for its own internal
+                    // consistency) and `job`, which dies with the closure.
+                    let result = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| launcher.launch(&job)),
+                    )
+                    .unwrap_or_else(|payload| {
+                        let msg = payload
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "non-string panic payload".into());
+                        Err(anyhow!("launcher panicked: {msg}"))
+                    })
+                    .map_err(|error| JobError { job_id, error });
                     if tx.send(result).is_err() {
                         break; // receiver dropped
                     }
@@ -278,6 +293,62 @@ mod tests {
         done_rx
             .recv_timeout(std::time::Duration::from_secs(10))
             .expect("shutdown deadlocked with workers blocked on result send");
+    }
+
+    /// Regression: a launcher that panicked mid-`launch` used to unwind its
+    /// worker thread — the job's result never arrived, later probes starved
+    /// on the dead worker's queue share, and the submit-mutex could be
+    /// poisoned. The panic must come back as a job-id-attributed
+    /// [`JobError`], subsequent jobs must still run, and shutdown must
+    /// complete.
+    #[test]
+    fn panicking_launcher_yields_attributed_error_and_clean_shutdown() {
+        struct PanickingLauncher {
+            panic_ids: Vec<u64>,
+            inner: TestLauncher,
+        }
+        impl JobLauncher for PanickingLauncher {
+            fn launch(&self, job: &Job) -> Result<JobResult> {
+                if self.panic_ids.contains(&job.id) {
+                    panic!("boom on job {}", job.id);
+                }
+                self.inner.launch(job)
+            }
+        }
+        let pool = WorkerPool::new(
+            Box::new(PanickingLauncher {
+                panic_ids: vec![2, 4],
+                inner: TestLauncher::new(vec![]),
+            }),
+            2,
+        );
+        for i in 0..8 {
+            pool.submit(job(i)).unwrap();
+        }
+        let mut ok = 0;
+        let mut panicked = vec![];
+        for _ in 0..8 {
+            match pool.recv() {
+                Ok(_) => ok += 1,
+                Err(e) => {
+                    assert!(
+                        e.error.to_string().contains("panicked"),
+                        "expected a panic-attributed error, got: {e}"
+                    );
+                    panicked.push(e.job_id);
+                }
+            }
+        }
+        panicked.sort_unstable();
+        assert_eq!((ok, panicked), (6, vec![2, 4]));
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            pool.shutdown();
+            let _ = done_tx.send(());
+        });
+        done_rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("shutdown hung after a launcher panic");
     }
 
     /// Same scenario through the `Drop` path instead of `shutdown()`.

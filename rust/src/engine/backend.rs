@@ -13,8 +13,11 @@
 //!   threaded [`WorkerPool`] to any [`JobLauncher`] — the simulated cloud,
 //!   or a real trainer. Sub-sampled levels of one config ride a single
 //!   snapshot deployment charged at the largest level (paper §III), failed
-//!   launches are requeued with job-id attribution, and every submission /
-//!   completion / failure lands in an [`EventLog`].
+//!   launches are requeued with job-id attribution per a configurable
+//!   [`RetryPolicy`] — and *abandoned* ([`ProbeResult::Abandoned`]) with
+//!   partial-cost charging once the budget runs out, so a faulty cloud
+//!   degrades the campaign instead of aborting it — and every submission /
+//!   completion / failure / abandonment lands in an [`EventLog`].
 //!
 //! Ground truth is quarantined: the optimizer only ever sees [`Probe`] /
 //! [`Snapshot`] observations. Evaluation-only record fields (the incumbent's
@@ -23,11 +26,13 @@
 //! explicitly via [`LiveEval::with_eval`].
 
 use crate::coordinator::{
-    EventKind, EventLog, Job, JobLauncher, JobResult, WorkerPool,
+    job_ids, EventKind, EventLog, Interrupted, Job, JobLauncher, JobResult,
+    WorkerPool,
 };
 use crate::sim::{Dataset, Outcome};
 use crate::space::{Config, Point};
-use anyhow::{anyhow, Result};
+use crate::util::Rng;
+use anyhow::{anyhow, ensure, Result};
 // BTreeMap, not HashMap: the engine is a deterministic module (detlint
 // R1) — even though today's access is keyed-only, an ordered container
 // keeps any future drain of these books reproducible by construction.
@@ -53,15 +58,169 @@ pub struct Snapshot {
     pub duration_s: f64,
 }
 
-/// How many times a failed launch is requeued before the run aborts.
-const LAUNCH_RETRIES: usize = 3;
+/// Outcome of one slate entry under fault tolerance: either an observation
+/// or a hole the round must re-plan around. An abandoned probe exhausted
+/// its [`RetryPolicy`] budget; the partial cost its interrupted attempts
+/// consumed is still charged (`charged_cost`) even though no observation
+/// exists.
+#[derive(Debug, Clone, Copy)]
+pub enum ProbeResult {
+    Observed(Probe),
+    Abandoned { charged_cost: f64, duration_s: f64, attempts: usize },
+}
 
-/// Live evaluation state: the worker pool, job-id bookkeeping, and the
-/// observability log.
+impl ProbeResult {
+    /// The observation, if the probe produced one.
+    pub fn observed(&self) -> Option<&Probe> {
+        match self {
+            ProbeResult::Observed(p) => Some(p),
+            ProbeResult::Abandoned { .. } => None,
+        }
+    }
+}
+
+/// Fault counters accumulated by a live backend across a run (always zero
+/// under replay): failed launch attempts, probes abandoned after the retry
+/// budget, and the partial cost/time those faults consumed without
+/// producing an observation.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultStats {
+    pub n_failures: usize,
+    pub n_abandoned: usize,
+    pub wasted_cost: f64,
+    pub wasted_time: f64,
+}
+
+/// How failed launches are retried before a probe is abandoned: the retry
+/// budget, an exponential-backoff schedule whose jitter comes from a
+/// seeded [`Rng`] (detlint R3: no ambient entropy — the delay only shifts
+/// wall time, every observable outcome is already fixed by the
+/// deterministic retry ids), and an optional per-probe deadline treating
+/// over-long deployments (stragglers) as failures with pro-rata charging.
+///
+/// The default reproduces the engine's historic behavior: 3 retries, no
+/// backoff sleep, no deadline — except that exhausting the budget now
+/// *abandons* the probe instead of aborting the campaign.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryPolicy {
+    /// failed attempts tolerated per probe beyond the first launch
+    pub max_retries: usize,
+    /// base backoff delay in seconds (0 disables sleeping entirely)
+    pub backoff_base_s: f64,
+    /// multiplier applied per additional failure
+    pub backoff_factor: f64,
+    /// ceiling on a single backoff delay
+    pub backoff_max_s: f64,
+    /// ± relative jitter on each delay, drawn from the seeded retry rng
+    pub jitter: f64,
+    /// a completed deployment whose duration exceeds this is treated as
+    /// failed at the deadline, charging `cost · deadline/duration`
+    pub probe_deadline_s: Option<f64>,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 3,
+            backoff_base_s: 0.0,
+            backoff_factor: 2.0,
+            backoff_max_s: 30.0,
+            jitter: 0.1,
+            probe_deadline_s: None,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Parse a `--retry` spec: comma-separated `key=value` with keys
+    /// `max` (retries), `base` (s), `factor`, `cap` (s), `jitter`
+    /// (fraction), `deadline` (s). Unmentioned keys keep their defaults.
+    pub fn parse(s: &str) -> Result<RetryPolicy> {
+        let mut p = RetryPolicy::default();
+        for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (key, val) = tok
+                .split_once('=')
+                .ok_or_else(|| anyhow!("retry token `{tok}` is not key=value"))?;
+            let num = || -> Result<f64> {
+                val.parse()
+                    .map_err(|_| anyhow!("retry value `{val}` in `{tok}` is not a number"))
+            };
+            match key {
+                "max" => {
+                    p.max_retries = val
+                        .parse()
+                        .map_err(|_| anyhow!("retry max `{val}` is not an integer"))?;
+                }
+                "base" => {
+                    p.backoff_base_s = num()?;
+                    ensure!(p.backoff_base_s >= 0.0, "backoff base must be >= 0");
+                }
+                "factor" => {
+                    p.backoff_factor = num()?;
+                    ensure!(p.backoff_factor >= 1.0, "backoff factor must be >= 1");
+                }
+                "cap" => {
+                    p.backoff_max_s = num()?;
+                    ensure!(p.backoff_max_s >= 0.0, "backoff cap must be >= 0");
+                }
+                "jitter" => {
+                    p.jitter = num()?;
+                    ensure!((0.0..=1.0).contains(&p.jitter), "jitter must be in [0,1]");
+                }
+                "deadline" => {
+                    let d = num()?;
+                    ensure!(d > 0.0, "deadline must be positive seconds");
+                    p.probe_deadline_s = Some(d);
+                }
+                other => {
+                    return Err(anyhow!(
+                        "unknown retry key `{other}` (known: max, base, factor, cap, \
+                         jitter, deadline)"
+                    ))
+                }
+            }
+        }
+        Ok(p)
+    }
+
+    /// Delay before requeueing after the `failures`-th failure (1-based).
+    fn backoff_delay_s(&self, failures: usize, rng: &mut Rng) -> f64 {
+        if self.backoff_base_s <= 0.0 {
+            return 0.0;
+        }
+        let exp = (failures.saturating_sub(1)).min(30) as i32;
+        let base =
+            (self.backoff_base_s * self.backoff_factor.powi(exp)).min(self.backoff_max_s);
+        let jitter = 1.0 + self.jitter * (2.0 * rng.f64() - 1.0);
+        (base * jitter).max(0.0)
+    }
+}
+
+/// Default seed for the retry rng (jitter draws) when the caller does not
+/// route one through [`LiveEval::with_retry`].
+const RETRY_RNG_SEED: u64 = 0xBAC0_0FF5;
+
+/// Per-slot outcome of one drained deployment batch: the job's result when
+/// an attempt eventually completed (`None` = abandoned), plus the fault
+/// accounting accumulated across its failed attempts.
+struct SlotOutcome {
+    result: Option<JobResult>,
+    /// partial cost charged by interrupted attempts (preemption, deadline)
+    fault_cost: f64,
+    fault_time: f64,
+    /// total launch attempts made for the slot
+    attempts: usize,
+}
+
+/// Live evaluation state: the worker pool, job-id bookkeeping, the retry
+/// policy, fault counters, and the observability log.
 pub struct LiveEval<'a> {
     pool: WorkerPool,
     next_job: u64,
     pub log: EventLog,
+    retry: RetryPolicy,
+    retry_rng: Rng,
+    faults: FaultStats,
     /// Optional ground-truth oracle for *evaluation-only* record fields
     /// (`inc_acc`, `accuracy_c`, `optimum_acc`). A real deployment has
     /// none; without it those fields are NaN and the optimizer still runs.
@@ -74,8 +233,19 @@ impl<'a> LiveEval<'a> {
             pool: WorkerPool::new(launcher, workers),
             next_job: 0,
             log: EventLog::new(),
+            retry: RetryPolicy::default(),
+            retry_rng: Rng::new(RETRY_RNG_SEED),
+            faults: FaultStats::default(),
             eval: None,
         }
+    }
+
+    /// Install a [`RetryPolicy`]; `seed` feeds the backoff-jitter rng (the
+    /// sanctioned entropy route — nothing else in the retry path draws).
+    pub fn with_retry(mut self, policy: RetryPolicy, seed: u64) -> LiveEval<'a> {
+        self.retry = policy;
+        self.retry_rng = Rng::new(seed ^ RETRY_RNG_SEED);
+        self
     }
 
     /// Attach an offline ground-truth oracle so records carry the same
@@ -103,47 +273,80 @@ impl<'a> LiveEval<'a> {
         self.pool.submit(Job { id, config, s_levels })
     }
 
-    /// Deterministic id for the `attempt`-th retry of job `original`:
-    /// a function of (original id, attempt) rather than of the shared
-    /// counter, so which of two concurrently-failed jobs reports first
-    /// cannot swap the ids (and hence the launcher's per-id noise draws)
-    /// between otherwise-identical runs. The high marker bit keeps retry
-    /// ids disjoint from the sequential primary ids.
-    fn retry_id(original: u64, attempt: usize) -> u64 {
-        (1u64 << 63) | ((attempt as u64) << 48) | (original & 0xFFFF_FFFF_FFFF)
-    }
-
-    /// Drive a batch of deployments to completion and return their results
-    /// in *submission order* (not completion order), so multi-worker runs
-    /// stay deterministic. Failed launches are requeued up to
-    /// [`LAUNCH_RETRIES`] times using the job id the pool attributes to the
-    /// error.
+    /// Drive a batch of deployments to completion and return per-slot
+    /// outcomes in *submission order* (not completion order), so
+    /// multi-worker runs stay deterministic. Failed launches are requeued
+    /// per the [`RetryPolicy`] with deterministic retry ids
+    /// ([`job_ids::retry`] — a pure function of (primary id, attempt), so
+    /// which of two concurrently-failed jobs reports first cannot swap ids
+    /// or the launcher's per-id draws); a slot whose budget runs out is
+    /// *abandoned* (`result: None`, `ProbeAbandoned` logged) instead of
+    /// aborting the batch, with the partial cost of its interrupted
+    /// attempts ([`Interrupted`]) retained for charging.
     fn run_jobs(
         &mut self,
         specs: &[(Config, Vec<usize>)],
-    ) -> Result<Vec<JobResult>> {
+    ) -> Result<Vec<SlotOutcome>> {
         let mut slot_of: BTreeMap<u64, usize> = BTreeMap::new();
-        let mut attempts = vec![0usize; specs.len()];
+        let mut failures = vec![0usize; specs.len()];
         let mut primary = vec![0u64; specs.len()];
+        let mut outcomes: Vec<SlotOutcome> = specs
+            .iter()
+            .map(|_| SlotOutcome {
+                result: None,
+                fault_cost: 0.0,
+                fault_time: 0.0,
+                attempts: 1,
+            })
+            .collect();
         for (slot, (config, levels)) in specs.iter().enumerate() {
             let id = self.submit(*config, levels.clone())?;
             primary[slot] = id;
             slot_of.insert(id, slot);
         }
-        let mut results: Vec<Option<JobResult>> = vec![None; specs.len()];
         let mut pending = specs.len();
         while pending > 0 {
-            match self.pool.recv() {
+            // Completion order is nondeterministic under N workers; every
+            // update below is keyed by slot (and each slot's attempts are
+            // strictly sequential), so nothing drain-order-dependent can
+            // reach the returned outcomes.
+            let failed_slot: usize = match self.pool.recv() {
                 Ok(r) => {
-                    let slot = slot_of.remove(&r.job_id).ok_or_else(|| {
+                    let slot = *slot_of.get(&r.job_id).ok_or_else(|| {
                         anyhow!("pool returned unknown job id {}", r.job_id)
                     })?;
-                    self.log.record(EventKind::JobCompleted {
-                        job: r.job_id,
-                        cost: r.charged_cost,
-                    });
-                    results[slot] = Some(r);
-                    pending -= 1;
+                    let deadline = self.retry.probe_deadline_s;
+                    match deadline {
+                        Some(d) if r.duration_s > d => {
+                            // over the per-probe deadline: the run is
+                            // killed at `d` and the truncated fraction of
+                            // its cost is still charged — deterministic,
+                            // because the launcher's duration is.
+                            slot_of.remove(&r.job_id);
+                            let frac = d / r.duration_s;
+                            outcomes[slot].fault_cost += r.charged_cost * frac;
+                            outcomes[slot].fault_time += d;
+                            self.log.record(EventKind::JobFailed {
+                                job: r.job_id,
+                                reason: format!(
+                                    "probe deadline {d}s exceeded ({:.1}s)",
+                                    r.duration_s
+                                ),
+                            });
+                            slot
+                        }
+                        _ => {
+                            slot_of.remove(&r.job_id);
+                            self.log.record(EventKind::JobCompleted {
+                                job: r.job_id,
+                                cost: r.charged_cost,
+                            });
+                            outcomes[slot].attempts = failures[slot] + 1;
+                            outcomes[slot].result = Some(r);
+                            pending -= 1;
+                            continue;
+                        }
+                    }
                 }
                 Err(e) => {
                     // job-id attribution lets us requeue the exact probe
@@ -154,23 +357,52 @@ impl<'a> LiveEval<'a> {
                         job: e.job_id,
                         reason: e.error.to_string(),
                     });
-                    attempts[slot] += 1;
-                    if attempts[slot] > LAUNCH_RETRIES {
-                        return Err(anyhow!(
-                            "deployment of {} failed {} times, giving up: {e}",
-                            specs[slot].0.describe(),
-                            attempts[slot]
-                        ));
+                    // an interrupted deployment (preemption, timeout)
+                    // consumed real resources before dying — keep the
+                    // partial charge (paper §III: the snapshot run was
+                    // paid for even though no snapshot came back)
+                    if let Some(i) = e.error.downcast_ref::<Interrupted>() {
+                        outcomes[slot].fault_cost += i.partial_cost;
+                        outcomes[slot].fault_time += i.partial_duration_s;
                     }
-                    let (config, levels) = &specs[slot];
-                    let id =
-                        LiveEval::retry_id(primary[slot], attempts[slot]);
-                    self.submit_with_id(id, *config, levels.clone())?;
-                    slot_of.insert(id, slot);
+                    slot
                 }
+            };
+            failures[failed_slot] += 1;
+            if failures[failed_slot] > self.retry.max_retries {
+                // retry budget exhausted: abandon the probe, keep the
+                // campaign alive — the caller re-plans around the hole
+                outcomes[failed_slot].attempts = failures[failed_slot];
+                self.log.record(EventKind::ProbeAbandoned {
+                    job: primary[failed_slot],
+                    attempts: failures[failed_slot],
+                    wasted_cost: outcomes[failed_slot].fault_cost,
+                });
+                pending -= 1;
+                continue;
+            }
+            let delay =
+                self.retry.backoff_delay_s(failures[failed_slot], &mut self.retry_rng);
+            if delay > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(delay));
+            }
+            let (config, levels) = &specs[failed_slot];
+            let id = job_ids::retry(primary[failed_slot], failures[failed_slot]);
+            self.submit_with_id(id, *config, levels.clone())?;
+            slot_of.insert(id, failed_slot);
+        }
+        // Fault counters are summed in slot order here, not in drain order
+        // above, so the floating-point waste totals cannot depend on
+        // completion order across worker counts.
+        for (slot, o) in outcomes.iter().enumerate() {
+            self.faults.n_failures += failures[slot];
+            self.faults.wasted_cost += o.fault_cost;
+            self.faults.wasted_time += o.fault_time;
+            if o.result.is_none() {
+                self.faults.n_abandoned += 1;
             }
         }
-        Ok(results.into_iter().map(|r| r.expect("all slots filled")).collect())
+        Ok(outcomes)
     }
 }
 
@@ -212,18 +444,36 @@ impl<'a> EvalBackend<'a> {
     }
 
     /// Evaluate a batch of independent probes (parallel across the worker
-    /// pool under `Live`); results are in input order.
+    /// pool under `Live`); results are in input order. This is the *strict*
+    /// path: a probe abandoned after exhausting its retry budget is an
+    /// error here — only [`EvalBackend::probe_slate`] tolerates holes.
     pub fn probe_batch(&mut self, points: &[Point]) -> Result<Vec<Probe>> {
+        self.probe_results(points)?
+            .into_iter()
+            .map(|r| match r {
+                ProbeResult::Observed(p) => Ok(p),
+                ProbeResult::Abandoned { attempts, .. } => Err(anyhow!(
+                    "probe abandoned after {attempts} failed launches (strict \
+                     probe path — only slate rounds tolerate abandonment)"
+                )),
+            })
+            .collect()
+    }
+
+    /// Fault-tolerant per-point evaluation: like [`EvalBackend::probe_batch`]
+    /// but abandoned probes come back as [`ProbeResult::Abandoned`] holes
+    /// carrying their partial charge. Replay never abandons.
+    fn probe_results(&mut self, points: &[Point]) -> Result<Vec<ProbeResult>> {
         match self {
             EvalBackend::Replay(d) => Ok(points
                 .iter()
                 .map(|p| {
                     let o = d.outcome(p);
-                    Probe {
+                    ProbeResult::Observed(Probe {
                         outcome: o,
                         charged_cost: o.cost_usd,
                         duration_s: o.time_s,
-                    }
+                    })
                 })
                 .collect()),
             EvalBackend::Live(live) => {
@@ -231,27 +481,37 @@ impl<'a> EvalBackend<'a> {
                     .iter()
                     .map(|p| (p.config, vec![p.s_idx]))
                     .collect();
-                let results = live.run_jobs(&specs)?;
+                let slots = live.run_jobs(&specs)?;
                 points
                     .iter()
-                    .zip(&results)
-                    .map(|(p, r)| {
-                        let o = r
-                            .outcomes
-                            .iter()
-                            .find(|(s, _)| *s == p.s_idx)
-                            .map(|(_, o)| *o)
-                            .ok_or_else(|| {
-                                anyhow!(
-                                    "launcher returned no snapshot at level {}",
-                                    p.s_idx
-                                )
-                            })?;
-                        Ok(Probe {
-                            outcome: o,
-                            charged_cost: r.charged_cost,
-                            duration_s: r.duration_s,
-                        })
+                    .zip(slots)
+                    .map(|(p, s)| match s.result {
+                        Some(r) => {
+                            let o = r
+                                .outcomes
+                                .iter()
+                                .find(|(lvl, _)| *lvl == p.s_idx)
+                                .map(|(_, o)| *o)
+                                .ok_or_else(|| {
+                                    anyhow!(
+                                        "launcher returned no snapshot at level {}",
+                                        p.s_idx
+                                    )
+                                })?;
+                            // faulted-but-recovered attempts still cost
+                            // money: fold their partial charge into the
+                            // probe (exactly +0.0 on the clean path)
+                            Ok(ProbeResult::Observed(Probe {
+                                outcome: o,
+                                charged_cost: r.charged_cost + s.fault_cost,
+                                duration_s: r.duration_s + s.fault_time,
+                            }))
+                        }
+                        None => Ok(ProbeResult::Abandoned {
+                            charged_cost: s.fault_cost,
+                            duration_s: s.fault_time,
+                            attempts: s.attempts,
+                        }),
                     })
                     .collect()
             }
@@ -267,8 +527,14 @@ impl<'a> EvalBackend<'a> {
     /// group's charge and duration are attributed to its largest-level
     /// point and the remaining points cost 0, mirroring the init batch's
     /// accounting. A slate of one point is exactly [`EvalBackend::probe`].
-    pub fn probe_slate(&mut self, points: &[Point]) -> Result<Vec<Probe>> {
-        anyhow::ensure!(!points.is_empty(), "empty probe slate");
+    ///
+    /// This is the *fault-tolerant* path: a probe whose deployment was
+    /// abandoned after the retry budget comes back as
+    /// [`ProbeResult::Abandoned`] (for a shared deployment, every rider of
+    /// the group) so the round can re-plan around the hole; the partial
+    /// cost of its interrupted attempts rides on the group's payer point.
+    pub fn probe_slate(&mut self, points: &[Point]) -> Result<Vec<ProbeResult>> {
+        ensure!(!points.is_empty(), "empty probe slate");
         // group slate indices by config, preserving first-appearance order
         let mut group_of: BTreeMap<usize, usize> = BTreeMap::new();
         let mut groups: Vec<(Config, Vec<usize>)> = Vec::new();
@@ -281,7 +547,7 @@ impl<'a> EvalBackend<'a> {
         }
         if groups.len() == points.len() {
             // every config distinct: plain independent probes
-            return self.probe_batch(points);
+            return self.probe_results(points);
         }
         let specs: Vec<(Config, Vec<usize>)> = groups
             .iter()
@@ -293,43 +559,77 @@ impl<'a> EvalBackend<'a> {
                 (*config, levels)
             })
             .collect();
-        // (outcomes per level, charged cost, duration) per group — replay
-        // emulates the launcher's snapshot accounting on the lookup table
-        let results = match self {
+        // per-group slot outcomes — replay emulates the launcher's
+        // snapshot accounting on the lookup table and never faults
+        let slots: Vec<SlotOutcome> = match self {
             EvalBackend::Replay(d) => specs
                 .iter()
-                .map(|(config, levels)| replay_snapshot(d, *config, levels))
-                .collect::<Vec<_>>(),
-            EvalBackend::Live(live) => live
-                .run_jobs(&specs)?
-                .into_iter()
-                .map(|r| (r.outcomes, r.charged_cost, r.duration_s))
+                .map(|(config, levels)| {
+                    let (outcomes, charged_cost, duration_s) =
+                        replay_snapshot(d, *config, levels);
+                    SlotOutcome {
+                        result: Some(JobResult {
+                            job_id: 0,
+                            outcomes,
+                            charged_cost,
+                            duration_s,
+                        }),
+                        fault_cost: 0.0,
+                        fault_time: 0.0,
+                        attempts: 1,
+                    }
+                })
                 .collect(),
+            EvalBackend::Live(live) => live.run_jobs(&specs)?,
         };
         // redistribute to slate order with snapshot accounting per group
-        let mut probes: Vec<Option<Probe>> = vec![None; points.len()];
-        for ((_, idxs), (outcomes, charged, duration)) in
-            groups.iter().zip(&results)
-        {
+        let mut probes: Vec<Option<ProbeResult>> = vec![None; points.len()];
+        for ((_, idxs), slot) in groups.iter().zip(&slots) {
             // the group's largest-level point carries the whole charge
             let payer = *idxs
                 .iter()
                 .max_by_key(|&&i| points[i].s_idx)
                 .expect("nonempty group");
-            for &i in idxs {
-                let s = points[i].s_idx;
-                let o = outcomes
-                    .iter()
-                    .find(|(lvl, _)| *lvl == s)
-                    .map(|(_, o)| *o)
-                    .ok_or_else(|| {
-                        anyhow!("launcher returned no snapshot at level {s}")
-                    })?;
-                probes[i] = Some(Probe {
-                    outcome: o,
-                    charged_cost: if i == payer { *charged } else { 0.0 },
-                    duration_s: if i == payer { *duration } else { 0.0 },
-                });
+            match &slot.result {
+                Some(r) => {
+                    for &i in idxs {
+                        let s = points[i].s_idx;
+                        let o = r
+                            .outcomes
+                            .iter()
+                            .find(|(lvl, _)| *lvl == s)
+                            .map(|(_, o)| *o)
+                            .ok_or_else(|| {
+                                anyhow!("launcher returned no snapshot at level {s}")
+                            })?;
+                        let pays = i == payer;
+                        probes[i] = Some(ProbeResult::Observed(Probe {
+                            outcome: o,
+                            charged_cost: if pays {
+                                r.charged_cost + slot.fault_cost
+                            } else {
+                                0.0
+                            },
+                            duration_s: if pays {
+                                r.duration_s + slot.fault_time
+                            } else {
+                                0.0
+                            },
+                        }));
+                    }
+                }
+                None => {
+                    // the shared deployment died for good: every rider of
+                    // the group is a hole, the payer carries the waste
+                    for &i in idxs {
+                        let pays = i == payer;
+                        probes[i] = Some(ProbeResult::Abandoned {
+                            charged_cost: if pays { slot.fault_cost } else { 0.0 },
+                            duration_s: if pays { slot.fault_time } else { 0.0 },
+                            attempts: slot.attempts,
+                        });
+                    }
+                }
             }
         }
         Ok(probes
@@ -360,15 +660,34 @@ impl<'a> EvalBackend<'a> {
                 Ok(Snapshot { outcomes, charged_cost, duration_s })
             }
             EvalBackend::Live(live) => {
-                let results =
-                    live.run_jobs(&[(config, s_levels.to_vec())])?;
-                let r = results.into_iter().next().expect("one job");
-                Ok(Snapshot {
-                    outcomes: r.outcomes,
-                    charged_cost: r.charged_cost,
-                    duration_s: r.duration_s,
-                })
+                let slots = live.run_jobs(&[(config, s_levels.to_vec())])?;
+                let slot = slots.into_iter().next().expect("one job");
+                match slot.result {
+                    Some(r) => Ok(Snapshot {
+                        outcomes: r.outcomes,
+                        charged_cost: r.charged_cost + slot.fault_cost,
+                        duration_s: r.duration_s + slot.fault_time,
+                    }),
+                    // strict path: callers that need the snapshot (e.g.
+                    // tests) get a hard error; the engine's init re-plans
+                    // via probe_slate instead
+                    None => Err(anyhow!(
+                        "snapshot of {} abandoned after {} failed launches; \
+                         raise the retry budget (--retry max=N) or lower the \
+                         fault rate",
+                        config.describe(),
+                        slot.attempts
+                    )),
+                }
             }
+        }
+    }
+
+    /// Fault counters accumulated so far (all zero under replay).
+    pub fn fault_stats(&self) -> FaultStats {
+        match self {
+            EvalBackend::Replay(_) => FaultStats::default(),
+            EvalBackend::Live(live) => live.faults,
         }
     }
 
@@ -531,8 +850,18 @@ mod tests {
             Point { config: Config::from_id(100), s_idx: 4 },
             Point { config: shared, s_idx: 1 },
         ];
-        let a = replay.probe_slate(&slate).unwrap();
-        let b = live.probe_slate(&slate).unwrap();
+        let a: Vec<Probe> = replay
+            .probe_slate(&slate)
+            .unwrap()
+            .iter()
+            .map(|r| *r.observed().expect("replay never abandons"))
+            .collect();
+        let b: Vec<Probe> = live
+            .probe_slate(&slate)
+            .unwrap()
+            .iter()
+            .map(|r| *r.observed().expect("clean live run never abandons"))
+            .collect();
         assert_eq!(a.len(), 3);
         for ((p, ra), rb) in slate.iter().zip(&a).zip(&b) {
             assert_eq!(ra.outcome, truth.outcome(p));
@@ -567,10 +896,142 @@ mod tests {
         let mut replay = EvalBackend::Replay(&truth);
         let p = Point::from_id(777);
         let a = replay.probe(p).unwrap();
-        let b = replay.probe_slate(&[p]).unwrap();
-        assert_eq!(a.outcome, b[0].outcome);
-        assert_eq!(a.charged_cost, b[0].charged_cost);
-        assert_eq!(a.duration_s, b[0].duration_s);
+        let slate = replay.probe_slate(&[p]).unwrap();
+        let b = slate[0].observed().expect("replay never abandons");
+        assert_eq!(a.outcome, b.outcome);
+        assert_eq!(a.charged_cost, b.charged_cost);
+        assert_eq!(a.duration_s, b.duration_s);
+    }
+
+    /// Launcher that kills every attempt (primary and retries) of the
+    /// probes whose *primary* job id is listed, with an [`Interrupted`]
+    /// payload charging half the real cost — a deterministic preemption
+    /// that always exhausts the retry budget.
+    struct KillListLauncher {
+        inner: SimLauncher,
+        kill_primary: Vec<u64>,
+    }
+
+    impl JobLauncher for KillListLauncher {
+        fn launch(&self, job: &Job) -> Result<JobResult> {
+            let r = self.inner.launch(job)?;
+            if self.kill_primary.contains(&job_ids::original(job.id)) {
+                return Err(anyhow::Error::new(Interrupted {
+                    partial_cost: r.charged_cost * 0.5,
+                    partial_duration_s: r.duration_s * 0.5,
+                }));
+            }
+            Ok(r)
+        }
+    }
+
+    #[test]
+    fn exhausted_retries_abandon_the_probe_with_partial_charge() {
+        let launcher = KillListLauncher {
+            inner: SimLauncher::noiseless(NetKind::Rnn),
+            // 1 = slot 1 of the slate below; 4 = the first id of the
+            // follow-up strict probe_batch call
+            kill_primary: vec![1, 4],
+        };
+        let mut live = EvalBackend::Live(
+            LiveEval::new(Box::new(launcher), 2)
+                .with_retry(RetryPolicy { max_retries: 2, ..RetryPolicy::default() }, 7),
+        );
+        let points: Vec<Point> = (0..4)
+            .map(|i| Point { config: Config::from_id(i * 40), s_idx: 4 })
+            .collect();
+        let results = live.probe_slate(&points).unwrap();
+        let truth = Dataset::ground_truth(NetKind::Rnn);
+        for (i, (p, r)) in points.iter().zip(&results).enumerate() {
+            match r {
+                ProbeResult::Observed(pr) => {
+                    assert_ne!(i, 1, "killed slot must be abandoned");
+                    assert_eq!(pr.outcome, truth.outcome(p));
+                }
+                ProbeResult::Abandoned { charged_cost, attempts, .. } => {
+                    assert_eq!(i, 1);
+                    assert_eq!(*attempts, 3, "1 primary + 2 retries");
+                    // every interrupted attempt charged half a run
+                    let full = truth.outcome(p).cost_usd;
+                    assert!((charged_cost - 1.5 * full).abs() < 1e-9);
+                }
+            }
+        }
+        let stats = live.fault_stats();
+        assert_eq!((stats.n_failures, stats.n_abandoned), (3, 1));
+        assert!(stats.wasted_cost > 0.0 && stats.wasted_time > 0.0);
+        let log = live.event_log().unwrap();
+        assert_eq!(
+            log.count(|k| matches!(k, EventKind::ProbeAbandoned { .. })),
+            1
+        );
+        // the strict path refuses the same situation
+        assert!(live.probe_batch(&points[..2]).is_err());
+    }
+
+    #[test]
+    fn deadline_treats_stragglers_as_failures_with_prorata_charge() {
+        let truth = Dataset::ground_truth(NetKind::Rnn);
+        let p = Point::from_id(900);
+        let real = truth.outcome(&p);
+        let policy = RetryPolicy {
+            max_retries: 0,
+            probe_deadline_s: Some(real.time_s * 0.5),
+            ..RetryPolicy::default()
+        };
+        let mut live = EvalBackend::Live(
+            LiveEval::new(Box::new(SimLauncher::noiseless(NetKind::Rnn)), 1)
+                .with_retry(policy, 7),
+        );
+        let results = live.probe_slate(&[p]).unwrap();
+        match &results[0] {
+            ProbeResult::Abandoned { charged_cost, duration_s, attempts } => {
+                assert_eq!(*attempts, 1);
+                assert!((charged_cost - real.cost_usd * 0.5).abs() < 1e-9);
+                assert!((duration_s - real.time_s * 0.5).abs() < 1e-9);
+            }
+            ProbeResult::Observed(_) => panic!("deadline at half runtime must kill"),
+        }
+    }
+
+    #[test]
+    fn retry_policy_parses_and_rejects_garbage() {
+        let p = RetryPolicy::parse("max=2,base=0.5,factor=3,cap=10,jitter=0.2,deadline=600")
+            .unwrap();
+        assert_eq!(p.max_retries, 2);
+        assert_eq!(p.backoff_base_s, 0.5);
+        assert_eq!(p.backoff_factor, 3.0);
+        assert_eq!(p.backoff_max_s, 10.0);
+        assert_eq!(p.jitter, 0.2);
+        assert_eq!(p.probe_deadline_s, Some(600.0));
+        assert_eq!(RetryPolicy::parse("").unwrap(), RetryPolicy::default());
+        assert!(RetryPolicy::parse("max").is_err());
+        assert!(RetryPolicy::parse("bogus=1").is_err());
+        assert!(RetryPolicy::parse("factor=0.5").is_err());
+        assert!(RetryPolicy::parse("deadline=-1").is_err());
+    }
+
+    #[test]
+    fn backoff_schedule_is_exponential_capped_and_jittered_deterministically() {
+        let p = RetryPolicy {
+            backoff_base_s: 1.0,
+            backoff_factor: 2.0,
+            backoff_max_s: 8.0,
+            jitter: 0.0,
+            ..RetryPolicy::default()
+        };
+        let mut rng = Rng::new(1);
+        assert_eq!(p.backoff_delay_s(1, &mut rng), 1.0);
+        assert_eq!(p.backoff_delay_s(2, &mut rng), 2.0);
+        assert_eq!(p.backoff_delay_s(3, &mut rng), 4.0);
+        assert_eq!(p.backoff_delay_s(5, &mut rng), 8.0, "capped");
+        let jittered = RetryPolicy { jitter: 0.5, ..p.clone() };
+        let d1 = jittered.backoff_delay_s(2, &mut Rng::new(9));
+        let d2 = jittered.backoff_delay_s(2, &mut Rng::new(9));
+        assert_eq!(d1, d2, "jitter is seeded, not ambient");
+        assert!((1.0..=3.0).contains(&d1));
+        let none = RetryPolicy::default();
+        assert_eq!(none.backoff_delay_s(3, &mut Rng::new(0)), 0.0, "base 0 = no sleep");
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! lookup of the measured outcome) or live deployments through the
 //! threaded coordinator.
 
-use super::backend::{EvalBackend, Probe};
+use super::backend::{EvalBackend, Probe, ProbeResult};
 use super::metrics::{accuracy_c, IterRecord, RunResult};
 use super::pareto::recommend_pareto;
 use crate::acq::{
@@ -278,8 +278,11 @@ pub fn run(
 
 /// Run one optimizer over any evaluation substrate — the same Algorithm 1
 /// loop drives trace replay and live (worker-pool) deployments. Only a
-/// `Live` backend can return an error (a deployment that keeps failing
-/// after requeues).
+/// `Live` backend can return an error, and only for unrecoverable states
+/// (pool-level failures, or an initialization whose every deployment was
+/// abandoned): main-loop probes that exhaust their retry budget are
+/// *abandoned* — partial cost charged, `ProbeAbandoned` logged, the next
+/// round re-plans around the hole — and the campaign keeps going.
 pub fn run_backend(
     backend: &mut EvalBackend,
     constraints: &[Constraint],
@@ -334,9 +337,15 @@ pub fn run_backend(
     // worker pool under `Live`), absorbs the results in submission order,
     // refits once, and records one IterRecord per observation. q = 1 is
     // the paper's sequential loop, reproduced bit-exactly.
+    // `launched` counts submitted slate entries and bounds the loop (so a
+    // campaign terminates even when every probe is abandoned under
+    // faults); `iter` indexes *observations* and stays contiguous across
+    // records. With no abandonment the two advance in lockstep and the
+    // loop is bit-identical to the historic observation-counted one.
+    let mut launched = 0;
     let mut iter = 0;
     let mut round = 1; // round 0 is the init batch
-    while iter < cfg.max_iters {
+    while launched < cfg.max_iters {
         let timer = Timer::start();
         let untested = untested_points(cfg.optimizer, &st.tested_ids);
         if untested.is_empty() {
@@ -347,7 +356,7 @@ pub fn run_backend(
         let q = cfg
             .batch_size
             .max(1)
-            .min(cfg.max_iters - iter)
+            .min(cfg.max_iters - launched)
             .min(untested.len());
 
         let (slate, n_evals) = choose_slate(
@@ -355,16 +364,41 @@ pub fn run_backend(
             budget, &mut rng, &mut acq_cache, q,
         );
 
-        let probes: Vec<Probe> = backend.probe_slate(&slate)?;
+        let results: Vec<ProbeResult> = backend.probe_slate(&slate)?;
+        launched += slate.len();
         // absorb in submission order, tracking the running totals each
         // observation sees (records stay per-observation even when the
-        // whole slate was deployed concurrently)
+        // whole slate was deployed concurrently). Abandoned probes add
+        // their partial charge to the running totals but no observation
+        // and no record — no phantom observations; the next round simply
+        // re-plans around the hole (the abandoned point stays untested
+        // and may be re-picked under a fresh job id).
+        let mut observed: Vec<(Point, Probe)> = Vec::with_capacity(slate.len());
         let mut cums = Vec::with_capacity(slate.len());
-        for (p, pr) in slate.iter().zip(&probes) {
-            st.push_observation(*p, pr.outcome);
-            st.cum_cost += pr.charged_cost;
-            st.cum_time += pr.duration_s;
-            cums.push((st.cum_cost, st.cum_time));
+        for (p, res) in slate.iter().zip(&results) {
+            match res {
+                ProbeResult::Observed(pr) => {
+                    st.push_observation(*p, pr.outcome);
+                    st.cum_cost += pr.charged_cost;
+                    st.cum_time += pr.duration_s;
+                    observed.push((*p, *pr));
+                    cums.push((st.cum_cost, st.cum_time));
+                }
+                ProbeResult::Abandoned { charged_cost, duration_s, .. } => {
+                    st.cum_cost += charged_cost;
+                    st.cum_time += duration_s;
+                }
+            }
+        }
+        if observed.is_empty() {
+            // the whole round was abandoned: nothing to refit on, no
+            // records — and deliberately no stop check. A round that
+            // produced zero observations is no evidence of convergence;
+            // re-judging StopCondition::NoImprovement on the unchanged
+            // window here would let a run of faults masquerade as a
+            // plateau.
+            round += 1;
+            continue;
         }
         // One refit + one recommendation per round (not per observation).
         // The hyperopt cadence counts *refits* (rounds), not observations:
@@ -375,9 +409,9 @@ pub fn run_backend(
         let rec = recommend(cfg.optimizer, &mut st, constraints, &full_feats);
         let rec_wall_s = timer.elapsed_s();
 
-        let n = slate.len();
+        let n = observed.len();
         for (j, ((p, pr), (cc, ct))) in
-            slate.iter().zip(&probes).zip(&cums).enumerate()
+            observed.iter().zip(&cums).enumerate()
         {
             let is_last = j + 1 == n;
             push_record(
@@ -409,8 +443,20 @@ pub fn run_backend(
     }
 
     let pareto = cfg.pareto.then(|| recommend_pareto(&st.models));
-    Ok(RunResult { records: st.records, optimum_acc, optimum, pareto })
+    Ok(RunResult {
+        records: st.records,
+        optimum_acc,
+        optimum,
+        pareto,
+        faults: backend.fault_stats(),
+    })
 }
+
+/// How many fresh random configs the subsampling init tries when a
+/// snapshot deployment is abandoned under faults (each replan re-draws
+/// from the same seeded stream, so the zero-fault path consumes exactly
+/// one draw, as before).
+const INIT_REPLANS: usize = 6;
 
 /// Initialization phase (Alg. 1 lines 2-10).
 fn initialize(
@@ -427,20 +473,45 @@ fn initialize(
         // one random config tested at the k init sub-sampling levels via a
         // single snapshot deployment (paper §III): only the largest level
         // is charged, and the whole batch costs one training run's time.
-        let config = Config::from_id(rng.below(N_CONFIGS));
+        // The levels ride probe_slate so an abandoned deployment (faults)
+        // re-plans with a fresh random config — round 0's version of
+        // re-planning around the hole — instead of aborting; with no
+        // faults the first attempt always lands, identically to the
+        // historic single-snapshot path.
         let levels = &S_INIT[..S_INIT.len().min(cfg.init_samples)];
-        let snap = backend.snapshot(config, levels)?;
-        let n = snap.outcomes.len();
-        for (j, (s_idx, o)) in snap.outcomes.iter().enumerate() {
-            let p = Point { config, s_idx: *s_idx };
-            let is_last = j + 1 == n;
-            init.push((
-                p,
-                *o,
-                if is_last { snap.charged_cost } else { 0.0 },
-                if is_last { snap.duration_s } else { 0.0 },
-            ));
+        let mut landed = false;
+        for _ in 0..INIT_REPLANS {
+            let config = Config::from_id(rng.below(N_CONFIGS));
+            let points: Vec<Point> = levels
+                .iter()
+                .map(|&s_idx| Point { config, s_idx })
+                .collect();
+            let results = backend.probe_slate(&points)?;
+            // a shared snapshot deployment fails as a unit: either every
+            // level observed, or every level a hole
+            if results.iter().all(|r| r.observed().is_some()) {
+                for (p, res) in points.iter().zip(&results) {
+                    let pr = res.observed().expect("checked observed");
+                    init.push((*p, pr.outcome, pr.charged_cost, pr.duration_s));
+                }
+                landed = true;
+                break;
+            }
+            for res in &results {
+                if let ProbeResult::Abandoned { charged_cost, duration_s, .. } =
+                    res
+                {
+                    st.cum_cost += charged_cost;
+                    st.cum_time += duration_s;
+                }
+            }
         }
+        anyhow::ensure!(
+            landed,
+            "initialization failed: {INIT_REPLANS} consecutive init snapshot \
+             deployments were abandoned; raise the retry budget (--retry \
+             max=N) or lower the fault rate"
+        );
     } else {
         // LHS over the feature space, snapped to distinct full configs;
         // independent deployments, launched in parallel under a live
@@ -460,10 +531,26 @@ fn initialize(
             }
             points.push(p);
         }
-        let probes = backend.probe_batch(&points)?;
-        for (p, pr) in points.iter().zip(&probes) {
-            init.push((*p, pr.outcome, pr.charged_cost, pr.duration_s));
+        // tolerant slate path (all configs distinct → independent jobs):
+        // an abandoned init deployment charges its partial cost into the
+        // running totals and the model simply fits on the survivors
+        let results = backend.probe_slate(&points)?;
+        for (p, res) in points.iter().zip(&results) {
+            match res {
+                ProbeResult::Observed(pr) => {
+                    init.push((*p, pr.outcome, pr.charged_cost, pr.duration_s));
+                }
+                ProbeResult::Abandoned { charged_cost, duration_s, .. } => {
+                    st.cum_cost += charged_cost;
+                    st.cum_time += duration_s;
+                }
+            }
         }
+        anyhow::ensure!(
+            !init.is_empty(),
+            "initialization failed: every init probe was abandoned; raise \
+             the retry budget (--retry max=N) or lower the fault rate"
+        );
     }
 
     let n = init.len();

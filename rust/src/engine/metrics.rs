@@ -1,6 +1,7 @@
 //! Evaluation metrics: Constrained Accuracy (paper Eq. 7) and derived
 //! savings measures (Fig. 2).
 
+use super::backend::FaultStats;
 use super::pareto::ParetoPoint;
 use crate::sim::{Dataset, Outcome};
 use crate::space::{Constraint, Point};
@@ -83,6 +84,10 @@ pub struct RunResult {
     /// predicted (cost, accuracy) Pareto frontier under the final models,
     /// populated when [`super::EngineConfig`]'s `pareto` flag is set
     pub pareto: Option<Vec<ParetoPoint>>,
+    /// fault counters from the backend (all zero under replay or a clean
+    /// live run): failed launches, abandoned probes, and the partial
+    /// cost/time charged without producing an observation
+    pub faults: FaultStats,
 }
 
 impl RunResult {
@@ -201,6 +206,7 @@ mod tests {
             optimum_acc: 1.0,
             optimum: None,
             pareto: None,
+            faults: FaultStats::default(),
         };
         assert_eq!(cost_to_quality(&run, 0.9), Some((3.0, 30.0)));
         assert_eq!(cost_to_quality(&run, 0.5), Some((2.0, 20.0)));

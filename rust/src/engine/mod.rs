@@ -20,7 +20,9 @@ mod metrics;
 mod pareto;
 mod stop;
 
-pub use backend::{EvalBackend, LiveEval, Probe, Snapshot};
+pub use backend::{
+    EvalBackend, FaultStats, LiveEval, Probe, ProbeResult, RetryPolicy, Snapshot,
+};
 pub use loop_::{run, run_backend, BatchMode, EngineConfig, OptimizerKind};
 pub use metrics::{accuracy_c, cost_to_quality, IterRecord, RunResult};
 pub use pareto::{

@@ -17,6 +17,12 @@ pub enum StopCondition {
     /// `min_delta` over the last `window` iterations. Deliberately blind
     /// to ground truth: the decision must be computable in a live run,
     /// where the true incumbent accuracy is unknown.
+    ///
+    /// The window counts *observations* only: probes abandoned under
+    /// faults produce no record, and the engine skips the stop check
+    /// entirely after a round whose every probe was abandoned — a round
+    /// that observed nothing is no evidence of a plateau (see the main
+    /// loop in `loop_`; pinned by `tests/fault_parity.rs`).
     NoImprovement { window: usize, min_delta: f64 },
     /// stop once cumulative exploration cost exceeds the budget (USD)
     CostBudget(f64),

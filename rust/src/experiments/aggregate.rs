@@ -142,6 +142,7 @@ mod tests {
             optimum_acc: 1.0,
             optimum: None,
             pareto: None,
+            faults: crate::engine::FaultStats::default(),
         }
     }
 

@@ -4,10 +4,12 @@
 
 mod ablation;
 mod aggregate;
+mod faults;
 mod figures;
 mod tables;
 
 pub use ablation::ablation;
+pub use faults::faults;
 pub use aggregate::{average_runs, average_runs_axis, budget_to_target, BudgetAxis, CurvePoint};
 pub use figures::{fig1, fig2, fig3, fig4};
 pub use tables::{table1, table2, table3, table4};
@@ -60,6 +62,7 @@ pub fn cmd_repro(args: &Args) -> Result<()> {
         "fig3" => fig3(&opts)?,
         "fig4" => fig4(&opts)?,
         "ablation" => ablation(&opts)?,
+        "faults" => faults(&opts)?,
         "all" => {
             table1(&opts)?;
             table2(&opts)?;

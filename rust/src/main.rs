@@ -13,8 +13,10 @@
 
 use anyhow::{bail, Result};
 use trimtuner::cli::Args;
-use trimtuner::coordinator::{EventKind, SimLauncher};
-use trimtuner::engine::{self, EngineConfig, EvalBackend, LiveEval, OptimizerKind};
+use trimtuner::coordinator::{EventKind, FaultSpec, SimLauncher};
+use trimtuner::engine::{
+    self, EngineConfig, EvalBackend, LiveEval, OptimizerKind, RetryPolicy,
+};
 use trimtuner::experiments;
 use trimtuner::heuristics::FilterKind;
 use trimtuner::sim::{Dataset, NetKind};
@@ -30,8 +32,11 @@ USAGE:
                      [--iters 44] [--seed 0] [--cost-cap <usd>] [--pareto]
                      [--live] [--workers 4] [--batch-size 1]
                      [--launcher-noise 1.0] [--launcher-seed <seed>]
+                     [--faults spot:0.3,straggle:2.0,flaky:0.1,timeout:600]
+                     [--retry max=3,base=0,factor=2,cap=30,jitter=0.1,deadline=600]
+                     [--fault-seed <seed>]
   trimtuner generate-datasets [--out data] [--seed 42]
-  trimtuner repro <table1|table2|table3|table4|fig1|fig2|fig3|fig4|all>
+  trimtuner repro <table1|table2|table3|table4|fig1|fig2|fig3|fig4|faults|all>
                   [--out results] [--seeds 5] [--full] [--iters 44]
   trimtuner runtime-check [--artifacts artifacts]
   trimtuner serve [--net mlp] [--jobs 16] [--workers 4]
@@ -55,6 +60,22 @@ USAGE:
   --launcher-noise X scales the simulated launcher's observation noise
   (1.0 = calibrated, 0 = exact ground truth — live runs then replay
   bit-identically); --launcher-seed pins its per-job noise stream.
+
+  --faults injects transient-cloud failures into the live launcher stack
+  (requires --live): spot:RATE preempts jobs with the given per-attempt
+  probability (add the bare token `fallback` to run retries on-demand,
+  immune to further preemption), straggle:SEV multiplies
+  durations by a seeded heavy-tailed factor, flaky:RATE fails launches
+  before any cost accrues, timeout:SECS kills jobs at a per-attempt
+  deadline with pro-rata charging. All decisions are deterministic per
+  (--fault-seed, job id), so fault traces replay bit-identically at any
+  worker count.
+
+  --retry max=N,base=S,factor=F,cap=S,jitter=J,deadline=S tunes the
+  engine's retry/abandonment policy: N retries with exponential backoff
+  (base S seconds, seeded jitter J), then the probe is *abandoned* — its
+  partial cost stays charged, a ProbeAbandoned event is logged, and the
+  campaign re-plans around the hole instead of aborting.
 
   --pareto additionally reports the predicted (cost, accuracy) Pareto
   frontier under the final surrogates; in replay mode it is scored against
@@ -112,6 +133,17 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     let live = args.get_bool("live");
     cfg.pareto = args.get_bool("pareto");
     cfg.batch_size = args.get_usize("batch-size", cfg.batch_size).max(1);
+    let faults = match args.get("faults") {
+        Some(spec) => FaultSpec::parse(spec)?,
+        None => FaultSpec::default(),
+    };
+    if !faults.is_empty() && !live {
+        bail!("--faults injects failures into the live launcher stack; add --live");
+    }
+    let retry = match args.get("retry") {
+        Some(spec) => RetryPolicy::parse(spec)?,
+        None => RetryPolicy::default(),
+    };
 
     eprintln!(
         "optimize: net={} optimizer={} filter={} beta={} iters={} cap=${cap} mode={} q={} batch={}",
@@ -137,16 +169,28 @@ fn cmd_optimize(args: &Args) -> Result<()> {
             noise,
             0.0,
         );
+        let fault_seed = args.get_u64("fault-seed", seed ^ 0xFA17);
+        let launcher = faults.wrap(Box::new(launcher), fault_seed);
         let mut backend = EvalBackend::Live(
-            LiveEval::new(Box::new(launcher), workers).with_eval(&dataset),
+            LiveEval::new(launcher, workers)
+                .with_eval(&dataset)
+                .with_retry(retry, seed ^ 0xB0FF),
         );
         let run = engine::run_backend(&mut backend, &constraints, &cfg)?;
         if let Some(log) = backend.event_log() {
             eprintln!(
-                "live: {} jobs submitted, {} completed, {} failed on {workers} workers",
+                "live: {} jobs submitted, {} completed, {} failed, {} abandoned on {workers} workers",
                 log.count(|k| matches!(k, EventKind::JobSubmitted { .. })),
                 log.count(|k| matches!(k, EventKind::JobCompleted { .. })),
                 log.count(|k| matches!(k, EventKind::JobFailed { .. })),
+                log.count(|k| matches!(k, EventKind::ProbeAbandoned { .. })),
+            );
+        }
+        let f = run.faults;
+        if f.n_failures > 0 || f.n_abandoned > 0 {
+            eprintln!(
+                "faults: {} failed attempts, {} probes abandoned, ${:.4} wasted cost, {:.1}s wasted time",
+                f.n_failures, f.n_abandoned, f.wasted_cost, f.wasted_time,
             );
         }
         backend.shutdown();

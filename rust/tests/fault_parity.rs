@@ -1,0 +1,294 @@
+//! Fault-injection contracts: a zero-valued fault stack is an exact
+//! no-op, fault traces are deterministic in the worker count, and a
+//! campaign under deterministic kills survives — abandoned probes charge
+//! their partial cost, produce no phantom observations, and never feed
+//! the NoImprovement stop condition.
+
+use trimtuner::coordinator::{
+    job_ids, EventKind, FaultSpec, Interrupted, Job, JobLauncher, JobResult,
+    SimLauncher,
+};
+use trimtuner::engine::{
+    self, EngineConfig, EvalBackend, LiveEval, OptimizerKind, RetryPolicy,
+    RunResult, StopCondition,
+};
+use trimtuner::models::ModelKind;
+use trimtuner::sim::{Dataset, NetKind};
+use trimtuner::space::Constraint;
+
+fn caps(net: NetKind) -> Vec<Constraint> {
+    vec![Constraint::cost_max(net.paper_cost_cap())]
+}
+
+/// Paper defaults shrunk like `live_parity`'s so the runs stay fast.
+fn small_cfg(optimizer: OptimizerKind, seed: u64, iters: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::paper_default(optimizer, seed);
+    cfg.max_iters = iters;
+    cfg.n_rep = 10;
+    cfg.n_popt_samples = 40;
+    cfg.gp_hyper_samples = cfg.gp_hyper_samples.min(2);
+    cfg
+}
+
+/// Run live with an arbitrary launcher stack; returns the result plus the
+/// event log's `ProbeAbandoned` count (read before shutdown).
+fn live_run(
+    launcher: Box<dyn JobLauncher>,
+    workers: usize,
+    retry: RetryPolicy,
+    eval: &Dataset,
+    constraints: &[Constraint],
+    cfg: &EngineConfig,
+) -> (RunResult, usize) {
+    let mut backend = EvalBackend::Live(
+        LiveEval::new(launcher, workers)
+            .with_eval(eval)
+            .with_retry(retry, cfg.seed ^ 0xB0FF),
+    );
+    let run = engine::run_backend(&mut backend, constraints, cfg)
+        .expect("live run failed");
+    let abandoned_events = backend
+        .event_log()
+        .map(|log| log.count(|k| matches!(k, EventKind::ProbeAbandoned { .. })))
+        .unwrap_or(0);
+    backend.shutdown();
+    (run, abandoned_events)
+}
+
+fn assert_same_trajectory(a: &RunResult, b: &RunResult, label: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{label}: record count");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.tested.id(), rb.tested.id(), "{label}: tested point");
+        assert_eq!(
+            ra.outcome.acc.to_bits(),
+            rb.outcome.acc.to_bits(),
+            "{label}: observed accuracy"
+        );
+        assert_eq!(
+            ra.explore_cost.to_bits(),
+            rb.explore_cost.to_bits(),
+            "{label}: charged cost"
+        );
+        assert_eq!(
+            ra.cum_cost.to_bits(),
+            rb.cum_cost.to_bits(),
+            "{label}: cumulative cost"
+        );
+        assert_eq!(
+            ra.duration_s.to_bits(),
+            rb.duration_s.to_bits(),
+            "{label}: measured duration"
+        );
+        assert_eq!(ra.incumbent.id(), rb.incumbent.id(), "{label}: incumbent");
+    }
+}
+
+/// ISSUE acceptance: the full fault stack configured at zero rates is
+/// bit-exactly the bare launcher — every decorator is an exact
+/// pass-through, the engine's retry plumbing charges exactly +0.0.
+#[test]
+fn zero_fault_stack_is_bit_exact_with_the_bare_launcher() {
+    let net = NetKind::Rnn;
+    let truth = Dataset::ground_truth(net);
+    let constraints = caps(net);
+    let zero = FaultSpec {
+        spot: Some(0.0),
+        straggle: Some(0.0),
+        flaky: Some(0.0),
+        // a deadline no simulated run approaches is the same as none
+        timeout: Some(1e12),
+        fallback: false,
+        market: None,
+    };
+    assert!(!zero.is_empty(), "explicit zeros still build the stack");
+    for (optimizer, iters) in [
+        (OptimizerKind::TrimTuner(ModelKind::Gp), 3),
+        (OptimizerKind::TrimTuner(ModelKind::Trees), 6),
+    ] {
+        let cfg = small_cfg(optimizer, 5, iters);
+        let mk_base = || Box::new(SimLauncher::new(net, 33)) as Box<dyn JobLauncher>;
+        let (bare, _) = live_run(
+            mk_base(),
+            2,
+            RetryPolicy::default(),
+            &truth,
+            &constraints,
+            &cfg,
+        );
+        let (stacked, _) = live_run(
+            zero.wrap(mk_base(), 0xFA17),
+            2,
+            RetryPolicy::default(),
+            &truth,
+            &constraints,
+            &cfg,
+        );
+        assert_same_trajectory(&bare, &stacked, &optimizer.name());
+        assert_eq!(stacked.faults, bare.faults, "no faults at rate 0");
+        assert_eq!(stacked.faults.n_failures, 0);
+    }
+}
+
+/// Fault decisions are keyed by (seed, job id) and job ids by submission
+/// order, so the whole fault trace — failures, abandonments, waste totals
+/// to the bit — must be identical at 1 and 4 workers.
+#[test]
+fn fault_trace_is_deterministic_across_worker_counts() {
+    let net = NetKind::Mlp;
+    let truth = Dataset::ground_truth(net);
+    let constraints = caps(net);
+    let spec = FaultSpec::parse("spot:0.4,straggle:2.0,flaky:0.3").unwrap();
+    let mut cfg = small_cfg(OptimizerKind::TrimTuner(ModelKind::Trees), 9, 8);
+    cfg.batch_size = 2;
+    let mk = |workers| {
+        live_run(
+            spec.wrap(Box::new(SimLauncher::new(net, 33)), 0xFA17),
+            workers,
+            RetryPolicy::default(),
+            &truth,
+            &constraints,
+            &cfg,
+        )
+    };
+    let (one, one_abandoned) = mk(1);
+    let (four, four_abandoned) = mk(4);
+    assert_same_trajectory(&one, &four, "faulty 1 vs 4 workers");
+    assert_eq!(one.faults.n_failures, four.faults.n_failures);
+    assert_eq!(one.faults.n_abandoned, four.faults.n_abandoned);
+    assert_eq!(
+        one.faults.wasted_cost.to_bits(),
+        four.faults.wasted_cost.to_bits(),
+        "waste totals must match bitwise"
+    );
+    assert_eq!(
+        one.faults.wasted_time.to_bits(),
+        four.faults.wasted_time.to_bits()
+    );
+    assert_eq!(one_abandoned, four_abandoned);
+    assert!(
+        one.faults.n_failures > 0,
+        "a 40% preemption + 30% flaky cocktail over 9+ jobs must fault"
+    );
+}
+
+/// Kills every attempt (primary and retries) of the probes whose *primary*
+/// id is listed — a deterministic preemption charging half the real cost
+/// per dead attempt, guaranteed to exhaust any retry budget.
+struct KillListLauncher {
+    inner: SimLauncher,
+    kill: fn(u64) -> bool,
+}
+
+impl JobLauncher for KillListLauncher {
+    fn launch(&self, job: &Job) -> anyhow::Result<JobResult> {
+        let r = self.inner.launch(job)?;
+        if (self.kill)(job_ids::original(job.id)) {
+            return Err(anyhow::Error::new(Interrupted {
+                partial_cost: r.charged_cost * 0.5,
+                partial_duration_s: r.duration_s * 0.5,
+            }));
+        }
+        Ok(r)
+    }
+}
+
+/// ISSUE acceptance: a campaign whose probes die deterministically keeps
+/// going — the abandoned probes are charged their partial cost into the
+/// cumulative totals, logged as `ProbeAbandoned`, and produce no records;
+/// the launch budget is fully consumed either way.
+#[test]
+fn campaign_survives_kills_with_partial_charges_and_no_phantom_records() {
+    let net = NetKind::Rnn;
+    let truth = Dataset::ground_truth(net);
+    let cfg = small_cfg(OptimizerKind::TrimTuner(ModelKind::Trees), 3, 6);
+    // job ids: 0 = the init snapshot, 1..=6 the six main-loop primaries.
+    // Kill 2 and 5 — mid-run, so a later observed round folds their waste
+    // into its cumulative totals.
+    let launcher = KillListLauncher {
+        inner: SimLauncher::noiseless(net),
+        kill: |id| id == 2 || id == 5,
+    };
+    let retry = RetryPolicy { max_retries: 1, ..RetryPolicy::default() };
+    let (run, abandoned_events) =
+        live_run(Box::new(launcher), 2, retry, &truth, &caps(net), &cfg);
+    assert_eq!(run.faults.n_abandoned, 2);
+    assert_eq!(run.faults.n_failures, 4, "2 probes x (1 primary + 1 retry)");
+    assert!(run.faults.wasted_cost > 0.0);
+    assert_eq!(abandoned_events, 2);
+    // 4 init records + (6 launched - 2 abandoned) main records, no holes
+    let n_init = run.records.iter().filter(|r| r.is_init).count();
+    assert_eq!(n_init, 4);
+    assert_eq!(run.records.len(), n_init + 4);
+    // main-loop observation indices stay contiguous despite the holes
+    for (i, r) in
+        run.records.iter().filter(|r| !r.is_init).enumerate()
+    {
+        assert_eq!(r.iter, i, "observation indices stay contiguous");
+    }
+    // the waste is charged: cumulative cost ends above the sum of the
+    // observed probes' own charges
+    let observed_sum: f64 =
+        run.records.iter().map(|r| r.explore_cost).sum();
+    assert!(
+        run.total_cost() > observed_sum,
+        "cum {} must exceed observed {}",
+        run.total_cost(),
+        observed_sum
+    );
+}
+
+/// Satellite: rounds that observed nothing must not feed
+/// `StopCondition::NoImprovement`. With an unmeetable `min_delta`, the
+/// condition would stop as soon as the window overflows — so after the
+/// first two observed rounds, a correct engine never stops on the six
+/// abandoned-only rounds that follow, and the full launch budget runs out.
+#[test]
+fn abandoned_only_rounds_are_not_no_improvement_evidence() {
+    let net = NetKind::Rnn;
+    let truth = Dataset::ground_truth(net);
+    let mut cfg = small_cfg(OptimizerKind::TrimTuner(ModelKind::Trees), 3, 8);
+    cfg.stop = StopCondition::NoImprovement { window: 2, min_delta: 1.0 };
+    // id 0 = init; main ids 1 and 2 observe, everything later is killed
+    let launcher = KillListLauncher {
+        inner: SimLauncher::noiseless(net),
+        kill: |id| id >= 3,
+    };
+    let retry = RetryPolicy { max_retries: 0, ..RetryPolicy::default() };
+    let (run, _) =
+        live_run(Box::new(launcher), 2, retry, &truth, &caps(net), &cfg);
+    let n_main = run.records.iter().filter(|r| !r.is_init).count();
+    assert_eq!(n_main, 2, "only the two pre-kill rounds observe");
+    assert_eq!(
+        run.faults.n_abandoned, 6,
+        "the remaining budget was launched and abandoned, not stopped on"
+    );
+}
+
+/// Backoff sleeps shift wall time only: a run with real (tiny) backoff
+/// delays is bit-identical to one without.
+#[test]
+fn backoff_sleep_does_not_change_the_trajectory() {
+    let net = NetKind::Rnn;
+    let truth = Dataset::ground_truth(net);
+    let constraints = caps(net);
+    let spec = FaultSpec::parse("flaky:0.5").unwrap();
+    let cfg = small_cfg(OptimizerKind::TrimTuner(ModelKind::Trees), 11, 5);
+    let mk = |retry: RetryPolicy| {
+        live_run(
+            spec.wrap(Box::new(SimLauncher::new(net, 33)), 0xFA17),
+            2,
+            retry,
+            &truth,
+            &constraints,
+            &cfg,
+        )
+    };
+    let (no_sleep, _) = mk(RetryPolicy::default());
+    let (slept, _) = mk(RetryPolicy {
+        backoff_base_s: 0.002,
+        backoff_max_s: 0.01,
+        ..RetryPolicy::default()
+    });
+    assert_same_trajectory(&no_sleep, &slept, "backoff sleep");
+    assert_eq!(no_sleep.faults, slept.faults);
+}

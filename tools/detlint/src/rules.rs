@@ -11,8 +11,12 @@
 use crate::lexer::{lex, Pragma, Tok, TokKind};
 
 /// Modules whose runs must be bit-reproducible from the seed (R1/R3).
+/// `coordinator` is in the set since the fault-injection layer landed:
+/// fault decisions (preemption, stragglers, flaky launches) must be pure
+/// functions of (fault seed, job id), never of thread timing or ambient
+/// entropy.
 pub const DET_MODULES: &[&str] =
-    &["engine", "acq", "heuristics", "models", "opt", "linalg"];
+    &["engine", "acq", "heuristics", "models", "opt", "linalg", "coordinator"];
 
 /// Modules with real cross-thread state (R4/R5).
 pub const CONCURRENT_MODULES: &[&str] = &["coordinator", "engine"];
@@ -48,8 +52,9 @@ pub const RULES: &[(&str, &str)] = &[
     (
         "R1",
         "no iteration over HashMap/HashSet in deterministic modules \
-         (engine, acq, heuristics, models, opt, linalg); keyed lookups are \
-         fine, ordered drains take a BTreeMap or an explicit sort",
+         (engine, acq, heuristics, models, opt, linalg, coordinator); keyed \
+         lookups are fine, ordered drains take a BTreeMap or an explicit \
+         sort",
     ),
     (
         "R2",
