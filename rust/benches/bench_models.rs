@@ -10,11 +10,21 @@
 //!   conditioning vs the per-candidate seeded rebuild
 //!   (`TRIMTUNER_TREES=rebuild`'s reference).
 //!
+//! - the refit sweep: per-observation incremental absorption
+//!   ([`Surrogate::absorb`]) vs the from-scratch frozen refit
+//!   (`TRIMTUNER_REFIT=full`'s reference, [`Surrogate::refit_frozen`])
+//!   across observation-history sizes n ∈ {100, 1k, 10k} — the O(n²) vs
+//!   O(n³) amortization the engine's `--refit every=K` cadence buys.
+//!   GP rows stop at n = 1k: the one-time O(n³) baseline factorization
+//!   needed just to *set up* the 10k fixture dominates the whole run, so
+//!   only the trees rows cover the largest size.
+//!
 //! Results land in `BENCH_models.json` (override with `BENCH_JSON`). With
 //! `BENCH_MODELS_SMOKE=1` (CI) the fixture shrinks and the harness exits
 //! non-zero if either batched slate-conditioning path fails to beat its
-//! per-candidate counterpart by >= 2x (best-of-run, so shared-runner
-//! jitter cannot flip a correct build).
+//! per-candidate counterpart by >= 2x, or if incremental absorption fails
+//! to beat the from-scratch frozen refit by >= 5x at n = 1k (best-of-run,
+//! so shared-runner jitter cannot flip a correct build).
 mod common;
 
 use trimtuner::models::{
@@ -244,6 +254,101 @@ fn main() {
         gate_failures.push(format!(
             "extra-trees: incremental fantasy slate best-of {best:.2}x < 2x"
         ));
+    }
+
+    // ---- refit sweep: incremental absorb vs from-scratch frozen refit --
+    // Both paths maintain the same surrogate state (pinned by
+    // tests/refit_parity.rs); this measures the O(n²)-vs-O(n³) gap the
+    // engine's `--refit every=K` cadence amortizes. The history drifts by
+    // a handful of observations while the absorb closure runs — at these
+    // sizes that perturbs the per-call cost by well under the run-to-run
+    // jitter.
+    let refit_ns: &[usize] =
+        if smoke { &[100, 1000] } else { &[100, 1000, 10_000] };
+    for &n in refit_ns {
+        let (pts_n, outs_n) = common::observations(n + 64, 29);
+        let xs_n: Vec<Feat> = pts_n.iter().map(encode).collect();
+        let ys_n: Vec<f64> = outs_n.iter().map(|o| o.acc).collect();
+
+        // GP: hyper-parameters frozen throughout (absorb never re-learns
+        // them); skipped at n = 10k — see the module docs
+        if n <= 1000 {
+            let mut gp = Gp::with_hyper_samples(Basis::Acc, 3, 1);
+            // hyperopt off: the sweep measures the refit paths, not the
+            // Nelder-Mead search (which would evaluate O(n^3) NLLs here)
+            gp.fit(
+                &xs_n[..n],
+                &ys_n[..n],
+                FitOptions { hyperopt: false, restarts: 0 },
+            );
+            let mut next = n;
+            let stats =
+                bench(&format!("gp-ml2 absorb(+1 obs) @n={n}"), 1, iters, || {
+                    let i = next % xs_n.len();
+                    next += 1;
+                    gp.absorb(&xs_n[i], ys_n[i]);
+                });
+            println!("{}", stats.report());
+            let t_inc = (stats.mean_s, stats.min_s);
+            all.push(stats);
+            let stats =
+                bench(&format!("gp-ml2 refit_frozen @n={n}"), 1, iters, || {
+                    gp.refit_frozen();
+                });
+            println!("{}", stats.report());
+            let t_full = (stats.mean_s, stats.min_s);
+            all.push(stats);
+            let (row, best) = speedup_row(
+                format!("gp-ml2 absorb-vs-refit_frozen speedup @n={n}"),
+                iters,
+                t_full,
+                t_inc,
+            );
+            all.push(row);
+            if smoke && n == 1000 && best < 5.0 {
+                gate_failures.push(format!(
+                    "gp-ml2: absorb best-of {best:.2}x < 5x refit_frozen @n={n}"
+                ));
+            }
+        }
+
+        let mut et = ExtraTrees::new(TreesOptions::default());
+        et.fit(&xs_n[..n], &ys_n[..n], FitOptions::default());
+        let mut next = n;
+        let stats = bench(
+            &format!("extra-trees absorb(+1 obs) @n={n}"),
+            1,
+            iters,
+            || {
+                let i = next % xs_n.len();
+                next += 1;
+                et.absorb(&xs_n[i], ys_n[i]);
+            },
+        );
+        println!("{}", stats.report());
+        let t_inc = (stats.mean_s, stats.min_s);
+        all.push(stats);
+        let stats = bench(
+            &format!("extra-trees refit_frozen @n={n}"),
+            1,
+            iters,
+            || et.refit_frozen(),
+        );
+        println!("{}", stats.report());
+        let t_full = (stats.mean_s, stats.min_s);
+        all.push(stats);
+        let (row, best) = speedup_row(
+            format!("extra-trees absorb-vs-refit_frozen speedup @n={n}"),
+            iters,
+            t_full,
+            t_inc,
+        );
+        all.push(row);
+        if smoke && n == 1000 && best < 5.0 {
+            gate_failures.push(format!(
+                "extra-trees: absorb best-of {best:.2}x < 5x refit_frozen @n={n}"
+            ));
+        }
     }
 
     let path = std::env::var("BENCH_JSON")

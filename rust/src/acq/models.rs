@@ -96,6 +96,33 @@ impl Models {
         self.generation += 1;
     }
 
+    /// Fold a round's fresh observations into all three surrogates
+    /// incrementally ([`Surrogate::absorb`]: GP hyper-parameters and tree
+    /// structure frozen) — the amortized-O(n²) alternative to
+    /// [`Models::fit`] on rounds where the engine's refit policy skips the
+    /// full refit. Target transforms match `fit` exactly. One generation
+    /// bump per absorbed batch, like one `fit`.
+    pub fn absorb(&mut self, points: &[Point], outcomes: &[Outcome]) {
+        for (p, o) in points.iter().zip(outcomes) {
+            let x = encode(p);
+            self.acc.absorb(&x, o.acc);
+            self.cost.absorb(&x, o.cost_usd.max(1e-9).ln());
+            self.time.absorb(&x, o.time_s.max(1e-9).ln());
+        }
+        self.generation += 1;
+    }
+
+    /// The from-scratch twin of [`Models::absorb`] (`TRIMTUNER_REFIT=full`
+    /// parity hatch): recompute every surrogate's absorbed state from its
+    /// stored history ([`Surrogate::refit_frozen`]) — identical state,
+    /// none of the incremental arithmetic.
+    pub fn refit_frozen(&mut self) {
+        self.acc.refit_frozen();
+        self.cost.refit_frozen();
+        self.time.refit_frozen();
+        self.generation += 1;
+    }
+
     /// The surrogate that models a constraint's metric.
     pub fn metric_model(&self, metric: Metric) -> &dyn Surrogate {
         match metric {

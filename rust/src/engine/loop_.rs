@@ -103,10 +103,12 @@ pub struct EngineConfig {
     pub n_rep: usize,
     /// Monte-Carlo samples for p_opt
     pub n_popt_samples: usize,
-    /// re-optimize GP hyper-parameters every k refits — one refit per
-    /// selection round, so with `batch_size` = 1 this is every k
-    /// iterations (the paper's cadence)
-    pub hyperopt_every: usize,
+    /// when to pay for a *full* surrogate refit (GP hyper-parameter
+    /// re-optimization + tree structural rebuild) versus incremental
+    /// observation absorption — one refit per selection round, so with
+    /// `batch_size` = 1 the cadence counts iterations (the paper's
+    /// cadence). CLI: `--refit every=K,evidence-drop=X`.
+    pub refit: RefitPolicy,
     /// GP hyper-parameter posterior samples (FABOLAS-style marginalization;
     /// 1 = plain ML-II as used by the EIc baselines)
     pub gp_hyper_samples: usize,
@@ -142,7 +144,7 @@ impl EngineConfig {
             seed,
             n_rep: 40,
             n_popt_samples: 160,
-            hyperopt_every: 1,
+            refit: RefitPolicy::paper_default(),
             gp_hyper_samples: match optimizer {
                 // the sub-sampling ES optimizers marginalize GP hypers
                 // (FABOLAS uses emcee); EIc/EIc-USD use plain ML-II GPs.
@@ -199,6 +201,127 @@ impl BatchMode {
             BatchMode::Fantasy => "fantasy",
             BatchMode::ConstantLiar => "liar",
             BatchMode::TopQ => "topq",
+        }
+    }
+}
+
+/// When the engine pays for a *full* surrogate refit (GP hyper-parameter
+/// re-optimization + tree structural rebuild, `fit(hyperopt: true)`)
+/// versus the amortized-O(n²) incremental absorption
+/// ([`Models::absorb`]). Full rounds recompute everything from the
+/// complete history, so any structural or hyper-parameter staleness the
+/// cheap rounds accumulate is bounded by `every` rounds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RefitPolicy {
+    /// full refit every k selection rounds. 1 — the default — is the
+    /// paper's cadence: hyper-parameters move after every round and
+    /// incremental absorption never kicks in, reproducing the historic
+    /// trajectories bit-exactly; k > 1 amortizes the O(n³) fit tax over k
+    /// rounds of O(n²) absorption. 0 disables the cadence entirely
+    /// (hyper-parameters stay at their initial fit).
+    pub every: usize,
+    /// additionally trigger a full refit when the mean predictive surprise
+    /// (negative log predictive density of a round's fresh accuracy
+    /// observations under the pre-absorb accuracy model, nats per
+    /// observation) exceeds the running baseline by more than this —
+    /// evidence that the frozen hyper-parameters stopped explaining new
+    /// data. 0 (the default) disables the trigger.
+    pub evidence_drop: f64,
+    /// absorption mechanics on non-full rounds (defaults to the
+    /// `TRIMTUNER_REFIT` environment hatch, see [`RefitMode::from_env`])
+    pub mode: RefitMode,
+}
+
+impl RefitPolicy {
+    pub fn paper_default() -> RefitPolicy {
+        RefitPolicy {
+            every: 1,
+            evidence_drop: 0.0,
+            mode: RefitMode::from_env(),
+        }
+    }
+
+    /// Parse the CLI `--refit every=K,evidence-drop=X` spec (either key
+    /// may be omitted; the other keeps its paper default).
+    pub fn parse(spec: &str) -> Result<RefitPolicy> {
+        let mut p = RefitPolicy::paper_default();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (key, val) = part.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("--refit: `{part}` is not key=value")
+            })?;
+            match key.trim() {
+                "every" => {
+                    p.every = val.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("--refit: bad every `{val}`")
+                    })?;
+                }
+                "evidence-drop" => {
+                    p.evidence_drop = val.trim().parse().map_err(|_| {
+                        anyhow::anyhow!("--refit: bad evidence-drop `{val}`")
+                    })?;
+                }
+                other => {
+                    anyhow::bail!("--refit: unknown key `{other}`")
+                }
+            }
+        }
+        Ok(p)
+    }
+
+    /// Is `round_idx` (0-based) a scheduled full-refit round?
+    pub fn full_due(&self, round_idx: usize) -> bool {
+        self.every > 0 && round_idx % self.every == 0
+    }
+
+    /// The full-refit decision for one round: the scheduled cadence, OR
+    /// the evidence-drop trigger — the round's surprise exceeded the
+    /// post-refit baseline by more than `evidence_drop` nats. Pure, so the
+    /// trigger logic is unit-testable without running campaigns.
+    pub fn full_refit(
+        &self,
+        round_idx: usize,
+        surprise: Option<f64>,
+        baseline: Option<f64>,
+    ) -> bool {
+        if self.full_due(round_idx) {
+            return true;
+        }
+        match (surprise, baseline) {
+            (Some(s), Some(b)) => {
+                self.evidence_drop > 0.0 && s - b > self.evidence_drop
+            }
+            _ => false,
+        }
+    }
+}
+
+/// Which mechanics the rounds that skip the full refit use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RefitMode {
+    /// Amortized incremental absorption (the default): O(n²) factor
+    /// growth per GP hyper component, one leaf-statistic fold per tree.
+    Incremental,
+    /// From-scratch recomputation of exactly the same frozen-parameter
+    /// state ([`Models::refit_frozen`]) — the reference twin the parity
+    /// suite (`tests/refit_parity.rs`) pins the incremental path against.
+    Full,
+}
+
+impl RefitMode {
+    /// `TRIMTUNER_REFIT=full` is the escape hatch to from-scratch
+    /// frozen-parameter recomputation on every non-full round; anything
+    /// else (or unset) is the incremental default.
+    pub fn from_env() -> RefitMode {
+        match std::env::var("TRIMTUNER_REFIT") {
+            Ok(v) if v.eq_ignore_ascii_case("full") => RefitMode::Full,
+            _ => RefitMode::Incremental,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RefitMode::Incremental => "incremental",
+            RefitMode::Full => "full",
         }
     }
 }
@@ -345,6 +468,7 @@ pub fn run_backend(
     let mut launched = 0;
     let mut iter = 0;
     let mut round = 1; // round 0 is the init batch
+    let mut refit_memo = RefitMemo { baseline: None };
     while launched < cfg.max_iters {
         let timer = Timer::start();
         let untested = untested_points(cfg.optimizer, &st.tested_ids);
@@ -401,11 +525,12 @@ pub fn run_backend(
             continue;
         }
         // One refit + one recommendation per round (not per observation).
-        // The hyperopt cadence counts *refits* (rounds), not observations:
-        // gating on the observation index would dilute the configured
-        // cadence by the batch factor at q > 1. At q = 1 the round index
-        // equals the observation index, preserving the sequential traces.
-        refit(cfg, &mut st, round - 1);
+        // The refit cadence counts *rounds*, not observations: gating on
+        // the observation index would dilute the configured cadence by the
+        // batch factor at q > 1. At q = 1 the round index equals the
+        // observation index, preserving the sequential traces.
+        let new_from = st.tested.len() - observed.len();
+        refit(cfg, &mut st, round - 1, new_from, &mut refit_memo);
         let rec = recommend(cfg.optimizer, &mut st, constraints, &full_feats);
         let rec_wall_s = timer.elapsed_s();
 
@@ -1101,17 +1226,77 @@ fn incumbent_eta(st: &State, constraints: &[Constraint]) -> f64 {
     }
 }
 
-/// Refit the surrogates after a round, re-optimizing hyper-parameters
-/// every `hyperopt_every`-th refit (`round_idx` is the 0-based main-loop
-/// round index — with q = 1 that is exactly the observation index).
-fn refit(cfg: &EngineConfig, st: &mut State, round_idx: usize) {
-    let hyperopt =
-        cfg.hyperopt_every > 0 && round_idx % cfg.hyperopt_every == 0;
-    st.models.fit(
-        &st.tested,
-        &st.outcomes,
-        FitOptions { hyperopt, restarts: 1 },
-    );
+/// Refit state carried across rounds: the post-full-refit surprise
+/// baseline the evidence-drop trigger compares against. Reset after every
+/// full refit, re-established on the first cheap round that follows.
+struct RefitMemo {
+    baseline: Option<f64>,
+}
+
+/// Mean negative log predictive density (nats per observation) of a
+/// round's fresh accuracy observations under the *pre-absorb* accuracy
+/// model — the evidence-drop trigger's surprise statistic. Model-agnostic:
+/// both surrogate families expose a Gaussian predictive (mean, std).
+fn predictive_surprise(
+    models: &Models,
+    points: &[Point],
+    outcomes: &[Outcome],
+) -> f64 {
+    let xs: Vec<Feat> = points.iter().map(encode).collect();
+    let preds = models.acc.predict_many(&xs);
+    let mut nll = 0.0;
+    for ((mu, std), o) in preds.into_iter().zip(outcomes) {
+        let var = (std * std).max(1e-12);
+        let z = o.acc - mu;
+        nll += 0.5 * ((2.0 * std::f64::consts::PI * var).ln() + z * z / var);
+    }
+    nll / points.len().max(1) as f64
+}
+
+/// Refit or absorb after a round (`round_idx` is the 0-based main-loop
+/// round index — with q = 1 that is exactly the observation index;
+/// `new_from` marks where this round's fresh observations start in
+/// `st.tested`). Scheduled full rounds — and evidence-drop triggers — pay
+/// the full `fit(hyperopt: true)`: GP hyper-parameter re-optimization plus
+/// tree structural rebuild over the complete history, which also resyncs
+/// any state the cheap rounds approximated. In between, the fresh
+/// observations are absorbed incrementally with everything structural
+/// frozen — or, under the `TRIMTUNER_REFIT=full` hatch, recomputed from
+/// scratch to the same frozen-parameter state (the parity reference).
+fn refit(
+    cfg: &EngineConfig,
+    st: &mut State,
+    round_idx: usize,
+    new_from: usize,
+    memo: &mut RefitMemo,
+) {
+    let policy = cfg.refit;
+    // surprise is only measured when the trigger can consume it: it must
+    // run *before* absorption, against the pre-absorb models
+    let surprise = (policy.evidence_drop > 0.0 && !policy.full_due(round_idx))
+        .then(|| {
+            predictive_surprise(
+                &st.models,
+                &st.tested[new_from..],
+                &st.outcomes[new_from..],
+            )
+        });
+    if policy.full_refit(round_idx, surprise, memo.baseline) {
+        st.models.fit(
+            &st.tested,
+            &st.outcomes,
+            FitOptions { hyperopt: true, restarts: 1 },
+        );
+        memo.baseline = None;
+        return;
+    }
+    st.models.absorb(&st.tested[new_from..], &st.outcomes[new_from..]);
+    if policy.mode == RefitMode::Full {
+        st.models.refit_frozen();
+    }
+    if memo.baseline.is_none() {
+        memo.baseline = surprise;
+    }
 }
 
 /// Best *observed* config satisfying the measured constraints, reported at
@@ -1303,4 +1488,82 @@ fn push_record(
         accuracy_c: acc_c,
         n_alpha_evals: a.n_alpha_evals,
     });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn refit_policy_parses_cli_specs() {
+        let p = RefitPolicy::parse("every=5").unwrap();
+        assert_eq!(p.every, 5);
+        assert_eq!(p.evidence_drop, 0.0);
+        let p = RefitPolicy::parse("every=3, evidence-drop=0.5").unwrap();
+        assert_eq!(p.every, 3);
+        assert_eq!(p.evidence_drop, 0.5);
+        let p = RefitPolicy::parse("evidence-drop=1.25").unwrap();
+        assert_eq!(p.every, 1);
+        assert_eq!(p.evidence_drop, 1.25);
+        assert!(RefitPolicy::parse("every=x").is_err());
+        assert!(RefitPolicy::parse("cadence=3").is_err());
+        assert!(RefitPolicy::parse("every").is_err());
+    }
+
+    #[test]
+    fn refit_policy_schedules_and_triggers() {
+        let mut p = RefitPolicy::paper_default();
+        // the paper default refits fully on every round
+        assert!((0..5).all(|r| p.full_due(r)));
+        p.every = 3;
+        let due: Vec<usize> = (0..7).filter(|&r| p.full_due(r)).collect();
+        assert_eq!(due, vec![0, 3, 6]);
+        // cadence 0 disables scheduled refits entirely
+        p.every = 0;
+        assert!((0..5).all(|r| !p.full_due(r)));
+
+        // evidence trigger: fires only when enabled, with both surprise
+        // and baseline present, and the drop exceeded
+        p.every = 3;
+        p.evidence_drop = 0.5;
+        assert!(p.full_refit(3, None, None), "scheduled round wins");
+        assert!(!p.full_refit(1, None, None), "no surprise -> no trigger");
+        assert!(!p.full_refit(1, Some(1.0), None), "no baseline yet");
+        assert!(!p.full_refit(1, Some(1.4), Some(1.0)), "within tolerance");
+        assert!(p.full_refit(1, Some(1.6), Some(1.0)), "drop exceeded");
+        p.evidence_drop = 0.0;
+        assert!(
+            !p.full_refit(1, Some(9.0), Some(1.0)),
+            "disabled trigger never fires"
+        );
+    }
+
+    #[test]
+    fn predictive_surprise_grows_with_model_miss() {
+        use crate::models::ModelKind;
+        use crate::space::{Config, Point};
+        let mut models = Models::new(ModelKind::Trees, 7);
+        let points: Vec<Point> = (0..12)
+            .map(|i| Point { config: Config::from_id(i * 17 % 288), s_idx: 4 })
+            .collect();
+        let outcomes: Vec<Outcome> = points
+            .iter()
+            .map(|p| Outcome {
+                acc: 0.5 + 0.001 * (p.config.id() % 7) as f64,
+                cost_usd: 0.01,
+                time_s: 10.0,
+            })
+            .collect();
+        models.fit(&points, &outcomes, FitOptions::default());
+        let close = predictive_surprise(&models, &points, &outcomes);
+        let far: Vec<Outcome> = outcomes
+            .iter()
+            .map(|o| Outcome { acc: o.acc + 10.0, ..*o })
+            .collect();
+        let missed = predictive_surprise(&models, &points, &far);
+        assert!(
+            missed > close + 1.0,
+            "surprise must grow with prediction error: {close} vs {missed}"
+        );
+    }
 }

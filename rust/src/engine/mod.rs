@@ -23,7 +23,10 @@ mod stop;
 pub use backend::{
     EvalBackend, FaultStats, LiveEval, Probe, ProbeResult, RetryPolicy, Snapshot,
 };
-pub use loop_::{run, run_backend, BatchMode, EngineConfig, OptimizerKind};
+pub use loop_::{
+    run, run_backend, BatchMode, EngineConfig, OptimizerKind, RefitMode,
+    RefitPolicy,
+};
 pub use metrics::{accuracy_c, cost_to_quality, IterRecord, RunResult};
 pub use pareto::{
     frontier_quality, hypervolume, pareto_front, recommend_pareto,

@@ -76,9 +76,9 @@ pub fn ablation(opts: &ExpOptions) -> Result<()> {
         dt,
     )?;
     sweep(
-        "hyperopt_every (GP)",
+        "refit.every (GP)",
         &mut w,
-        &|cfg, v| cfg.hyperopt_every = v as usize,
+        &|cfg, v| cfg.refit.every = v as usize,
         &[1.0, 3.0, 10.0],
         gp,
     )?;

@@ -299,11 +299,93 @@ impl Cholesky {
 
     /// Extend the factor with one extra row/column of K in O(n²):
     /// given K' = [[K, k12], [k12ᵀ, k22]], the new factor row is
-    /// l12 = L⁻¹ k12 and l22 = sqrt(k22 − l12ᵀ l12).
+    /// l12 = L⁻¹ k12 and l22 = sqrt(k22 − l12ᵀ l12). Fails when the
+    /// appended pivot is numerically non-positive — the same near-singular
+    /// rejection contract as [`Cholesky::update`]/[`Cholesky::downdate`];
+    /// callers that must never fail (the fantasy conditioning path) use
+    /// [`Cholesky::extend_clamped`] instead.
     ///
-    /// This is what makes TrimTuner's per-candidate "simulate the refit"
-    /// step cheap (DESIGN.md §8).
+    /// Allocating convenience over [`Cholesky::extend_into`]; the
+    /// per-observation absorption loop uses the `_into` twin or
+    /// [`Cholesky::extend_in_place`] with reused scratch.
     pub fn extend(&self, k12: &[f64], k22: f64) -> Result<Cholesky> {
+        let mut out = Cholesky::scratch();
+        let mut w = Vec::new();
+        self.extend_into(k12, k22, &mut out, &mut w)?;
+        Ok(out)
+    }
+
+    /// New-pivot square l22² = k22 − l12ᵀl12, shared by every strict
+    /// extend entry point (`w` must already hold l12 = L⁻¹ k12). Rejects
+    /// pivots whose square fell below k22·1e-14 — the appended row would
+    /// be numerically rank-deficient, exactly the regime
+    /// [`Cholesky::downdate`] refuses at its pivots.
+    fn extend_pivot(k22: f64, w: &[f64]) -> Result<f64> {
+        let rem = k22 - w.iter().map(|v| v * v).sum::<f64>();
+        if rem.is_nan() || rem <= k22.abs() * 1e-14 {
+            bail!("extend loses positive definiteness at the appended pivot");
+        }
+        Ok(rem)
+    }
+
+    /// [`Cholesky::extend`] into caller-provided scratch: `out` is
+    /// overwritten with the (n+1)×(n+1) factor and `w` ends up holding the
+    /// new off-diagonal row l12 — both reuse their allocations across
+    /// calls, so a warm loop allocates nothing. On failure `out` keeps its
+    /// previous contents.
+    pub fn extend_into(
+        &self,
+        k12: &[f64],
+        k22: f64,
+        out: &mut Cholesky,
+        w: &mut Vec<f64>,
+    ) -> Result<()> {
+        let n = self.n();
+        assert_eq!(k12.len(), n);
+        self.solve_lower_into(k12, w);
+        let rem = Self::extend_pivot(k22, w)?;
+        out.l.reshape_zeroed(n + 1, n + 1);
+        for i in 0..n {
+            let (src, dst) = (self.l.row(i), out.l.row_mut(i));
+            dst[..=i].copy_from_slice(&src[..=i]);
+        }
+        let last = out.l.row_mut(n);
+        last[..n].copy_from_slice(w);
+        last[n] = rem.sqrt();
+        Ok(())
+    }
+
+    /// Grow `self` by one observation row *in place* — the amortized-O(n²)
+    /// absorption path of the incremental surrogate refit: the factor's
+    /// backing buffer is re-strided row by row ([`Mat::grow_square`], so a
+    /// warm absorb loop performs no per-call heap allocation between
+    /// capacity doublings) and the new row (l12, l22) is written last. On
+    /// failure `self` is untouched.
+    pub fn extend_in_place(
+        &mut self,
+        k12: &[f64],
+        k22: f64,
+        w: &mut Vec<f64>,
+    ) -> Result<()> {
+        let n = self.n();
+        assert_eq!(k12.len(), n);
+        self.solve_lower_into(k12, w);
+        let rem = Self::extend_pivot(k22, w)?;
+        self.l.grow_square();
+        let last = self.l.row_mut(n);
+        last[..n].copy_from_slice(w);
+        last[n] = rem.sqrt();
+        Ok(())
+    }
+
+    /// The clamping extend: a near-singular appended pivot is clamped to
+    /// l22 = 1e-6 instead of rejected. The fantasy conditioning path
+    /// ([`crate::models`]' `condition`, the per-candidate "simulate the
+    /// refit" step of DESIGN.md §8) relies on this never failing, mirroring
+    /// its v_eff variance clamp — the constants are load-bearing for the
+    /// batch/alpha parity suites, so absorption's strict [`Cholesky::extend`]
+    /// is a separate entry point.
+    pub fn extend_clamped(&self, k12: &[f64], k22: f64) -> Cholesky {
         let n = self.n();
         assert_eq!(k12.len(), n);
         let mut l12 = Vec::new();
@@ -319,7 +401,7 @@ impl Cholesky {
         let last = l.row_mut(n);
         last[..n].copy_from_slice(&l12);
         last[n] = l22;
-        Ok(Cholesky { l })
+        Cholesky { l }
     }
 }
 
@@ -394,6 +476,147 @@ mod tests {
                 Ok(())
             } else {
                 Err(format!("factor mismatch {err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn extend_matches_full_refactor_across_block_boundaries() {
+        // shapes straddle SOLVE_BLOCK (1 … ~2 blocks) and include the 1×1
+        // base factor; the absorption contract is the tight 1e-9 of the
+        // update/downdate suite, not extend's historic 1e-7
+        check("incremental extend, blocked shapes", 12, |rng| {
+            let n = 1 + rng.below(70);
+            let k_full = random_spd(rng, n + 1);
+            let k_sub = Mat::from_fn(n, n, |i, j| k_full[(i, j)]);
+            let c_sub = Cholesky::factor(&k_sub).map_err(|e| e.to_string())?;
+            let k12: Vec<f64> = (0..n).map(|i| k_full[(i, n)]).collect();
+            let ext = c_sub
+                .extend(&k12, k_full[(n, n)])
+                .map_err(|e| e.to_string())?;
+            let full = Cholesky::factor(&k_full).map_err(|e| e.to_string())?;
+            let err = ext.l().max_abs_diff(full.l());
+            if err < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("n={n}: factor mismatch {err}"))
+            }
+        });
+        // degenerate base: extending the 0×0 factor is the first-ever
+        // observation — the result is the scalar factor [√k22]
+        let empty = Cholesky::factor(&Mat::zeros(0, 0)).unwrap();
+        let one = empty.extend(&[], 4.0).unwrap();
+        assert_eq!(one.n(), 1);
+        assert_eq!(one.l()[(0, 0)].to_bits(), 2.0f64.to_bits());
+    }
+
+    #[test]
+    fn extend_into_and_in_place_bitwise_match_extend() {
+        // scratch reused dirty and wrongly sized across iterations — the
+        // absorption hot-loop usage pattern
+        let mut out = Cholesky::scratch();
+        let mut w = vec![9.0; 3];
+        check("extend_into / extend_in_place == extend", 24, |rng| {
+            let n = 1 + rng.below(40);
+            let k_full = random_spd(rng, n + 1);
+            let k_sub = Mat::from_fn(n, n, |i, j| k_full[(i, j)]);
+            let c_sub = Cholesky::factor(&k_sub).map_err(|e| e.to_string())?;
+            let k12: Vec<f64> = (0..n).map(|i| k_full[(i, n)]).collect();
+            let k22 = k_full[(n, n)];
+            let want = c_sub.extend(&k12, k22).map_err(|e| e.to_string())?;
+            c_sub
+                .extend_into(&k12, k22, &mut out, &mut w)
+                .map_err(|e| e.to_string())?;
+            if out.l().max_abs_diff(want.l()) != 0.0 {
+                return Err("extend_into diverged from extend".into());
+            }
+            let mut grown = c_sub.clone();
+            grown
+                .extend_in_place(&k12, k22, &mut w)
+                .map_err(|e| e.to_string())?;
+            if grown.l().max_abs_diff(want.l()) != 0.0 {
+                return Err("extend_in_place diverged from extend".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn extend_rejects_pd_breaking_row() {
+        // k12 = L v makes l12 = v exactly, so k22 ≤ ‖v‖² appends a
+        // non-positive pivot: the strict family must refuse and leave the
+        // in-place factor untouched, while the clamped legacy path keeps
+        // its never-fail contract
+        check("extend rejects rank-deficient rows", 24, |rng| {
+            let n = 2 + rng.below(10);
+            let k = random_spd(rng, n);
+            let c = Cholesky::factor(&k).map_err(|e| e.to_string())?;
+            let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let k12: Vec<f64> = (0..n)
+                .map(|i| {
+                    c.l().row(i)[..=i]
+                        .iter()
+                        .zip(&v)
+                        .map(|(a, b)| a * b)
+                        .sum()
+                })
+                .collect();
+            let k22 = 0.5 * v.iter().map(|x| x * x).sum::<f64>();
+            if c.extend(&k12, k22).is_ok() {
+                return Err("accepted a PD-breaking extension".into());
+            }
+            let mut grown = c.clone();
+            let mut w = Vec::new();
+            if grown.extend_in_place(&k12, k22, &mut w).is_ok() {
+                return Err("in-place accepted a PD-breaking extension".into());
+            }
+            if grown.l().max_abs_diff(c.l()) != 0.0 {
+                return Err("failed extend_in_place mutated the factor".into());
+            }
+            let clamped = c.extend_clamped(&k12, k22);
+            if clamped.l()[(n, n)].to_bits() != 1e-6f64.to_bits() {
+                return Err("clamped path lost its 1e-6 floor".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn extend_composes_with_update_downdate_roundtrip() {
+        // the grown factor is a first-class factor: rank-one
+        // update ∘ downdate on it round-trips to itself, and a downdate of
+        // it matches refactoring the extended-then-downdated matrix — the
+        // "extend ∘ downdate ≈ id" compositionality contract
+        check("extend ∘ (update ∘ downdate) == extend", 24, |rng| {
+            let n = 2 + rng.below(10);
+            let k_full = random_spd(rng, n + 1);
+            let k_sub = Mat::from_fn(n, n, |i, j| k_full[(i, j)]);
+            let c_sub = Cholesky::factor(&k_sub).map_err(|e| e.to_string())?;
+            let k12: Vec<f64> = (0..n).map(|i| k_full[(i, n)]).collect();
+            let ext = c_sub
+                .extend(&k12, k_full[(n, n)])
+                .map_err(|e| e.to_string())?;
+            let u: Vec<f64> = (0..=n).map(|_| rng.normal()).collect();
+            let round =
+                ext.update(&u).downdate(&u).map_err(|e| e.to_string())?;
+            let err = round.l().max_abs_diff(ext.l());
+            if err >= 1e-9 {
+                return Err(format!("round-trip drift {err}"));
+            }
+            let d = scaled_downdate_vec(&ext, rng, 0.6);
+            let down = ext.downdate(&d).map_err(|e| e.to_string())?;
+            let mut k2 = k_full.clone();
+            for i in 0..=n {
+                for j in 0..=n {
+                    k2[(i, j)] -= d[i] * d[j];
+                }
+            }
+            let full = Cholesky::factor(&k2).map_err(|e| e.to_string())?;
+            let err = down.l().max_abs_diff(full.l());
+            if err < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("extend∘downdate vs refactor drift {err}"))
             }
         });
     }

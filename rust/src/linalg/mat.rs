@@ -147,6 +147,39 @@ impl Mat {
         self.rows += 1;
     }
 
+    /// Reshape to `rows × cols`, zero-filled, reusing the allocation when
+    /// it is large enough (contents are NOT preserved) — the matrix-shaped
+    /// analogue of `Vec::clear` + `resize` that the `_into` scratch entry
+    /// points rely on to stay allocation-free when warm.
+    pub fn reshape_zeroed(&mut self, rows: usize, cols: usize) {
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+        self.rows = rows;
+        self.cols = cols;
+    }
+
+    /// Grow a square n×n matrix to (n+1)×(n+1) in place, preserving the
+    /// existing entries and zeroing the new border. The backing buffer is
+    /// re-strided back to front — row i's new slot only overlaps rows ≥ i,
+    /// which have already been relocated — so this is a single `resize`
+    /// plus O(n²) moves. `Vec`'s amortized-doubling growth makes a warm
+    /// grow loop allocation-free between capacity doublings, which is what
+    /// lets [`crate::linalg::Cholesky::extend_in_place`] absorb
+    /// observations at zero allocations per call.
+    pub fn grow_square(&mut self) {
+        assert_eq!(self.rows, self.cols, "grow_square needs a square matrix");
+        let n = self.rows;
+        self.data.resize((n + 1) * (n + 1), 0.0);
+        for i in (1..n).rev() {
+            self.data.copy_within(i * n..(i + 1) * n, i * (n + 1));
+        }
+        for i in 0..n {
+            self.data[i * (n + 1) + n] = 0.0;
+        }
+        self.rows = n + 1;
+        self.cols = n + 1;
+    }
+
     pub fn max_abs_diff(&self, other: &Mat) -> f64 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         self.data
@@ -261,6 +294,34 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn grow_square_preserves_entries_and_zeros_the_border() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(41);
+        for n in [0usize, 1, 2, 5, 33] {
+            let a = Mat::from_fn(n, n, |_, _| rng.normal());
+            let mut g = a.clone();
+            g.grow_square();
+            assert_eq!((g.rows, g.cols), (n + 1, n + 1));
+            for i in 0..n {
+                for j in 0..n {
+                    assert_eq!(g[(i, j)].to_bits(), a[(i, j)].to_bits());
+                }
+                assert_eq!(g[(i, n)], 0.0);
+                assert_eq!(g[(n, i)], 0.0);
+            }
+            assert_eq!(g[(n, n)], 0.0);
+        }
+    }
+
+    #[test]
+    fn reshape_zeroed_reuses_allocation() {
+        let mut m = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        m.reshape_zeroed(3, 1);
+        assert_eq!((m.rows, m.cols), (3, 1));
+        assert!(m.as_slice().iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -31,6 +31,7 @@ USAGE:
                      [--beta 0.1] [--filter cea|random|nofilter|direct|cmaes]
                      [--iters 44] [--seed 0] [--cost-cap <usd>] [--pareto]
                      [--live] [--workers 4] [--batch-size 1]
+                     [--refit every=K,evidence-drop=X]
                      [--launcher-noise 1.0] [--launcher-seed <seed>]
                      [--faults spot:0.3,straggle:2.0,flaky:0.1,timeout:600]
                      [--retry max=3,base=0,factor=2,cap=30,jitter=0.1,deadline=600]
@@ -77,6 +78,17 @@ USAGE:
   partial cost stays charged, a ProbeAbandoned event is logged, and the
   campaign re-plans around the hole instead of aborting.
 
+  --refit every=K,evidence-drop=X pays the full surrogate refit (GP
+  hyper-parameter re-optimization + tree structural rebuild) only every K
+  selection rounds; in between, fresh observations are absorbed
+  incrementally in amortized O(n²) with hyper-parameters and tree
+  structure frozen. evidence-drop=X additionally forces a full refit when
+  the fresh observations' mean predictive surprise exceeds the post-refit
+  baseline by X nats. The default every=1 is the paper's cadence
+  (bit-identical trajectories to prior releases);
+  TRIMTUNER_REFIT=full makes the cheap rounds recompute the same frozen
+  state from scratch — the parity-test reference.
+
   --pareto additionally reports the predicted (cost, accuracy) Pareto
   frontier under the final surrogates; in replay mode it is scored against
   the dataset's measured frontier (hypervolume ratio, 1.0 = recovered).
@@ -85,7 +97,8 @@ USAGE:
   TRIMTUNER_ALPHA=clone (per-candidate clone-conditioning escape hatch),
   TRIMTUNER_TREES=rebuild (per-candidate seeded tree rebuilds instead of
   incremental leaf-statistics conditioning),
-  TRIMTUNER_BATCH=fantasy|liar|topq (batched-slate strategy).
+  TRIMTUNER_BATCH=fantasy|liar|topq (batched-slate strategy),
+  TRIMTUNER_REFIT=full (from-scratch frozen refit on non-hyperopt rounds).
 ";
 
 fn main() -> Result<()> {
@@ -133,6 +146,9 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     let live = args.get_bool("live");
     cfg.pareto = args.get_bool("pareto");
     cfg.batch_size = args.get_usize("batch-size", cfg.batch_size).max(1);
+    if let Some(spec) = args.get("refit") {
+        cfg.refit = engine::RefitPolicy::parse(spec)?;
+    }
     let faults = match args.get("faults") {
         Some(spec) => FaultSpec::parse(spec)?,
         None => FaultSpec::default(),

@@ -24,10 +24,18 @@ pub struct Gp {
     xs: Vec<Feat>,
     /// standardized targets
     ys: Vec<f64>,
+    /// raw (unstandardized) targets — the absorption path re-standardizes
+    /// from these, so the standardization constants track the growing
+    /// history exactly as a fresh `fit` would compute them
+    ys_raw: Vec<f64>,
     y_mean: f64,
     y_std: f64,
     chol: Option<Cholesky>,
     alpha: Vec<f64>,
+    /// reused k(X, x_new) buffer for the zero-allocation absorb path
+    scr_k12: Vec<f64>,
+    /// reused triangular-solve buffer for the zero-allocation absorb path
+    scr_w: Vec<f64>,
     /// deterministic seed for hyper-parameter restarts
     seed: u64,
     /// total number of hyper-parameter posterior samples (>= 1). K > 1
@@ -46,10 +54,13 @@ impl Gp {
             params: KernelParams::default(),
             xs: Vec::new(),
             ys: Vec::new(),
+            ys_raw: Vec::new(),
             y_mean: 0.0,
             y_std: 1.0,
             chol: None,
             alpha: Vec::new(),
+            scr_k12: Vec::new(),
+            scr_w: Vec::new(),
             seed: 0x9a_5eed,
             n_hyper: 1,
             extra: Vec::new(),
@@ -573,11 +584,33 @@ impl FantasySurface for GpFantasy {
     }
 }
 
+/// Cold fallback for [`Gp::absorb`]: refactor one hyper component's
+/// covariance from scratch (with `factor`'s jitter retries). Kept out of
+/// the hot function so absorb's zero-allocation fast path stays clean for
+/// detlint's A-rules; false means even the jittered factorization failed.
+fn try_refactor_frozen(
+    basis: Basis,
+    params: &KernelParams,
+    xs: &[Feat],
+    chol: &mut Cholesky,
+) -> bool {
+    let k = params.cov_matrix(basis, xs);
+    match Cholesky::factor(&k) {
+        Ok(c) => {
+            *chol = c;
+            true
+        }
+        Err(_) => false,
+    }
+}
+
 impl Surrogate for Gp {
     fn fit(&mut self, xs: &[Feat], ys: &[f64], opts: FitOptions) {
         assert_eq!(xs.len(), ys.len());
         assert!(!xs.is_empty(), "cannot fit GP on empty data");
         self.xs = xs.to_vec();
+        self.ys_raw.clear();
+        self.ys_raw.extend_from_slice(ys);
         self.standardize(ys);
 
         if opts.hyperopt {
@@ -761,9 +794,12 @@ impl Surrogate for Gp {
         let chol = self.chol.as_ref().expect("condition before fit");
         let k12 = self.params.cov_vec(self.basis, &self.xs, x);
         let k22 = self.params.k_diag(self.basis, x) + self.params.noise;
-        let ext = chol.extend(&k12, k22).expect("cholesky extend");
+        // clamped: the fantasy path must never fail, mirroring the v_eff
+        // variance clamp (a fantasy y at a near-duplicate x is routine)
+        let ext = chol.extend_clamped(&k12, k22);
         let mut g = self.clone();
         g.xs.push(*x);
+        g.ys_raw.push(y);
         g.ys.push((y - self.y_mean) / self.y_std);
         g.alpha = ext.solve(&g.ys);
         g.chol = Some(ext);
@@ -772,12 +808,109 @@ impl Surrogate for Gp {
         for (params, chol_k, _) in &self.extra {
             let k12 = params.cov_vec(self.basis, &self.xs, x);
             let k22 = params.k_diag(self.basis, x) + params.noise;
-            if let Ok(ext_k) = chol_k.extend(&k12, k22) {
-                let alpha = ext_k.solve(&g.ys);
-                g.extra.push((*params, ext_k, alpha));
-            }
+            let ext_k = chol_k.extend_clamped(&k12, k22);
+            let alpha = ext_k.solve(&g.ys);
+            g.extra.push((*params, ext_k, alpha));
         }
         Box::new(g)
+    }
+
+    /// Fold one real observation into the fitted state in O(n²) per hyper
+    /// component: re-standardize the targets from the raw history (the
+    /// covariance is target-independent, so the factors are unaffected),
+    /// grow each stored factor by one row in place
+    /// ([`Cholesky::extend_in_place`]) and re-solve each alpha against the
+    /// grown factor — the same `solve_lower` / `solve_lower_t` composition
+    /// `solve` uses, so the result is bitwise what a frozen refactor's
+    /// solve would produce on the same factor. A component whose extension
+    /// loses positive definiteness falls back to a from-scratch
+    /// refactorization (with `factor`'s jitter retries); hyper-parameters
+    /// never move here — that is `fit(hyperopt: true)`'s job on the
+    /// engine's refit schedule.
+    // detlint: hot
+    fn absorb(&mut self, x: &Feat, y: f64) {
+        assert!(self.chol.is_some(), "absorb before fit");
+        self.xs.push(*x);
+        self.ys_raw.push(y);
+        // re-standardize against the raw history, exactly like `fit`
+        let (m, s) = crate::util::stats::mean_std_pop(&self.ys_raw);
+        self.y_mean = m;
+        self.y_std = if s > 1e-9 { s } else { 1.0 };
+        let y_std = self.y_std;
+        self.ys.clear();
+        for i in 0..self.ys_raw.len() {
+            self.ys.push((self.ys_raw[i] - m) / y_std);
+        }
+        let n_prev = self.xs.len() - 1;
+        let Gp {
+            basis,
+            params,
+            xs,
+            ys,
+            chol,
+            alpha,
+            scr_k12,
+            scr_w,
+            extra,
+            ..
+        } = self;
+        let basis = *basis;
+        let chol = chol.as_mut().expect("absorb before fit");
+        scr_k12.clear();
+        for xi in &xs[..n_prev] {
+            scr_k12.push(params.k(basis, xi, x));
+        }
+        let k22 = params.k_diag(basis, x) + params.noise;
+        if chol.extend_in_place(scr_k12, k22, scr_w).is_err() {
+            assert!(
+                try_refactor_frozen(basis, params, xs, chol),
+                "cov not PD after jitter"
+            );
+        }
+        chol.solve_lower_into(ys, scr_w);
+        chol.solve_lower_t_into(scr_w, alpha);
+        extra.retain_mut(|(p, c, a)| {
+            scr_k12.clear();
+            for xi in &xs[..n_prev] {
+                scr_k12.push(p.k(basis, xi, x));
+            }
+            let k22 = p.k_diag(basis, x) + p.noise;
+            if c.extend_in_place(scr_k12, k22, scr_w).is_err()
+                && !try_refactor_frozen(basis, p, xs, c)
+            {
+                // mirror `fit`: a component whose covariance cannot be
+                // factored even with jitter is dropped from the mixture
+                return false;
+            }
+            c.solve_lower_into(ys, scr_w);
+            c.solve_lower_t_into(scr_w, a);
+            true
+        });
+    }
+
+    /// The from-scratch twin of [`Gp::absorb`] (`TRIMTUNER_REFIT=full`):
+    /// recompute the standardization, every stored factor and every alpha
+    /// from the raw history with hyper-parameters frozen — exactly the
+    /// state the incremental path maintains, derived without any
+    /// incremental arithmetic. `tests/refit_parity.rs` pins the two
+    /// together at ≤1e-9.
+    fn refit_frozen(&mut self) {
+        let ys_raw = std::mem::take(&mut self.ys_raw);
+        self.standardize(&ys_raw);
+        self.ys_raw = ys_raw;
+        self.refresh_factor();
+        if !self.extra.is_empty() {
+            let comps: Vec<KernelParams> =
+                self.extra.iter().map(|(p, _, _)| *p).collect();
+            self.extra.clear();
+            for params in comps {
+                let k = params.cov_matrix(self.basis, &self.xs);
+                if let Ok(chol) = Cholesky::factor(&k) {
+                    let alpha = chol.solve(&self.ys);
+                    self.extra.push((params, chol, alpha));
+                }
+            }
+        }
     }
 
     fn n_obs(&self) -> usize {

@@ -464,6 +464,26 @@ pub trait Surrogate: Send + Sync {
         })
     }
 
+    /// Fold one *real* observation into the fitted state incrementally,
+    /// hyper-parameters (GP) / ensemble structure (trees) frozen: the
+    /// amortized-O(n²) absorption path the engine's refit policy uses on
+    /// rounds that skip the full refit. Unlike [`Surrogate::condition`]
+    /// this mutates the surrogate itself and the observation is permanent.
+    /// Parity with [`Surrogate::refit_frozen`] is pinned by
+    /// `tests/refit_parity.rs`.
+    fn absorb(&mut self, _x: &Feat, _y: f64) {
+        unimplemented!("this surrogate does not support incremental absorb")
+    }
+
+    /// Recompute, from scratch, exactly the state [`Surrogate::absorb`]
+    /// maintains (GP: re-standardize the raw targets and refactor every
+    /// hyper component with frozen parameters; trees: rebuild the
+    /// structure anchored at the last structural fit and replay the
+    /// absorbed tail) — the `TRIMTUNER_REFIT=full` reference twin.
+    fn refit_frozen(&mut self) {
+        unimplemented!("this surrogate does not support refit_frozen")
+    }
+
     /// Number of observations currently fitted.
     fn n_obs(&self) -> usize;
 

@@ -260,6 +260,22 @@ impl Tree {
         let (sum, cnt) = self.stats[leaf as usize];
         (sum + mult as f64 * y) / (cnt + mult) as f64
     }
+
+    /// Fold one *real* observation into the leaf `x` routes to
+    /// (multiplicity 1, no fresh bootstrap — the structure is reused): the
+    /// absorption counterpart of [`Tree::conditioned_leaf_value`], updating
+    /// both the leaf mean and its (Σy, count) statistic in place. The fold
+    /// arithmetic is the single code path both refit modes replay, which is
+    /// what makes incremental absorption and the `TRIMTUNER_REFIT=full`
+    /// rebuild-and-replay reference bit-identical by construction.
+    // detlint: hot
+    fn fold(&mut self, x: &Feat, y: f64) {
+        let leaf = self.leaf_of(x) as usize;
+        let (sum, cnt) = self.stats[leaf];
+        let (sum, cnt) = (sum + y, cnt + 1);
+        self.stats[leaf] = (sum, cnt);
+        self.nodes[leaf].1 = sum / cnt as f64;
+    }
 }
 
 #[derive(Clone)]
@@ -269,6 +285,10 @@ pub struct ExtraTrees {
     xs: Vec<Feat>,
     ys: Vec<f64>,
     seed: u64,
+    /// observations the current *structure* was built over: xs[..base_n]
+    /// seeded the bootstrap of the last structural rebuild; xs[base_n..]
+    /// were folded in leaf-incrementally since ([`ExtraTrees::absorb`]).
+    base_n: usize,
 }
 
 impl ExtraTrees {
@@ -279,6 +299,7 @@ impl ExtraTrees {
             xs: Vec::new(),
             ys: Vec::new(),
             seed: 0xd7_5eed,
+            base_n: 0,
         }
     }
 
@@ -287,20 +308,44 @@ impl ExtraTrees {
     }
 
     fn rebuild(&mut self) {
-        let n = self.xs.len();
+        self.rebuild_base(self.xs.len());
+    }
+
+    /// Rebuild the ensemble structure over the first `base` observations
+    /// (seed keyed on `base` — exactly the historic full-rebuild stream,
+    /// so campaigns that never absorb are bit-identical to before), then
+    /// replay xs[base..] as leaf-incremental folds in absorption order.
+    /// This is the deterministic state function both refit modes share:
+    /// the incremental path maintains it observation by observation,
+    /// [`ExtraTrees::refit_frozen`] recomputes it from scratch.
+    fn rebuild_base(&mut self, base: usize) {
         // Seed depends on data size only -> deterministic runs, fresh trees
-        // after every observation.
-        let mut rng = Rng::new(self.seed ^ ((n as u64) << 20));
+        // after every structural rebuild.
+        let mut rng = Rng::new(self.seed ^ ((base as u64) << 20));
         self.trees = (0..self.opts.n_trees)
             .map(|_| {
                 let mut idx: Vec<usize> = if self.opts.bootstrap {
-                    (0..n).map(|_| rng.below(n)).collect()
+                    (0..base).map(|_| rng.below(base)).collect()
                 } else {
-                    (0..n).collect()
+                    (0..base).collect()
                 };
-                Tree::build(&self.xs, &self.ys, &mut idx, &self.opts, &mut rng)
+                Tree::build(
+                    &self.xs[..base],
+                    &self.ys[..base],
+                    &mut idx,
+                    &self.opts,
+                    &mut rng,
+                )
             })
             .collect();
+        self.base_n = base;
+        for i in base..self.xs.len() {
+            let x = self.xs[i];
+            let y = self.ys[i];
+            for t in &mut self.trees {
+                t.fold(&x, y);
+            }
+        }
     }
 
     /// Candidate-independent template for conditioning the ensemble on one
@@ -364,7 +409,16 @@ impl ExtraTrees {
         let mut ys = Vec::with_capacity(self.ys.len() + 1);
         ys.extend_from_slice(&self.ys);
         ys.push(y);
-        ExtraTrees { opts: self.opts, trees, xs, ys, seed: self.seed }
+        ExtraTrees {
+            opts: self.opts,
+            trees,
+            xs,
+            ys,
+            seed: self.seed,
+            // the conditioned structure was derived from the n existing
+            // observations; the fantasy clone never absorbs or refits
+            base_n: self.xs.len(),
+        }
     }
 
     /// [`Surrogate::fantasy_surface`] with the conditioning strategy
@@ -610,6 +664,31 @@ impl Surrogate for ExtraTrees {
 
     fn condition(&self, x: &Feat, y: f64) -> Box<dyn Surrogate> {
         Box::new(self.conditioned(x, y))
+    }
+
+    /// Leaf-incremental absorption: push the observation and fold it into
+    /// the one leaf per tree it routes to — O(trees · depth) per
+    /// observation, structure untouched (no bootstrap draw for the new
+    /// row: a staleness-bounded approximation, since the engine's refit
+    /// policy rebuilds the structure through `fit` every k rounds). No
+    /// allocation beyond the amortized xs/ys pushes.
+    // detlint: hot
+    fn absorb(&mut self, x: &Feat, y: f64) {
+        debug_assert!(!self.trees.is_empty(), "absorb before fit");
+        self.xs.push(*x);
+        self.ys.push(y);
+        for t in &mut self.trees {
+            t.fold(x, y);
+        }
+    }
+
+    /// The from-scratch twin of [`ExtraTrees::absorb`]
+    /// (`TRIMTUNER_REFIT=full`): rebuild the structure anchored at the
+    /// last structural fit and replay the absorbed tail in order. Shares
+    /// the fold arithmetic with the incremental path, so the two are
+    /// bit-identical — `tests/refit_parity.rs` pins that.
+    fn refit_frozen(&mut self) {
+        self.rebuild_base(self.base_n);
     }
 
     fn n_obs(&self) -> usize {

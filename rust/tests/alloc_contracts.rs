@@ -189,7 +189,64 @@ fn into_kernels_are_allocation_free_when_warm() {
         0,
         "downdate"
     );
-    black_box((&x, &xt, &xm, &prod, &down));
+
+    // append-row extension: k22 dominates the appended row, so the pivot
+    // stays safely positive and the warm call takes the success path
+    let k12: Vec<f64> = (0..n).map(|_| 0.1 * rng.f64()).collect();
+    let mut ext = Cholesky::scratch();
+    let mut ew = Vec::new();
+    c.extend_into(&k12, 100.0, &mut ext, &mut ew).expect("extend");
+    assert_eq!(
+        allocs(|| {
+            c.extend_into(&k12, 100.0, &mut ext, &mut ew).expect("extend");
+        }),
+        0,
+        "extend"
+    );
+    black_box((&x, &xt, &xm, &prod, &down, &ext));
+}
+
+/// ISSUE acceptance: per-observation GP absorption is allocation-free once
+/// the factor, history and scratch vectors have steady-state capacity —
+/// the Vec growth that remains is amortized doubling, so a warm window
+/// between capacity boundaries measures exactly zero.
+#[test]
+fn gp_absorption_is_allocation_free_when_warm() {
+    let mut rng = Rng::new(41);
+    let (xs, ys) = toy(45, &mut rng);
+    let mut gp = Gp::with_hyper_samples(Basis::Acc, 5, 3);
+    gp.fit(&xs[..32], &ys[..32], FitOptions { hyperopt: true, restarts: 1 });
+    // warm: cross the 32 -> 64 capacity doublings of the history vectors
+    // and the factor's (n+1)^2 resize headroom
+    for i in 32..40 {
+        gp.absorb(&xs[i], ys[i]);
+    }
+    // 45^2 stays under the factor capacity doubled at the first warm
+    // absorb (2 * 32^2), so no measured absorb crosses a boundary
+    for i in 40..45 {
+        let n = allocs(|| gp.absorb(&xs[i], ys[i]));
+        assert_eq!(n, 0, "gp absorb allocated {n}x at observation {i}");
+    }
+    black_box(gp.n_obs());
+}
+
+/// ISSUE acceptance: per-observation tree absorption (leaf fold into every
+/// tree) is allocation-free once the observation history has steady-state
+/// capacity.
+#[test]
+fn trees_absorption_is_allocation_free_when_warm() {
+    let mut rng = Rng::new(43);
+    let (xs, ys) = toy(45, &mut rng);
+    let mut et = ExtraTrees::new(TreesOptions::default());
+    et.fit(&xs[..32], &ys[..32], FitOptions::default());
+    for i in 32..40 {
+        et.absorb(&xs[i], ys[i]);
+    }
+    for i in 40..45 {
+        let n = allocs(|| et.absorb(&xs[i], ys[i]));
+        assert_eq!(n, 0, "trees absorb allocated {n}x at observation {i}");
+    }
+    black_box(et.n_obs());
 }
 
 /// Per-slate `prime` is the amortized allocation budget: it must allocate

@@ -1,6 +1,8 @@
-//! The acquisition escape hatches, exercised through the real process
-//! environment: `TRIMTUNER_ALPHA=clone` (per-candidate clone-conditioning)
-//! and `TRIMTUNER_TREES=rebuild` (per-candidate seeded tree rebuilds).
+//! The acquisition and refit escape hatches, exercised through the real
+//! process environment: `TRIMTUNER_ALPHA=clone` (per-candidate
+//! clone-conditioning), `TRIMTUNER_TREES=rebuild` (per-candidate seeded
+//! tree rebuilds) and `TRIMTUNER_REFIT=full` (from-scratch recomputation
+//! of the incrementally maintained surrogate state every round).
 //!
 //! Environment mutation is process-global, so everything lives in ONE test
 //! function of its own integration binary — the parallel test threads of
@@ -10,6 +12,7 @@ use trimtuner::acq::{
     trimtuner_alpha, AlphaMode, AlphaSlate, EntropyEstimator, Models,
     TrimTunerAcq,
 };
+use trimtuner::engine::{RefitMode, RefitPolicy};
 use trimtuner::models::{
     ExtraTrees, FantasySurface, Feat, FitOptions, ModelKind, Surrogate,
     TreesMode, TreesOptions,
@@ -37,11 +40,32 @@ fn observations(n: usize, seed: u64) -> (Vec<Feat>, Vec<f64>) {
 
 #[test]
 fn env_hatches_select_the_reference_paths() {
-    // default environment: both hatches off
+    // default environment: all hatches off
     std::env::remove_var("TRIMTUNER_ALPHA");
     std::env::remove_var("TRIMTUNER_TREES");
+    std::env::remove_var("TRIMTUNER_REFIT");
     assert_eq!(AlphaMode::from_env(), AlphaMode::Fantasy);
     assert_eq!(TreesMode::from_env(), TreesMode::Incremental);
+    assert_eq!(RefitMode::from_env(), RefitMode::Incremental);
+
+    // --- TRIMTUNER_REFIT=full: from-scratch refit reference ------------
+    // (the mode is pure plumbing — `EngineConfig::refit.mode` carries it
+    // into the engine, and `tests/refit_parity.rs` pins the two paths
+    // against each other — so the env side only needs the mapping)
+    std::env::set_var("TRIMTUNER_REFIT", "full");
+    assert_eq!(RefitMode::from_env(), RefitMode::Full);
+    std::env::set_var("TRIMTUNER_REFIT", "FULL");
+    assert_eq!(RefitMode::from_env(), RefitMode::Full);
+    std::env::set_var("TRIMTUNER_REFIT", "incremental");
+    assert_eq!(RefitMode::from_env(), RefitMode::Incremental);
+    std::env::set_var("TRIMTUNER_REFIT", "full");
+    assert_eq!(
+        RefitPolicy::paper_default().mode,
+        RefitMode::Full,
+        "paper_default must pick the ambient refit mode up"
+    );
+    std::env::remove_var("TRIMTUNER_REFIT");
+    assert_eq!(RefitPolicy::paper_default().mode, RefitMode::Incremental);
 
     // --- TRIMTUNER_TREES=rebuild: the per-candidate seeded rebuild -----
     let (xs, ys) = observations(22, 7);

@@ -39,7 +39,11 @@ pub const DEFAULT_HOT: &[&str] = &[
     "Cholesky::solve_lower_multi_into",
     "Cholesky::update_into",
     "Cholesky::downdate_into",
+    "Cholesky::extend_into",
+    "Cholesky::extend_in_place",
     "Mat::matmul_into",
+    "Gp::absorb",
+    "ExtraTrees::absorb",
     "AlphaSlate::eval_primed",
     "EntropyEstimator::info_gain_from_with",
     "EntropyEstimator::p_opt_into",
