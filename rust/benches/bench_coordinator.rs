@@ -98,6 +98,7 @@ fn main() {
     // ISSUE's batched-probe work targets; `cum$`/regret stays comparable
     // because the probe budget (max_iters) is fixed across cells.
     const BATCH_ITERS: usize = 8;
+    let mut barrier_q4_w4_best = f64::NAN;
     for q in [1usize, 2, 4] {
         for workers in [1usize, 4] {
             let stats = bench(
@@ -139,9 +140,73 @@ fn main() {
                 },
             );
             println!("{}", stats.report());
+            if q == 4 && workers == 4 {
+                barrier_q4_w4_best = stats.min_s;
+            }
             all.push(stats);
         }
     }
+
+    // Asynchronous (non-barrier) sweep: the same 8-observation budget with
+    // continuous re-selection — the engine refills the pool the moment a
+    // slot frees instead of waiting out the whole q-slate, so one straggler
+    // no longer idles the other workers at a round boundary. workers=1 is
+    // the sequential-parity cell (bit-identical trajectory to q=1); the
+    // async-vs-barrier headline is workers=4 against the barriered q=4
+    // workers=4 cell above, gated under BENCH_COORDINATOR_SMOKE=1.
+    let mut async_w4_best = f64::NAN;
+    for workers in [1usize, 4, 8] {
+        let stats = bench(
+            &format!(
+                "live trimtuner-dt {BATCH_ITERS}-obs async workers={workers}"
+            ),
+            0,
+            3,
+            || {
+                let mut cfg = EngineConfig::paper_default(
+                    OptimizerKind::TrimTuner(ModelKind::Trees),
+                    5,
+                );
+                cfg.max_iters = BATCH_ITERS;
+                cfg.async_mode = true;
+                cfg.batch_mode = BatchMode::Fantasy;
+                let launcher =
+                    SimLauncher::with_options(NetKind::Rnn, 5, 1.0, LATENCY);
+                let mut backend = EvalBackend::Live(LiveEval::new(
+                    Box::new(launcher),
+                    workers,
+                ));
+                let caps =
+                    [Constraint::cost_max(NetKind::Rnn.paper_cost_cap())];
+                let run = engine::run_backend(&mut backend, &caps, &cfg)
+                    .expect("async live run failed");
+                (run.records.len(), run.n_rounds(), run.total_cost())
+            },
+        );
+        println!("{}", stats.report());
+        if workers == 4 {
+            async_w4_best = stats.min_s;
+        }
+        all.push(stats);
+    }
+
+    // Synthetic ratio row (bench_models idiom): barriered-q4 / async wall
+    // at 4 workers, best-of-run in min_s so shared-runner jitter cannot
+    // flip a correct build. > 1 means the non-barrier scheduler wins.
+    let speedup = barrier_q4_w4_best / async_w4_best;
+    let ratio_row = trimtuner::util::timer::BenchStats {
+        name: format!(
+            "async-vs-barrier q=4 workers=4 speedup ({BATCH_ITERS} obs)"
+        ),
+        iters: 3,
+        mean_s: speedup,
+        p50_s: speedup,
+        p99_s: speedup,
+        min_s: speedup,
+        max_s: speedup,
+    };
+    println!("{}", ratio_row.report());
+    all.push(ratio_row);
 
     // Faulty cells: the same batched run under a spot + straggler + flaky
     // cocktail with a 2-retry budget. Measures the coordinator's retry /
@@ -201,4 +266,16 @@ fn main() {
     let path = std::env::var("BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_coordinator.json".to_string());
     common::write_bench_json("coordinator", &path, &all);
+
+    // CI smoke gate: the async scheduler must beat the barriered q=4 run
+    // on wall-clock at the same worker count — removing the round barrier
+    // is the whole point, so parity or worse is a regression.
+    if std::env::var("BENCH_COORDINATOR_SMOKE").is_ok() && !(speedup > 1.0) {
+        eprintln!(
+            "COORDINATOR PERF GATE FAILED: async workers=4 ({async_w4_best:.4}s) \
+             not faster than barriered q=4 workers=4 ({barrier_q4_w4_best:.4}s), \
+             speedup {speedup:.3}x"
+        );
+        std::process::exit(1);
+    }
 }

@@ -19,6 +19,8 @@
 //! | `--live` | off | deploy probes through the worker-pool coordinator instead of trace replay |
 //! | `--workers 4` | 4 | worker threads of the live coordinator pool |
 //! | `--batch-size 1` | 1 | probes launched concurrently per selection round (q); 1 = the paper's sequential loop |
+//! | `--async` | off | non-barrier scheduler: re-select the moment a pool slot frees, conditioning on all in-flight probes; absorbs completions in logical order so traces are bit-identical at any worker count |
+//! | `--max-inflight N` | pool width | pin the async in-flight target (decouples the logical trajectory from the physical worker count) |
 //! | `--refit <spec>` | `every=1` | full-refit policy: `every=K,evidence-drop=X` — full surrogate refit (hyperopt + tree rebuild) every K rounds, incremental O(n²) absorption in between; X nats of predictive surprise over the baseline force an early full refit |
 //! | `--launcher-noise 1.0` | 1.0 | observation-noise scale of the simulated launcher (0 = ground truth) |
 //! | `--launcher-seed <seed>` | derived | seed of the launcher's per-job noise stream |

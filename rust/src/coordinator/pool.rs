@@ -14,7 +14,7 @@
 //! detlint rule R5 flags any regression to the bad ordering.
 
 use super::launcher::{Job, JobLauncher, JobResult};
-use super::sync::{bounded, Receiver, Sender};
+use super::sync::{bounded, Receiver, Sender, TryRecvError};
 use anyhow::{anyhow, Result};
 use std::sync::{Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
@@ -152,6 +152,30 @@ impl WorkerPool {
             .map_err(|e| JobError::pool_level(anyhow!("pool hung up: {e}")))?
     }
 
+    /// Non-blocking variant of [`WorkerPool::recv`]: `None` when no
+    /// completed job is ready *right now* (the caller keeps doing useful
+    /// work and polls again), `Some` carrying the completion — or a
+    /// pool-level [`JobError`] when the pool is shut down or its workers
+    /// hung up. The asynchronous engine drains opportunistically through
+    /// this between selections so the pool never idles behind a barrier.
+    pub fn try_recv(&self) -> Option<Result<JobResult, JobError>> {
+        let rx = match self.result_rx.as_ref() {
+            Some(rx) => rx,
+            None => {
+                return Some(Err(JobError::pool_level(anyhow!(
+                    "pool already shut down"
+                ))))
+            }
+        };
+        match rx.try_recv() {
+            Ok(result) => Some(result),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                Some(Err(JobError::pool_level(anyhow!("pool hung up"))))
+            }
+        }
+    }
+
     /// Close the queues and join all workers. Un-received results are
     /// discarded; workers blocked sending one exit instead of deadlocking.
     pub fn shutdown(mut self) {
@@ -261,6 +285,38 @@ mod tests {
             }
         }
         assert_eq!((ok, err), (5, 1));
+        pool.shutdown();
+    }
+
+    /// `try_recv` never blocks: it reports nothing-ready on an idle pool,
+    /// hands back a completion once one lands, and drains in the same
+    /// completion order `recv` would.
+    #[test]
+    fn try_recv_is_non_blocking_and_drains_completions() {
+        let pool = WorkerPool::new(Box::new(TestLauncher::new(vec![])), 2);
+        assert!(pool.try_recv().is_none(), "idle pool must report empty");
+        for i in 0..4 {
+            pool.submit(job(i)).unwrap();
+        }
+        let mut got = 0;
+        let deadline = std::time::Instant::now()
+            + std::time::Duration::from_secs(10);
+        while got < 4 {
+            match pool.try_recv() {
+                Some(r) => {
+                    r.expect("injected no failures");
+                    got += 1;
+                }
+                None => {
+                    assert!(
+                        std::time::Instant::now() < deadline,
+                        "completions never arrived through try_recv"
+                    );
+                    std::thread::yield_now();
+                }
+            }
+        }
+        assert!(pool.try_recv().is_none(), "drained pool must report empty");
         pool.shutdown();
     }
 

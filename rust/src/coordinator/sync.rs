@@ -17,14 +17,14 @@
 #![allow(unexpected_cfgs)]
 
 #[cfg(loom)]
-pub(crate) use queue::{bounded, Receiver, Sender};
+pub(crate) use queue::{bounded, Receiver, Sender, TryRecvError};
 #[cfg(not(loom))]
-pub(crate) use std_mpsc::{bounded, Receiver, Sender};
+pub(crate) use std_mpsc::{bounded, Receiver, Sender, TryRecvError};
 
 /// Thin aliases over `std::sync::mpsc` — the production channel.
 #[cfg(not(loom))]
 mod std_mpsc {
-    pub use std::sync::mpsc::{Receiver, SyncSender as Sender};
+    pub use std::sync::mpsc::{Receiver, SyncSender as Sender, TryRecvError};
 
     /// Bounded MPSC channel (`std::sync::mpsc::sync_channel`).
     pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
@@ -60,6 +60,19 @@ pub(crate) mod queue {
     /// Every sender disconnected and the buffer is drained.
     #[derive(Debug, PartialEq, Eq)]
     pub struct RecvError;
+
+    /// Non-blocking recv outcome; mirrors `std::sync::mpsc::TryRecvError`
+    /// variant-for-variant so callers match the same names against either
+    /// channel implementation.
+    #[derive(Debug, PartialEq, Eq)]
+    pub enum TryRecvError {
+        /// Nothing buffered right now, but senders remain — a value may
+        /// still arrive.
+        Empty,
+        /// Every sender disconnected and the buffer is drained; no value
+        /// will ever arrive.
+        Disconnected,
+    }
 
     impl std::fmt::Display for RecvError {
         fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -195,6 +208,29 @@ pub(crate) mod queue {
                     .unwrap_or_else(PoisonError::into_inner);
             }
         }
+
+        /// Non-blocking [`Receiver::recv`]: pops a buffered value if one is
+        /// ready, otherwise reports [`TryRecvError::Empty`] while senders
+        /// remain and [`TryRecvError::Disconnected`] once every sender is
+        /// gone and the buffer is drained — the same tri-state contract as
+        /// `std::sync::mpsc::Receiver::try_recv`, which the engine's
+        /// asynchronous result-drain path polls between selections.
+        pub fn try_recv(&self) -> Result<T, TryRecvError> {
+            let mut st = self
+                .shared
+                .state
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            if let Some(v) = st.buf.pop_front() {
+                // a slot freed: wake senders blocked on the bound
+                self.shared.cond.notify_all();
+                return Ok(v);
+            }
+            if st.senders == 0 {
+                return Err(TryRecvError::Disconnected);
+            }
+            Err(TryRecvError::Empty)
+        }
     }
 
     impl<T> Drop for Receiver<T> {
@@ -216,7 +252,7 @@ pub(crate) mod queue {
 
 #[cfg(all(test, not(loom)))]
 mod tests {
-    use super::queue::{bounded, RecvError};
+    use super::queue::{bounded, RecvError, TryRecvError};
     use std::time::Duration;
 
     #[test]
@@ -292,6 +328,44 @@ mod tests {
         assert_eq!(rx.recv().unwrap(), 1);
         assert_eq!(rx.recv().unwrap(), 2);
         assert!(rx.recv().is_err(), "disconnect after drain");
+    }
+
+    /// The tri-state `try_recv` contract the async engine's result drain
+    /// polls: `Empty` while senders remain and nothing is buffered, a
+    /// value when one is ready (and a blocked sender wakes — the bound
+    /// frees), `Disconnected` only after every sender dropped *and* the
+    /// buffer drained.
+    #[test]
+    fn try_recv_tri_state_on_queue_path() {
+        let (tx, rx) = bounded::<u32>(1);
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Empty));
+        tx.send(1).unwrap();
+        // a second send blocks on the full bound; try_recv must free it
+        let h = std::thread::spawn(move || {
+            tx.send(2).unwrap();
+        });
+        assert_eq!(rx.try_recv(), Ok(1));
+        h.join().unwrap();
+        assert_eq!(rx.try_recv(), Ok(2)); // drains even after sender drop
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Disconnected));
+    }
+
+    /// Same tri-state over the production `std::sync::mpsc` path, so the
+    /// two channel implementations cannot drift apart on the non-blocking
+    /// surface the way they are pinned together on the blocking one.
+    #[test]
+    fn try_recv_tri_state_on_std_path() {
+        let (tx, rx) = super::bounded::<u32>(4);
+        assert!(matches!(rx.try_recv(), Err(super::TryRecvError::Empty)));
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert_eq!(rx.try_recv().unwrap(), 1);
+        drop(tx);
+        assert_eq!(rx.try_recv().unwrap(), 2);
+        assert!(matches!(
+            rx.try_recv(),
+            Err(super::TryRecvError::Disconnected)
+        ));
     }
 
     /// Send-after-receiver-drop parity: both implementations fail the

@@ -212,15 +212,47 @@ struct SlotOutcome {
     attempts: usize,
 }
 
+/// Retry book of one in-flight asynchronous probe: what to resubmit on
+/// failure and the fault accounting accumulated so far. The async
+/// counterpart of one `run_jobs` slot.
+struct TicketState {
+    config: Config,
+    s_idx: usize,
+    failures: usize,
+    fault_cost: f64,
+    fault_time: f64,
+}
+
+/// Handle to an asynchronously submitted probe ([`EvalBackend::submit_probe`]).
+/// Replay resolves at submission (the lookup is instant and deterministic);
+/// a live deployment hands back the primary job id as its logical-clock
+/// ticket, redeemed later — in submission order — by
+/// [`EvalBackend::await_probe`].
+#[derive(Debug)]
+pub enum ProbeTicket {
+    /// Resolved at submission (replay backend).
+    Ready(ProbeResult),
+    /// Primary job id of an in-flight live deployment.
+    Pending(u64),
+}
+
 /// Live evaluation state: the worker pool, job-id bookkeeping, the retry
 /// policy, fault counters, and the observability log.
 pub struct LiveEval<'a> {
     pool: WorkerPool,
+    /// worker-thread count of the pool — the occupancy target the async
+    /// engine saturates when no explicit `--max-inflight` pins it
+    workers: usize,
     next_job: u64,
     pub log: EventLog,
     retry: RetryPolicy,
     retry_rng: Rng,
     faults: FaultStats,
+    /// in-flight asynchronous tickets (primary job id → retry book)
+    pending_tickets: BTreeMap<u64, TicketState>,
+    /// completed-but-unredeemed asynchronous tickets: the reorder buffer
+    /// that turns completion order back into submission (logical) order
+    ready_tickets: BTreeMap<u64, (usize, SlotOutcome)>,
     /// Optional ground-truth oracle for *evaluation-only* record fields
     /// (`inc_acc`, `accuracy_c`, `optimum_acc`). A real deployment has
     /// none; without it those fields are NaN and the optimizer still runs.
@@ -231,11 +263,14 @@ impl<'a> LiveEval<'a> {
     pub fn new(launcher: Box<dyn JobLauncher>, workers: usize) -> LiveEval<'a> {
         LiveEval {
             pool: WorkerPool::new(launcher, workers),
+            workers,
             next_job: 0,
             log: EventLog::new(),
             retry: RetryPolicy::default(),
             retry_rng: Rng::new(RETRY_RNG_SEED),
             faults: FaultStats::default(),
+            pending_tickets: BTreeMap::new(),
+            ready_tickets: BTreeMap::new(),
             eval: None,
         }
     }
@@ -403,6 +438,214 @@ impl<'a> LiveEval<'a> {
             }
         }
         Ok(outcomes)
+    }
+
+    /// Submit one probe asynchronously; returns the primary job id as the
+    /// ticket. The caller redeems tickets in submission order through
+    /// [`LiveEval::await_ticket`] — the logical clock that keeps async
+    /// trajectories independent of physical completion order.
+    ///
+    /// Invariant: async tickets and the barriered [`LiveEval::run_jobs`]
+    /// drain never overlap — the engine runs one mode per campaign phase,
+    /// so neither path can steal the other's completions off the shared
+    /// result channel.
+    fn submit_ticket(&mut self, p: Point) -> Result<u64> {
+        let id = self.submit(p.config, vec![p.s_idx])?;
+        self.pending_tickets.insert(
+            id,
+            TicketState {
+                config: p.config,
+                s_idx: p.s_idx,
+                failures: 0,
+                fault_cost: 0.0,
+                fault_time: 0.0,
+            },
+        );
+        Ok(id)
+    }
+
+    /// Block until `ticket` resolves and return its probe result, buffering
+    /// any other tickets' completions in the reorder buffer on the way.
+    /// Fault counters fold in redemption (= submission) order here, never
+    /// in completion order, so the floating-point waste totals cannot
+    /// depend on worker count.
+    fn await_ticket(&mut self, ticket: u64) -> Result<ProbeResult> {
+        // Opportunistic non-blocking drain first: completions that landed
+        // while the engine was selecting move to the reorder buffer
+        // without ever blocking on the pool.
+        while let Some(msg) = self.pool.try_recv() {
+            self.settle_async(msg)?;
+        }
+        while !self.ready_tickets.contains_key(&ticket) {
+            ensure!(
+                self.pending_tickets.contains_key(&ticket),
+                "await on unknown async ticket {ticket}"
+            );
+            let msg = self.pool.recv();
+            self.settle_async(msg)?;
+        }
+        let (s_idx, slot) =
+            self.ready_tickets.remove(&ticket).expect("resolved above");
+        let failures = if slot.result.is_some() {
+            slot.attempts - 1
+        } else {
+            slot.attempts
+        };
+        self.faults.n_failures += failures;
+        self.faults.wasted_cost += slot.fault_cost;
+        self.faults.wasted_time += slot.fault_time;
+        match slot.result {
+            Some(r) => {
+                let o = r
+                    .outcomes
+                    .iter()
+                    .find(|(lvl, _)| *lvl == s_idx)
+                    .map(|(_, o)| *o)
+                    .ok_or_else(|| {
+                        anyhow!("launcher returned no snapshot at level {s_idx}")
+                    })?;
+                Ok(ProbeResult::Observed(Probe {
+                    outcome: o,
+                    charged_cost: r.charged_cost + slot.fault_cost,
+                    duration_s: r.duration_s + slot.fault_time,
+                }))
+            }
+            None => {
+                self.faults.n_abandoned += 1;
+                Ok(ProbeResult::Abandoned {
+                    charged_cost: slot.fault_cost,
+                    duration_s: slot.fault_time,
+                    attempts: slot.attempts,
+                })
+            }
+        }
+    }
+
+    /// Apply one pool completion/failure to the async ticket books:
+    /// success (or deadline breach) resolves the ticket into the reorder
+    /// buffer; a failure within budget resubmits with the deterministic
+    /// retry id; an exhausted budget abandons. Mirrors `run_jobs`'s
+    /// per-slot state machine exactly, so barriered and async runs see
+    /// identical retry/abandonment semantics.
+    fn settle_async(
+        &mut self,
+        msg: std::result::Result<JobResult, crate::coordinator::JobError>,
+    ) -> Result<()> {
+        let failed_primary: u64 = match msg {
+            Ok(r) => {
+                let primary = job_ids::original(r.job_id);
+                ensure!(
+                    self.pending_tickets.contains_key(&primary),
+                    "pool returned unknown job id {}",
+                    r.job_id
+                );
+                match self.retry.probe_deadline_s {
+                    Some(d) if r.duration_s > d => {
+                        let state = self
+                            .pending_tickets
+                            .get_mut(&primary)
+                            .expect("checked above");
+                        let frac = d / r.duration_s;
+                        state.fault_cost += r.charged_cost * frac;
+                        state.fault_time += d;
+                        self.log.record(EventKind::JobFailed {
+                            job: r.job_id,
+                            reason: format!(
+                                "probe deadline {d}s exceeded ({:.1}s)",
+                                r.duration_s
+                            ),
+                        });
+                        primary
+                    }
+                    _ => {
+                        self.log.record(EventKind::JobCompleted {
+                            job: r.job_id,
+                            cost: r.charged_cost,
+                        });
+                        let state = self
+                            .pending_tickets
+                            .remove(&primary)
+                            .expect("checked above");
+                        self.ready_tickets.insert(
+                            primary,
+                            (
+                                state.s_idx,
+                                SlotOutcome {
+                                    result: Some(r),
+                                    fault_cost: state.fault_cost,
+                                    fault_time: state.fault_time,
+                                    attempts: state.failures + 1,
+                                },
+                            ),
+                        );
+                        return Ok(());
+                    }
+                }
+            }
+            Err(e) => {
+                ensure!(
+                    e.job_id != crate::coordinator::JobError::NO_JOB,
+                    "worker pool failure: {e}"
+                );
+                let primary = job_ids::original(e.job_id);
+                let state =
+                    self.pending_tickets.get_mut(&primary).ok_or_else(|| {
+                        anyhow!("unattributable launcher failure: {e}")
+                    })?;
+                self.log.record(EventKind::JobFailed {
+                    job: e.job_id,
+                    reason: e.error.to_string(),
+                });
+                if let Some(i) = e.error.downcast_ref::<Interrupted>() {
+                    state.fault_cost += i.partial_cost;
+                    state.fault_time += i.partial_duration_s;
+                }
+                primary
+            }
+        };
+        let state = self
+            .pending_tickets
+            .get_mut(&failed_primary)
+            .expect("present on every failure path");
+        state.failures += 1;
+        let failures = state.failures;
+        if failures > self.retry.max_retries {
+            let state = self
+                .pending_tickets
+                .remove(&failed_primary)
+                .expect("present above");
+            self.log.record(EventKind::ProbeAbandoned {
+                job: failed_primary,
+                attempts: state.failures,
+                wasted_cost: state.fault_cost,
+            });
+            self.ready_tickets.insert(
+                failed_primary,
+                (
+                    state.s_idx,
+                    SlotOutcome {
+                        result: None,
+                        fault_cost: state.fault_cost,
+                        fault_time: state.fault_time,
+                        attempts: state.failures,
+                    },
+                ),
+            );
+            return Ok(());
+        }
+        let delay = self.retry.backoff_delay_s(failures, &mut self.retry_rng);
+        if delay > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(delay));
+        }
+        let (config, s_idx) = {
+            let state = self
+                .pending_tickets
+                .get(&failed_primary)
+                .expect("present above");
+            (state.config, state.s_idx)
+        };
+        let id = job_ids::retry(failed_primary, failures);
+        self.submit_with_id(id, config, vec![s_idx])
     }
 }
 
@@ -636,6 +879,57 @@ impl<'a> EvalBackend<'a> {
             .into_iter()
             .map(|p| p.expect("all slate slots filled"))
             .collect())
+    }
+
+    /// Submit one probe without waiting for it — the asynchronous engine's
+    /// submission half. Replay resolves instantly (the ticket comes back
+    /// [`ProbeTicket::Ready`]); a live deployment enters the pool and the
+    /// ticket is its primary job id. Tickets must be redeemed via
+    /// [`EvalBackend::await_probe`] in submission order — the logical
+    /// clock that makes async trajectories bitwise independent of physical
+    /// completion order (see `docs/ARCHITECTURE.md`, "Asynchronous
+    /// selection").
+    pub fn submit_probe(&mut self, p: Point) -> Result<ProbeTicket> {
+        match self {
+            EvalBackend::Replay(d) => {
+                let o = d.outcome(&p);
+                Ok(ProbeTicket::Ready(ProbeResult::Observed(Probe {
+                    outcome: o,
+                    charged_cost: o.cost_usd,
+                    duration_s: o.time_s,
+                })))
+            }
+            EvalBackend::Live(live) => {
+                Ok(ProbeTicket::Pending(live.submit_ticket(p)?))
+            }
+        }
+    }
+
+    /// Redeem an asynchronous ticket, blocking until it resolves; other
+    /// tickets completing in the meantime buffer (reorder buffer) without
+    /// being lost. Like [`EvalBackend::probe_slate`], this is a
+    /// fault-tolerant path: an exhausted retry budget comes back as
+    /// [`ProbeResult::Abandoned`] with its partial charge.
+    pub fn await_probe(&mut self, ticket: ProbeTicket) -> Result<ProbeResult> {
+        match ticket {
+            ProbeTicket::Ready(r) => Ok(r),
+            ProbeTicket::Pending(id) => match self {
+                EvalBackend::Live(live) => live.await_ticket(id),
+                EvalBackend::Replay(_) => Err(anyhow!(
+                    "live ticket {id} redeemed against a replay backend"
+                )),
+            },
+        }
+    }
+
+    /// Worker-thread count of the live pool — the occupancy target the
+    /// asynchronous engine saturates. Replay "completes" every submission
+    /// instantly, so its effective width is 1.
+    pub fn pool_width(&self) -> usize {
+        match self {
+            EvalBackend::Replay(_) => 1,
+            EvalBackend::Live(live) => live.workers,
+        }
     }
 
     /// Snapshot deployment of one config at several *ascending*
@@ -903,6 +1197,52 @@ mod tests {
         assert_eq!(a.duration_s, b.duration_s);
     }
 
+    /// Asynchronous tickets redeemed in submission order agree exactly
+    /// with replay, regardless of physical completion order across the
+    /// pool's workers — the logical-clock contract the async engine
+    /// stands on.
+    #[test]
+    fn async_tickets_redeem_in_submission_order_and_match_replay() {
+        let (truth, live) = backend_pair(NetKind::Rnn);
+        let mut live = EvalBackend::Live(live);
+        let points: Vec<Point> = (0..8)
+            .map(|i| Point { config: Config::from_id(i * 150), s_idx: 4 })
+            .collect();
+        let tickets: Vec<ProbeTicket> = points
+            .iter()
+            .map(|&p| live.submit_probe(p).unwrap())
+            .collect();
+        for (p, t) in points.iter().zip(tickets) {
+            let r = live.await_probe(t).unwrap();
+            let pr = r.observed().expect("noiseless run never abandons");
+            assert_eq!(pr.outcome, truth.outcome(p));
+            assert_eq!(pr.charged_cost, truth.outcome(p).cost_usd);
+        }
+        let log = live.event_log().unwrap();
+        let submitted =
+            log.count(|k| matches!(k, EventKind::JobSubmitted { .. }));
+        let completed =
+            log.count(|k| matches!(k, EventKind::JobCompleted { .. }));
+        assert_eq!((submitted, completed), (8, 8));
+    }
+
+    /// A replay backend resolves every async ticket at submission, with
+    /// the same observation and accounting the blocking probe returns.
+    #[test]
+    fn replay_async_tickets_resolve_instantly() {
+        let truth = Dataset::ground_truth(NetKind::Mlp);
+        let mut replay = EvalBackend::Replay(&truth);
+        let p = Point::from_id(512);
+        let blocking = replay.probe(p).unwrap();
+        let t = replay.submit_probe(p).unwrap();
+        assert!(matches!(t, ProbeTicket::Ready(_)));
+        let r = replay.await_probe(t).unwrap();
+        let pr = r.observed().expect("replay never abandons");
+        assert_eq!(pr.outcome, blocking.outcome);
+        assert_eq!(pr.charged_cost, blocking.charged_cost);
+        assert_eq!(replay.pool_width(), 1);
+    }
+
     /// Launcher that kills every attempt (primary and retries) of the
     /// probes whose *primary* job id is listed, with an [`Interrupted`]
     /// payload charging half the real cost — a deterministic preemption
@@ -967,6 +1307,52 @@ mod tests {
         );
         // the strict path refuses the same situation
         assert!(live.probe_batch(&points[..2]).is_err());
+    }
+
+    /// Exhausted retries on the async ticket path abandon with the same
+    /// partial-charge accounting as the barriered slate path, and fault
+    /// counters fold at redemption.
+    #[test]
+    fn async_ticket_abandonment_matches_barriered_accounting() {
+        let launcher = KillListLauncher {
+            inner: SimLauncher::noiseless(NetKind::Rnn),
+            kill_primary: vec![1],
+        };
+        let mut live = EvalBackend::Live(
+            LiveEval::new(Box::new(launcher), 2).with_retry(
+                RetryPolicy { max_retries: 2, ..RetryPolicy::default() },
+                7,
+            ),
+        );
+        let truth = Dataset::ground_truth(NetKind::Rnn);
+        let points: Vec<Point> = (0..3)
+            .map(|i| Point { config: Config::from_id(i * 40), s_idx: 4 })
+            .collect();
+        let tickets: Vec<ProbeTicket> = points
+            .iter()
+            .map(|&p| live.submit_probe(p).unwrap())
+            .collect();
+        for (i, (p, t)) in points.iter().zip(tickets).enumerate() {
+            match live.await_probe(t).unwrap() {
+                ProbeResult::Observed(pr) => {
+                    assert_ne!(i, 1, "killed ticket must be abandoned");
+                    assert_eq!(pr.outcome, truth.outcome(p));
+                }
+                ProbeResult::Abandoned { charged_cost, attempts, .. } => {
+                    assert_eq!(i, 1);
+                    assert_eq!(attempts, 3, "1 primary + 2 retries");
+                    let full = truth.outcome(p).cost_usd;
+                    assert!((charged_cost - 1.5 * full).abs() < 1e-9);
+                }
+            }
+        }
+        let stats = live.fault_stats();
+        assert_eq!((stats.n_failures, stats.n_abandoned), (3, 1));
+        let log = live.event_log().unwrap();
+        assert_eq!(
+            log.count(|k| matches!(k, EventKind::ProbeAbandoned { .. })),
+            1
+        );
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! lookup of the measured outcome) or live deployments through the
 //! threaded coordinator.
 
-use super::backend::{EvalBackend, Probe, ProbeResult};
+use super::backend::{EvalBackend, Probe, ProbeResult, ProbeTicket};
 use super::metrics::{accuracy_c, IterRecord, RunResult};
 use super::pareto::recommend_pareto;
 use crate::acq::{
@@ -27,7 +27,7 @@ use crate::util::stats::cmp_nan_low;
 use crate::util::timer::Timer;
 use crate::util::Rng;
 use anyhow::Result;
-use std::collections::HashSet;
+use std::collections::{HashSet, VecDeque};
 
 /// Which optimizer to run (paper §IV "Baselines").
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -123,10 +123,26 @@ pub struct EngineConfig {
     /// bit-exactly; q > 1 selects the top-q acquisition slate (diversified
     /// per [`BatchMode`]), launches it through the worker pool in one
     /// batch, absorbs the results in submission order and refits once.
+    /// Ignored when `async_mode` is set — the async scheduler derives its
+    /// parallelism from pool occupancy instead.
     pub batch_size: usize,
     /// how picks 2..q of a round's slate are diversified (defaults to the
-    /// `TRIMTUNER_BATCH` environment variable, see [`BatchMode::from_env`])
+    /// `TRIMTUNER_BATCH` environment variable, see [`BatchMode::from_env`]).
+    /// The async scheduler reuses the same mode to condition each new pick
+    /// on the in-flight probes.
     pub batch_mode: BatchMode,
+    /// drop the round barrier: re-enter selection the moment any pool slot
+    /// frees, conditioning on *all* in-flight probes, and absorb
+    /// completions in logical (submission) order so the trajectory is
+    /// bitwise independent of physical completion order. CLI: `--async`.
+    pub async_mode: bool,
+    /// pin the async scheduler's occupancy target (the number of in-flight
+    /// probes it keeps saturated). `None` — the default — adapts to the
+    /// backend: the live pool's worker count, or 1 under replay. Pinning
+    /// it decouples the logical trajectory from the physical pool width
+    /// (the determinism suite runs the same target over 1 and 4 workers).
+    /// CLI: `--max-inflight`.
+    pub max_inflight: Option<usize>,
 }
 
 impl EngineConfig {
@@ -155,6 +171,8 @@ impl EngineConfig {
             pareto: false,
             batch_size: 1,
             batch_mode: BatchMode::from_env(),
+            async_mode: false,
+            max_inflight: None,
         }
     }
 }
@@ -454,6 +472,27 @@ pub fn run_backend(
     // the first pick — the batched-probe payoff the cache was designed for.
     let mut acq_cache: Option<AcqContext> = None;
 
+    if cfg.async_mode {
+        run_async_loop(
+            backend,
+            constraints,
+            cfg,
+            &mut st,
+            &mut rng,
+            &full_feats,
+            &grid_feats,
+            &mut acq_cache,
+        )?;
+        let pareto = cfg.pareto.then(|| recommend_pareto(&st.models));
+        return Ok(RunResult {
+            records: st.records,
+            optimum_acc,
+            optimum,
+            pareto,
+            faults: backend.fault_stats(),
+        });
+    }
+
     // ---------------- main optimization loop (Alg. 1 lines 11-20) --------
     // One *round* selects a slate of up to `batch_size` probes, launches
     // them through the backend in a single batch (concurrent across the
@@ -575,6 +614,231 @@ pub fn run_backend(
         pareto,
         faults: backend.fault_stats(),
     })
+}
+
+/// The asynchronous (non-barrier) main loop: a continuously-fed scheduler
+/// replacing the round structure. The moment a pool slot frees, selection
+/// re-enters conditioned on *all* in-flight probes (the same
+/// kriging-believer / constant-liar fantasies batched rounds use), submits
+/// the single best pick, and keeps the pool saturated at the occupancy
+/// target — [`EngineConfig::max_inflight`], or adaptively the pool's
+/// worker count.
+///
+/// Determinism contract (see `docs/ARCHITECTURE.md`, "Asynchronous
+/// selection"): completions are absorbed in *logical* (submission) order —
+/// the backend's ticket reorder buffer turns physical completion order
+/// back into the logical clock — and every selection conditions on the
+/// absorbed prefix plus the in-flight picks in submission order. The
+/// trajectory is therefore a pure function of the logical order: bitwise
+/// identical across worker counts (at a pinned occupancy target), and with
+/// a target of 1 it degenerates to exactly the barriered q = 1 sequence —
+/// same operations, same RNG draws.
+///
+/// Per-pick attribution: each absorbed observation gets its own record;
+/// `round` is the pick's logical selection index (init = round 0, pick k =
+/// round k; an abandoned pick consumes its index without a record, exactly
+/// like a barriered round whose whole slate was abandoned), `rec_wall_s`
+/// is the wall-clock between consecutive absorptions (summing to the
+/// campaign wall — the quantity the async-vs-barrier bench compares), and
+/// the refit cadence counts logical picks, so `RefitPolicy` interacts with
+/// async runs exactly as it does with sequential ones.
+#[allow(clippy::too_many_arguments)]
+fn run_async_loop(
+    backend: &mut EvalBackend,
+    constraints: &[Constraint],
+    cfg: &EngineConfig,
+    st: &mut State,
+    rng: &mut Rng,
+    full_feats: &[Feat],
+    grid_feats: &[Feat],
+    acq_cache: &mut Option<AcqContext>,
+) -> Result<()> {
+    let target = cfg
+        .max_inflight
+        .unwrap_or_else(|| backend.pool_width())
+        .max(1);
+    // in-flight picks in logical submission order: (point, ticket, α
+    // evaluations its selection spent)
+    let mut inflight: VecDeque<(Point, ProbeTicket, usize)> = VecDeque::new();
+    let mut launched = 0usize;
+    // main-loop observation index (init records count separately, as in
+    // the barriered loop)
+    let mut iter = 0usize;
+    let mut absorbed = 0usize; // logical pick index of the next absorption
+    let mut refit_memo = RefitMemo { baseline: None };
+    let mut stopping = false;
+    // inter-absorption wall: restarted after every absorption, so each
+    // record's rec_wall_s covers the selections + waiting that led to it
+    let mut timer = Timer::start();
+    loop {
+        // (re)fill: one submission per freed slot keeps the pool saturated
+        // until the budget runs out or a stop condition fired (then the
+        // remaining in-flight picks drain below without new selections)
+        while !stopping && launched < cfg.max_iters && inflight.len() < target
+        {
+            let taken: HashSet<usize> =
+                inflight.iter().map(|(p, _, _)| p.id()).collect();
+            let untested: Vec<Point> =
+                untested_points(cfg.optimizer, &st.tested_ids)
+                    .into_iter()
+                    .filter(|p| !taken.contains(&p.id()))
+                    .collect();
+            if untested.is_empty() {
+                stopping = true;
+                break;
+            }
+            let budget =
+                ((cfg.beta * untested.len() as f64).ceil() as usize).max(1);
+            let pending: Vec<Point> =
+                inflight.iter().map(|(p, _, _)| *p).collect();
+            let (pick, n_evals) = choose_async(
+                cfg, constraints, st, &untested, full_feats, grid_feats,
+                budget, rng, acq_cache, &pending,
+            );
+            let ticket = backend.submit_probe(pick)?;
+            inflight.push_back((pick, ticket, n_evals));
+            launched += 1;
+        }
+        // absorb the logical head (blocking on *it*, never on the whole
+        // slate — later tickets completing early buffer in the backend's
+        // reorder book); an empty book means the campaign is done
+        let Some((p, ticket, n_evals)) = inflight.pop_front() else {
+            break;
+        };
+        let result = backend.await_probe(ticket)?;
+        absorbed += 1;
+        let round = absorbed; // init batch is round 0
+        match result {
+            ProbeResult::Observed(pr) => {
+                st.push_observation(p, pr.outcome);
+                st.cum_cost += pr.charged_cost;
+                st.cum_time += pr.duration_s;
+                let new_from = st.tested.len() - 1;
+                refit(cfg, st, round - 1, new_from, &mut refit_memo);
+                let rec =
+                    recommend(cfg.optimizer, st, constraints, full_feats);
+                let rec_wall_s = timer.elapsed_s();
+                let (cum_cost, cum_time) = (st.cum_cost, st.cum_time);
+                push_record(
+                    st,
+                    backend,
+                    constraints,
+                    RecordArgs {
+                        iter,
+                        is_init: false,
+                        round,
+                        tested: p,
+                        outcome: pr.outcome,
+                        explore_cost: pr.charged_cost,
+                        duration_s: pr.duration_s,
+                        cum_cost,
+                        cum_time,
+                        rec_wall_s,
+                        rec,
+                        n_alpha_evals: n_evals,
+                        log_events: true,
+                    },
+                );
+                iter += 1;
+                if !stopping && cfg.stop.should_stop(&st.records) {
+                    stopping = true;
+                }
+            }
+            ProbeResult::Abandoned { charged_cost, duration_s, .. } => {
+                // the pick's partial charge lands in the running totals,
+                // but no observation, no record — and deliberately no
+                // stop check: an abandoned probe is no evidence of a
+                // plateau (the point stays untested and may be re-picked
+                // under a fresh job id)
+                st.cum_cost += charged_cost;
+                st.cum_time += duration_s;
+            }
+        }
+        timer = Timer::start();
+    }
+    Ok(())
+}
+
+/// One asynchronous selection: the α-argmax conditioned on the in-flight
+/// picks. With nothing in flight this is exactly [`choose_ranked`] with
+/// q = 1 — the sequential Algorithm 1 pick, consuming identical RNG draws
+/// (the occupancy-1 parity contract). With pending picks the fantasy /
+/// constant-liar chain of the barriered slate is rebuilt over the
+/// in-flight points in logical submission order against the
+/// freshly-absorbed models, then one [`choose_pending`] maximization runs
+/// under the conditioned bundle. [`BatchMode::TopQ`] has no pending
+/// conditioning by definition, so it re-ranks unconditioned over the
+/// remaining candidates.
+#[allow(clippy::too_many_arguments)]
+fn choose_async(
+    cfg: &EngineConfig,
+    constraints: &[Constraint],
+    st: &State,
+    untested: &[Point],
+    full_feats: &[Feat],
+    grid_feats: &[Feat],
+    budget: usize,
+    rng: &mut Rng,
+    acq_cache: &mut Option<AcqContext>,
+    pending: &[Point],
+) -> (Point, usize) {
+    if pending.is_empty()
+        || cfg.batch_mode == BatchMode::TopQ
+        || cfg.optimizer == OptimizerKind::RandomSearch
+    {
+        let (slate, evals) = choose_ranked(
+            cfg, constraints, st, untested, full_feats, grid_feats, budget,
+            rng, acq_cache, 1,
+        );
+        return (slate[0], evals);
+    }
+    // refresh the acquisition context (representer set, CRN z-matrix, CEA
+    // ordering) under the current models before conditioning on the
+    // in-flight picks — same cache, same staleness rule, same RNG
+    // consumption as the barriered first pick
+    match cfg.optimizer {
+        OptimizerKind::Fabolas => {
+            acq_context(cfg, st, &[], full_feats, rng, acq_cache);
+        }
+        OptimizerKind::TrimTuner(_) => {
+            acq_context(cfg, st, constraints, full_feats, rng, acq_cache);
+        }
+        _ => {}
+    }
+    // constant-liar value: the best *observed* accuracy so far (CL-max)
+    let lie = st
+        .outcomes
+        .iter()
+        .map(|o| o.acc)
+        .fold(f64::NEG_INFINITY, f64::max);
+    // rebuild the fantasy chain over the in-flight picks in submission
+    // order. The chain cannot persist across selections: every absorption
+    // refits/absorbs real data (generation bump), so the conditioned
+    // bundle must re-derive from the fresh models each time.
+    let mut cond: Option<Models> = None;
+    for p in pending {
+        let x = &grid_feats[p.id()];
+        let base = cond.as_ref().unwrap_or(&st.models);
+        let next = match cfg.batch_mode {
+            BatchMode::Fantasy => base.condition(x),
+            BatchMode::ConstantLiar => base.condition_with_acc(x, lie),
+            BatchMode::TopQ => unreachable!("handled above"),
+        };
+        cond = Some(next);
+    }
+    let models = cond.as_ref().expect("nonempty pending chain");
+    choose_pending(
+        cfg,
+        constraints,
+        models,
+        st,
+        acq_cache.as_ref(),
+        untested,
+        full_feats,
+        grid_feats,
+        budget.min(untested.len()),
+        rng,
+    )
 }
 
 /// How many fresh random configs the subsampling init tries when a

@@ -37,6 +37,13 @@ pub struct IterRecord {
     /// with q > 1 consecutive records share a round id. Round-level
     /// quantities (`rec_wall_s`, `n_alpha_evals`) are attributed to the
     /// round's last record.
+    ///
+    /// Under `async_mode` there are no slates: `round` is the pick's
+    /// *logical selection index* (init = round 0, the k-th absorbed pick =
+    /// round k), every record is its own round, and the round-level
+    /// quantities are per-pick. A pick abandoned under faults consumes its
+    /// index without a record — exactly like a barriered round whose whole
+    /// slate was abandoned — so round ids stay comparable across modes.
     pub round: usize,
     pub tested: Point,
     pub outcome: Outcome,
@@ -49,7 +56,10 @@ pub struct IterRecord {
     /// observation (replay: the recorded training time; live: the job's
     /// duration as reported by the launcher)
     pub duration_s: f64,
-    /// wall-clock seconds spent choosing this test + refitting (Table III)
+    /// wall-clock seconds spent choosing this test + refitting (Table III).
+    /// Async mode: the wall-clock between consecutive absorptions (the
+    /// selections submitted plus the wait for this pick's logical turn),
+    /// so the per-record values still sum to the campaign wall
     pub rec_wall_s: f64,
     /// recommended incumbent after this iteration (full data-set config)
     pub incumbent: Point,
@@ -108,7 +118,10 @@ impl RunResult {
     /// record), so the average divides by the number of rounds, not
     /// records — a per-record mean would dilute the latency by the batch
     /// factor at `batch_size` > 1. Identical to the per-record mean when
-    /// every round holds one observation (q = 1).
+    /// every round holds one observation (q = 1). Async runs attribute one
+    /// round per logical pick (abandoned picks included, exactly as
+    /// barriered all-abandoned rounds are), so the same round-span
+    /// denominator stays correct across modes.
     pub fn mean_rec_wall_s(&self) -> f64 {
         let main: Vec<&IterRecord> =
             self.records.iter().filter(|r| !r.is_init).collect();
@@ -122,6 +135,10 @@ impl RunResult {
     }
 
     /// Number of selection rounds, including the init batch (round 0).
+    /// Async runs count logical picks: the init batch plus one round per
+    /// selection (including picks abandoned under faults, which carry a
+    /// round index but no record — mirroring barriered all-abandoned
+    /// rounds).
     pub fn n_rounds(&self) -> usize {
         self.records.last().map_or(0, |r| r.round + 1)
     }
@@ -129,7 +146,10 @@ impl RunResult {
     /// Total measured wall-clock across all rounds (selection + slate
     /// deployment + refit; `rec_wall_s` is recorded once per round) — the
     /// denominator of the batched-probe regret-vs-wall-clock trade-off
-    /// that `bench_coordinator`'s q × workers sweep quantifies.
+    /// that `bench_coordinator`'s q × workers sweep quantifies. Async
+    /// records carry per-absorption walls that sum to the same campaign
+    /// total, so this is also the quantity the async-vs-barrier speedup
+    /// gate compares.
     pub fn total_wall_s(&self) -> f64 {
         self.records.iter().map(|r| r.rec_wall_s).sum()
     }

@@ -13,6 +13,16 @@
 //! ones ([`BatchMode`]: kriging-believer fantasy by default, constant-liar
 //! or plain top-q via `TRIMTUNER_BATCH`). Stop conditions
 //! ([`StopCondition`]) are evaluated at round boundaries.
+//!
+//! `async_mode` replaces the round barrier with a continuously-fed
+//! scheduler: selection re-enters the moment any pool slot frees,
+//! conditioned on all in-flight probes, keeping the pool saturated at an
+//! occupancy target derived from the worker count (or pinned via
+//! `max_inflight`). Completions are absorbed in logical (submission)
+//! order, so async trajectories are bitwise independent of physical
+//! completion order; stop conditions are evaluated after every absorbed
+//! observation instead of at round boundaries. See `docs/ARCHITECTURE.md`,
+//! "Asynchronous selection".
 
 mod backend;
 mod loop_;
@@ -21,7 +31,8 @@ mod pareto;
 mod stop;
 
 pub use backend::{
-    EvalBackend, FaultStats, LiveEval, Probe, ProbeResult, RetryPolicy, Snapshot,
+    EvalBackend, FaultStats, LiveEval, Probe, ProbeResult, ProbeTicket,
+    RetryPolicy, Snapshot,
 };
 pub use loop_::{
     run, run_backend, BatchMode, EngineConfig, OptimizerKind, RefitMode,

@@ -23,6 +23,12 @@ pub enum StopCondition {
     /// entirely after a round whose every probe was abandoned — a round
     /// that observed nothing is no evidence of a plateau (see the main
     /// loop in `loop_`; pinned by `tests/fault_parity.rs`).
+    ///
+    /// Async mode needs no redefinition beyond that: without round
+    /// boundaries the window is simply a sliding window over *absorbed
+    /// observations* in logical order — the engine re-judges the condition
+    /// after every absorption, and an abandoned pick contributes no record
+    /// and triggers no check (pinned by `tests/async_parity.rs`).
     NoImprovement { window: usize, min_delta: f64 },
     /// stop once cumulative exploration cost exceeds the budget (USD)
     CostBudget(f64),

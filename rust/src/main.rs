@@ -31,6 +31,7 @@ USAGE:
                      [--beta 0.1] [--filter cea|random|nofilter|direct|cmaes]
                      [--iters 44] [--seed 0] [--cost-cap <usd>] [--pareto]
                      [--live] [--workers 4] [--batch-size 1]
+                     [--async] [--max-inflight N]
                      [--refit every=K,evidence-drop=X]
                      [--launcher-noise 1.0] [--launcher-seed <seed>]
                      [--faults spot:0.3,straggle:2.0,flaky:0.1,timeout:600]
@@ -57,6 +58,17 @@ USAGE:
   or unconditioned strategy). q = 1 reproduces the paper's sequential
   Algorithm 1 bit-exactly. Points of the slate that share a configuration
   ride one snapshot deployment, charged once at the largest level.
+
+  --async removes the round barrier entirely: whenever the in-flight count
+  drops below the target the engine re-selects a single probe conditioned
+  on everything still pending and submits it immediately, keeping the pool
+  saturated. The effective parallelism adapts to pool occupancy instead of
+  a fixed --batch-size; completions are absorbed in logical (submission)
+  order, so traces are bit-identical at any worker count, and --async with
+  one worker reproduces the sequential Algorithm 1 bit-exactly.
+  --max-inflight N pins the occupancy target (default: the live pool
+  width, 1 under replay) — pin it to compare trajectories across worker
+  counts.
 
   --launcher-noise X scales the simulated launcher's observation noise
   (1.0 = calibrated, 0 = exact ground truth — live runs then replay
@@ -146,6 +158,8 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     let live = args.get_bool("live");
     cfg.pareto = args.get_bool("pareto");
     cfg.batch_size = args.get_usize("batch-size", cfg.batch_size).max(1);
+    cfg.async_mode = args.get_bool("async");
+    cfg.max_inflight = args.get("max-inflight").and_then(|s| s.parse().ok());
     if let Some(spec) = args.get("refit") {
         cfg.refit = engine::RefitPolicy::parse(spec)?;
     }
@@ -161,15 +175,22 @@ fn cmd_optimize(args: &Args) -> Result<()> {
         None => RetryPolicy::default(),
     };
 
+    let sched = if cfg.async_mode {
+        match cfg.max_inflight {
+            Some(n) => format!("async(inflight={n})"),
+            None => "async(inflight=pool)".to_string(),
+        }
+    } else {
+        format!("q={}", cfg.batch_size)
+    };
     eprintln!(
-        "optimize: net={} optimizer={} filter={} beta={} iters={} cap=${cap} mode={} q={} batch={}",
+        "optimize: net={} optimizer={} filter={} beta={} iters={} cap=${cap} mode={} {sched} batch={}",
         net.name(),
         optimizer.name(),
         cfg.filter.name(),
         cfg.beta,
         cfg.max_iters,
         if live { "live" } else { "replay" },
-        cfg.batch_size,
         cfg.batch_mode.name(),
     );
     let dataset = Dataset::generate(net, args.get_u64("dataset-seed", 42));

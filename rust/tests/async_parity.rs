@@ -1,0 +1,322 @@
+//! Asynchronous-selection contracts: `--async` with one slot must
+//! reproduce the sequential Algorithm 1 bit-exactly, async trajectories at
+//! a pinned in-flight target must be bitwise identical at any worker count
+//! (the logical-clock absorption contract), the per-pick bookkeeping and
+//! EventLog ordering must hold, and abandoned picks under faults must
+//! neither produce records nor feed `StopCondition::NoImprovement`.
+
+use trimtuner::coordinator::{
+    job_ids, EventKind, FaultSpec, Interrupted, Job, JobLauncher, JobResult,
+    SimLauncher,
+};
+use trimtuner::engine::{
+    self, BatchMode, EngineConfig, EvalBackend, LiveEval, OptimizerKind,
+    RetryPolicy, RunResult, StopCondition,
+};
+use trimtuner::models::ModelKind;
+use trimtuner::sim::{Dataset, NetKind};
+use trimtuner::space::Constraint;
+
+fn caps(net: NetKind) -> Vec<Constraint> {
+    vec![Constraint::cost_max(net.paper_cost_cap())]
+}
+
+/// Paper defaults shrunk like `live_parity`'s so the GP variants stay fast.
+fn small_cfg(optimizer: OptimizerKind, seed: u64, iters: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::paper_default(optimizer, seed);
+    cfg.max_iters = iters;
+    cfg.n_rep = 10;
+    cfg.n_popt_samples = 40;
+    cfg.gp_hyper_samples = cfg.gp_hyper_samples.min(2);
+    // pin the batch mode: an ambient TRIMTUNER_BATCH must not change what
+    // these tests exercise
+    cfg.batch_mode = BatchMode::Fantasy;
+    cfg
+}
+
+fn live_run(
+    launcher: Box<dyn JobLauncher>,
+    workers: usize,
+    retry: RetryPolicy,
+    eval: &Dataset,
+    constraints: &[Constraint],
+    cfg: &EngineConfig,
+) -> RunResult {
+    let mut backend = EvalBackend::Live(
+        LiveEval::new(launcher, workers)
+            .with_eval(eval)
+            .with_retry(retry, cfg.seed ^ 0xB0FF),
+    );
+    let run = engine::run_backend(&mut backend, constraints, cfg)
+        .expect("live run failed");
+    backend.shutdown();
+    run
+}
+
+fn assert_same_trajectory(a: &RunResult, b: &RunResult, label: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{label}: record count");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.tested.id(), rb.tested.id(), "{label}: tested point");
+        assert_eq!(ra.round, rb.round, "{label}: round id");
+        assert_eq!(
+            ra.outcome.acc.to_bits(),
+            rb.outcome.acc.to_bits(),
+            "{label}: observed accuracy"
+        );
+        assert_eq!(
+            ra.explore_cost.to_bits(),
+            rb.explore_cost.to_bits(),
+            "{label}: charged cost"
+        );
+        assert_eq!(
+            ra.cum_cost.to_bits(),
+            rb.cum_cost.to_bits(),
+            "{label}: cumulative cost"
+        );
+        assert_eq!(ra.incumbent.id(), rb.incumbent.id(), "{label}: incumbent");
+    }
+}
+
+/// ISSUE acceptance: with an in-flight target of 1 (replay, or live on one
+/// worker) the async scheduler degenerates to exactly the barriered q = 1
+/// sequence — same operations, same RNG draws, bit-identical traces — for
+/// both TrimTuner model kinds.
+#[test]
+fn async_with_one_slot_is_bit_identical_to_sequential() {
+    let net = NetKind::Rnn;
+    let truth = Dataset::ground_truth(net);
+    let constraints = caps(net);
+    for (optimizer, iters) in [
+        (OptimizerKind::TrimTuner(ModelKind::Gp), 3),
+        (OptimizerKind::TrimTuner(ModelKind::Trees), 6),
+    ] {
+        let mut seq = small_cfg(optimizer, 5, iters);
+        seq.batch_size = 1;
+        let mut acfg = small_cfg(optimizer, 5, iters);
+        acfg.async_mode = true;
+        let barriered = engine::run(&truth, &constraints, &seq);
+        let replay_async = engine::run(&truth, &constraints, &acfg);
+        assert_same_trajectory(
+            &barriered,
+            &replay_async,
+            &format!("{}: replay async vs q=1", optimizer.name()),
+        );
+        // zero-noise live async on one worker replays the same trace
+        let live_async = live_run(
+            Box::new(SimLauncher::noiseless(net)),
+            1,
+            RetryPolicy::default(),
+            &truth,
+            &constraints,
+            &acfg,
+        );
+        assert_same_trajectory(
+            &barriered,
+            &live_async,
+            &format!("{}: live async vs q=1", optimizer.name()),
+        );
+        // per-pick attribution: every main record is its own round
+        for r in replay_async.records.iter().filter(|r| !r.is_init) {
+            assert_eq!(r.round, r.iter + 1, "round ids drifted in async");
+        }
+    }
+}
+
+/// ISSUE acceptance: zero-noise async runs at a pinned in-flight target
+/// are bitwise identical across worker counts — the logical-clock
+/// absorption makes the trajectory a pure function of submission order,
+/// never of physical completion order — and agree with the replay backend
+/// driven at the same target.
+#[test]
+fn zero_noise_async_is_deterministic_across_worker_counts() {
+    let net = NetKind::Rnn;
+    let truth = Dataset::ground_truth(net);
+    let constraints = caps(net);
+    let mut cfg = small_cfg(OptimizerKind::TrimTuner(ModelKind::Trees), 7, 8);
+    cfg.async_mode = true;
+    cfg.max_inflight = Some(4);
+    let replay = engine::run(&truth, &constraints, &cfg);
+    let one = live_run(
+        Box::new(SimLauncher::noiseless(net)),
+        1,
+        RetryPolicy::default(),
+        &truth,
+        &constraints,
+        &cfg,
+    );
+    let four = live_run(
+        Box::new(SimLauncher::noiseless(net)),
+        4,
+        RetryPolicy::default(),
+        &truth,
+        &constraints,
+        &cfg,
+    );
+    assert_same_trajectory(&one, &four, "async workers 1 vs 4");
+    assert_same_trajectory(&replay, &one, "replay vs live async");
+    assert!(replay.n_rounds() >= 3, "init round + at least 2 main picks");
+}
+
+/// ISSUE satellite: EventLog ordering under async — submissions are
+/// recorded in logical (selection) order even while earlier picks are
+/// still deploying, every job completes, and the engine-level
+/// `IterationDone` fires once per absorbed observation.
+#[test]
+fn event_log_records_async_submissions_in_logical_order() {
+    let net = NetKind::Rnn;
+    let truth = Dataset::ground_truth(net);
+    let mut cfg = small_cfg(OptimizerKind::TrimTuner(ModelKind::Trees), 17, 8);
+    cfg.async_mode = true;
+    cfg.max_inflight = Some(3);
+    let mut backend = EvalBackend::Live(
+        LiveEval::new(Box::new(SimLauncher::noiseless(net)), 3)
+            .with_eval(&truth),
+    );
+    let run = engine::run_backend(&mut backend, &caps(net), &cfg)
+        .expect("live run failed");
+    let events = backend.event_log().unwrap().snapshot();
+    backend.shutdown();
+
+    // submissions appear in selection order (ids are assigned sequentially
+    // at submit time; no failures -> no retry ids)
+    let submitted: Vec<u64> = events
+        .iter()
+        .filter_map(|e| match e.kind {
+            EventKind::JobSubmitted { job } => Some(job),
+            _ => None,
+        })
+        .collect();
+    assert!(
+        submitted.windows(2).all(|w| w[0] < w[1]),
+        "submission ids out of order: {submitted:?}"
+    );
+    let completed = events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::JobCompleted { .. }))
+        .count();
+    assert_eq!(submitted.len(), completed, "every job completes");
+    assert_eq!(
+        events
+            .iter()
+            .filter(|e| matches!(e.kind, EventKind::JobFailed { .. }))
+            .count(),
+        0
+    );
+    // engine-level events: one IterationDone per init record and one per
+    // absorbed observation (async logs per pick, not per round)
+    let n_main = run.records.iter().filter(|r| !r.is_init).count();
+    let iteration_done = events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::IterationDone { .. }))
+        .count();
+    assert_eq!(iteration_done, 4 + n_main, "one per absorbed observation");
+}
+
+/// ISSUE satellite: async composes with the fault-injection stack — the
+/// campaign survives a preemption + flaky-launch cocktail, and because
+/// fault decisions key on job ids (assigned in logical order) and
+/// absorption is logical-ordered, the whole faulty trace is deterministic
+/// in the worker count.
+#[test]
+fn async_fault_trace_is_deterministic_across_worker_counts() {
+    let net = NetKind::Mlp;
+    let truth = Dataset::ground_truth(net);
+    let constraints = caps(net);
+    let spec = FaultSpec::parse("spot:0.4,straggle:2.0,flaky:0.3").unwrap();
+    let mut cfg = small_cfg(OptimizerKind::TrimTuner(ModelKind::Trees), 9, 6);
+    cfg.async_mode = true;
+    cfg.max_inflight = Some(2);
+    let mk = |workers| {
+        live_run(
+            spec.wrap(Box::new(SimLauncher::new(net, 33)), 0xFA17),
+            workers,
+            RetryPolicy::default(),
+            &truth,
+            &constraints,
+            &cfg,
+        )
+    };
+    let one = mk(1);
+    let four = mk(4);
+    assert_same_trajectory(&one, &four, "faulty async 1 vs 4 workers");
+    assert_eq!(one.faults.n_failures, four.faults.n_failures);
+    assert_eq!(one.faults.n_abandoned, four.faults.n_abandoned);
+    assert_eq!(
+        one.faults.wasted_cost.to_bits(),
+        four.faults.wasted_cost.to_bits(),
+        "waste totals must match bitwise"
+    );
+    assert!(
+        one.faults.n_failures > 0,
+        "a 40% preemption + 30% flaky cocktail over 7+ jobs must fault"
+    );
+}
+
+/// Kills every attempt (primary and retries) of the probes whose *primary*
+/// id is listed — a deterministic preemption charging half the real cost
+/// per dead attempt, guaranteed to exhaust any retry budget.
+struct KillListLauncher {
+    inner: SimLauncher,
+    kill: fn(u64) -> bool,
+}
+
+impl JobLauncher for KillListLauncher {
+    fn launch(&self, job: &Job) -> anyhow::Result<JobResult> {
+        let r = self.inner.launch(job)?;
+        if (self.kill)(job_ids::original(job.id)) {
+            return Err(anyhow::Error::new(Interrupted {
+                partial_cost: r.charged_cost * 0.5,
+                partial_duration_s: r.duration_s * 0.5,
+            }));
+        }
+        Ok(r)
+    }
+}
+
+/// ISSUE satellite: abandoned picks are not `NoImprovement` evidence in
+/// async mode. They consume a logical round index but produce no record
+/// and trigger no stop check, so with an unmeetable `min_delta` the engine
+/// keeps launching through a run of deterministic kills instead of
+/// misreading it as a plateau — the full launch budget is consumed.
+#[test]
+fn abandoned_async_picks_are_not_no_improvement_evidence() {
+    let net = NetKind::Rnn;
+    let truth = Dataset::ground_truth(net);
+    let mut cfg = small_cfg(OptimizerKind::TrimTuner(ModelKind::Trees), 3, 8);
+    cfg.async_mode = true;
+    cfg.stop = StopCondition::NoImprovement { window: 2, min_delta: 1.0 };
+    // id 0 = init snapshot; main primaries 1 and 2 observe, later ones die
+    let launcher = KillListLauncher {
+        inner: SimLauncher::noiseless(net),
+        kill: |id| id >= 3,
+    };
+    let retry = RetryPolicy { max_retries: 0, ..RetryPolicy::default() };
+    let run = live_run(
+        Box::new(launcher),
+        2,
+        retry,
+        &truth,
+        &caps(net),
+        &cfg,
+    );
+    let main: Vec<_> = run.records.iter().filter(|r| !r.is_init).collect();
+    assert_eq!(main.len(), 2, "only the two pre-kill picks observe");
+    assert_eq!(
+        run.faults.n_abandoned, 6,
+        "the remaining budget was launched and abandoned, not stopped on"
+    );
+    // the partial kills stay charged into the cumulative totals
+    let observed_sum: f64 = run.records.iter().map(|r| r.explore_cost).sum();
+    assert!(
+        run.total_cost() > observed_sum,
+        "cum {} must exceed observed {}",
+        run.total_cost(),
+        observed_sum
+    );
+    // abandoned picks consumed their logical round indices: the last
+    // record's round stays at its own pick index, but n_rounds counts only
+    // to the last *recorded* pick — both observed picks carry early ids
+    for r in &main {
+        assert!(r.round <= 2 + 1, "observed picks are early logical rounds");
+    }
+}

@@ -118,3 +118,43 @@ fn receiver_drains_fifo_then_disconnects() {
         assert!(rx.recv().is_err());
     });
 }
+
+/// The non-blocking drain behind the async engine's reorder buffer
+/// (`WorkerPool::try_recv` → `queue::Receiver::try_recv`): on every
+/// interleaving, `try_recv` never blocks, `Empty` only means "nothing
+/// buffered while a sender is alive", a successful pop frees a sender
+/// parked on the full capacity-1 channel, and after the sender is gone
+/// the buffered tail still drains before `Disconnected` surfaces.
+#[test]
+fn try_recv_never_blocks_and_drains_before_disconnect() {
+    use csync::queue::TryRecvError;
+    loom::model(|| {
+        let (tx, rx) = bounded::<u32>(1);
+        let h = thread::spawn(move || {
+            tx.send(1).unwrap();
+            tx.send(2).unwrap(); // may park until the first pop frees a slot
+        });
+        // Non-blocking probe: on every schedule this returns immediately
+        // with Ok(1) or Empty — a live sender must never surface as
+        // Disconnected. (Both branches are reached across interleavings.)
+        let first = match rx.try_recv() {
+            Ok(v) => v,
+            Err(TryRecvError::Empty) => rx.recv().unwrap(),
+            Err(TryRecvError::Disconnected) => {
+                panic!("live sender reported as disconnected")
+            }
+        };
+        assert_eq!(first, 1);
+        // Popping 1 freed the capacity-1 slot (try_recv notifies the
+        // cond), so the parked second send lands and the sender exits —
+        // the join terminates on every schedule.
+        h.join().unwrap();
+        // Sender gone with a value still buffered: the tail drains first,
+        // Disconnected surfaces only once the buffer is empty.
+        assert_eq!(rx.try_recv().unwrap(), 2);
+        assert!(matches!(
+            rx.try_recv(),
+            Err(TryRecvError::Disconnected)
+        ));
+    });
+}
